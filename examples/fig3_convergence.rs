@@ -1,0 +1,107 @@
+//! Figure 3 reproduction: convergence speed — accuracy vs epochs (top row)
+//! and accuracy vs total communication (bottom row) for each method at a
+//! fixed compression level.
+//!
+//! ```bash
+//! cargo run --release --example fig3_convergence -- --task mlp --epochs 10
+//! ```
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use splitfed::cli::Args;
+use splitfed::config::{ExperimentConfig, Method};
+use splitfed::coordinator::train;
+use splitfed::runtime::{default_artifacts_dir, Engine};
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let engine = Rc::new(Engine::load(default_artifacts_dir())?);
+    let task = args.get_or("task", "mlp").to_string();
+    let epochs: u32 = args.get_parse("epochs")?.unwrap_or(10);
+    let n_train: usize = args.get_parse("n_train")?.unwrap_or(4096);
+    let lr: f32 = args.get_parse("lr")?.unwrap_or(match task.as_str() {
+        "textcnn" | "gru4rec" => 0.3,
+        "convnet" | "convnet_l" => 0.1,
+        _ => 0.05,
+    });
+
+    let meta = engine.manifest.model(&task)?.clone();
+    // medium compression level (middle k)
+    let k = meta.k_levels[meta.k_levels.len() / 2];
+    let alpha = if task == "gru4rec" { 0.05 } else { 0.1 };
+
+    let methods = vec![
+        ("non-sparse", Method::None),
+        ("randtopk", Method::RandTopk { k, alpha }),
+        ("topk", Method::Topk { k }),
+        ("sizered", Method::SizeReduction { k }),
+        ("quant2bit", Method::Quant { bits: 2 }),
+    ];
+
+    let dir = std::path::Path::new("runs/fig3");
+    std::fs::create_dir_all(dir)?;
+    println!("Fig 3 — convergence on {task} (k = {k}, {epochs} epochs)\n");
+
+    let mut curves = Vec::new();
+    for (name, method) in methods {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = task.clone();
+        cfg.method = method;
+        cfg.epochs = epochs;
+        cfg.n_train = n_train;
+        cfg.n_test = n_train / 4;
+        cfg.lr = lr;
+        cfg.seed = 42;
+        let ledger = train(engine.clone(), cfg, false)?;
+        // normalize communication: vanilla one-epoch comm = 1.0 (paper's x axis)
+        eprintln!(
+            "  {name}: final acc {:.2}%, total comm {:.2} MiB",
+            100.0 * ledger.final_metric(),
+            ledger.total_comm_bytes() as f64 / 1048576.0
+        );
+        ledger.save(dir, &format!("{task}_{name}"))?;
+        curves.push((name, ledger));
+    }
+
+    // the vanilla per-epoch communication is the unit of the bottom row
+    let vanilla_epoch_bytes = curves
+        .iter()
+        .find(|(n, _)| *n == "non-sparse")
+        .map(|(_, l)| l.total_comm_bytes() as f64 / epochs as f64)
+        .unwrap_or(1.0);
+
+    println!("\naccuracy vs epochs:");
+    print!("{:<7}", "epoch");
+    for (name, _) in &curves {
+        print!("{name:>12}");
+    }
+    println!();
+    for e in 0..epochs as usize {
+        print!("{:<7}", e);
+        for (_, l) in &curves {
+            print!("{:>12.4}", l.epochs[e].test_metric);
+        }
+        println!();
+    }
+
+    println!("\naccuracy vs communication (unit = vanilla one-epoch traffic):");
+    print!("{:<7}", "epoch");
+    for (name, _) in &curves {
+        print!("{name:>16}");
+    }
+    println!();
+    for e in 0..epochs as usize {
+        print!("{:<7}", e);
+        for (_, l) in &curves {
+            print!(
+                "  {:>6.3}u/{:>6.4}",
+                l.epochs[e].comm_bytes as f64 / vanilla_epoch_bytes,
+                l.epochs[e].test_metric
+            );
+        }
+        println!();
+    }
+    println!("\nper-method ledgers in runs/fig3/{task}_<method>.json|csv");
+    Ok(())
+}

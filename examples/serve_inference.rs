@@ -1,0 +1,103 @@
+//! Two-party inference service — the paper's deployment scenario (§4.3:
+//! e.g. on-device face recognition where the label owner hosts the top
+//! model). The feature owner streams compressed cut-layer activations for
+//! eval batches over TCP; the label owner answers with loss/metric; we
+//! report request latency and throughput plus the exact wire traffic.
+//!
+//! ```bash
+//! cargo run --release --example serve_inference -- --requests 64
+//! ```
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use splitfed::cli::Args;
+use splitfed::config::Method;
+use splitfed::coordinator::{FeatureOwner, LabelOwner};
+use splitfed::data::{for_model, Split};
+use splitfed::runtime::{default_artifacts_dir, Engine};
+use splitfed::transport::{TcpTransport, Transport};
+use splitfed::util::timer::Stats;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let requests: usize = args.get_parse("requests")?.unwrap_or(64);
+    let model = args.get_or("model", "mlp").to_string();
+    let method = Method::parse(args.get_or("method", "randtopk:k=6,alpha=0.1"))?;
+    let seed = 42u64;
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let dir = default_artifacts_dir();
+
+    // label owner: the serving party
+    let dir_lo = dir.clone();
+    let model_lo = model.clone();
+    let server = std::thread::spawn(move || -> Result<u64> {
+        let engine = Rc::new(Engine::load(&dir_lo)?);
+        let (stream, _) = listener.accept()?;
+        let transport = TcpTransport::from_stream(stream);
+        let mut lo = LabelOwner::new(engine, &model_lo, method, transport, 7)?;
+        let ds = for_model(&model_lo, lo.meta.n_classes, seed, 256, 4096);
+        let batch_size = lo.meta.batch;
+        for req in 0..requests {
+            let idx: Vec<usize> = (req * batch_size..(req + 1) * batch_size).collect();
+            let batch = ds.batch(Split::Test, &idx, false);
+            lo.eval_step(req as u64, &batch.y)?;
+        }
+        Ok(lo.transport.stats().bytes_recv)
+    });
+
+    // feature owner: the client device
+    let engine = Rc::new(Engine::load(&dir)?);
+    let transport = TcpTransport::connect(addr)?;
+    let mut fo = FeatureOwner::new(engine, &model, method, transport, seed, 7)?;
+    let ds = for_model(&model, fo.meta.n_classes, seed, 256, 4096);
+    let batch_size = fo.meta.batch;
+
+    let mut lat = Stats::new();
+    let mut correct = 0.0f32;
+    let mut n = 0usize;
+    let t_all = std::time::Instant::now();
+    for req in 0..requests {
+        let idx: Vec<usize> = (req * batch_size..(req + 1) * batch_size).collect();
+        let batch = ds.batch(Split::Test, &idx, false);
+        let t0 = std::time::Instant::now();
+        fo.eval_forward(req as u64, &batch.x)?;
+        let (_, c) = fo.recv_eval_result()?;
+        lat.push(t0.elapsed().as_secs_f64() * 1e3);
+        correct += c;
+        n += batch_size;
+    }
+    let total = t_all.elapsed().as_secs_f64();
+    let server_bytes = server.join().unwrap()?;
+
+    let s = fo.transport.stats();
+    println!("serve_inference — {model} + {method}, {requests} requests x batch {batch_size}");
+    println!(
+        "  latency    : p/mean {:.2} ms, min {:.2} ms, max {:.2} ms (incl. bottom model on device)",
+        lat.mean(), lat.min, lat.max
+    );
+    println!(
+        "  throughput : {:.0} samples/s ({:.1} req/s)",
+        n as f64 / total,
+        requests as f64 / total
+    );
+    println!(
+        "  accuracy   : {:.2}% on {} test samples",
+        100.0 * correct as f64 / n as f64,
+        n
+    );
+    println!(
+        "  wire       : sent {:.1} KiB ({:.2}% of dense activations), recv {:.1} KiB",
+        s.bytes_sent as f64 / 1024.0,
+        fo.mean_fwd_pct().max(
+            // eval_forward doesn't accumulate fwd_pct; derive from totals
+            100.0 * s.bytes_sent as f64
+                / (requests * batch_size * fo.meta.cut_dim * 4) as f64
+        ),
+        s.bytes_recv as f64 / 1024.0
+    );
+    assert_eq!(server_bytes, s.bytes_sent);
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! Table 3 (and appendix Tables 5-8) reproduction: accuracy vs compressed
+//! size for every method at matched compression levels.
+//!
+//! ```bash
+//! cargo run --release --example table3_sweep -- --task convnet --quick
+//! cargo run --release --example table3_sweep -- --task mlp --seeds 3
+//! cargo run --release --example table3_sweep -- --describe   # Table 4
+//! ```
+//!
+//! Methods per level follow the paper: RandTopk / Topk / SizeReduction at
+//! matched k; Quantization only at the levels where 1/2/4-bit sizes fit;
+//! L1 with a lambda grid (its size is emergent, reported as measured).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use splitfed::cli::Args;
+use splitfed::config::{ExperimentConfig, Method};
+use splitfed::coordinator::train;
+use splitfed::metrics::mean_std;
+use splitfed::runtime::{default_artifacts_dir, Engine};
+
+struct Row {
+    level: String,
+    method: String,
+    accs: Vec<f64>,
+    sizes: Vec<f64>,
+}
+
+fn level_name(model: &str, idx: usize, n_levels: usize) -> String {
+    let names: &[&str] = if n_levels == 4 {
+        &["High+", "High", "Medium", "Low"]
+    } else {
+        &["High", "Medium", "Low"]
+    };
+    let _ = model;
+    names[idx].to_string()
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let engine = Rc::new(Engine::load(default_artifacts_dir())?);
+
+    if args.has_flag("describe") {
+        // Table 4: dataset details
+        println!("Table 4 — dataset details (synthetic analogs, DESIGN.md §2)");
+        println!("{:<12} {:>9} {:>18}", "task", "#classes", "dim of last layer");
+        for (name, m) in &engine.manifest.models {
+            println!("{:<12} {:>9} {:>18}", name, m.n_classes, m.cut_dim);
+        }
+        return Ok(());
+    }
+
+    let task = args.get_or("task", "mlp").to_string();
+    let seeds: u64 = args.get_parse("seeds")?.unwrap_or(1);
+    let quick = args.has_flag("quick");
+    let epochs: u32 = args
+        .get_parse("epochs")?
+        .unwrap_or(if quick { 3 } else { 15 });
+    let n_train: usize = args.get_parse("n_train")?.unwrap_or(if quick { 1024 } else { 8192 });
+    let alpha: f32 = args.get_parse("alpha")?.unwrap_or(if task == "gru4rec" { 0.05 } else { 0.1 });
+    let lr: f32 = args.get_parse("lr")?.unwrap_or(match task.as_str() {
+        "textcnn" | "gru4rec" => 0.3,
+        "convnet" | "convnet_l" => 0.1,
+        _ => 0.05,
+    });
+
+    let meta = engine.manifest.model(&task)?.clone();
+    let mut rows: Vec<Row> = Vec::new();
+
+    let mut run_one = |method: Method, level: &str, rows: &mut Vec<Row>| -> Result<()> {
+        let mut accs = Vec::new();
+        let mut sizes = Vec::new();
+        for seed in 0..seeds {
+            let mut cfg = ExperimentConfig::default();
+            cfg.model = task.clone();
+            cfg.method = method;
+            cfg.epochs = epochs;
+            cfg.n_train = n_train;
+            cfg.n_test = n_train / 4;
+            cfg.lr = lr;
+            cfg.seed = 100 + seed;
+            cfg.eval_every = epochs; // final eval only
+            let ledger = train(engine.clone(), cfg, false)?;
+            accs.push(100.0 * ledger.final_metric());
+            sizes.push(ledger.fwd_compressed_pct);
+        }
+        let (am, asd) = mean_std(&accs);
+        let (sm, _) = mean_std(&sizes);
+        eprintln!("  [{level:<7}] {method}: acc {am:.2} ({asd:.2}) size {sm:.2}%");
+        rows.push(Row {
+            level: level.into(),
+            method: method.to_string(),
+            accs,
+            sizes,
+        });
+        Ok(())
+    };
+
+    // vanilla baseline
+    run_one(Method::None, "none", &mut rows)?;
+
+    let n_levels = meta.k_levels.len();
+    for (i, &k) in meta.k_levels.iter().enumerate() {
+        let level = level_name(&task, i, n_levels);
+        run_one(Method::RandTopk { k, alpha }, &level, &mut rows)?;
+        run_one(Method::Topk { k }, &level, &mut rows)?;
+        run_one(Method::SizeReduction { k }, &level, &mut rows)?;
+    }
+    // quantization at its feasible sizes (1/2/4 bit = 3.13/6.25/12.5%)
+    if !args.has_flag("no-quant") {
+        for bits in [1usize, 2, 4] {
+            run_one(Method::Quant { bits: bits as u8 }, &format!("q{bits}bit"), &mut rows)?;
+        }
+    }
+    // L1 lambda grid (compressed size emergent)
+    if !args.has_flag("no-l1") {
+        for lambda in [0.001f32, 0.0005, 0.0002] {
+            run_one(Method::L1 { lambda, eps: 1e-4 }, &format!("l1 {lambda}"), &mut rows)?;
+        }
+    }
+
+    println!("\nTable 3 — {task}: accuracy (std) / compressed size (%), {seeds} seed(s), {epochs} epochs");
+    println!("{:<9} {:<28} {:>16} {:>12}", "level", "method", "accuracy (std)", "size %");
+    for r in &rows {
+        let (am, asd) = mean_std(&r.accs);
+        let (sm, ssd) = mean_std(&r.sizes);
+        let size = if ssd > 0.005 {
+            format!("{sm:.2} ({ssd:.2})")
+        } else {
+            format!("{sm:.2}")
+        };
+        println!("{:<9} {:<28} {:>9.2} ({:>4.2}) {:>12}", r.level, r.method, am, asd, size);
+    }
+
+    // persist for downstream figure drivers
+    let dir = std::path::Path::new("runs/table3");
+    std::fs::create_dir_all(dir)?;
+    let mut csv = String::from("level,method,acc_mean,acc_std,size_mean\n");
+    for r in &rows {
+        let (am, asd) = mean_std(&r.accs);
+        let (sm, _) = mean_std(&r.sizes);
+        csv.push_str(&format!("{},{},{am},{asd},{sm}\n", r.level, r.method));
+    }
+    std::fs::write(dir.join(format!("{task}.csv")), csv)?;
+    println!("\nwrote runs/table3/{task}.csv");
+    Ok(())
+}

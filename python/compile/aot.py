@@ -1,0 +1,145 @@
+"""AOT compile path: lower every split-step function to HLO text.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts [--models mlp,...]
+
+HLO *text* is the interchange format (NOT .serialize()): jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Emits artifacts/<model>/<variant>/<fn>.hlo.txt plus artifacts/manifest.json
+describing every artifact's input/output signature, consumed by the rust
+runtime (rust/src/runtime/manifest.rs).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_builders
+from . import models as model_zoo
+
+# k chosen so that k/d * (1 + ceil(log2 d)/32) matches the paper's
+# compressed-size levels for the analogous dataset (see DESIGN.md §4).
+K_LEVELS = {
+    "mlp": (3, 6, 13),
+    "convnet": (3, 6, 13),  # CIFAR-100: 2.86 / 5.71 / 12.38 %
+    "gru4rec": (2, 4, 9),  # YooChoose: 0.85 / 1.71 / 3.84 %
+    "textcnn": (2, 4, 9, 14),  # DBPedia: 0.44 / 0.88 / 1.97 / 3.06 %
+    "convnet_l": (2, 4, 9),  # Tiny-ImageNet: 0.21 / 0.42 / 0.94 %
+}
+QUANT_BITS = (1, 2, 4)
+DECODER_MODELS = ("convnet",)  # Appendix B inversion attack target
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt):
+    dt = jnp.dtype(dt)
+    return {"float32": "f32", "int32": "i32"}[dt.name]
+
+
+def _sig(specs, names):
+    return [
+        dict(name=n, dtype=_dtype_name(s.dtype), shape=list(s.shape))
+        for n, s in zip(names, specs)
+    ]
+
+
+def _out_sig(fn, specs):
+    outs = jax.eval_shape(fn, *specs)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    return [dict(dtype=_dtype_name(o.dtype), shape=list(o.shape)) for o in outs]
+
+
+def lower_one(fn, specs):
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def emit(out_dir, model_names, only=None, force=False, verbose=True):
+    manifest = {"models": {}, "artifacts": []}
+    for name in model_names:
+        mod = model_zoo.get(name)
+        cfg = mod.config()
+        bshapes, tshapes = model_builders.model_shapes(mod)
+        entry = dict(
+            cfg,
+            bottom_shapes=[list(s) for s in bshapes],
+            top_shapes=[list(s) for s in tshapes],
+            k_levels=list(K_LEVELS[name]),
+            quant_bits=list(QUANT_BITS),
+        )
+        if name in DECODER_MODELS:
+            entry["decoder_shapes"] = [
+                list(s) for s in model_builders.decoder_shapes(mod)
+            ]
+            entry["decoder_ks"] = list(K_LEVELS[name]) + [cfg["cut_dim"]]
+        manifest["models"][name] = entry
+
+        builders = model_builders.variant_builders(
+            mod, K_LEVELS[name], QUANT_BITS
+        )
+        if name in DECODER_MODELS:
+            builders.append(("decoder", "init", lambda m=mod: model_builders.build_decoder_init(m)))
+            for k in entry["decoder_ks"]:
+                builders += [
+                    (f"decoder_k{k}", "train",
+                     lambda m=mod, k=k: model_builders.build_decoder_train(m, k)),
+                    (f"decoder_k{k}", "eval",
+                     lambda m=mod, k=k: model_builders.build_decoder_eval(m, k)),
+                ]
+
+        for variant, fn_name, thunk in builders:
+            rel = os.path.join(name, variant, f"{fn_name}.hlo.txt") if variant else os.path.join(name, f"{fn_name}.hlo.txt")
+            if only and only not in rel:
+                continue
+            path = os.path.join(out_dir, rel)
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            fn, specs, names = thunk()
+            art = dict(
+                model=name,
+                variant=variant,
+                fn=fn_name,
+                path=rel,
+                inputs=_sig(specs, names),
+                outputs=_out_sig(fn, specs),
+            )
+            manifest["artifacts"].append(art)
+            if os.path.exists(path) and not force:
+                continue
+            t0 = time.time()
+            text = lower_one(fn, specs)
+            with open(path, "w") as f:
+                f.write(text)
+            if verbose:
+                print(f"  {rel}: {len(text)//1024} KiB in {time.time()-t0:.1f}s", flush=True)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(model_zoo.REGISTRY))
+    ap.add_argument("--only", default=None, help="substring filter on artifact path")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    emit(args.out_dir, [m for m in args.models.split(",") if m], args.only, args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Dump golden traces: inputs + expected outputs of split-step functions.
+
+The rust integration tests (rust/tests/golden.rs) load these .npz files,
+execute the corresponding HLO artifacts on the PJRT CPU client, and compare
+numerics — pinning the whole AOT bridge (lowering, text round-trip, literal
+marshalling, execution) against the python-side ground truth.
+
+Usage (from python/): python -m compile.golden --out-dir ../artifacts/golden
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as mb
+from . import models as zoo
+
+
+def _flat(args):
+    return [np.asarray(a) for a in args]
+
+
+def _save(path, inputs, outputs):
+    arrs = {}
+    for i, a in enumerate(_flat(inputs)):
+        arrs[f"in_{i}"] = a
+    outs = outputs if isinstance(outputs, (tuple, list)) else (outputs,)
+    for i, a in enumerate(_flat(outs)):
+        arrs[f"out_{i}"] = a
+    np.savez(path, **arrs)
+    print(f"  {os.path.basename(path)}: {len(inputs)} in / {len(outs)} out")
+
+
+def dump_model(out_dir, name, k):
+    mod = zoo.get(name)
+    cfg = mod.config()
+    b = cfg["batch"]
+    key = jax.random.PRNGKey(42)
+    bottom, top = mod.init_params(key)
+    mom_t = [jnp.zeros_like(p) for p in top]
+    mom_b = [jnp.zeros_like(p) for p in bottom]
+
+    if cfg["input_dtype"] == "i32":
+        x = jax.random.randint(key, cfg["input_shape"], 0, cfg["n_classes"], jnp.int32)
+    else:
+        x = jax.random.normal(key, cfg["input_shape"], jnp.float32)
+    y = jax.random.randint(jax.random.PRNGKey(7), (b,), 0, cfg["n_classes"], jnp.int32)
+    seed = jnp.int32(123)
+    alpha = jnp.array([0.1], jnp.float32)
+    fixed_sel = jnp.array([0.0], jnp.float32)
+    lr = jnp.array([0.05], jnp.float32)
+
+    # init
+    fn, _, _ = mb.build_init(mod)
+    _save(os.path.join(out_dir, f"{name}_init.npz"), [np.int32(42)], fn(42))
+
+    # bottom_fwd (sparse)
+    fn, _, _ = mb.build_bottom_fwd_sparse(mod, k)
+    args = list(bottom) + [x, seed, alpha, fixed_sel]
+    values, indices = fn(*args)
+    _save(os.path.join(out_dir, f"{name}_sparse_k{k}_bottom_fwd.npz"), args, (values, indices))
+
+    # top_fwdbwd (sparse)
+    fn, _, _ = mb.build_top_fwdbwd_sparse(mod, k)
+    args = list(top) + list(mom_t) + [values, indices, y, lr]
+    outs = fn(*args)
+    _save(os.path.join(out_dir, f"{name}_sparse_k{k}_top_fwdbwd.npz"), args, outs)
+    g_values = outs[-3]
+
+    # bottom_bwd (sparse)
+    fn, _, _ = mb.build_bottom_bwd_sparse(mod, k)
+    args = list(bottom) + list(mom_b) + [x, indices, g_values, lr]
+    outs = fn(*args)
+    _save(os.path.join(out_dir, f"{name}_sparse_k{k}_bottom_bwd.npz"), args, outs)
+
+    # top_eval (sparse)
+    fn, _, _ = mb.build_top_eval_sparse(mod, k)
+    args = list(top) + [values, indices, y]
+    outs = fn(*args)
+    _save(os.path.join(out_dir, f"{name}_sparse_k{k}_top_eval.npz"), args, outs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts/golden")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    dump_model(args.out_dir, "mlp", 6)
+    print("golden traces written")
+
+
+if __name__ == "__main__":
+    main()

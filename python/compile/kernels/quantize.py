@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: per-instance uniform quantization (paper Eq. 2).
+
+Secondary hot-spot used by the quantization baseline. Same VMEM story as
+the randtopk kernel: rows are tiny, grid over batch blocks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+ROWS_PER_BLOCK = 8
+
+
+def _quantize_kernel(o_ref, code_ref, min_ref, max_ref, *, bits):
+    o = o_ref[...].astype(jnp.float32)
+    o_min = jnp.min(o, axis=-1, keepdims=True)
+    o_max = jnp.max(o, axis=-1, keepdims=True)
+    levels = float(2**bits)
+    span = jnp.maximum(o_max - o_min, ref._EPS)
+    codes = jnp.clip(jnp.floor((o - o_min) / (span / levels)), 0.0, levels - 1.0)
+    code_ref[...] = codes
+    min_ref[...] = o_min
+    max_ref[...] = o_max
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quantize_pallas(o, bits):
+    """[B, d] -> (codes [B, d] f32 ints, o_min [B, 1], o_max [B, 1])."""
+    b, d = o.shape
+    rows = ROWS_PER_BLOCK if b % ROWS_PER_BLOCK == 0 else b
+    grid = (b // rows,)
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(o)

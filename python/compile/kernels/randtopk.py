@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: randomized top-k selection (the paper's hot-spot).
+
+Pool-based Gumbel-top-k sampler (see ``ref.randtopk_select`` for the
+equivalence proof against the sequential Eq. 7 process): one Gumbel key
+per element + k Binomial pool coins, two in-register ranking sorts, no
+sequential k-step loop. The §Perf pass replaced the literal sequential
+sampler (k argmax sweeps, ~50x the bottom-model cost on CPU) with this —
+EXPERIMENTS.md §Perf has the before/after.
+
+The kernel processes a block of batch rows per grid step. Each row's
+activation vector (d <= ~1280, i.e. <= 5 KiB fp32) plus its Gumbel field
+fits comfortably in VMEM, so on a real TPU the BlockSpec expresses the
+HBM->VMEM schedule: grid over batch blocks, ROWS_PER_BLOCK rows per
+program; the ranking sorts are VPU work (no MXU).
+
+We run with ``interpret=True`` everywhere: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowers to plain HLO so
+the same artifact runs on the rust CPU client. Correctness is pinned to
+the pure-jnp oracle in ``ref.py`` by ``python/tests/test_kernel.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+ROWS_PER_BLOCK = 8
+
+
+def _randtopk_kernel(o_ref, rand_ref, alpha_ref, val_ref, idx_ref, *, k):
+    """One grid step: select k elements for ROWS_PER_BLOCK rows.
+
+    o_ref:     [R, d]      activations
+    rand_ref:  [R, k + d]  uniforms (k pool coins, d Gumbel uniforms)
+    alpha_ref: [1]         randomness coefficient
+    val_ref:   [R, k]      out: selected values
+    idx_ref:   [R, k]      out: selected indices (int32, ascending)
+    """
+    o = o_ref[...].astype(jnp.float32)
+    rand = rand_ref[...]
+    alpha = alpha_ref[0]
+    r, d = o.shape
+
+    coins = rand[:, :k]
+    g = jnp.clip(ref.gumbel_from_uniform(rand[:, k:]), -60.0, 60.0)
+    tk, _ = ref.topk_mask(o, k)
+
+    m = jnp.sum((coins < 1.0 - alpha).astype(jnp.int32), axis=-1, keepdims=True)
+    m = jnp.clip(m, jnp.maximum(0, k - (d - k)), k)
+
+    # single combined pool+gumbel sort, closed-form selected positions
+    # (identical math to ref.randtopk_select — bit-exact parity)
+    order = jnp.argsort(-(g + 1000.0 * tk), axis=-1, stable=True)
+    t_idx = jnp.arange(k, dtype=jnp.int32)[None, :]
+    pos = jnp.where(t_idx < m, t_idx, k + t_idx - m)
+    idxs = jnp.take_along_axis(order, pos, axis=-1)
+    idxs = jnp.sort(idxs, axis=-1).astype(jnp.int32)
+    val_ref[...] = jnp.take_along_axis(o, idxs, axis=-1)
+    idx_ref[...] = idxs
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def randtopk_pallas(o, rand, alpha, k):
+    """Pallas entry point. ``rand``: [B, k + d] uniforms (see ref).
+
+    ``alpha`` is a [1] float32 array (runtime input so one artifact serves
+    Topk / RandTopk-any-alpha). Batch must be a multiple of ROWS_PER_BLOCK
+    or small enough to be a single block.
+    """
+    b, d = o.shape
+    rows = ROWS_PER_BLOCK if b % ROWS_PER_BLOCK == 0 else b
+    grid = (b // rows,)
+    return pl.pallas_call(
+        functools.partial(_randtopk_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((rows, k + d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((rows, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        interpret=True,
+    )(o, rand, alpha)

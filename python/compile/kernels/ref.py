@@ -1,0 +1,219 @@
+"""Pure-jnp reference oracles for the L1 kernels.
+
+These are the *specification*: the Pallas kernels in ``randtopk.py`` and
+``quantize.py`` must match them (bit-exactly for index selection given the
+same uniform randoms, allclose for float outputs). The reference code is
+also what the L2 model uses when lowering the non-hot-path variants.
+
+RandTopk (paper Eq. 7): k sequential draws without replacement; draw t picks
+with probability (1-alpha) uniformly among the *remaining* top-k elements
+(by |o|) and with probability alpha uniformly among the remaining non-top-k
+elements. alpha = 0 degenerates to exact top-k; alpha = 1 is Dropout-like.
+The sampler is realized as Gumbel-max over per-element log-weights, which is
+exactly equivalent to categorical sampling and vectorizes over the batch.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+_EPS = 1e-12
+
+
+def gumbel_from_uniform(u):
+    """Standard Gumbel noise from uniforms in [0, 1)."""
+    return -jnp.log(-jnp.log(u + _EPS) + _EPS)
+
+
+def argtopk(a, k):
+    """Indices of the k largest entries per row (stable tie-break by index).
+
+    NOTE: implemented with argsort, not ``jax.lax.top_k`` — lax.top_k lowers
+    to a `topk(..., largest=true)` HLO instruction that the consumer-side
+    XLA 0.5.1 text parser rejects; `sort` round-trips fine.
+    """
+    order = jnp.argsort(-jnp.abs(a), axis=-1, stable=True)
+    return order[..., :k]
+
+
+def topk_mask(o, k):
+    """[B, d] -> ({0,1} mask of the k largest-|o| entries per row, indices)."""
+    idx = argtopk(o, k)
+    mask = jnp.zeros_like(o).at[jnp.arange(o.shape[0])[:, None], idx].set(1.0)
+    return mask, idx
+
+
+def _draw_weights(rem, tk_mask, alpha):
+    """Per-element selection weight for one draw (Eq. 7), batched.
+
+    rem, tk_mask: [B, d] {0,1}. Returns w: [B, d] >= 0.
+    """
+    n1 = jnp.sum(rem * tk_mask, axis=-1, keepdims=True)
+    n2 = jnp.sum(rem * (1.0 - tk_mask), axis=-1, keepdims=True)
+    w_top = rem * tk_mask * (1.0 - alpha) / jnp.maximum(n1, 1.0)
+    w_non = rem * (1.0 - tk_mask) * alpha / jnp.maximum(n2, 1.0)
+    w = w_top + w_non
+    # Guard: if one pool is exhausted and the other has zero probability
+    # (alpha in {0,1} edge cases), fall back to uniform over remaining.
+    total = jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.where(total > 0.0, w, rem)
+
+
+def randtopk_select_seq(o, rand, k, alpha):
+    """Randomized top-k selection — the *sequential* sampler, a literal
+    transcription of Eq. 7 (k draws without replacement). Kept as the
+    distributional specification; the production path uses the
+    algebraically equivalent pool-based sampler below (§Perf: the k-step
+    scan costs ~50x the bottom model itself on CPU).
+
+    Args:
+      o:     [B, d] float32 activations.
+      rand:  [B, k, d] uniforms in [0, 1) — one Gumbel field per draw.
+      k:     static int, number of kept elements.
+      alpha: scalar (traced ok) in [0, 1].
+
+    Returns:
+      values  [B, k] float32 — o gathered at the selected indices.
+      indices [B, k] int32   — selected indices, sorted ascending.
+    """
+    o = o.astype(jnp.float32)
+    b, d = o.shape
+    tk, _ = topk_mask(o, k)
+
+    def step(rem, u):
+        w = _draw_weights(rem, tk, alpha)
+        score = jnp.where(w > 0.0, jnp.log(w + _EPS) + gumbel_from_uniform(u), _NEG_INF)
+        idx = jnp.argmax(score, axis=-1)  # [B]
+        rem = rem * (1.0 - jax.nn.one_hot(idx, d, dtype=rem.dtype))
+        return rem, idx
+
+    rem0 = jnp.ones((b, d), dtype=jnp.float32)
+    _, idxs = jax.lax.scan(step, rem0, jnp.swapaxes(rand, 0, 1))  # idxs: [k, B]
+    idxs = jnp.sort(jnp.swapaxes(idxs, 0, 1), axis=-1).astype(jnp.int32)  # [B, k]
+    values = jnp.take_along_axis(o, idxs, axis=-1)
+    return values, idxs
+
+
+def rank_desc(x):
+    """Per-row dense rank of x in descending order (0 = largest), with
+    ties broken by lower index first (argsort-of-argsort, stable)."""
+    order = jnp.argsort(-x, axis=-1, stable=True)
+    d = x.shape[-1]
+    ranks = jnp.zeros_like(order)
+    rows = jnp.arange(x.shape[0])[:, None]
+    return ranks.at[rows, order].set(jnp.broadcast_to(jnp.arange(d), x.shape))
+
+
+def randtopk_select(o, rand, k, alpha):
+    """Randomized top-k selection — pool-based Gumbel-top-k sampler,
+    distribution-identical to the sequential Eq. 7 process.
+
+    Derivation: while both pools are non-empty, each draw picks the top-k
+    pool with probability exactly (1 - alpha) and then an element
+    *uniformly without replacement* inside the pool. Hence (a) the number
+    of top-pool picks M follows Binomial(k, 1-alpha) clamped to the pool
+    sizes, and (b) given M, the picked subset of each pool is a uniform
+    M-subset — which is exactly what taking the M largest i.i.d. Gumbel
+    keys yields. One Gumbel per element + k pool coins replace the k
+    sequential [B, d] weight/argmax sweeps.
+
+    Args:
+      o:     [B, d] float32 activations.
+      rand:  [B, k + d] uniforms — first k columns are the pool coins,
+             remaining d the per-element Gumbel uniforms.
+      k:     static int.
+      alpha: scalar in [0, 1] (may be traced; [1] arrays also accepted).
+
+    Returns (values [B, k], indices [B, k] int32 ascending).
+    """
+    o = o.astype(jnp.float32)
+    b, d = o.shape
+    alpha = jnp.asarray(alpha, jnp.float32).reshape(-1)[0]
+    coins = rand[:, :k]  # [B, k]
+    # Gumbel keys clipped into a bounded range so the pool offset below
+    # strictly separates the pools (P(|gumbel| > 60) ~ 1e-26).
+    g = jnp.clip(gumbel_from_uniform(rand[:, k:]), -60.0, 60.0)  # [B, d]
+    tk, _ = topk_mask(o, k)
+
+    # M = #draws landing in the top-k pool, clamped so neither pool
+    # overdraws (non-top pool has d - k elements).
+    m = jnp.sum((coins < 1.0 - alpha).astype(jnp.int32), axis=-1, keepdims=True)  # [B,1]
+    m = jnp.clip(m, jnp.maximum(0, k - (d - k)), k)
+
+    # One combined sort (XLA CPU sort dominates this kernel — §Perf):
+    # key = gumbel + BIG * pool puts all k top-pool elements first (ordered
+    # by gumbel), then the non-pool elements (ordered by gumbel). The
+    # selected positions are then closed-form: the first m positions of the
+    # pool segment and the first k-m of the non-pool segment, which starts
+    # at column k because the pool has exactly k members.
+    order = jnp.argsort(-(g + 1000.0 * tk), axis=-1, stable=True)  # [B, d]
+    t_idx = jnp.arange(k, dtype=jnp.int32)[None, :]  # [1, k]
+    pos = jnp.where(t_idx < m, t_idx, k + t_idx - m)  # [B, k]
+    idxs = jnp.take_along_axis(order, pos, axis=-1)
+    idxs = jnp.sort(idxs, axis=-1).astype(jnp.int32)  # small [B, k] sort
+    values = jnp.take_along_axis(o, idxs, axis=-1)
+    return values, idxs
+
+
+def randtopk_rand_shape(b, d, k):
+    """Shape of the uniform block ``randtopk_select`` consumes."""
+    return (b, k + d)
+
+
+def topk_select(o, k):
+    """Deterministic top-k (inference path / alpha=0 fast path)."""
+    o = o.astype(jnp.float32)
+    idx = jnp.sort(argtopk(o, k), axis=-1).astype(jnp.int32)
+    return jnp.take_along_axis(o, idx, axis=-1), idx
+
+
+def size_reduction_select(o, k):
+    """Cut-layer size reduction: keep the first k coordinates (mask trick)."""
+    o = o.astype(jnp.float32)
+    b = o.shape[0]
+    idx = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32), (b, k))
+    return o[:, :k], idx
+
+
+def scatter_dense(values, indices, d):
+    """Inverse of the selections: [B,k] values + indices -> [B,d] dense."""
+    b, _ = values.shape
+    out = jnp.zeros((b, d), dtype=values.dtype)
+    return out.at[jnp.arange(b)[:, None], indices].set(values)
+
+
+def quantize_ref(o, bits):
+    """Uniform per-instance quantization (paper Eq. 2).
+
+    Returns (codes [B,d] float32 holding integers in [0, 2^bits),
+             o_min [B, 1], o_max [B, 1]).
+    """
+    o = o.astype(jnp.float32)
+    o_min = jnp.min(o, axis=-1, keepdims=True)
+    o_max = jnp.max(o, axis=-1, keepdims=True)
+    levels = float(2**bits)
+    span = jnp.maximum(o_max - o_min, _EPS)
+    codes = jnp.floor((o - o_min) / (span / levels))
+    codes = jnp.clip(codes, 0.0, levels - 1.0)
+    return codes, o_min, o_max
+
+
+def dequantize_ref(codes, o_min, o_max, bits):
+    """Paper Eq. 2 decompression: bin midpoints."""
+    levels = float(2**bits)
+    span = jnp.maximum(o_max - o_min, _EPS)
+    return o_min + (codes + 0.5) * (span / levels)
+
+
+def quantize_ste(o, bits):
+    """Quantize-dequantize with a straight-through gradient (identity)."""
+    codes, o_min, o_max = quantize_ref(o, bits)
+    o_hat = dequantize_ref(codes, o_min, o_max, bits)
+    return o + jax.lax.stop_gradient(o_hat - o)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def randtopk_select_jit(o, rand, alpha, k):
+    return randtopk_select(o, rand, k, alpha)

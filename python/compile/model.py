@@ -1,0 +1,496 @@
+"""L2 split-step builders.
+
+Split learning decomposes one training step into three stateless functions
+(paper Fig. 1), each lowered to its own HLO artifact and executed from the
+rust coordinator:
+
+  bottom_fwd   (feature owner): X -> compressed cut-layer representation
+  top_fwdbwd   (label owner):   representation + Y -> top update + gradient
+  bottom_bwd   (feature owner): gradient -> bottom update (remat forward)
+
+plus ``top_eval`` for the inference phase and ``init`` for parameter
+initialization. Optimizer state (SGD momentum) is threaded through as
+explicit inputs/outputs so the artifacts stay pure.
+
+Variants:
+  sparse_k{K}  — one artifact family serves Topk (alpha=0), RandTopk
+                 (alpha>0) and size reduction (fixed_sel=1): the selection
+                 indices are computed in-graph by the L1 Pallas kernel.
+  quant_b{B}   — uniform per-instance quantization (codes on the wire);
+                 backward is dense (paper Table 2), so bottom_bwd is shared
+                 with the dense variant.
+  dense        — vanilla SL and L1 regularization (runtime lambda input).
+
+Every builder returns ``(fn, input_specs, input_names)`` where fn takes the
+flat argument list described by the specs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import randtopk as randtopk_kernel
+from .kernels import quantize as quantize_kernel
+from .kernels import ref
+from .models import common
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs(shapes, prefix):
+    return (
+        [_spec(s, F32) for s in shapes],
+        [f"{prefix}[{i}]" for i in range(len(shapes))],
+    )
+
+
+def _shapes(params):
+    return [tuple(p.shape) for p in params]
+
+
+def model_shapes(model):
+    """(bottom_shapes, top_shapes) without materializing real params."""
+    bottom, top = jax.eval_shape(lambda k: model.init_params(k), jax.random.PRNGKey(0))
+    return _shapes(bottom), _shapes(top)
+
+
+def _x_spec(cfg):
+    dt = I32 if cfg["input_dtype"] == "i32" else F32
+    return _spec(cfg["input_shape"], dt)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def build_init(model):
+    def fn(seed):
+        bottom, top = model.init_params(jax.random.PRNGKey(seed))
+        return tuple(bottom) + tuple(top)
+
+    return fn, [_spec((), I32)], ["seed"]
+
+
+# ---------------------------------------------------------------------------
+# sparse variant (Topk / RandTopk / size reduction)
+# ---------------------------------------------------------------------------
+
+
+def build_bottom_fwd_sparse(model, k):
+    cfg = model.config()
+    bshapes, _ = model_shapes(model)
+    b, d = cfg["batch"], cfg["cut_dim"]
+    nb = len(bshapes)
+
+    def fn(*args):
+        bp = list(args[:nb])
+        x, seed, alpha, fixed_sel = args[nb:]
+        o = model.bottom_apply(bp, x)
+        rand = jax.random.uniform(
+            jax.random.PRNGKey(seed), ref.randtopk_rand_shape(b, d, k), F32
+        )
+        v_r, i_r = randtopk_kernel.randtopk_pallas(o, rand, alpha, k)
+        v_s, i_s = ref.size_reduction_select(o, k)
+        sel = fixed_sel[0] > 0.5
+        values = jnp.where(sel, v_s, v_r)
+        indices = jnp.where(sel, i_s, i_r)
+        return values, indices
+
+    specs, names = _param_specs(bshapes, "theta_b")
+    specs += [_x_spec(cfg), _spec((), I32), _spec((1,), F32), _spec((1,), F32)]
+    names += ["x", "seed", "alpha", "fixed_sel"]
+    return fn, specs, names
+
+
+def build_top_fwdbwd_sparse(model, k):
+    cfg = model.config()
+    _, tshapes = model_shapes(model)
+    b, d, nt = cfg["batch"], cfg["cut_dim"], None
+    nt = len(tshapes)
+
+    def fn(*args):
+        tp = list(args[:nt])
+        tm = list(args[nt : 2 * nt])
+        values, indices, y, lr = args[2 * nt :]
+
+        def loss_fn(tp_, values_):
+            o = ref.scatter_dense(values_, indices, d)
+            logits = model.top_apply(tp_, o)
+            loss = common.softmax_xent(logits, y)
+            return loss, common.metric_count(cfg["metric"], logits, y)
+
+        (loss, correct), (g_tp, g_values) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True
+        )(tp, values)
+        new_tp, new_tm = common.sgd_momentum(tp, tm, g_tp, lr[0])
+        return tuple(new_tp) + tuple(new_tm) + (g_values, loss, correct)
+
+    specs, names = _param_specs(tshapes, "theta_t")
+    s2, n2 = _param_specs(tshapes, "mom_t")
+    specs += s2
+    names += n2
+    specs += [_spec((b, k), F32), _spec((b, k), I32), _spec((b,), I32), _spec((1,), F32)]
+    names += ["values", "indices", "y", "lr"]
+    return fn, specs, names
+
+
+def build_bottom_bwd_sparse(model, k):
+    cfg = model.config()
+    bshapes, _ = model_shapes(model)
+    b = cfg["batch"]
+    nb = len(bshapes)
+
+    def fn(*args):
+        bp = list(args[:nb])
+        bm = list(args[nb : 2 * nb])
+        x, indices, g_values, lr = args[2 * nb :]
+
+        def fwd_sel(bp_):
+            o = model.bottom_apply(bp_, x)
+            return jnp.take_along_axis(o, indices, axis=-1)
+
+        _, vjp = jax.vjp(fwd_sel, bp)
+        (grads,) = vjp(g_values)
+        new_bp, new_bm = common.sgd_momentum(bp, bm, grads, lr[0])
+        return tuple(new_bp) + tuple(new_bm)
+
+    specs, names = _param_specs(bshapes, "theta_b")
+    s2, n2 = _param_specs(bshapes, "mom_b")
+    specs += s2
+    names += n2
+    specs += [_x_spec(cfg), _spec((b, k), I32), _spec((b, k), F32), _spec((1,), F32)]
+    names += ["x", "indices", "g_values", "lr"]
+    return fn, specs, names
+
+
+def build_top_eval_sparse(model, k):
+    cfg = model.config()
+    _, tshapes = model_shapes(model)
+    b, d = cfg["batch"], cfg["cut_dim"]
+    nt = len(tshapes)
+
+    def fn(*args):
+        tp = list(args[:nt])
+        values, indices, y = args[nt:]
+        o = ref.scatter_dense(values, indices, d)
+        logits = model.top_apply(tp, o)
+        loss = common.softmax_xent(logits, y)
+        return loss * b, common.metric_count(cfg["metric"], logits, y)
+
+    specs, names = _param_specs(tshapes, "theta_t")
+    specs += [_spec((b, k), F32), _spec((b, k), I32), _spec((b,), I32)]
+    names += ["values", "indices", "y"]
+    return fn, specs, names
+
+
+# ---------------------------------------------------------------------------
+# dense variant (vanilla SL + L1 regularization)
+# ---------------------------------------------------------------------------
+
+
+def build_bottom_fwd_dense(model):
+    cfg = model.config()
+    bshapes, _ = model_shapes(model)
+    nb = len(bshapes)
+
+    def fn(*args):
+        bp = list(args[:nb])
+        x = args[nb]
+        return (model.bottom_apply(bp, x),)
+
+    specs, names = _param_specs(bshapes, "theta_b")
+    specs += [_x_spec(cfg)]
+    names += ["x"]
+    return fn, specs, names
+
+
+def build_top_fwdbwd_dense(model):
+    cfg = model.config()
+    _, tshapes = model_shapes(model)
+    b, d = cfg["batch"], cfg["cut_dim"]
+    nt = len(tshapes)
+
+    def fn(*args):
+        tp = list(args[:nt])
+        tm = list(args[nt : 2 * nt])
+        o, y, lr, l1 = args[2 * nt :]
+
+        def loss_fn(tp_, o_):
+            logits = model.top_apply(tp_, o_)
+            ce = common.softmax_xent(logits, y)
+            # Paper §3.1: L' = L + lambda * sum_i |o_i| (per-sample, batch mean)
+            loss = ce + l1[0] * jnp.mean(jnp.sum(jnp.abs(o_), axis=-1))
+            return loss, (ce, common.metric_count(cfg["metric"], logits, y))
+
+        (loss, (ce, correct)), (g_tp, g_o) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True
+        )(tp, o)
+        new_tp, new_tm = common.sgd_momentum(tp, tm, g_tp, lr[0])
+        return tuple(new_tp) + tuple(new_tm) + (g_o, ce, correct)
+
+    specs, names = _param_specs(tshapes, "theta_t")
+    s2, n2 = _param_specs(tshapes, "mom_t")
+    specs += s2
+    names += n2
+    specs += [_spec((b, d), F32), _spec((b,), I32), _spec((1,), F32), _spec((1,), F32)]
+    names += ["o", "y", "lr", "l1_lambda"]
+    return fn, specs, names
+
+
+def build_bottom_bwd_dense(model):
+    cfg = model.config()
+    bshapes, _ = model_shapes(model)
+    b, d = cfg["batch"], cfg["cut_dim"]
+    nb = len(bshapes)
+
+    def fn(*args):
+        bp = list(args[:nb])
+        bm = list(args[nb : 2 * nb])
+        x, g_o, lr = args[2 * nb :]
+        _, vjp = jax.vjp(lambda bp_: model.bottom_apply(bp_, x), bp)
+        (grads,) = vjp(g_o)
+        new_bp, new_bm = common.sgd_momentum(bp, bm, grads, lr[0])
+        return tuple(new_bp) + tuple(new_bm)
+
+    specs, names = _param_specs(bshapes, "theta_b")
+    s2, n2 = _param_specs(bshapes, "mom_b")
+    specs += s2
+    names += n2
+    specs += [_x_spec(cfg), _spec((b, d), F32), _spec((1,), F32)]
+    names += ["x", "g_o", "lr"]
+    return fn, specs, names
+
+
+def build_top_eval_dense(model):
+    cfg = model.config()
+    _, tshapes = model_shapes(model)
+    b, d = cfg["batch"], cfg["cut_dim"]
+    nt = len(tshapes)
+
+    def fn(*args):
+        tp = list(args[:nt])
+        o, y = args[nt:]
+        logits = model.top_apply(tp, o)
+        loss = common.softmax_xent(logits, y)
+        return loss * b, common.metric_count(cfg["metric"], logits, y)
+
+    specs, names = _param_specs(tshapes, "theta_t")
+    specs += [_spec((b, d), F32), _spec((b,), I32)]
+    names += ["o", "y"]
+    return fn, specs, names
+
+
+# ---------------------------------------------------------------------------
+# quantization variant (bottom_bwd shared with dense)
+# ---------------------------------------------------------------------------
+
+
+def build_bottom_fwd_quant(model, bits):
+    cfg = model.config()
+    bshapes, _ = model_shapes(model)
+    nb = len(bshapes)
+
+    def fn(*args):
+        bp = list(args[:nb])
+        x = args[nb]
+        o = model.bottom_apply(bp, x)
+        codes, o_min, o_max = quantize_kernel.quantize_pallas(o, bits)
+        return codes, o_min, o_max
+
+    specs, names = _param_specs(bshapes, "theta_b")
+    specs += [_x_spec(cfg)]
+    names += ["x"]
+    return fn, specs, names
+
+
+def build_top_fwdbwd_quant(model, bits):
+    cfg = model.config()
+    _, tshapes = model_shapes(model)
+    b, d = cfg["batch"], cfg["cut_dim"]
+    nt = len(tshapes)
+
+    def fn(*args):
+        tp = list(args[:nt])
+        tm = list(args[nt : 2 * nt])
+        codes, o_min, o_max, y, lr = args[2 * nt :]
+        o_hat = ref.dequantize_ref(codes, o_min, o_max, bits)
+
+        def loss_fn(tp_, o_):
+            logits = model.top_apply(tp_, o_)
+            loss = common.softmax_xent(logits, y)
+            return loss, common.metric_count(cfg["metric"], logits, y)
+
+        (loss, correct), (g_tp, g_o) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True
+        )(tp, o_hat)
+        new_tp, new_tm = common.sgd_momentum(tp, tm, g_tp, lr[0])
+        # Straight-through: g_o is the gradient w.r.t. the dequantized input,
+        # applied by the feature owner as dL/dO_b (backward dense, Table 2).
+        return tuple(new_tp) + tuple(new_tm) + (g_o, loss, correct)
+
+    specs, names = _param_specs(tshapes, "theta_t")
+    s2, n2 = _param_specs(tshapes, "mom_t")
+    specs += s2
+    names += n2
+    specs += [
+        _spec((b, d), F32),
+        _spec((b, 1), F32),
+        _spec((b, 1), F32),
+        _spec((b,), I32),
+        _spec((1,), F32),
+    ]
+    names += ["codes", "o_min", "o_max", "y", "lr"]
+    return fn, specs, names
+
+
+def build_top_eval_quant(model, bits):
+    cfg = model.config()
+    _, tshapes = model_shapes(model)
+    b, d = cfg["batch"], cfg["cut_dim"]
+    nt = len(tshapes)
+
+    def fn(*args):
+        tp = list(args[:nt])
+        codes, o_min, o_max, y = args[nt:]
+        o_hat = ref.dequantize_ref(codes, o_min, o_max, bits)
+        logits = model.top_apply(tp, o_hat)
+        loss = common.softmax_xent(logits, y)
+        return loss * b, common.metric_count(cfg["metric"], logits, y)
+
+    specs, names = _param_specs(tshapes, "theta_t")
+    specs += [_spec((b, d), F32), _spec((b, 1), F32), _spec((b, 1), F32), _spec((b,), I32)]
+    names += ["codes", "o_min", "o_max", "y"]
+    return fn, specs, names
+
+
+# ---------------------------------------------------------------------------
+# inversion-attack decoder (Appendix B) — reconstruct X from cut activations
+# ---------------------------------------------------------------------------
+
+DECODER_HIDDEN = (512, 1024)
+
+
+def decoder_shapes(model):
+    cfg = model.config()
+    d = cfg["cut_dim"]
+    out = 1
+    for s in cfg["input_shape"][1:]:
+        out *= s
+    dims = (d,) + DECODER_HIDDEN + (out,)
+    shapes = []
+    for a, b_ in zip(dims[:-1], dims[1:]):
+        shapes += [(a, b_), (b_,)]
+    return shapes
+
+
+def _decoder_apply(dp, o):
+    h = o
+    n_layers = len(dp) // 2
+    for i in range(n_layers):
+        h = h @ dp[2 * i] + dp[2 * i + 1]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def build_decoder_init(model):
+    shapes = decoder_shapes(model)
+
+    def fn(seed):
+        ks = iter(jax.random.split(jax.random.PRNGKey(seed), len(shapes)))
+        out = []
+        for s in shapes:
+            if len(s) == 2:
+                out.append(common.glorot(next(ks), s))
+            else:
+                out.append(jnp.zeros(s, F32))
+        return tuple(out)
+
+    return fn, [_spec((), I32)], ["seed"]
+
+
+def build_decoder_train(model, k):
+    cfg = model.config()
+    shapes = decoder_shapes(model)
+    b, d = cfg["batch"], cfg["cut_dim"]
+    nd = len(shapes)
+
+    def fn(*args):
+        dp = list(args[:nd])
+        dm = list(args[nd : 2 * nd])
+        values, indices, x_target, lr = args[2 * nd :]
+        o = ref.scatter_dense(values, indices, d)
+        target = x_target.reshape(b, -1)
+
+        def loss_fn(dp_):
+            recon = _decoder_apply(dp_, o)
+            return jnp.mean((recon - target) ** 2)
+
+        loss, grads = jax.value_and_grad(loss_fn)(dp)
+        new_dp, new_dm = common.sgd_momentum(dp, dm, grads, lr[0])
+        return tuple(new_dp) + tuple(new_dm) + (loss,)
+
+    specs, names = _param_specs(shapes, "theta_d")
+    s2, n2 = _param_specs(shapes, "mom_d")
+    specs += s2
+    names += n2
+    specs += [_spec((b, k), F32), _spec((b, k), I32), _x_spec(cfg), _spec((1,), F32)]
+    names += ["values", "indices", "x_target", "lr"]
+    return fn, specs, names
+
+
+def build_decoder_eval(model, k):
+    cfg = model.config()
+    shapes = decoder_shapes(model)
+    b, d = cfg["batch"], cfg["cut_dim"]
+    nd = len(shapes)
+
+    def fn(*args):
+        dp = list(args[:nd])
+        values, indices, x_target = args[nd:]
+        o = ref.scatter_dense(values, indices, d)
+        recon = _decoder_apply(dp, o)
+        target = x_target.reshape(b, -1)
+        return (jnp.sum(jnp.mean((recon - target) ** 2, axis=-1)),)
+
+    specs, names = _param_specs(shapes, "theta_d")
+    specs += [_spec((b, k), F32), _spec((b, k), I32), _x_spec(cfg)]
+    names += ["values", "indices", "x_target"]
+    return fn, specs, names
+
+
+# ---------------------------------------------------------------------------
+# builder registry used by aot.py
+# ---------------------------------------------------------------------------
+
+
+def variant_builders(model, k_levels, quant_bits):
+    """Yield (variant, fn_name, builder_thunk) for every artifact of a model."""
+    out = [("", "init", lambda: build_init(model))]
+    for k in k_levels:
+        v = f"sparse_k{k}"
+        out += [
+            (v, "bottom_fwd", lambda k=k: build_bottom_fwd_sparse(model, k)),
+            (v, "top_fwdbwd", lambda k=k: build_top_fwdbwd_sparse(model, k)),
+            (v, "bottom_bwd", lambda k=k: build_bottom_bwd_sparse(model, k)),
+            (v, "top_eval", lambda k=k: build_top_eval_sparse(model, k)),
+        ]
+    out += [
+        ("dense", "bottom_fwd", lambda: build_bottom_fwd_dense(model)),
+        ("dense", "top_fwdbwd", lambda: build_top_fwdbwd_dense(model)),
+        ("dense", "bottom_bwd", lambda: build_bottom_bwd_dense(model)),
+        ("dense", "top_eval", lambda: build_top_eval_dense(model)),
+    ]
+    for bits in quant_bits:
+        v = f"quant_b{bits}"
+        out += [
+            (v, "bottom_fwd", lambda b=bits: build_bottom_fwd_quant(model, b)),
+            (v, "top_fwdbwd", lambda b=bits: build_top_fwdbwd_quant(model, b)),
+            (v, "top_eval", lambda b=bits: build_top_eval_quant(model, b)),
+        ]
+    return out

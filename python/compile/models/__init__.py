@@ -1,0 +1,19 @@
+"""Split model zoo (L2). Each module exposes the same interface:
+
+  config() -> dict with keys: name, n_classes, cut_dim, batch,
+              input_shape, input_dtype, metric ("top1" | "hr20")
+  init_params(key) -> (bottom: list[jnp.ndarray], top: list[jnp.ndarray])
+  bottom_apply(bottom_params, x) -> [B, cut_dim] float32
+  top_apply(top_params, o) -> [B, n_classes] logits
+
+The paper splits every model at its last hidden layer (the cut layer), so
+the top model is a single linear layer + softmax — matching §4.1's setup.
+"""
+
+from . import convnet, convnet_l, gru4rec, mlp, textcnn
+
+REGISTRY = {m.config()["name"]: m for m in (mlp, convnet, convnet_l, gru4rec, textcnn)}
+
+
+def get(name):
+    return REGISTRY[name]

@@ -1,0 +1,70 @@
+"""Shared building blocks for the split model zoo."""
+
+import jax
+import jax.numpy as jnp
+
+MOMENTUM = 0.9
+
+
+def glorot(key, shape):
+    fan_in, fan_out = shape[-2], shape[-1]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def dense(params, x):
+    w, b = params
+    return x @ w + b
+
+
+def conv2d(x, w, stride=1):
+    """NHWC x HWIO -> NHWC, SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def softmax_xent(logits, labels):
+    """Mean cross-entropy. labels: int32 [B]."""
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def correct_top1(logits, labels):
+    return jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def correct_topn(logits, labels, n):
+    """Hit-ratio@n numerator: label within the n largest logits.
+
+    Rank-based (no lax.top_k — see kernels.ref.argtopk): the label hits iff
+    fewer than n logits are strictly greater, with ties broken by index to
+    match top-k semantics.
+    """
+    lab_logit = jnp.take_along_axis(logits, labels[:, None], axis=-1)
+    greater = jnp.sum((logits > lab_logit).astype(jnp.int32), axis=-1)
+    ties_before = jnp.sum(
+        ((logits == lab_logit)
+         & (jnp.arange(logits.shape[-1])[None, :] < labels[:, None])).astype(jnp.int32),
+        axis=-1,
+    )
+    rank = greater + ties_before
+    return jnp.sum((rank < n).astype(jnp.float32))
+
+
+def metric_count(metric, logits, labels):
+    if metric == "hr20":
+        return correct_topn(logits, labels, 20)
+    return correct_top1(logits, labels)
+
+
+def sgd_momentum(params, moms, grads, lr):
+    """v <- mu*v + g; p <- p - lr*v. Returns (params', moms')."""
+    new_moms = [MOMENTUM * m + g for m, g in zip(moms, grads)]
+    new_params = [p - lr * v for p, v in zip(params, new_moms)]
+    return new_params, new_moms

@@ -1,0 +1,83 @@
+"""ResNet-style convnet — SynthVision-100 task (CIFAR-100/ResNet-20 analog).
+
+8-layer residual network: stem conv + 3 stages x 1 residual block
+(16/32/64 channels, stride-2 between stages) + GAP + dense cut layer.
+n=100 classes, cut d=128: the exact (n, d) geometry of the paper's
+CIFAR-100 setting. BatchNorm is replaced by a per-channel learned scale
++ bias (no batch statistics cross the party boundary, and the artifact
+stays stateless); this keeps training stable at these depths.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+SIZE = 32
+CHANNELS = (16, 32, 64)
+CUT = 128
+CLASSES = 100
+BATCH = 32
+
+
+def config():
+    return dict(
+        name="convnet",
+        n_classes=CLASSES,
+        cut_dim=CUT,
+        batch=BATCH,
+        input_shape=(BATCH, SIZE, SIZE, 3),
+        input_dtype="f32",
+        metric="top1",
+    )
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    return common.he(key, (kh, kw, cin, cout), kh * kw * cin)
+
+
+def init_params(key):
+    ks = iter(jax.random.split(key, 32))
+    bottom = []
+    # stem
+    bottom += [_conv_init(next(ks), 3, 3, 3, CHANNELS[0])]
+    bottom += [jnp.ones((CHANNELS[0],)), jnp.zeros((CHANNELS[0],))]
+    cin = CHANNELS[0]
+    for c in CHANNELS:
+        # residual block: two 3x3 convs + scale/bias each; 1x1 projection
+        # when the channel count or stride changes.
+        bottom += [_conv_init(next(ks), 3, 3, cin, c)]
+        bottom += [jnp.ones((c,)), jnp.zeros((c,))]
+        bottom += [_conv_init(next(ks), 3, 3, c, c)]
+        bottom += [jnp.ones((c,)), jnp.zeros((c,))]
+        bottom += [_conv_init(next(ks), 1, 1, cin, c)]
+        cin = c
+    bottom += [common.glorot(next(ks), (CHANNELS[-1], CUT)), jnp.zeros((CUT,))]
+    top = [common.glorot(next(ks), (CUT, CLASSES)), jnp.zeros((CLASSES,))]
+    return [b.astype(jnp.float32) for b in bottom], [t.astype(jnp.float32) for t in top]
+
+
+def _scale_bias(x, g, b):
+    return x * g[None, None, None, :] + b[None, None, None, :]
+
+
+def bottom_apply(p, x):
+    i = 0
+    h = common.conv2d(x, p[i]); i += 1
+    h = jax.nn.relu(_scale_bias(h, p[i], p[i + 1])); i += 2
+    stride_first = False
+    for _ in CHANNELS:
+        stride = 2 if stride_first else 1
+        stride_first = True
+        y = common.conv2d(h, p[i], stride); i += 1
+        y = jax.nn.relu(_scale_bias(y, p[i], p[i + 1])); i += 2
+        y = common.conv2d(y, p[i]); i += 1
+        y = _scale_bias(y, p[i], p[i + 1]); i += 2
+        short = common.conv2d(h, p[i], stride); i += 1
+        h = jax.nn.relu(y + short)
+    h = jnp.mean(h, axis=(1, 2))  # GAP -> [B, 64]
+    return jax.nn.relu(h @ p[i] + p[i + 1])
+
+
+def top_apply(p, o):
+    return o @ p[0] + p[1]

@@ -1,0 +1,76 @@
+"""Larger convnet — SynthVision-200 task (Tiny-ImageNet/EfficientNet-b0 analog).
+
+Same residual family as ``convnet`` but wider (24/48/96 channels) with a
+d=1280 cut layer and n=200 classes — the paper's largest-d regime, where
+top-k index encoding overhead matters most (⌈log2 1280⌉ = 11 bits).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+SIZE = 32
+CHANNELS = (24, 48, 96)
+CUT = 1280
+CLASSES = 200
+BATCH = 32
+
+
+def config():
+    return dict(
+        name="convnet_l",
+        n_classes=CLASSES,
+        cut_dim=CUT,
+        batch=BATCH,
+        input_shape=(BATCH, SIZE, SIZE, 3),
+        input_dtype="f32",
+        metric="top1",
+    )
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    return common.he(key, (kh, kw, cin, cout), kh * kw * cin)
+
+
+def init_params(key):
+    ks = iter(jax.random.split(key, 32))
+    bottom = [_conv_init(next(ks), 3, 3, 3, CHANNELS[0])]
+    bottom += [jnp.ones((CHANNELS[0],)), jnp.zeros((CHANNELS[0],))]
+    cin = CHANNELS[0]
+    for c in CHANNELS:
+        bottom += [_conv_init(next(ks), 3, 3, cin, c)]
+        bottom += [jnp.ones((c,)), jnp.zeros((c,))]
+        bottom += [_conv_init(next(ks), 3, 3, c, c)]
+        bottom += [jnp.ones((c,)), jnp.zeros((c,))]
+        bottom += [_conv_init(next(ks), 1, 1, cin, c)]
+        cin = c
+    bottom += [common.glorot(next(ks), (CHANNELS[-1], CUT)), jnp.zeros((CUT,))]
+    top = [common.glorot(next(ks), (CUT, CLASSES)), jnp.zeros((CLASSES,))]
+    return [b.astype(jnp.float32) for b in bottom], [t.astype(jnp.float32) for t in top]
+
+
+def _scale_bias(x, g, b):
+    return x * g[None, None, None, :] + b[None, None, None, :]
+
+
+def bottom_apply(p, x):
+    i = 0
+    h = common.conv2d(x, p[i]); i += 1
+    h = jax.nn.relu(_scale_bias(h, p[i], p[i + 1])); i += 2
+    stride_first = False
+    for _ in CHANNELS:
+        stride = 2 if stride_first else 1
+        stride_first = True
+        y = common.conv2d(h, p[i], stride); i += 1
+        y = jax.nn.relu(_scale_bias(y, p[i], p[i + 1])); i += 2
+        y = common.conv2d(y, p[i]); i += 1
+        y = _scale_bias(y, p[i], p[i + 1]); i += 2
+        short = common.conv2d(h, p[i], stride); i += 1
+        h = jax.nn.relu(y + short)
+    h = jnp.mean(h, axis=(1, 2))
+    return jax.nn.relu(h @ p[i] + p[i + 1])
+
+
+def top_apply(p, o):
+    return o @ p[0] + p[1]

@@ -1,0 +1,69 @@
+"""GRU4Rec-style session model — SynthSession task (YooChoose analog).
+
+Item-embedding + single GRU layer (hidden 300, as in the paper) consumed
+at the last timestep; the GRU hidden state is the cut layer (d=300).
+The top model ranks all items; metric is hit-ratio@20 like the paper.
+n_items is 2000 (the paper's 18k-item catalog scaled to a synthetic
+Markov-session generator — the large-n regime is preserved: n >> d).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+ITEMS = 2000
+EMBED = 64
+HIDDEN = 300
+SEQ = 16
+BATCH = 32
+
+
+def config():
+    return dict(
+        name="gru4rec",
+        n_classes=ITEMS,
+        cut_dim=HIDDEN,
+        batch=BATCH,
+        input_shape=(BATCH, SEQ),
+        input_dtype="i32",
+        metric="hr20",
+    )
+
+
+def init_params(key):
+    ks = jax.random.split(key, 6)
+    bottom = [
+        jax.random.normal(ks[0], (ITEMS, EMBED), jnp.float32) * 0.05,  # embedding
+        common.glorot(ks[1], (EMBED, 3 * HIDDEN)),  # W_{z,r,h}
+        common.glorot(ks[2], (HIDDEN, 3 * HIDDEN)),  # U_{z,r,h}
+        jnp.zeros((3 * HIDDEN,), jnp.float32),  # b
+    ]
+    top = [common.glorot(ks[3], (HIDDEN, ITEMS)), jnp.zeros((ITEMS,), jnp.float32)]
+    return bottom, top
+
+
+def _gru_cell(h, x, wx, uh, b):
+    gx = x @ wx + b
+    gh = h @ uh
+    z = jax.nn.sigmoid(gx[:, :HIDDEN] + gh[:, :HIDDEN])
+    r = jax.nn.sigmoid(gx[:, HIDDEN : 2 * HIDDEN] + gh[:, HIDDEN : 2 * HIDDEN])
+    n = jnp.tanh(gx[:, 2 * HIDDEN :] + r * gh[:, 2 * HIDDEN :])
+    return (1.0 - z) * n + z * h
+
+
+def bottom_apply(p, x):
+    emb, wx, uh, b = p
+    seq = emb[x]  # [B, T, E]
+    h0 = jnp.zeros((x.shape[0], HIDDEN), jnp.float32)
+
+    def step(h, xt):
+        h = _gru_cell(h, xt, wx, uh, b)
+        return h, None
+
+    h, _ = jax.lax.scan(step, h0, jnp.swapaxes(seq, 0, 1))
+    return h
+
+
+def top_apply(p, o):
+    return o @ p[0] + p[1]

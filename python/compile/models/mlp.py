@@ -1,0 +1,45 @@
+"""MLP split model — quickstart / tabular task (100 classes, cut d=128)."""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+IN_DIM = 64
+HIDDEN = 256
+CUT = 128
+CLASSES = 100
+BATCH = 32
+
+
+def config():
+    return dict(
+        name="mlp",
+        n_classes=CLASSES,
+        cut_dim=CUT,
+        batch=BATCH,
+        input_shape=(BATCH, IN_DIM),
+        input_dtype="f32",
+        metric="top1",
+    )
+
+
+def init_params(key):
+    ks = jax.random.split(key, 3)
+    bottom = [
+        common.glorot(ks[0], (IN_DIM, HIDDEN)),
+        jnp.zeros((HIDDEN,), jnp.float32),
+        common.glorot(ks[1], (HIDDEN, CUT)),
+        jnp.zeros((CUT,), jnp.float32),
+    ]
+    top = [common.glorot(ks[2], (CUT, CLASSES)), jnp.zeros((CLASSES,), jnp.float32)]
+    return bottom, top
+
+
+def bottom_apply(p, x):
+    h = jax.nn.relu(x @ p[0] + p[1])
+    return jax.nn.relu(h @ p[2] + p[3])
+
+
+def top_apply(p, o):
+    return o @ p[0] + p[1]

@@ -1,0 +1,65 @@
+"""TextCNN split model — SynthText task (DBPedia analog).
+
+Token embedding + parallel 1-D convolutions of widths [3, 4, 5] (the
+paper's kernel sizes) with max-over-time pooling; the concatenated pooled
+features form the cut layer (d = 600, matching the paper), n = 219.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+VOCAB = 5000
+EMBED = 64
+WIDTHS = (3, 4, 5)
+FILTERS = 200  # 3 * 200 = 600 = cut dim
+SEQ = 32
+CLASSES = 219
+BATCH = 32
+
+
+def config():
+    return dict(
+        name="textcnn",
+        n_classes=CLASSES,
+        cut_dim=len(WIDTHS) * FILTERS,
+        batch=BATCH,
+        input_shape=(BATCH, SEQ),
+        input_dtype="i32",
+        metric="top1",
+    )
+
+
+def init_params(key):
+    ks = iter(jax.random.split(key, 8))
+    bottom = [jax.random.normal(next(ks), (VOCAB, EMBED), jnp.float32) * 0.05]
+    for w in WIDTHS:
+        bottom += [
+            common.he(next(ks), (w, EMBED, FILTERS), w * EMBED),
+            jnp.zeros((FILTERS,), jnp.float32),
+        ]
+    top = [
+        common.glorot(next(ks), (len(WIDTHS) * FILTERS, CLASSES)),
+        jnp.zeros((CLASSES,), jnp.float32),
+    ]
+    return bottom, top
+
+
+def bottom_apply(p, x):
+    emb = p[0][x]  # [B, T, E]
+    feats = []
+    i = 1
+    for w in WIDTHS:
+        kern, bias = p[i], p[i + 1]
+        i += 2
+        conv = jax.lax.conv_general_dilated(
+            emb, kern, (1,), "VALID", dimension_numbers=("NWC", "WIO", "NWC")
+        )
+        conv = jax.nn.relu(conv + bias)
+        feats.append(jnp.max(conv, axis=1))  # max over time -> [B, F]
+    return jnp.concatenate(feats, axis=-1)
+
+
+def top_apply(p, o):
+    return o @ p[0] + p[1]

@@ -1,0 +1,129 @@
+"""AOT pipeline tests: lowering, manifest signatures, HLO-text properties."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as mb
+from compile import models as zoo
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART_DIR, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_hlo_text_has_no_topk_instruction():
+    """The consumer-side XLA 0.5.1 parser rejects `topk(...)`; every
+    artifact must lower selection via sort instead."""
+    m = manifest()
+    checked = 0
+    for art in m["artifacts"]:
+        if "sparse" not in art["path"] and "eval" not in art["path"]:
+            continue
+        path = os.path.join(ART_DIR, art["path"])
+        with open(path) as f:
+            text = f.read()
+        assert " topk(" not in text, f"{art['path']} contains a topk instruction"
+        checked += 1
+    assert checked > 20
+
+
+def test_manifest_covers_all_models_and_variants():
+    m = manifest()
+    for name, meta in m["models"].items():
+        keys = {(a["variant"], a["fn"]) for a in m["artifacts"] if a["model"] == name}
+        assert ("", "init") in keys
+        for k in meta["k_levels"]:
+            for fn in ["bottom_fwd", "top_fwdbwd", "bottom_bwd", "top_eval"]:
+                assert (f"sparse_k{k}", fn) in keys, (name, k, fn)
+        for fn in ["bottom_fwd", "top_fwdbwd", "bottom_bwd", "top_eval"]:
+            assert ("dense", fn) in keys
+        for b in meta["quant_bits"]:
+            for fn in ["bottom_fwd", "top_fwdbwd", "top_eval"]:
+                assert (f"quant_b{b}", fn) in keys
+
+
+def test_manifest_signatures_consistent():
+    m = manifest()
+    for art in m["artifacts"]:
+        assert os.path.exists(os.path.join(ART_DIR, art["path"])), art["path"]
+        assert len(art["inputs"]) >= 1
+        assert len(art["outputs"]) >= 1
+        for t in art["inputs"] + art["outputs"]:
+            assert t["dtype"] in ("f32", "i32")
+            assert all(isinstance(d, int) and d >= 0 for d in t["shape"])
+
+
+def test_sparse_artifact_shapes_match_k():
+    m = manifest()
+    for art in m["artifacts"]:
+        if art["fn"] == "bottom_fwd" and art["variant"].startswith("sparse_k"):
+            k = int(art["variant"].split("sparse_k")[1])
+            meta = m["models"][art["model"]]
+            assert art["outputs"][0]["shape"] == [meta["batch"], k]
+            assert art["outputs"][1]["shape"] == [meta["batch"], k]
+            assert art["outputs"][1]["dtype"] == "i32"
+
+
+def test_top_fwdbwd_output_layout():
+    """new_top*, new_mom*, g, loss, correct — the layout rust assumes."""
+    m = manifest()
+    for art in m["artifacts"]:
+        if art["fn"] != "top_fwdbwd":
+            continue
+        meta = m["models"][art["model"]]
+        nt = len(meta["top_shapes"])
+        assert len(art["outputs"]) == 2 * nt + 3, art["path"]
+        # trailing two outputs are scalars (loss, correct)
+        assert art["outputs"][-1]["shape"] == []
+        assert art["outputs"][-2]["shape"] == []
+
+
+def test_k_levels_match_paper_compressed_sizes():
+    """k chosen so k/d*(1+ceil(log2 d)/32) hits the paper's levels."""
+    import math
+
+    paper = {
+        "convnet": [2.86, 5.71, 12.38],
+        "gru4rec": [0.85, 1.71, 3.84],
+        "textcnn": [0.44, 0.88, 1.97, 3.06],
+        "convnet_l": [0.21, 0.42, 0.94],
+    }
+    m = manifest()
+    for name, sizes in paper.items():
+        meta = m["models"][name]
+        d = meta["cut_dim"]
+        r = math.ceil(math.log2(d))
+        for k, target in zip(meta["k_levels"], sizes):
+            got = 100.0 * k / d * (1 + r / 32)
+            assert abs(got - target) < 0.05, (name, k, got, target)
+
+
+def test_lowering_is_deterministic():
+    mod = zoo.get("mlp")
+    fn, specs, _ = mb.build_bottom_fwd_sparse(mod, 6)
+    t1 = aot.lower_one(fn, specs)
+    t2 = aot.lower_one(fn, specs)
+    assert t1 == t2
+
+
+def test_builders_reject_nothing_silently():
+    """Every variant builder produces specs whose count matches the fn
+    arity (guards against signature drift)."""
+    mod = zoo.get("mlp")
+    for variant, fn_name, thunk in mb.variant_builders(mod, (3,), (2,)):
+        fn, specs, names = thunk()
+        assert len(specs) == len(names), (variant, fn_name)
+        outs = jax.eval_shape(fn, *specs)
+        assert outs is not None

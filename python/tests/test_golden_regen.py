@@ -1,0 +1,57 @@
+"""Golden-trace generation sanity: the dump used by rust/tests/golden.rs
+must stay self-consistent (inputs load, outputs reproduce under pure jax).
+"""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import model as mb
+from compile import models as zoo
+
+jax.config.update("jax_platform_name", "cpu")
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "golden")
+
+
+def _load(name):
+    path = os.path.join(GOLDEN, name)
+    if not os.path.exists(path):
+        pytest.skip("golden traces not built (run `make golden`)")
+    z = np.load(path)
+    ins = [z[f"in_{i}"] for i in range(sum(1 for k in z.files if k.startswith("in_")))]
+    outs = [z[f"out_{i}"] for i in range(sum(1 for k in z.files if k.startswith("out_")))]
+    return ins, outs
+
+
+def test_bottom_fwd_trace_reproduces():
+    ins, outs = _load("mlp_sparse_k6_bottom_fwd.npz")
+    fn, specs, _ = mb.build_bottom_fwd_sparse(zoo.get("mlp"), 6)
+    assert len(ins) == len(specs)
+    got = fn(*ins)
+    for g, w in zip(got, outs):
+        np.testing.assert_allclose(np.asarray(g), w, rtol=1e-6, atol=1e-7)
+
+
+def test_top_fwdbwd_trace_reproduces():
+    ins, outs = _load("mlp_sparse_k6_top_fwdbwd.npz")
+    fn, specs, _ = mb.build_top_fwdbwd_sparse(zoo.get("mlp"), 6)
+    assert len(ins) == len(specs)
+    got = fn(*ins)
+    assert len(got) == len(outs)
+    for g, w in zip(got, outs):
+        np.testing.assert_allclose(np.asarray(g), w, rtol=1e-5, atol=1e-6)
+
+
+def test_traces_cover_every_split_fn():
+    for name in [
+        "mlp_init.npz",
+        "mlp_sparse_k6_bottom_fwd.npz",
+        "mlp_sparse_k6_top_fwdbwd.npz",
+        "mlp_sparse_k6_bottom_bwd.npz",
+        "mlp_sparse_k6_top_eval.npz",
+    ]:
+        ins, outs = _load(name)
+        assert ins and outs

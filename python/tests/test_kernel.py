@@ -1,0 +1,310 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+The Pallas randtopk kernel must agree with ``ref.randtopk_select``
+bit-exactly on indices (same uniforms -> same Gumbel-max argmaxes) and
+allclose on values, across shapes, k, and alpha. Hypothesis drives the
+shape/parameter sweep; targeted tests pin the paper-relevant properties
+(Eq. 7 semantics, alpha=0 degeneration, selection balance).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import randtopk, quantize, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _uniforms(seed, b, k, d):
+    return jax.random.uniform(jax.random.PRNGKey(seed), (b, k + d), jnp.float32)
+
+def _uniforms_seq(seed, b, k, d):
+    return jax.random.uniform(jax.random.PRNGKey(seed), (b, k, d), jnp.float32)
+
+
+def _acts(seed, b, d):
+    return jax.random.normal(jax.random.PRNGKey(seed + 1000), (b, d), jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 4, 8, 16]),
+    d=st.integers(4, 96),
+    frac=st.floats(0.05, 0.9),
+    alpha=st.sampled_from([0.0, 0.05, 0.1, 0.3, 0.7, 1.0]),
+    seed=st.integers(0, 2**20),
+)
+def test_kernel_matches_ref(b, d, frac, alpha, seed):
+    k = max(1, min(d - 1, int(frac * d)))
+    o = _acts(seed, b, d)
+    rand = _uniforms(seed, b, k, d)
+    v_ref, i_ref = ref.randtopk_select(o, rand, k, jnp.float32(alpha))
+    v_pal, i_pal = randtopk.randtopk_pallas(
+        o, rand, jnp.array([alpha], jnp.float32), k
+    )
+    np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_pal))
+    np.testing.assert_allclose(np.asarray(v_ref), np.asarray(v_pal), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([2, 8]),
+    d=st.integers(8, 128),
+    frac=st.floats(0.1, 0.8),
+    seed=st.integers(0, 2**20),
+)
+def test_alpha_zero_is_exact_topk(b, d, frac, seed):
+    k = max(1, int(frac * d))
+    o = _acts(seed, b, d)
+    rand = _uniforms(seed, b, k, d)
+    v, i = ref.randtopk_select(o, rand, k, jnp.float32(0.0))
+    v_t, i_t = ref.topk_select(o, k)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i_t))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(v_t), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([1, 8]),
+    d=st.integers(6, 64),
+    frac=st.floats(0.1, 0.9),
+    alpha=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**20),
+)
+def test_selection_invariants(b, d, frac, alpha, seed):
+    """k distinct sorted indices; values = o at those indices."""
+    k = max(1, min(d - 1, int(frac * d)))
+    o = _acts(seed, b, d)
+    rand = _uniforms(seed, b, k, d)
+    v, i = ref.randtopk_select(o, rand, k, jnp.float32(alpha))
+    i = np.asarray(i)
+    assert i.shape == (b, k)
+    for row in range(b):
+        assert len(set(i[row].tolist())) == k, "indices must be distinct"
+        assert (np.diff(i[row]) > 0).all(), "indices must be sorted ascending"
+        np.testing.assert_allclose(
+            np.asarray(v)[row], np.asarray(o)[row, i[row]], rtol=1e-6
+        )
+
+
+def test_eq7_selection_probabilities():
+    """First-draw statistics follow Eq. 7: P(top-k pool) = 1 - alpha."""
+    d, k, alpha, trials = 16, 4, 0.3, 4000
+    o = _acts(7, 1, d)
+    tk_mask, _ = ref.topk_mask(o, k)
+    tk_set = set(np.flatnonzero(np.asarray(tk_mask)[0]).tolist())
+    hits = 0
+    # 1 draw per trial (k=1 selection on the first step of the process)
+    rand = jax.random.uniform(jax.random.PRNGKey(0), (trials, 1 + d))
+    o_rep = jnp.broadcast_to(o, (trials, d))
+    _, idx = ref.randtopk_select(o_rep, rand, 1, jnp.float32(alpha))
+    # careful: with k=1 the "top-k pool" is the top-1 element of |o|
+    tk1_mask, _ = ref.topk_mask(o, 1)
+    tk1 = int(np.flatnonzero(np.asarray(tk1_mask)[0])[0])
+    hits = int((np.asarray(idx)[:, 0] == tk1).sum())
+    p = hits / trials
+    assert abs(p - (1 - alpha)) < 0.03, f"P(top pool)={p}, want {1-alpha}"
+
+
+def test_nontopk_selected_with_alpha():
+    """With alpha > 0, non-top-k neurons are selected sometimes; with
+    alpha = 0, never."""
+    b, d, k = 64, 32, 8
+    o = _acts(3, b, d)
+    tk_mask, _ = ref.topk_mask(o, k)
+    tk_mask = np.asarray(tk_mask)
+    for alpha, expect_any in [(0.0, False), (0.3, True)]:
+        rand = _uniforms(11, b, k, d)
+        _, idx = ref.randtopk_select(o, rand, k, jnp.float32(alpha))
+        idx = np.asarray(idx)
+        non_top = 0
+        for row in range(b):
+            non_top += sum(1 for j in idx[row] if tk_mask[row, j] == 0)
+        assert (non_top > 0) == expect_any, (alpha, non_top)
+
+
+def test_alpha_one_avoids_topk_while_possible():
+    """alpha = 1 (Dropout-like): all draws land in the non-top-k pool as
+    long as it is non-empty."""
+    b, d, k = 8, 16, 4  # d - k = 12 >= k, pool never exhausts
+    o = _acts(5, b, d)
+    tk_mask, _ = ref.topk_mask(o, k)
+    rand = _uniforms(13, b, k, d)
+    _, idx = ref.randtopk_select(o, rand, k, jnp.float32(1.0))
+    tk_mask = np.asarray(tk_mask)
+    for row in range(b):
+        for j in np.asarray(idx)[row]:
+            assert tk_mask[row, j] == 0
+
+
+def test_pool_exhaustion_guard():
+    """k > d - k with alpha=1: non-top-k pool exhausts; the guard must fall
+    back to remaining elements and still return k distinct indices."""
+    b, d, k = 4, 8, 6
+    o = _acts(9, b, d)
+    rand = _uniforms(17, b, k, d)
+    v, idx = ref.randtopk_select(o, rand, k, jnp.float32(1.0))
+    idx = np.asarray(idx)
+    for row in range(b):
+        assert len(set(idx[row].tolist())) == k
+
+
+def test_determinism_same_seed():
+    b, d, k = 8, 64, 8
+    o = _acts(21, b, d)
+    rand = _uniforms(23, b, k, d)
+    v1, i1 = ref.randtopk_select(o, rand, k, jnp.float32(0.2))
+    v2, i2 = ref.randtopk_select(o, rand, k, jnp.float32(0.2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_randomness_different_seed():
+    b, d, k = 8, 64, 8
+    o = _acts(21, b, d)
+    i = [
+        np.asarray(ref.randtopk_select(o, _uniforms(s, b, k, d), k, jnp.float32(0.5))[1])
+        for s in (1, 2)
+    ]
+    assert not (i[0] == i[1]).all()
+
+
+def test_size_reduction_select():
+    b, d, k = 4, 16, 5
+    o = _acts(31, b, d)
+    v, i = ref.size_reduction_select(o, k)
+    np.testing.assert_array_equal(np.asarray(i), np.tile(np.arange(k), (b, 1)))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(o)[:, :k])
+
+
+def test_scatter_dense_roundtrip():
+    b, d, k = 6, 24, 7
+    o = _acts(37, b, d)
+    v, i = ref.topk_select(o, k)
+    dense = np.asarray(ref.scatter_dense(v, i, d))
+    for row in range(b):
+        for j in range(d):
+            if j in np.asarray(i)[row]:
+                assert dense[row, j] == np.asarray(o)[row, j]
+            else:
+                assert dense[row, j] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# quantization kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 8, 16]),
+    d=st.integers(4, 200),
+    bits=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2**20),
+)
+def test_quantize_kernel_matches_ref(b, d, bits, seed):
+    o = _acts(seed, b, d)
+    c_ref, mn_ref, mx_ref = ref.quantize_ref(o, bits)
+    c_pal, mn_pal, mx_pal = quantize.quantize_pallas(o, bits)
+    np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_pal))
+    np.testing.assert_allclose(np.asarray(mn_ref), np.asarray(mn_pal))
+    np.testing.assert_allclose(np.asarray(mx_ref), np.asarray(mx_pal))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([2, 8]),
+    d=st.integers(8, 128),
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**20),
+)
+def test_quantize_codes_in_range_and_error_bounded(b, d, bits, seed):
+    o = _acts(seed, b, d)
+    codes, mn, mx = ref.quantize_ref(o, bits)
+    codes_np = np.asarray(codes)
+    assert codes_np.min() >= 0 and codes_np.max() <= 2**bits - 1
+    o_hat = np.asarray(ref.dequantize_ref(codes, mn, mx, bits))
+    span = np.asarray(mx - mn)
+    # midpoint decoding: error <= half a bin
+    err = np.abs(o_hat - np.asarray(o))
+    bound = span / 2**bits / 2 + 1e-5
+    assert (err <= bound + 1e-6).all()
+
+
+def test_quantize_constant_row():
+    """Degenerate row (max == min) must not produce NaNs."""
+    o = jnp.ones((2, 16), jnp.float32) * 3.5
+    codes, mn, mx = ref.quantize_ref(o, 4)
+    o_hat = ref.dequantize_ref(codes, mn, mx, 4)
+    assert np.isfinite(np.asarray(o_hat)).all()
+
+
+def test_quantize_ste_gradient_is_identity():
+    o = _acts(41, 4, 32)
+
+    def f(o_):
+        return jnp.sum(ref.quantize_ste(o_, 4) ** 2)
+
+    g = jax.grad(f)(o)
+    # STE: d/do sum(qdq(o)^2) = 2*qdq(o) (identity through the quantizer)
+    np.testing.assert_allclose(
+        np.asarray(g), 2 * np.asarray(ref.quantize_ste(o, 4)), rtol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# pool-based fast sampler vs sequential Eq. 7 specification
+# ---------------------------------------------------------------------------
+
+
+def test_fast_matches_seq_marginals():
+    """The production (pool-based) sampler must match the sequential Eq. 7
+    sampler in distribution: per-element selection frequencies agree."""
+    d, k, alpha, trials = 12, 4, 0.3, 3000
+    o = _acts(7, 1, d)
+    o_rep = jnp.broadcast_to(o, (trials, d))
+    _, idx_fast = ref.randtopk_select(
+        o_rep, _uniforms(1, trials, k, d), k, jnp.float32(alpha)
+    )
+    _, idx_seq = ref.randtopk_select_seq(
+        o_rep, _uniforms_seq(2, trials, k, d), k, jnp.float32(alpha)
+    )
+    freq_fast = np.zeros(d)
+    freq_seq = np.zeros(d)
+    for row in np.asarray(idx_fast):
+        freq_fast[row] += 1
+    for row in np.asarray(idx_seq):
+        freq_seq[row] += 1
+    freq_fast /= trials
+    freq_seq /= trials
+    np.testing.assert_allclose(freq_fast, freq_seq, atol=0.04)
+
+
+def test_fast_m_is_binomial():
+    """#top-pool picks follows Binomial(k, 1-alpha)."""
+    d, k, alpha, trials = 16, 5, 0.4, 4000
+    o = _acts(9, 1, d)
+    o_rep = jnp.broadcast_to(o, (trials, d))
+    tk_mask, _ = ref.topk_mask(o, k)
+    tk = set(np.flatnonzero(np.asarray(tk_mask)[0]).tolist())
+    _, idx = ref.randtopk_select(o_rep, _uniforms(3, trials, k, d), k, jnp.float32(alpha))
+    ms = np.array([[j in tk for j in row] for row in np.asarray(idx)]).sum(axis=1)
+    mean = ms.mean()
+    expect = k * (1 - alpha)
+    assert abs(mean - expect) < 0.1, (mean, expect)
+    var = ms.var()
+    expect_var = k * alpha * (1 - alpha)
+    assert abs(var - expect_var) < 0.2, (var, expect_var)
+
+
+def test_fast_pool_exhaustion_clamp():
+    """k > d - k with alpha = 1: non-top pool (d-k elements) exhausts; the
+    clamp must route the overflow back to the top pool."""
+    b, d, k = 8, 8, 6
+    o = _acts(11, b, d)
+    v, idx = ref.randtopk_select(o, _uniforms(5, b, k, d), k, jnp.float32(1.0))
+    idx = np.asarray(idx)
+    for row in range(b):
+        assert len(set(idx[row].tolist())) == k

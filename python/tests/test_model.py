@@ -1,0 +1,220 @@
+"""L2 model tests: shapes, split-step equivalence, learning sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as mb
+from compile import models as zoo
+from compile.kernels import ref
+from compile.models import common
+
+jax.config.update("jax_platform_name", "cpu")
+
+ALL_MODELS = list(zoo.REGISTRY)
+SMALL_MODELS = ["mlp", "textcnn", "gru4rec"]
+
+
+def _batch(mod, seed=0):
+    cfg = mod.config()
+    key = jax.random.PRNGKey(seed)
+    if cfg["input_dtype"] == "i32":
+        x = jax.random.randint(key, cfg["input_shape"], 0, min(cfg["n_classes"], 100), jnp.int32)
+    else:
+        x = jax.random.normal(key, cfg["input_shape"], jnp.float32)
+    y = jax.random.randint(jax.random.PRNGKey(seed + 1), (cfg["batch"],), 0, cfg["n_classes"], jnp.int32)
+    return x, y
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_bottom_output_shape(name):
+    mod = zoo.get(name)
+    cfg = mod.config()
+    bottom, top = mod.init_params(jax.random.PRNGKey(0))
+    x, _ = _batch(mod)
+    o = mod.bottom_apply(bottom, x)
+    assert o.shape == (cfg["batch"], cfg["cut_dim"])
+    logits = mod.top_apply(top, o)
+    assert logits.shape == (cfg["batch"], cfg["n_classes"])
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_model_shapes_match_manifest_helper(name):
+    mod = zoo.get(name)
+    bshapes, tshapes = mb.model_shapes(mod)
+    bottom, top = mod.init_params(jax.random.PRNGKey(1))
+    assert bshapes == [tuple(p.shape) for p in bottom]
+    assert tshapes == [tuple(p.shape) for p in top]
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_split_step_equals_monolithic(name):
+    """bottom_fwd + top_fwdbwd + bottom_bwd == one monolithic SGD step with
+    the same (frozen) selection indices."""
+    mod = zoo.get(name)
+    cfg = mod.config()
+    k = 6
+    bottom, top = mod.init_params(jax.random.PRNGKey(2))
+    mom_b = [jnp.zeros_like(p) for p in bottom]
+    mom_t = [jnp.zeros_like(p) for p in top]
+    x, y = _batch(mod, 3)
+    lr = jnp.array([0.1], jnp.float32)
+    alpha = jnp.array([0.1], jnp.float32)
+    fixed = jnp.array([0.0], jnp.float32)
+    seed = jnp.int32(55)
+
+    # split path
+    f_fwd, _, _ = mb.build_bottom_fwd_sparse(mod, k)
+    values, indices = f_fwd(*(list(bottom) + [x, seed, alpha, fixed]))
+    f_top, _, _ = mb.build_top_fwdbwd_sparse(mod, k)
+    outs = f_top(*(list(top) + list(mom_t) + [values, indices, y, lr]))
+    nt = len(top)
+    new_top_split = outs[:nt]
+    g_values = outs[-3]
+    f_bwd, _, _ = mb.build_bottom_bwd_sparse(mod, k)
+    outs_b = f_bwd(*(list(bottom) + list(mom_b) + [x, indices, g_values, lr]))
+    new_bottom_split = outs_b[: len(bottom)]
+
+    # monolithic path with the same indices
+    def loss_fn(bp, tp):
+        o = mod.bottom_apply(bp, x)
+        v = jnp.take_along_axis(o, indices, axis=-1)
+        o_hat = ref.scatter_dense(v, indices, cfg["cut_dim"])
+        logits = mod.top_apply(tp, o_hat)
+        return common.softmax_xent(logits, y)
+
+    g_b, g_t = jax.grad(loss_fn, argnums=(0, 1))(list(bottom), list(top))
+    mono_bottom, _ = common.sgd_momentum(list(bottom), mom_b, g_b, lr[0])
+    mono_top, _ = common.sgd_momentum(list(top), mom_t, g_t, lr[0])
+
+    for a, b in zip(new_top_split, mono_top):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-5)
+    for a, b in zip(new_bottom_split, mono_bottom):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-5)
+
+
+def test_mlp_learns_with_randtopk():
+    """A few dozen split steps on separable synthetic data must cut the loss."""
+    mod = zoo.get("mlp")
+    cfg = mod.config()
+    k = 13
+    b = cfg["batch"]
+    bottom, top = mod.init_params(jax.random.PRNGKey(4))
+    mom_b = [jnp.zeros_like(p) for p in bottom]
+    mom_t = [jnp.zeros_like(p) for p in top]
+    f_fwd = jax.jit(mb.build_bottom_fwd_sparse(mod, k)[0])
+    f_top = jax.jit(mb.build_top_fwdbwd_sparse(mod, k)[0])
+    f_bwd = jax.jit(mb.build_bottom_bwd_sparse(mod, k)[0])
+
+    # 8-class gaussian blobs in 64-d (simple but non-trivial)
+    n_cls = 8
+    protos = jax.random.normal(jax.random.PRNGKey(5), (n_cls, 64)) * 2.0
+    lr = jnp.array([0.05], jnp.float32)
+    alpha = jnp.array([0.1], jnp.float32)
+    fixed = jnp.array([0.0], jnp.float32)
+    losses = []
+    for step in range(60):
+        ky = jax.random.PRNGKey(100 + step)
+        y = jax.random.randint(ky, (b,), 0, n_cls, jnp.int32)
+        x = protos[y] + 0.3 * jax.random.normal(ky, (b, 64))
+        values, indices = f_fwd(*(list(bottom) + [x, jnp.int32(step), alpha, fixed]))
+        outs = f_top(*(list(top) + list(mom_t) + [values, indices, y, lr]))
+        nt = len(top)
+        top, mom_t = list(outs[:nt]), list(outs[nt : 2 * nt])
+        g_values, loss, _ = outs[-3], outs[-2], outs[-1]
+        outs_b = f_bwd(*(list(bottom) + list(mom_b) + [x, indices, g_values, lr]))
+        nb = len(bottom)
+        bottom, mom_b = list(outs_b[:nb]), list(outs_b[nb:])
+        losses.append(float(loss))
+    assert np.mean(losses[-10:]) < 0.5 * np.mean(losses[:5]), losses
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_quant_fwdbwd_runs(name):
+    mod = zoo.get(name)
+    cfg = mod.config()
+    bits = 4
+    bottom, top = mod.init_params(jax.random.PRNGKey(6))
+    mom_t = [jnp.zeros_like(p) for p in top]
+    x, y = _batch(mod, 7)
+    f_fwd, _, _ = mb.build_bottom_fwd_quant(mod, bits)
+    codes, mn, mx = f_fwd(*(list(bottom) + [x]))
+    assert codes.shape == (cfg["batch"], cfg["cut_dim"])
+    assert np.asarray(codes).max() <= 2**bits - 1
+    f_top, _, _ = mb.build_top_fwdbwd_quant(mod, bits)
+    outs = f_top(*(list(top) + list(mom_t) + [codes, mn, mx, y, jnp.array([0.1], jnp.float32)]))
+    g_o, loss, correct = outs[-3], outs[-2], outs[-1]
+    assert g_o.shape == (cfg["batch"], cfg["cut_dim"])
+    assert np.isfinite(float(loss))
+
+
+def test_dense_l1_gradient_includes_sign_term():
+    mod = zoo.get("mlp")
+    cfg = mod.config()
+    bottom, top = mod.init_params(jax.random.PRNGKey(8))
+    mom_t = [jnp.zeros_like(p) for p in top]
+    x, y = _batch(mod, 9)
+    o = mod.bottom_apply(bottom, x)
+    f_top, _, _ = mb.build_top_fwdbwd_dense(mod)
+    lr = jnp.array([0.0], jnp.float32)  # lr=0: isolate the gradient outputs
+    outs0 = f_top(*(list(top) + list(mom_t) + [o, y, lr, jnp.array([0.0], jnp.float32)]))
+    outs1 = f_top(*(list(top) + list(mom_t) + [o, y, lr, jnp.array([0.01], jnp.float32)]))
+    g0, g1 = np.asarray(outs0[-3]), np.asarray(outs1[-3])
+    diff = g1 - g0
+    o_np = np.asarray(o)
+    # L1 adds lambda/B? — per design: lambda * mean over batch of sum |o|
+    # => d/do_ij = lambda * sign(o_ij) / B
+    expect = 0.01 * np.sign(o_np) / cfg["batch"]
+    mask = np.abs(o_np) > 1e-4
+    np.testing.assert_allclose(diff[mask], expect[mask], rtol=1e-3, atol=1e-6)
+
+
+def test_decoder_train_reduces_loss():
+    mod = zoo.get("convnet")
+    k = 128  # dense decoder
+    f_init, _, _ = mb.build_decoder_init(mod)
+    dp = list(f_init(0))
+    dm = [jnp.zeros_like(p) for p in dp]
+    bottom, _ = mod.init_params(jax.random.PRNGKey(10))
+    x, _ = _batch(mod, 11)
+    o = mod.bottom_apply(bottom, x)
+    idx = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32), o.shape)
+    f_train = jax.jit(mb.build_decoder_train(mod, k)[0])
+    lr = jnp.array([0.05], jnp.float32)
+    losses = []
+    for _ in range(60):
+        outs = f_train(*(dp + dm + [o, idx, x, lr]))
+        nd = len(dp)
+        dp, dm = list(outs[:nd]), list(outs[nd : 2 * nd])
+        losses.append(float(outs[-1]))
+    # Unit-variance noise images are mostly irreducible; this checks the
+    # training mechanism moves downhill, not reconstruction quality.
+    assert losses[-1] < 0.98 * losses[0] and losses[-1] == min(losses)
+
+
+def test_eval_counts_bounded():
+    mod = zoo.get("mlp")
+    cfg = mod.config()
+    bottom, top = mod.init_params(jax.random.PRNGKey(12))
+    x, y = _batch(mod, 13)
+    o = mod.bottom_apply(bottom, x)
+    f_eval, _, _ = mb.build_top_eval_dense(mod)
+    loss_sum, correct = f_eval(*(list(top) + [o, y]))
+    assert 0 <= float(correct) <= cfg["batch"]
+    assert float(loss_sum) > 0
+
+
+def test_gru4rec_hr20_metric():
+    mod = zoo.get("gru4rec")
+    cfg = mod.config()
+    logits = jnp.zeros((4, cfg["n_classes"]))
+    # put label inside top-20 for rows 0,1; outside for rows 2,3
+    logits = logits.at[0, 5].set(10.0).at[1, 7].set(10.0)
+    labels = jnp.array([5, 7, 9, 11], jnp.int32)
+    logits = logits.at[2].set(jnp.arange(cfg["n_classes"], dtype=jnp.float32))
+    # row 2's label 9 is far from the top-20 of an ascending ramp
+    c = common.metric_count("hr20", logits, labels)
+    # row 3: all-zero logits -> top_k picks lowest indices 0..19, label 11 inside
+    assert float(c) == 3.0

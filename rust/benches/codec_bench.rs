@@ -1,0 +1,96 @@
+//! Codec throughput benches: encode/decode per method across the paper's
+//! (d, k/b) geometries. L3 perf target (DESIGN.md §7): dense >= 1 GiB/s,
+//! sparse pack >= 200 MiB/s — the codecs must never be the bottleneck next
+//! to model execution.
+
+use splitfed::bench_util::Bench;
+use splitfed::compress::{
+    quant::QuantBatch, DenseBatch, DenseCodec, L1Codec, Pass, QuantCodec, SparseBatch,
+    SparseCodec,
+};
+use splitfed::util::Rng;
+
+fn random_sparse(rng: &mut Rng, rows: usize, dim: usize, k: usize) -> SparseBatch {
+    let mut values = Vec::new();
+    let mut indices = Vec::new();
+    for _ in 0..rows {
+        let mut all: Vec<i32> = (0..dim as i32).collect();
+        rng.shuffle(&mut all);
+        let mut sel = all[..k].to_vec();
+        sel.sort_unstable();
+        for &i in &sel {
+            indices.push(i);
+            values.push(rng.normal());
+        }
+    }
+    SparseBatch { rows, dim, k, values, indices }
+}
+
+fn main() {
+    let rows = 32;
+    let mut rng = Rng::new(42);
+    let mut b = Bench::new("codec");
+
+    for (d, k) in [(128usize, 6usize), (600, 14), (1280, 9)] {
+        let codec = SparseCodec::topk(d, k);
+        let batch = random_sparse(&mut rng, rows, d, k);
+        let payload = codec.encode(&batch, Pass::Forward).unwrap();
+        let dense_bytes = (rows * d * 4) as u64;
+        b.run_bytes(&format!("sparse encode fwd d={d} k={k}"), dense_bytes, || {
+            codec.encode(&batch, Pass::Forward).unwrap()
+        });
+        b.run_bytes(&format!("sparse decode fwd d={d} k={k}"), dense_bytes, || {
+            codec.decode(&payload, Pass::Forward).unwrap()
+        });
+        let bwd = codec.encode(&batch, Pass::Backward).unwrap();
+        b.run_bytes(&format!("sparse decode bwd d={d} k={k}"), dense_bytes, || {
+            codec.decode(&bwd, Pass::Backward).unwrap()
+        });
+    }
+
+    for (d, bits) in [(128usize, 2u8), (1280, 4)] {
+        let codec = QuantCodec::new(d, bits);
+        let levels = (1u64 << bits) as f32;
+        let batch = QuantBatch {
+            rows,
+            dim: d,
+            codes: (0..rows * d)
+                .map(|_| (rng.next_f32() * levels).floor().min(levels - 1.0))
+                .collect(),
+            o_min: vec![-1.0; rows],
+            o_max: vec![1.0; rows],
+        };
+        let payload = codec.encode(&batch).unwrap();
+        let dense_bytes = (rows * d * 4) as u64;
+        b.run_bytes(&format!("quant encode d={d} b={bits}"), dense_bytes, || {
+            codec.encode(&batch).unwrap()
+        });
+        b.run_bytes(&format!("quant decode d={d} b={bits}"), dense_bytes, || {
+            codec.decode(&payload).unwrap()
+        });
+    }
+
+    for d in [128usize, 1280] {
+        let codec = DenseCodec::new(d);
+        let batch = DenseBatch::new(rows, d, (0..rows * d).map(|_| rng.normal()).collect());
+        let payload = codec.encode(&batch).unwrap();
+        let bytes = (rows * d * 4) as u64;
+        b.run_bytes(&format!("dense encode d={d}"), bytes, || codec.encode(&batch).unwrap());
+        b.run_bytes(&format!("dense decode d={d}"), bytes, || codec.decode(&payload).unwrap());
+    }
+
+    {
+        let d = 600;
+        let codec = L1Codec::new(d, 1e-4);
+        let data: Vec<f32> = (0..rows * d)
+            .map(|_| if rng.next_f32() < 0.05 { rng.normal() } else { 0.0 })
+            .collect();
+        let batch = DenseBatch::new(rows, d, data);
+        let payload = codec.encode(&batch).unwrap();
+        let bytes = (rows * d * 4) as u64;
+        b.run_bytes("l1 encode d=600 (5% dense)", bytes, || codec.encode(&batch).unwrap());
+        b.run_bytes("l1 decode d=600 (5% dense)", bytes, || codec.decode(&payload).unwrap());
+    }
+
+    b.report();
+}

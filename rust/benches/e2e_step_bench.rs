@@ -1,0 +1,66 @@
+//! End-to-end split-step latency per compression method (one bench per
+//! paper table's workload unit): full protocol step — bottom_fwd, encode,
+//! frame, simulated link, decode, top_fwdbwd, gradient return, bottom_bwd —
+//! measured on the mlp task.
+
+use std::rc::Rc;
+
+use splitfed::bench_util::Bench;
+use splitfed::config::{ExperimentConfig, Method};
+use splitfed::coordinator::Trainer;
+use splitfed::data::Split;
+use splitfed::runtime::{default_artifacts_dir, Engine};
+
+fn main() {
+    let engine = Rc::new(Engine::load(default_artifacts_dir()).expect("run `make artifacts`"));
+    let mut b = Bench::new("e2e_step");
+    b.min_time = 1.0;
+
+    let methods = [
+        "none",
+        "randtopk:k=6,alpha=0.1",
+        "topk:k=6",
+        "sizered:k=6",
+        "quant:bits=2",
+        "l1:lambda=0.001",
+    ];
+
+    for spec in methods {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = "mlp".into();
+        cfg.method = Method::parse(spec).unwrap();
+        cfg.n_train = 256;
+        cfg.n_test = 64;
+        let mut trainer = Trainer::new(engine.clone(), cfg).unwrap();
+        let indices: Vec<usize> = (0..trainer.fo.meta.batch).collect();
+        let batch = trainer.dataset.batch(Split::Train, &indices, false);
+        let mut step = 0u64;
+        b.run(&format!("mlp train step [{spec}]"), || {
+            trainer.fo.train_forward(step, &batch.x).unwrap();
+            trainer.lo.train_step(step, &batch.y, 0.05).unwrap();
+            trainer.fo.train_backward(step, 0.05).unwrap();
+            step += 1;
+        });
+    }
+
+    // eval step for the headline method
+    {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = "mlp".into();
+        cfg.method = Method::parse("randtopk:k=6,alpha=0.1").unwrap();
+        cfg.n_train = 256;
+        cfg.n_test = 64;
+        let mut trainer = Trainer::new(engine.clone(), cfg).unwrap();
+        let indices: Vec<usize> = (0..trainer.fo.meta.batch).collect();
+        let batch = trainer.dataset.batch(Split::Test, &indices, false);
+        let mut step = 0u64;
+        b.run("mlp eval step [randtopk:k=6]", || {
+            trainer.fo.eval_forward(step, &batch.x).unwrap();
+            trainer.lo.eval_step(step, &batch.y).unwrap();
+            trainer.fo.recv_eval_result().unwrap();
+            step += 1;
+        });
+    }
+
+    b.report();
+}

@@ -1,0 +1,83 @@
+//! PJRT artifact execution latency: per-artifact timings that make up one
+//! split training step, for each model/variant. These are the numbers the
+//! §Perf pass optimizes (EXPERIMENTS.md).
+
+use std::rc::Rc;
+
+use splitfed::bench_util::Bench;
+use splitfed::config::Method;
+use splitfed::coordinator::step_seed;
+use splitfed::data::{for_model, Split};
+use splitfed::runtime::{default_artifacts_dir, Engine, HostTensor};
+use xla::Literal;
+
+fn main() {
+    let engine = Rc::new(Engine::load(default_artifacts_dir()).expect("run `make artifacts`"));
+    let mut b = Bench::new("runtime");
+    b.min_time = 1.0;
+
+    for model in ["mlp", "convnet", "textcnn", "gru4rec"] {
+        let meta = engine.manifest.model(model).unwrap().clone();
+        let k = meta.k_levels[meta.k_levels.len() / 2];
+        let method = Method::RandTopk { k, alpha: 0.1 };
+        let ds = for_model(model, meta.n_classes, 42, 256, 64);
+        let batch = ds.batch(Split::Train, &(0..meta.batch).collect::<Vec<_>>(), false);
+        let (bottom, top) = engine.init_params(model, 1).unwrap();
+        let mom_b = engine.zero_momentum(&meta.bottom_shapes).unwrap();
+        let mom_t = engine.zero_momentum(&meta.top_shapes).unwrap();
+        let x = batch.x.to_literal().unwrap();
+        let y = HostTensor::i32(batch.y.clone(), &[meta.batch]).to_literal().unwrap();
+        let seed = HostTensor::scalar_i32(step_seed(1, 1)).to_literal().unwrap();
+        let alpha = HostTensor::vec1_f32(&[0.1]).to_literal().unwrap();
+        let fixed = HostTensor::vec1_f32(&[0.0]).to_literal().unwrap();
+        let lr = HostTensor::vec1_f32(&[0.05]).to_literal().unwrap();
+        let variant = method.variant();
+
+        // bottom_fwd (sparse)
+        let key = format!("{model}/{variant}/bottom_fwd");
+        let mut args: Vec<&Literal> = bottom.iter().collect();
+        args.extend([&x, &seed, &alpha, &fixed]);
+        let outs = engine.exec(&key, &args).unwrap();
+        b.run(&format!("{model} bottom_fwd sparse_k{k}"), || {
+            engine.exec(&key, &args).unwrap()
+        });
+
+        // dense bottom_fwd for comparison
+        let dkey = format!("{model}/dense/bottom_fwd");
+        let mut dargs: Vec<&Literal> = bottom.iter().collect();
+        dargs.push(&x);
+        b.run(&format!("{model} bottom_fwd dense"), || {
+            engine.exec(&dkey, &dargs).unwrap()
+        });
+
+        // top_fwdbwd (sparse)
+        let tkey = format!("{model}/{variant}/top_fwdbwd");
+        let values = &outs[0];
+        let indices = &outs[1];
+        let mut targs: Vec<&Literal> = top.iter().chain(mom_t.iter()).collect();
+        targs.extend([values, indices, &y, &lr]);
+        let touts = engine.exec(&tkey, &targs).unwrap();
+        b.run(&format!("{model} top_fwdbwd sparse_k{k}"), || {
+            engine.exec(&tkey, &targs).unwrap()
+        });
+
+        // bottom_bwd (sparse)
+        let bkey = format!("{model}/{variant}/bottom_bwd");
+        let g_values = &touts[2 * top.len()];
+        let mut bargs: Vec<&Literal> = bottom.iter().chain(mom_b.iter()).collect();
+        bargs.extend([&x, indices, g_values, &lr]);
+        b.run(&format!("{model} bottom_bwd sparse_k{k}"), || {
+            engine.exec(&bkey, &bargs).unwrap()
+        });
+    }
+
+    b.report();
+    let s = engine.stats();
+    println!(
+        "\nengine totals: {} executions, mean {:.2} ms, {} compilations ({:.2} s)",
+        s.executions,
+        1e3 * s.exec_secs / s.executions.max(1) as f64,
+        s.compilations,
+        s.compile_secs
+    );
+}

@@ -1,0 +1,77 @@
+//! Transport + wire benches: framing overhead and link throughput for the
+//! message sizes the paper's workloads actually generate.
+
+use splitfed::bench_util::Bench;
+use splitfed::compress::Payload;
+use splitfed::transport::sim::{LinkModel, SimNet};
+use splitfed::transport::{TcpTransport, Transport};
+use splitfed::wire::{Frame, Message};
+
+fn frame_of(bytes: usize) -> Frame {
+    Frame {
+        seq: 1,
+        message: Message::Activations {
+            step: 1,
+            payload: Payload::Dense { rows: 32, dim: bytes / 4 / 32, bytes: vec![0xAB; bytes] },
+        },
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("transport");
+    b.min_time = 0.5;
+
+    // wire encode/decode
+    for size in [768usize, 16 * 1024, 160 * 1024] {
+        let f = frame_of(size);
+        let encoded = f.encode();
+        b.run_bytes(&format!("frame encode {size}B"), size as u64, || f.encode());
+        b.run_bytes(&format!("frame decode {size}B"), size as u64, || {
+            Frame::decode(&encoded).unwrap()
+        });
+    }
+
+    // sim link round trip (no network model cost, just queueing + codec)
+    {
+        let net = SimNet::new(LinkModel { bandwidth_bytes_per_sec: 1e12, latency_secs: 0.0 });
+        let (mut a, mut bb) = net.pair();
+        let f = frame_of(16 * 1024);
+        b.run_bytes("simlink send+recv 16KiB", 16 * 1024, || {
+            a.send(&f).unwrap();
+            bb.recv().unwrap()
+        });
+    }
+
+    // TCP loopback round trip
+    {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let echo = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::from_stream(stream);
+            loop {
+                match t.recv() {
+                    Ok(f) => {
+                        if matches!(f.message, Message::Control(_)) {
+                            break;
+                        }
+                        t.send(&f).unwrap();
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        let mut client = TcpTransport::connect(addr).unwrap();
+        let f = frame_of(16 * 1024);
+        b.run_bytes("tcp loopback roundtrip 16KiB", 2 * 16 * 1024, || {
+            client.send(&f).unwrap();
+            client.recv().unwrap()
+        });
+        client
+            .send(&Frame { seq: 0, message: Message::Control(splitfed::wire::Control::Shutdown) })
+            .unwrap();
+        echo.join().unwrap();
+    }
+
+    b.report();
+}

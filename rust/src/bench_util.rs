@@ -1,0 +1,137 @@
+//! In-tree micro-bench harness (criterion is unavailable offline).
+//!
+//! Usage inside a `[[bench]] harness = false` target:
+//! ```ignore
+//! let mut b = Bench::new("codec");
+//! b.run("sparse encode d=128 k=6", || codec.encode(&batch, Pass::Forward));
+//! b.report();
+//! ```
+//! Each case is warmed up, then timed over adaptively-chosen iteration
+//! counts until the total measured time passes a floor; reports mean /
+//! std / min and derived throughput when `bytes` is set.
+
+use std::time::Instant;
+
+pub struct CaseResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub iters: u64,
+    pub bytes: Option<u64>,
+}
+
+pub struct Bench {
+    pub group: String,
+    pub results: Vec<CaseResult>,
+    /// minimum measurement time per case (seconds)
+    pub min_time: f64,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        Bench { group: group.into(), results: Vec::new(), min_time: 0.5 }
+    }
+
+    /// Time `f`, which must do one unit of work per call.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        self.run_with_bytes(name, None, &mut f)
+    }
+
+    /// Like `run`, also reporting MiB/s for `bytes` of traffic per call.
+    pub fn run_bytes<T>(&mut self, name: &str, bytes: u64, mut f: impl FnMut() -> T) {
+        self.run_with_bytes(name, Some(bytes), &mut f)
+    }
+
+    fn run_with_bytes<T>(&mut self, name: &str, bytes: Option<u64>, f: &mut impl FnMut() -> T) {
+        // warmup + calibrate
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let batch = ((0.05 / once) as u64).clamp(1, 1_000_000);
+
+        let mut samples = Vec::new();
+        let deadline = Instant::now();
+        let mut total_iters = 0u64;
+        while deadline.elapsed().as_secs_f64() < self.min_time || samples.len() < 5 {
+            let t = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(t.elapsed().as_secs_f64() / batch as f64 * 1e9);
+            total_iters += batch;
+            if samples.len() > 200 {
+                break;
+            }
+        }
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        self.results.push(CaseResult {
+            name: name.into(),
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            min_ns: min,
+            iters: total_iters,
+            bytes,
+        });
+    }
+
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<52} {:>12} {:>10} {:>12} {:>12}",
+            "case", "mean", "std", "min", "throughput"
+        );
+        for r in &self.results {
+            let tput = match r.bytes {
+                Some(b) => format!("{:.1} MiB/s", b as f64 / (r.mean_ns / 1e9) / 1048576.0),
+                None => "-".into(),
+            };
+            println!(
+                "{:<52} {:>12} {:>10} {:>12} {:>12}",
+                r.name,
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.std_ns),
+                fmt_ns(r.min_ns),
+                tput
+            );
+        }
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("test");
+        b.min_time = 0.02;
+        b.run("noop-ish", || std::hint::black_box(1 + 1));
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].mean_ns >= 0.0);
+        assert!(b.results[0].iters > 0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

@@ -1,0 +1,69 @@
+//! Dense codec: raw f32 rows — the no-compression baseline (vanilla SL)
+//! and the backward path of quantization / L1 (paper Table 2: size 1).
+
+use anyhow::{bail, Result};
+
+use super::{DenseBatch, Payload};
+
+#[derive(Clone, Copy, Debug)]
+pub struct DenseCodec {
+    pub dim: usize,
+}
+
+impl DenseCodec {
+    pub fn new(dim: usize) -> Self {
+        DenseCodec { dim }
+    }
+
+    pub fn encode(&self, batch: &DenseBatch) -> Result<Payload> {
+        if batch.dim != self.dim {
+            bail!("dense codec d={} fed batch d={}", self.dim, batch.dim);
+        }
+        let mut bytes = Vec::with_capacity(batch.data.len() * 4);
+        for v in &batch.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Ok(Payload::Dense { rows: batch.rows, dim: self.dim, bytes })
+    }
+
+    pub fn decode(&self, payload: &Payload) -> Result<DenseBatch> {
+        let Payload::Dense { rows, dim, bytes } = payload else {
+            bail!("payload is not dense");
+        };
+        if *dim != self.dim {
+            bail!("dense payload geometry mismatch");
+        }
+        if bytes.len() != rows * dim * 4 {
+            bail!("dense payload wrong length: {} != {}", bytes.len(), rows * dim * 4);
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(DenseBatch::new(*rows, *dim, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let codec = DenseCodec::new(300);
+        let batch = DenseBatch::new(8, 300, (0..2400).map(|_| rng.normal()).collect());
+        let p = codec.encode(&batch).unwrap();
+        assert_eq!(p.wire_bytes(), 8 * 300 * 4);
+        assert!((p.compressed_size_pct() - 100.0).abs() < 1e-9);
+        assert_eq!(codec.decode(&p).unwrap(), batch);
+    }
+
+    #[test]
+    fn rejects_wrong_length() {
+        let codec = DenseCodec::new(4);
+        let p = Payload::Dense { rows: 2, dim: 4, bytes: vec![0; 31] };
+        assert!(codec.decode(&p).is_err());
+    }
+}

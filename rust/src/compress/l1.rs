@@ -1,0 +1,168 @@
+//! L1-regularization codec: variable-k sparse encoding of a dense batch.
+//!
+//! The sparsity is *induced by training* (the loss carries λ·Σ|o_i|, in
+//! the dense top_fwdbwd artifact); the feature owner then ships only the
+//! entries with |o| > eps. The per-input compressed size therefore varies —
+//! exactly the paper's point about L1 being hard to control (§3.3). The
+//! backward pass is dense (Table 2).
+
+use anyhow::{bail, Result};
+
+use crate::util::{index_bits, BitReader, BitWriter};
+
+use super::{DenseBatch, Payload};
+
+#[derive(Clone, Copy, Debug)]
+pub struct L1Codec {
+    pub dim: usize,
+    /// Magnitude threshold below which an activation counts as zero.
+    pub eps: f32,
+}
+
+impl L1Codec {
+    pub fn new(dim: usize, eps: f32) -> Self {
+        L1Codec { dim, eps }
+    }
+
+    /// Wire layout: per row [count u16][count * f32 values]; then all
+    /// rows' indices bit-packed at ⌈log2 d⌉ bits.
+    pub fn encode(&self, batch: &DenseBatch) -> Result<Payload> {
+        if batch.dim != self.dim {
+            bail!("l1 codec d={} fed batch d={}", self.dim, batch.dim);
+        }
+        if self.dim > u16::MAX as usize {
+            bail!("l1 codec supports d <= 65535");
+        }
+        let nbits = index_bits(self.dim);
+        let mut bytes = Vec::new();
+        let mut w = BitWriter::new();
+        for r in 0..batch.rows {
+            let row = batch.row(r);
+            let nz: Vec<usize> = (0..self.dim).filter(|&j| row[j].abs() > self.eps).collect();
+            bytes.extend_from_slice(&(nz.len() as u16).to_le_bytes());
+            for &j in &nz {
+                bytes.extend_from_slice(&row[j].to_le_bytes());
+                w.write(j as u64, nbits);
+            }
+        }
+        bytes.extend_from_slice(&w.into_bytes());
+        Ok(Payload::VarSparse { rows: batch.rows, dim: self.dim, bytes })
+    }
+
+    pub fn decode(&self, payload: &Payload) -> Result<DenseBatch> {
+        let Payload::VarSparse { rows, dim, bytes } = payload else {
+            bail!("payload is not var-sparse");
+        };
+        if *dim != self.dim {
+            bail!("l1 payload geometry mismatch");
+        }
+        // first scan: counts + values section
+        let mut counts = Vec::with_capacity(*rows);
+        let mut values: Vec<Vec<f32>> = Vec::with_capacity(*rows);
+        let mut pos = 0usize;
+        for _ in 0..*rows {
+            if pos + 2 > bytes.len() {
+                bail!("l1 payload truncated counts");
+            }
+            let c = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]) as usize;
+            pos += 2;
+            if c > self.dim {
+                bail!("l1 row count {c} > d");
+            }
+            if pos + 4 * c > bytes.len() {
+                bail!("l1 payload truncated values");
+            }
+            let vals = bytes[pos..pos + 4 * c]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            pos += 4 * c;
+            counts.push(c);
+            values.push(vals);
+        }
+        let nbits = index_bits(self.dim);
+        let mut reader = BitReader::new(&bytes[pos..]);
+        let mut out = DenseBatch::zeros(*rows, self.dim);
+        for r in 0..*rows {
+            for v in &values[r] {
+                let Some(j) = reader.read(nbits) else {
+                    bail!("l1 payload truncated indices");
+                };
+                let j = j as usize;
+                if j >= self.dim {
+                    bail!("l1 decoded index {j} out of range");
+                }
+                out.data[r * self.dim + j] = *v;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sparse_dense(rng: &mut Rng, rows: usize, dim: usize, density: f32) -> DenseBatch {
+        let data = (0..rows * dim)
+            .map(|_| {
+                if rng.next_f32() < density {
+                    rng.normal() + 0.5 // keep well above eps
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        DenseBatch::new(rows, dim, data)
+    }
+
+    #[test]
+    fn roundtrip_preserves_above_eps() {
+        let mut rng = Rng::new(1);
+        let codec = L1Codec::new(600, 1e-6);
+        let batch = sparse_dense(&mut rng, 16, 600, 0.05);
+        let p = codec.encode(&batch).unwrap();
+        let back = codec.decode(&p).unwrap();
+        assert_eq!(back, batch);
+    }
+
+    #[test]
+    fn thresholding_zeroes_small_entries() {
+        let codec = L1Codec::new(4, 0.1);
+        let batch = DenseBatch::new(1, 4, vec![0.05, -0.5, 0.0, 0.2]);
+        let p = codec.encode(&batch).unwrap();
+        let back = codec.decode(&p).unwrap();
+        assert_eq!(back.row(0), &[0.0, -0.5, 0.0, 0.2]);
+    }
+
+    #[test]
+    fn size_scales_with_density() {
+        let mut rng = Rng::new(2);
+        let codec = L1Codec::new(512, 1e-6);
+        let p1 = codec.encode(&sparse_dense(&mut rng, 32, 512, 0.02)).unwrap();
+        let p2 = codec.encode(&sparse_dense(&mut rng, 32, 512, 0.2)).unwrap();
+        assert!(p2.wire_bytes() > 5 * p1.wire_bytes());
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let codec = L1Codec::new(32, 1e-6);
+        let batch = DenseBatch::zeros(4, 32);
+        let p = codec.encode(&batch).unwrap();
+        // 4 rows * 2-byte count only
+        assert_eq!(p.wire_bytes(), 8);
+        assert_eq!(codec.decode(&p).unwrap(), batch);
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let mut rng = Rng::new(3);
+        let codec = L1Codec::new(64, 1e-6);
+        let p = codec.encode(&sparse_dense(&mut rng, 4, 64, 0.3)).unwrap();
+        if let Payload::VarSparse { rows, dim, bytes } = p {
+            let cut = Payload::VarSparse { rows, dim, bytes: bytes[..6].to_vec() };
+            assert!(codec.decode(&cut).is_err());
+        }
+    }
+}

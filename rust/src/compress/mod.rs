@@ -1,0 +1,134 @@
+//! Instance-level compression codecs for the cut-layer traffic (paper §3).
+//!
+//! Every method compresses a batch of per-instance vectors independently
+//! ("instance level", §3): the wire payload concatenates the rows. The
+//! measured payload sizes must match the paper's Table 2 analytic model —
+//! `size_model` carries those formulas and the unit tests cross-check.
+
+pub mod dense;
+pub mod l1;
+pub mod quant;
+pub mod size_model;
+pub mod sparse;
+
+pub use dense::DenseCodec;
+pub use l1::L1Codec;
+pub use quant::QuantCodec;
+pub use size_model::SizeModel;
+pub use sparse::SparseCodec;
+
+
+/// A batch of dense per-instance vectors: `rows` x `dim`, row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseBatch {
+    pub rows: usize,
+    pub dim: usize,
+    pub data: Vec<f32>,
+}
+
+impl DenseBatch {
+    pub fn new(rows: usize, dim: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * dim);
+        DenseBatch { rows, dim, data }
+    }
+
+    pub fn zeros(rows: usize, dim: usize) -> Self {
+        DenseBatch { rows, dim, data: vec![0.0; rows * dim] }
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.dim..(r + 1) * self.dim]
+    }
+}
+
+/// A batch in sparse (values + indices) form, k entries per row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseBatch {
+    pub rows: usize,
+    pub dim: usize,
+    pub k: usize,
+    /// rows * k selected values, row-major.
+    pub values: Vec<f32>,
+    /// rows * k indices in [0, dim), row-major, ascending within a row.
+    pub indices: Vec<i32>,
+}
+
+impl SparseBatch {
+    pub fn to_dense(&self) -> DenseBatch {
+        let mut out = DenseBatch::zeros(self.rows, self.dim);
+        for r in 0..self.rows {
+            for j in 0..self.k {
+                let idx = self.indices[r * self.k + j] as usize;
+                out.data[r * self.dim + idx] = self.values[r * self.k + j];
+            }
+        }
+        out
+    }
+}
+
+/// Direction of a message (Table 2 distinguishes forward/backward sizes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pass {
+    Forward,
+    Backward,
+}
+
+/// What travels on the wire after compression.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// values (+ bit-packed indices on the forward pass).
+    Sparse {
+        rows: usize,
+        dim: usize,
+        k: usize,
+        bytes: Vec<u8>,
+        with_indices: bool,
+    },
+    /// b-bit packed codes + per-row (min, max) header.
+    Quantized {
+        rows: usize,
+        dim: usize,
+        bits: u8,
+        bytes: Vec<u8>,
+    },
+    /// raw f32 rows.
+    Dense {
+        rows: usize,
+        dim: usize,
+        bytes: Vec<u8>,
+    },
+    /// variable-k sparse (L1): per-row counts + values + packed indices.
+    VarSparse {
+        rows: usize,
+        dim: usize,
+        bytes: Vec<u8>,
+    },
+}
+
+impl Payload {
+    /// Bytes actually sent for the tensor content (excluding framing).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::Sparse { bytes, .. }
+            | Payload::Quantized { bytes, .. }
+            | Payload::Dense { bytes, .. }
+            | Payload::VarSparse { bytes, .. } => bytes.len(),
+        }
+    }
+
+    /// Uncompressed reference size (rows * dim * 4), the paper's "100".
+    pub fn dense_reference_bytes(&self) -> usize {
+        let (rows, dim) = match self {
+            Payload::Sparse { rows, dim, .. }
+            | Payload::Quantized { rows, dim, .. }
+            | Payload::Dense { rows, dim, .. }
+            | Payload::VarSparse { rows, dim, .. } => (*rows, *dim),
+        };
+        rows * dim * 4
+    }
+
+    /// Paper's "compressed size" in percent of the dense reference.
+    pub fn compressed_size_pct(&self) -> f64 {
+        100.0 * self.wire_bytes() as f64 / self.dense_reference_bytes() as f64
+    }
+}

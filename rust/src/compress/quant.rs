@@ -1,0 +1,216 @@
+//! Quantization codec: b-bit packed codes + per-row (min, max) f32 header.
+//!
+//! The quantize/dequantize math itself runs in-graph (L1 kernel, paper
+//! Eq. 2); this codec only packs the integer codes for the wire. Backward
+//! is dense (paper Table 2: gradient quantization hurts too much, §3.1).
+
+use anyhow::{bail, Result};
+
+use crate::util::{BitReader, BitWriter};
+
+use super::{DenseBatch, Payload};
+
+/// Codes batch as produced by the `quant_b*` bottom_fwd artifact: f32
+/// tensors holding integers in [0, 2^bits) plus per-row min/max.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantBatch {
+    pub rows: usize,
+    pub dim: usize,
+    /// integer codes, stored as f32 by the artifact.
+    pub codes: Vec<f32>,
+    pub o_min: Vec<f32>,
+    pub o_max: Vec<f32>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct QuantCodec {
+    pub dim: usize,
+    pub bits: u8,
+}
+
+impl QuantCodec {
+    pub fn new(dim: usize, bits: u8) -> Self {
+        assert!(bits >= 1 && bits <= 16);
+        QuantCodec { dim, bits }
+    }
+
+    /// Wire layout: per row [min f32, max f32]; then all codes bit-packed.
+    pub fn encode(&self, batch: &QuantBatch) -> Result<Payload> {
+        if batch.dim != self.dim {
+            bail!("quant codec d={} fed batch d={}", self.dim, batch.dim);
+        }
+        if batch.codes.len() != batch.rows * batch.dim
+            || batch.o_min.len() != batch.rows
+            || batch.o_max.len() != batch.rows
+        {
+            bail!("quant batch geometry inconsistent");
+        }
+        let mut bytes = Vec::with_capacity(batch.rows * 8 + batch.codes.len() * self.bits as usize / 8 + 8);
+        for r in 0..batch.rows {
+            bytes.extend_from_slice(&batch.o_min[r].to_le_bytes());
+            bytes.extend_from_slice(&batch.o_max[r].to_le_bytes());
+        }
+        let max_code = (1u64 << self.bits) - 1;
+        let mut w = BitWriter::with_capacity_bits(batch.codes.len() * self.bits as usize);
+        for &c in &batch.codes {
+            let ci = c as i64;
+            if ci < 0 || ci as u64 > max_code {
+                bail!("code {c} out of range for {} bits", self.bits);
+            }
+            w.write(ci as u64, self.bits as u32);
+        }
+        bytes.extend_from_slice(&w.into_bytes());
+        Ok(Payload::Quantized {
+            rows: batch.rows,
+            dim: self.dim,
+            bits: self.bits,
+            bytes,
+        })
+    }
+
+    pub fn decode(&self, payload: &Payload) -> Result<QuantBatch> {
+        let Payload::Quantized { rows, dim, bits, bytes } = payload else {
+            bail!("payload is not quantized");
+        };
+        if *dim != self.dim || *bits != self.bits {
+            bail!("quant payload geometry mismatch");
+        }
+        let header = rows * 8;
+        if bytes.len() < header {
+            bail!("quant payload truncated header");
+        }
+        let mut o_min = Vec::with_capacity(*rows);
+        let mut o_max = Vec::with_capacity(*rows);
+        for r in 0..*rows {
+            let b = &bytes[r * 8..r * 8 + 8];
+            o_min.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            o_max.push(f32::from_le_bytes([b[4], b[5], b[6], b[7]]));
+        }
+        let mut reader = BitReader::new(&bytes[header..]);
+        let mut codes = Vec::with_capacity(rows * dim);
+        for _ in 0..rows * dim {
+            let Some(v) = reader.read(self.bits as u32) else {
+                bail!("quant payload truncated codes");
+            };
+            codes.push(v as f32);
+        }
+        Ok(QuantBatch {
+            rows: *rows,
+            dim: *dim,
+            codes,
+            o_min,
+            o_max,
+        })
+    }
+
+    /// Dequantize to a dense batch (bin midpoints, Eq. 2) — used by
+    /// analysis tooling; the label owner's artifact does this in-graph.
+    pub fn dequantize(&self, batch: &QuantBatch) -> DenseBatch {
+        let levels = (1u64 << self.bits) as f32;
+        let mut data = Vec::with_capacity(batch.codes.len());
+        for r in 0..batch.rows {
+            let span = (batch.o_max[r] - batch.o_min[r]).max(1e-12);
+            for j in 0..batch.dim {
+                let c = batch.codes[r * batch.dim + j];
+                data.push(batch.o_min[r] + (c + 0.5) * span / levels);
+            }
+        }
+        DenseBatch::new(batch.rows, batch.dim, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::size_model::SizeModel;
+    use crate::util::Rng;
+
+    fn random_quant(rng: &mut Rng, rows: usize, dim: usize, bits: u8) -> QuantBatch {
+        let levels = (1u64 << bits) as f32;
+        QuantBatch {
+            rows,
+            dim,
+            codes: (0..rows * dim)
+                .map(|_| (rng.next_f32() * levels).floor().min(levels - 1.0))
+                .collect(),
+            o_min: (0..rows).map(|_| -rng.next_f32()).collect(),
+            o_max: (0..rows).map(|_| 1.0 + rng.next_f32()).collect(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_bit_widths() {
+        let mut rng = Rng::new(1);
+        for bits in [1u8, 2, 4, 8] {
+            let codec = QuantCodec::new(128, bits);
+            let batch = random_quant(&mut rng, 16, 128, bits);
+            let p = codec.encode(&batch).unwrap();
+            let back = codec.decode(&p).unwrap();
+            assert_eq!(batch, back, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn wire_size_matches_table2_asymptotically() {
+        // 2^b / N with N = 32, i.e. codes dominate for large d; the
+        // per-row min/max header is 8 bytes.
+        let mut rng = Rng::new(2);
+        for bits in [2u8, 4] {
+            let (rows, dim) = (32, 1024);
+            let codec = QuantCodec::new(dim, bits);
+            let batch = random_quant(&mut rng, rows, dim, bits);
+            let p = codec.encode(&batch).unwrap();
+            let analytic =
+                SizeModel::quant(dim, bits as usize).forward_fraction() * (rows * dim * 4) as f64;
+            let measured = (p.wire_bytes() - rows * 8) as f64; // codes only
+            assert!(
+                (measured - analytic).abs() / analytic < 0.01,
+                "bits={bits}: {measured} vs {analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range_code() {
+        let codec = QuantCodec::new(8, 2);
+        let batch = QuantBatch {
+            rows: 1,
+            dim: 8,
+            codes: vec![0.0, 1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0], // 4 > 3
+            o_min: vec![0.0],
+            o_max: vec![1.0],
+        };
+        assert!(codec.encode(&batch).is_err());
+    }
+
+    #[test]
+    fn dequantize_midpoints() {
+        let codec = QuantCodec::new(4, 2);
+        let batch = QuantBatch {
+            rows: 1,
+            dim: 4,
+            codes: vec![0.0, 1.0, 2.0, 3.0],
+            o_min: vec![0.0],
+            o_max: vec![4.0],
+        };
+        let dense = codec.dequantize(&batch);
+        assert_eq!(dense.row(0), &[0.5, 1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let mut rng = Rng::new(3);
+        let codec = QuantCodec::new(64, 4);
+        let batch = random_quant(&mut rng, 4, 64, 4);
+        let p = codec.encode(&batch).unwrap();
+        if let Payload::Quantized { rows, dim, bits, bytes } = p {
+            let cut = Payload::Quantized {
+                rows,
+                dim,
+                bits,
+                bytes: bytes[..10].to_vec(),
+            };
+            assert!(codec.decode(&cut).is_err());
+        }
+    }
+}

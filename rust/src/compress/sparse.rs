@@ -1,0 +1,258 @@
+//! Sparse codec: k values per row as f32 + ⌈log2 d⌉-bit packed indices.
+//!
+//! Used by Topk / RandTopk (forward: values + indices; backward: values
+//! only — the feature owner already holds the indices, paper §3.1) and by
+//! size reduction (neither pass sends indices: they are always 0..k).
+
+use anyhow::{bail, Result};
+
+use crate::util::{index_bits, BitReader, BitWriter};
+
+use super::{Pass, Payload, SparseBatch};
+
+/// Wire layout: per row, k f32 LE values; then (forward only) all rows'
+/// indices bit-packed at ⌈log2 d⌉ bits each, padded to a byte boundary.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseCodec {
+    pub dim: usize,
+    pub k: usize,
+    /// Size reduction never sends indices; top-k sends them forward.
+    pub send_indices: bool,
+}
+
+impl SparseCodec {
+    pub fn topk(dim: usize, k: usize) -> Self {
+        SparseCodec { dim, k, send_indices: true }
+    }
+
+    pub fn size_reduction(dim: usize, k: usize) -> Self {
+        SparseCodec { dim, k, send_indices: false }
+    }
+
+    fn with_indices(&self, pass: Pass) -> bool {
+        self.send_indices && pass == Pass::Forward
+    }
+
+    pub fn encode(&self, batch: &SparseBatch, pass: Pass) -> Result<Payload> {
+        if batch.k != self.k || batch.dim != self.dim {
+            bail!(
+                "sparse codec (d={}, k={}) fed batch (d={}, k={})",
+                self.dim, self.k, batch.dim, batch.k
+            );
+        }
+        let with_indices = self.with_indices(pass);
+        let mut bytes = Vec::with_capacity(batch.values.len() * 4);
+        for v in &batch.values {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        if with_indices {
+            let nbits = index_bits(self.dim);
+            let mut w = BitWriter::with_capacity_bits(batch.indices.len() * nbits as usize);
+            for &i in &batch.indices {
+                if i < 0 || i as usize >= self.dim {
+                    bail!("index {i} out of range for d={}", self.dim);
+                }
+                w.write(i as u64, nbits);
+            }
+            bytes.extend_from_slice(&w.into_bytes());
+        }
+        Ok(Payload::Sparse {
+            rows: batch.rows,
+            dim: self.dim,
+            k: self.k,
+            bytes,
+            with_indices,
+        })
+    }
+
+    pub fn decode(&self, payload: &Payload, pass: Pass) -> Result<SparseBatch> {
+        let Payload::Sparse { rows, dim, k, bytes, with_indices } = payload else {
+            bail!("payload is not sparse");
+        };
+        if *dim != self.dim || *k != self.k {
+            bail!("sparse payload geometry mismatch");
+        }
+        if *with_indices != self.with_indices(pass) {
+            bail!("sparse payload index presence mismatch for {pass:?}");
+        }
+        let n = rows * k;
+        let val_bytes = n * 4;
+        if bytes.len() < val_bytes {
+            bail!("sparse payload truncated: {} < {}", bytes.len(), val_bytes);
+        }
+        let mut values = Vec::with_capacity(n);
+        for c in bytes[..val_bytes].chunks_exact(4) {
+            values.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        let indices = if *with_indices {
+            let nbits = index_bits(self.dim);
+            let mut r = BitReader::new(&bytes[val_bytes..]);
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                let Some(v) = r.read(nbits) else {
+                    bail!("sparse payload index section truncated");
+                };
+                if v as usize >= self.dim {
+                    bail!("decoded index {v} out of range");
+                }
+                out.push(v as i32);
+            }
+            out
+        } else {
+            // size reduction (or backward pass): indices are implicit 0..k
+            (0..*rows)
+                .flat_map(|_| (0..self.k as i32))
+                .collect()
+        };
+        Ok(SparseBatch {
+            rows: *rows,
+            dim: self.dim,
+            k: self.k,
+            values,
+            indices,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::size_model::SizeModel;
+    use crate::util::Rng;
+
+    fn random_sparse(rng: &mut Rng, rows: usize, dim: usize, k: usize) -> SparseBatch {
+        let mut values = Vec::new();
+        let mut indices = Vec::new();
+        for _ in 0..rows {
+            let mut all: Vec<i32> = (0..dim as i32).collect();
+            rng.shuffle(&mut all);
+            let mut sel = all[..k].to_vec();
+            sel.sort_unstable();
+            for &i in &sel {
+                indices.push(i);
+                values.push(rng.normal());
+            }
+        }
+        SparseBatch { rows, dim, k, values, indices }
+    }
+
+    #[test]
+    fn roundtrip_forward_with_indices() {
+        let mut rng = Rng::new(1);
+        for (dim, k) in [(128, 3), (128, 13), (300, 2), (600, 14), (1280, 9), (16, 16)] {
+            let codec = SparseCodec::topk(dim, k);
+            let batch = random_sparse(&mut rng, 32, dim, k);
+            let p = codec.encode(&batch, Pass::Forward).unwrap();
+            let back = codec.decode(&p, Pass::Forward).unwrap();
+            assert_eq!(batch, back, "d={dim} k={k}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_backward_values_only() {
+        let mut rng = Rng::new(2);
+        let codec = SparseCodec::topk(128, 6);
+        let mut batch = random_sparse(&mut rng, 8, 128, 6);
+        let p = codec.encode(&batch, Pass::Backward).unwrap();
+        // backward payload must be exactly rows*k*4 bytes — no indices
+        assert_eq!(p.wire_bytes(), 8 * 6 * 4);
+        let back = codec.decode(&p, Pass::Backward).unwrap();
+        assert_eq!(back.values, batch.values);
+        // decoded indices are the implicit 0..k (receiver rewires by its own
+        // cached indices, see coordinator::feature_owner)
+        batch.indices = (0..8).flat_map(|_| 0..6).collect();
+        assert_eq!(back.indices, batch.indices);
+    }
+
+    #[test]
+    fn forward_size_matches_table2() {
+        // k/d * (1 + ceil(log2 d)/32) within bit-padding slack
+        for (dim, k) in [(128usize, 3usize), (300, 4), (600, 9), (1280, 2)] {
+            let codec = SparseCodec::topk(dim, k);
+            let mut rng = Rng::new(3);
+            let rows = 32;
+            let batch = random_sparse(&mut rng, rows, dim, k);
+            let p = codec.encode(&batch, Pass::Forward).unwrap();
+            let analytic = SizeModel::topk(dim, k).forward_fraction() * (rows * dim * 4) as f64;
+            let measured = p.wire_bytes() as f64;
+            assert!(
+                (measured - analytic).abs() <= 8.0,
+                "d={dim} k={k}: measured {measured} analytic {analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn size_reduction_sends_no_indices() {
+        let codec = SparseCodec::size_reduction(128, 6);
+        let batch = SparseBatch {
+            rows: 4,
+            dim: 128,
+            k: 6,
+            values: vec![1.0; 24],
+            indices: (0..4).flat_map(|_| 0..6).collect(),
+        };
+        let p = codec.encode(&batch, Pass::Forward).unwrap();
+        assert_eq!(p.wire_bytes(), 4 * 6 * 4);
+        let back = codec.decode(&p, Pass::Forward).unwrap();
+        assert_eq!(back, batch);
+    }
+
+    #[test]
+    fn rejects_geometry_mismatch() {
+        let codec = SparseCodec::topk(128, 6);
+        let batch = SparseBatch {
+            rows: 1,
+            dim: 64,
+            k: 6,
+            values: vec![0.0; 6],
+            indices: vec![0, 1, 2, 3, 4, 5],
+        };
+        assert!(codec.encode(&batch, Pass::Forward).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_index() {
+        let codec = SparseCodec::topk(16, 2);
+        let batch = SparseBatch {
+            rows: 1,
+            dim: 16,
+            k: 2,
+            values: vec![1.0, 2.0],
+            indices: vec![3, 16],
+        };
+        assert!(codec.encode(&batch, Pass::Forward).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let codec = SparseCodec::topk(128, 6);
+        let mut rng = Rng::new(4);
+        let batch = random_sparse(&mut rng, 4, 128, 6);
+        let p = codec.encode(&batch, Pass::Forward).unwrap();
+        if let Payload::Sparse { rows, dim, k, bytes, with_indices } = p {
+            let cut = Payload::Sparse {
+                rows,
+                dim,
+                k,
+                bytes: bytes[..bytes.len() - 4].to_vec(),
+                with_indices,
+            };
+            assert!(codec.decode(&cut, Pass::Forward).is_err());
+        }
+    }
+
+    #[test]
+    fn to_dense_scatter() {
+        let batch = SparseBatch {
+            rows: 2,
+            dim: 5,
+            k: 2,
+            values: vec![1.0, 2.0, 3.0, 4.0],
+            indices: vec![0, 3, 1, 4],
+        };
+        let dense = batch.to_dense();
+        assert_eq!(dense.row(0), &[1.0, 0.0, 0.0, 2.0, 0.0]);
+        assert_eq!(dense.row(1), &[0.0, 3.0, 0.0, 0.0, 4.0]);
+    }
+}

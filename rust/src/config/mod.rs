@@ -1,0 +1,342 @@
+//! Experiment configuration: compression method specs, training
+//! hyperparameters, and a layered config system (defaults < config file <
+//! CLI overrides). The file format is simple `key = value` lines with
+//! `#` comments — grep-able and diff-able in run directories.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Compression method applied to the cut layer (paper §3 + §4).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// Vanilla split learning (no compression).
+    None,
+    /// Paper's contribution: randomized top-k (Eq. 7).
+    RandTopk { k: usize, alpha: f32 },
+    /// Plain top-k sparsification.
+    Topk { k: usize },
+    /// Cut-layer size reduction (first-k mask).
+    SizeReduction { k: usize },
+    /// Uniform b-bit quantization (forward only).
+    Quant { bits: u8 },
+    /// L1-regularization-induced sparsity (lambda on the loss).
+    L1 { lambda: f32, eps: f32 },
+}
+
+impl Method {
+    /// Artifact variant directory this method executes.
+    pub fn variant(&self) -> String {
+        match self {
+            Method::None | Method::L1 { .. } => "dense".into(),
+            Method::RandTopk { k, .. } | Method::Topk { k } | Method::SizeReduction { k } => {
+                format!("sparse_k{k}")
+            }
+            Method::Quant { bits } => format!("quant_b{bits}"),
+        }
+    }
+
+    /// (alpha, fixed_sel) runtime inputs for the sparse artifacts.
+    pub fn sparse_inputs(&self, training: bool) -> Option<(f32, f32)> {
+        match self {
+            // randomness only during training (paper §4.2)
+            Method::RandTopk { alpha, .. } => Some((if training { *alpha } else { 0.0 }, 0.0)),
+            Method::Topk { .. } => Some((0.0, 0.0)),
+            Method::SizeReduction { .. } => Some((0.0, 1.0)),
+            _ => None,
+        }
+    }
+
+    pub fn k(&self) -> Option<usize> {
+        match self {
+            Method::RandTopk { k, .. } | Method::Topk { k } | Method::SizeReduction { k } => {
+                Some(*k)
+            }
+            _ => None,
+        }
+    }
+
+    /// Parse e.g. "randtopk:k=6,alpha=0.1", "topk:k=3", "sizered:k=6",
+    /// "quant:bits=2", "l1:lambda=0.001", "none".
+    pub fn parse(spec: &str) -> Result<Method> {
+        let (name, args) = match spec.split_once(':') {
+            Some((n, a)) => (n, a),
+            None => (spec, ""),
+        };
+        let mut kv = BTreeMap::new();
+        for part in args.split(',').filter(|s| !s.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad method arg '{part}'"))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get_usize = |key: &str| -> Result<usize> {
+            kv.get(key)
+                .ok_or_else(|| anyhow!("method '{name}' needs {key}="))?
+                .parse()
+                .with_context(|| format!("parsing {key}"))
+        };
+        let get_f32 = |key: &str, default: Option<f32>| -> Result<f32> {
+            match kv.get(key) {
+                Some(v) => v.parse().with_context(|| format!("parsing {key}")),
+                None => default.ok_or_else(|| anyhow!("method '{name}' needs {key}=")),
+            }
+        };
+        Ok(match name {
+            "none" | "vanilla" => Method::None,
+            "randtopk" => Method::RandTopk { k: get_usize("k")?, alpha: get_f32("alpha", Some(0.1))? },
+            "topk" => Method::Topk { k: get_usize("k")? },
+            "sizered" | "size_reduction" => Method::SizeReduction { k: get_usize("k")? },
+            "quant" => Method::Quant { bits: get_usize("bits")? as u8 },
+            "l1" => Method::L1 {
+                lambda: get_f32("lambda", None)?,
+                eps: get_f32("eps", Some(1e-4))?,
+            },
+            other => bail!("unknown method '{other}'"),
+        })
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Method::None => write!(f, "none"),
+            Method::RandTopk { k, alpha } => write!(f, "randtopk:k={k},alpha={alpha}"),
+            Method::Topk { k } => write!(f, "topk:k={k}"),
+            Method::SizeReduction { k } => write!(f, "sizered:k={k}"),
+            Method::Quant { bits } => write!(f, "quant:bits={bits}"),
+            Method::L1 { lambda, .. } => write!(f, "l1:lambda={lambda}"),
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub model: String,
+    pub method: Method,
+    pub epochs: u32,
+    pub lr: f32,
+    /// multiply lr by this factor at 60% and 80% of training
+    pub lr_decay: f32,
+    pub seed: u64,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub augment: bool,
+    /// evaluate every this many epochs
+    pub eval_every: u32,
+    pub bandwidth_mbps: f64,
+    pub latency_ms: f64,
+    pub out_dir: Option<String>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            model: "mlp".into(),
+            method: Method::None,
+            epochs: 10,
+            lr: 0.05,
+            lr_decay: 0.2,
+            seed: 1,
+            n_train: 8192,
+            n_test: 1024,
+            augment: true,
+            eval_every: 1,
+            bandwidth_mbps: 100.0,
+            latency_ms: 5.0,
+            out_dir: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Apply one `key = value` assignment.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value.trim();
+        match key.trim() {
+            "model" => self.model = v.into(),
+            "method" => self.method = Method::parse(v)?,
+            "epochs" => self.epochs = v.parse()?,
+            "lr" => self.lr = v.parse()?,
+            "lr_decay" => self.lr_decay = v.parse()?,
+            "seed" => self.seed = v.parse()?,
+            "n_train" => self.n_train = v.parse()?,
+            "n_test" => self.n_test = v.parse()?,
+            "augment" => self.augment = v.parse()?,
+            "eval_every" => self.eval_every = v.parse()?,
+            "bandwidth_mbps" => self.bandwidth_mbps = v.parse()?,
+            "latency_ms" => self.latency_ms = v.parse()?,
+            "out_dir" => self.out_dir = Some(v.into()),
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Load `key = value` lines (# comments, blank lines ok).
+    pub fn load_file(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        for (lineno, line) in src.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            self.set(k, v)
+                .with_context(|| format!("line {}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    pub fn to_file_format(&self) -> String {
+        format!(
+            "model = {}\nmethod = {}\nepochs = {}\nlr = {}\nlr_decay = {}\nseed = {}\n\
+             n_train = {}\nn_test = {}\naugment = {}\neval_every = {}\n\
+             bandwidth_mbps = {}\nlatency_ms = {}\n",
+            self.model,
+            self.method,
+            self.epochs,
+            self.lr,
+            self.lr_decay,
+            self.seed,
+            self.n_train,
+            self.n_test,
+            self.augment,
+            self.eval_every,
+            self.bandwidth_mbps,
+            self.latency_ms
+        )
+    }
+
+    /// Per-epoch learning rate with step decay at 60% / 80%.
+    pub fn lr_at_epoch(&self, epoch: u32) -> f32 {
+        let frac = (epoch as f32 + 0.5) / self.epochs.max(1) as f32;
+        if frac >= 0.8 {
+            self.lr * self.lr_decay * self.lr_decay
+        } else if frac >= 0.6 {
+            self.lr * self.lr_decay
+        } else {
+            self.lr
+        }
+    }
+}
+
+/// Paper Table 3 compression levels per model (see DESIGN.md §4: k values
+/// chosen so compressed sizes match the paper's levels).
+pub fn level_k(model: &str, level: &str) -> Result<usize> {
+    let ks: &[(&str, usize)] = match model {
+        "mlp" | "convnet" => &[("high", 3), ("medium", 6), ("low", 13)],
+        "gru4rec" => &[("high", 2), ("medium", 4), ("low", 9)],
+        "textcnn" => &[("high+", 2), ("high", 4), ("medium", 9), ("low", 14)],
+        "convnet_l" => &[("high", 2), ("medium", 4), ("low", 9)],
+        other => bail!("unknown model '{other}'"),
+    };
+    ks.iter()
+        .find(|(n, _)| *n == level)
+        .map(|(_, k)| *k)
+        .ok_or_else(|| anyhow!("model {model} has no level '{level}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_methods() {
+        assert_eq!(Method::parse("none").unwrap(), Method::None);
+        assert_eq!(
+            Method::parse("randtopk:k=6,alpha=0.2").unwrap(),
+            Method::RandTopk { k: 6, alpha: 0.2 }
+        );
+        assert_eq!(
+            Method::parse("randtopk:k=6").unwrap(),
+            Method::RandTopk { k: 6, alpha: 0.1 }
+        );
+        assert_eq!(Method::parse("topk:k=3").unwrap(), Method::Topk { k: 3 });
+        assert_eq!(
+            Method::parse("sizered:k=13").unwrap(),
+            Method::SizeReduction { k: 13 }
+        );
+        assert_eq!(Method::parse("quant:bits=2").unwrap(), Method::Quant { bits: 2 });
+        assert!(matches!(
+            Method::parse("l1:lambda=0.001").unwrap(),
+            Method::L1 { lambda, .. } if (lambda - 0.001).abs() < 1e-9
+        ));
+        assert!(Method::parse("topk").is_err());
+        assert!(Method::parse("bogus:k=1").is_err());
+    }
+
+    #[test]
+    fn method_display_roundtrip() {
+        for spec in ["none", "randtopk:k=6,alpha=0.1", "topk:k=3", "sizered:k=13", "quant:bits=4"] {
+            let m = Method::parse(spec).unwrap();
+            assert_eq!(Method::parse(&m.to_string()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn variant_mapping() {
+        assert_eq!(Method::parse("randtopk:k=6").unwrap().variant(), "sparse_k6");
+        assert_eq!(Method::parse("topk:k=6").unwrap().variant(), "sparse_k6");
+        assert_eq!(Method::parse("sizered:k=6").unwrap().variant(), "sparse_k6");
+        assert_eq!(Method::parse("quant:bits=2").unwrap().variant(), "quant_b2");
+        assert_eq!(Method::parse("l1:lambda=0.01").unwrap().variant(), "dense");
+        assert_eq!(Method::None.variant(), "dense");
+    }
+
+    #[test]
+    fn sparse_inputs_semantics() {
+        let rt = Method::parse("randtopk:k=6,alpha=0.3").unwrap();
+        assert_eq!(rt.sparse_inputs(true), Some((0.3, 0.0)));
+        // inference is deterministic top-k
+        assert_eq!(rt.sparse_inputs(false), Some((0.0, 0.0)));
+        let sr = Method::parse("sizered:k=6").unwrap();
+        assert_eq!(sr.sparse_inputs(true), Some((0.0, 1.0)));
+        assert_eq!(Method::None.sparse_inputs(true), None);
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("model", "convnet").unwrap();
+        cfg.set("method", "randtopk:k=3,alpha=0.1").unwrap();
+        cfg.set("epochs", "30").unwrap();
+        let path = std::env::temp_dir().join("splitfed_cfg_test.conf");
+        std::fs::write(&path, cfg.to_file_format()).unwrap();
+        let mut cfg2 = ExperimentConfig::default();
+        cfg2.load_file(&path).unwrap();
+        assert_eq!(cfg2.model, "convnet");
+        assert_eq!(cfg2.method, Method::RandTopk { k: 3, alpha: 0.1 });
+        assert_eq!(cfg2.epochs, 30);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn config_rejects_unknown_key() {
+        let mut cfg = ExperimentConfig::default();
+        assert!(cfg.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn lr_schedule() {
+        let cfg = ExperimentConfig { epochs: 10, lr: 1.0, lr_decay: 0.1, ..Default::default() };
+        assert_eq!(cfg.lr_at_epoch(0), 1.0);
+        assert_eq!(cfg.lr_at_epoch(5), 1.0);
+        assert!((cfg.lr_at_epoch(6) - 0.1).abs() < 1e-6);
+        assert!((cfg.lr_at_epoch(9) - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn level_table_matches_design() {
+        assert_eq!(level_k("convnet", "high").unwrap(), 3);
+        assert_eq!(level_k("gru4rec", "low").unwrap(), 9);
+        assert_eq!(level_k("textcnn", "high+").unwrap(), 2);
+        assert_eq!(level_k("convnet_l", "medium").unwrap(), 4);
+        assert!(level_k("convnet", "ultra").is_err());
+    }
+}

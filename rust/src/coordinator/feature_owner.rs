@@ -1,0 +1,296 @@
+//! Feature-owner party: holds X and the bottom model; sends compressed
+//! cut-layer activations, receives gradients, updates the bottom model
+//! (rematerializing the forward inside the `bottom_bwd` artifact).
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+use xla::Literal;
+
+use crate::compress::{
+    DenseBatch, DenseCodec, L1Codec, Pass, Payload, QuantCodec, SparseBatch, SparseCodec,
+};
+use crate::config::Method;
+use crate::runtime::{Engine, HostTensor, ModelMeta};
+use crate::transport::Transport;
+use crate::wire::{Frame, Message};
+
+use super::step_seed;
+
+pub struct FeatureOwner<T: Transport> {
+    engine: Rc<Engine>,
+    pub meta: ModelMeta,
+    method: Method,
+    pub transport: T,
+    bottom: Vec<Literal>,
+    mom_b: Vec<Literal>,
+    experiment_seed: u64,
+    seq: u32,
+    /// cached selection indices of the in-flight step (sparse methods)
+    pending: Option<PendingStep>,
+    /// running compressed-size accounting (percent of dense)
+    pub fwd_pct_sum: f64,
+    pub fwd_msgs: u64,
+}
+
+struct PendingStep {
+    x: Literal,
+    indices: Option<Literal>,
+}
+
+impl<T: Transport> FeatureOwner<T> {
+    pub fn new(
+        engine: Rc<Engine>,
+        model: &str,
+        method: Method,
+        transport: T,
+        experiment_seed: u64,
+        init_seed: i32,
+    ) -> Result<Self> {
+        let meta = engine.manifest.model(model)?.clone();
+        let (bottom, _top) = engine.init_params(model, init_seed)?;
+        let mom_b = engine.zero_momentum(&meta.bottom_shapes)?;
+        Ok(FeatureOwner {
+            engine,
+            meta,
+            method,
+            transport,
+            bottom,
+            mom_b,
+            experiment_seed,
+            seq: 0,
+            pending: None,
+            fwd_pct_sum: 0.0,
+            fwd_msgs: 0,
+        })
+    }
+
+    fn key(&self, fn_name: &str) -> String {
+        format!("{}/{}/{}", self.meta.name, self.method.variant(), fn_name)
+    }
+
+    fn send(&mut self, message: Message) -> Result<()> {
+        let frame = Frame { seq: self.seq, message };
+        self.seq += 1;
+        self.transport.send(&frame)
+    }
+
+    /// Compute the compressed forward payload for a batch. `training`
+    /// controls RandTopk randomness (inference is deterministic top-k).
+    fn forward_payload(
+        &mut self,
+        step: u64,
+        x: &HostTensor,
+        training: bool,
+    ) -> Result<(Payload, Literal, Option<Literal>)> {
+        let x_lit = x.to_literal()?;
+        match self.method {
+            Method::RandTopk { k, .. } | Method::Topk { k } | Method::SizeReduction { k } => {
+                let (alpha, fixed_sel) = self.method.sparse_inputs(training).unwrap();
+                let seed =
+                    HostTensor::scalar_i32(step_seed(self.experiment_seed, step)).to_literal()?;
+                let alpha_l = HostTensor::vec1_f32(&[alpha]).to_literal()?;
+                let fixed_l = HostTensor::vec1_f32(&[fixed_sel]).to_literal()?;
+                let mut borrowed: Vec<&Literal> = self.bottom.iter().collect();
+                borrowed.push(&x_lit);
+                borrowed.push(&seed);
+                borrowed.push(&alpha_l);
+                borrowed.push(&fixed_l);
+                let outs = self.engine.exec(&self.key("bottom_fwd"), &borrowed)?;
+                drop(borrowed);
+                let values = HostTensor::from_literal(&outs[0])?;
+                let indices_host = HostTensor::from_literal(&outs[1])?;
+                let batch = SparseBatch {
+                    rows: self.meta.batch,
+                    dim: self.meta.cut_dim,
+                    k,
+                    values: values.as_f32()?.to_vec(),
+                    indices: indices_host.as_i32()?.to_vec(),
+                };
+                let payload = self.sparse_codec(k).encode(&batch, Pass::Forward)?;
+                Ok((payload, x_lit, Some(outs.into_iter().nth(1).unwrap())))
+            }
+            Method::Quant { bits } => {
+                let mut borrowed: Vec<&Literal> = self.bottom.iter().collect();
+                borrowed.push(&x_lit);
+                let outs = self.engine.exec(&self.key("bottom_fwd"), &borrowed)?;
+                let codes = HostTensor::from_literal(&outs[0])?;
+                let mins = HostTensor::from_literal(&outs[1])?;
+                let maxs = HostTensor::from_literal(&outs[2])?;
+                let batch = crate::compress::quant::QuantBatch {
+                    rows: self.meta.batch,
+                    dim: self.meta.cut_dim,
+                    codes: codes.as_f32()?.to_vec(),
+                    o_min: mins.as_f32()?.to_vec(),
+                    o_max: maxs.as_f32()?.to_vec(),
+                };
+                let payload = QuantCodec::new(self.meta.cut_dim, bits).encode(&batch)?;
+                Ok((payload, x_lit, None))
+            }
+            Method::None | Method::L1 { .. } => {
+                let mut borrowed: Vec<&Literal> = self.bottom.iter().collect();
+                borrowed.push(&x_lit);
+                let outs = self.engine.exec(&self.key("bottom_fwd"), &borrowed)?;
+                let o = HostTensor::from_literal(&outs[0])?;
+                let dense = DenseBatch::new(
+                    self.meta.batch,
+                    self.meta.cut_dim,
+                    o.as_f32()?.to_vec(),
+                );
+                let payload = match self.method {
+                    Method::L1 { eps, .. } => L1Codec::new(self.meta.cut_dim, eps).encode(&dense)?,
+                    _ => DenseCodec::new(self.meta.cut_dim).encode(&dense)?,
+                };
+                Ok((payload, x_lit, None))
+            }
+        }
+    }
+
+    fn sparse_codec(&self, k: usize) -> SparseCodec {
+        match self.method {
+            Method::SizeReduction { .. } => SparseCodec::size_reduction(self.meta.cut_dim, k),
+            _ => SparseCodec::topk(self.meta.cut_dim, k),
+        }
+    }
+
+    /// Training forward: compute, compress, send; cache what backward needs.
+    pub fn train_forward(&mut self, step: u64, x: &HostTensor) -> Result<()> {
+        let (payload, x_lit, indices) = self.forward_payload(step, x, true)?;
+        self.fwd_pct_sum += payload.compressed_size_pct();
+        self.fwd_msgs += 1;
+        self.pending = Some(PendingStep { x: x_lit, indices });
+        self.send(Message::Activations { step, payload })
+    }
+
+    /// Training backward: receive the gradient, update the bottom model.
+    pub fn train_backward(&mut self, step: u64, lr: f32) -> Result<()> {
+        let frame = self.transport.recv()?;
+        let Message::Gradients { step: got_step, payload } = frame.message else {
+            bail!("feature owner expected Gradients, got {:?}", frame.message.msg_type());
+        };
+        if got_step != step {
+            bail!("gradient step mismatch: {got_step} != {step}");
+        }
+        let pending = self
+            .pending
+            .take()
+            .ok_or_else(|| anyhow!("backward without pending forward"))?;
+        let lr_l = HostTensor::vec1_f32(&[lr]).to_literal()?;
+        match self.method {
+            Method::RandTopk { k, .. } | Method::Topk { k } | Method::SizeReduction { k } => {
+                let codec = self.sparse_codec(k);
+                let g = codec.decode(&payload, Pass::Backward)?;
+                let g_lit =
+                    HostTensor::f32(g.values, &[self.meta.batch, k]).to_literal()?;
+                let indices = pending
+                    .indices
+                    .ok_or_else(|| anyhow!("sparse backward lacks cached indices"))?;
+                let mut borrowed: Vec<&Literal> =
+                    self.bottom.iter().chain(self.mom_b.iter()).collect();
+                borrowed.push(&pending.x);
+                borrowed.push(&indices);
+                borrowed.push(&g_lit);
+                borrowed.push(&lr_l);
+                let outs = self.engine.exec(&self.key("bottom_bwd"), &borrowed)?;
+                self.apply_param_update(outs);
+            }
+            Method::Quant { .. } | Method::None | Method::L1 { .. } => {
+                let g = DenseCodec::new(self.meta.cut_dim).decode(&payload)?;
+                let g_lit = HostTensor::f32(g.data, &[self.meta.batch, self.meta.cut_dim])
+                    .to_literal()?;
+                // quant shares the dense bottom_bwd artifact (Table 2:
+                // backward is dense for quantization and L1)
+                let key = format!("{}/dense/bottom_bwd", self.meta.name);
+                let mut borrowed: Vec<&Literal> =
+                    self.bottom.iter().chain(self.mom_b.iter()).collect();
+                borrowed.push(&pending.x);
+                borrowed.push(&g_lit);
+                borrowed.push(&lr_l);
+                let outs = self.engine.exec(&key, &borrowed)?;
+                self.apply_param_update(outs);
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_param_update(&mut self, mut outs: Vec<Literal>) {
+        let nb = self.bottom.len();
+        let mom = outs.split_off(nb);
+        self.bottom = outs;
+        self.mom_b = mom;
+    }
+
+    /// Evaluation forward (deterministic; RandTopk behaves as top-k).
+    pub fn eval_forward(&mut self, step: u64, x: &HostTensor) -> Result<()> {
+        let (payload, _x, _idx) = self.forward_payload(step, x, false)?;
+        self.send(Message::Activations { step, payload })
+    }
+
+    /// Receive the label owner's eval result for one batch.
+    pub fn recv_eval_result(&mut self) -> Result<(f32, f32)> {
+        let frame = self.transport.recv()?;
+        let Message::EvalResult { loss_sum, metric_count, .. } = frame.message else {
+            bail!("expected EvalResult, got {:?}", frame.message.msg_type());
+        };
+        Ok((loss_sum, metric_count))
+    }
+
+    pub fn send_control(&mut self, ctl: crate::wire::Control) -> Result<()> {
+        self.send(Message::Control(ctl))
+    }
+
+    pub fn mean_fwd_pct(&self) -> f64 {
+        if self.fwd_msgs == 0 {
+            0.0
+        } else {
+            self.fwd_pct_sum / self.fwd_msgs as f64
+        }
+    }
+
+    /// Dense cut-layer activations for analysis (fig5 histogram, fig7
+    /// inversion attack) — runs the dense bottom_fwd regardless of method.
+    pub fn dense_activations(&self, x: &HostTensor) -> Result<HostTensor> {
+        let x_lit = x.to_literal()?;
+        let mut borrowed: Vec<&Literal> = self.bottom.iter().collect();
+        borrowed.push(&x_lit);
+        let key = format!("{}/dense/bottom_fwd", self.meta.name);
+        let outs = self.engine.exec(&key, &borrowed)?;
+        HostTensor::from_literal(&outs[0])
+    }
+
+    pub fn bottom_params(&self) -> &[Literal] {
+        &self.bottom
+    }
+
+    pub fn momentum(&self) -> &[Literal] {
+        &self.mom_b
+    }
+
+    /// Restore party state from a checkpoint (momentum optional).
+    pub fn restore(&mut self, bottom: Vec<Literal>, mom_b: Vec<Literal>) -> Result<()> {
+        if bottom.len() != self.bottom.len() || mom_b.len() != self.mom_b.len() {
+            bail!("checkpoint arity mismatch");
+        }
+        self.bottom = bottom;
+        self.mom_b = mom_b;
+        Ok(())
+    }
+
+    /// Deterministic top-k selection indices for a batch (inference-phase
+    /// behaviour) — used by the fig5 neuron-histogram analysis.
+    pub fn selection_indices(&self, x: &HostTensor, k: usize) -> Result<Vec<i32>> {
+        let x_lit = x.to_literal()?;
+        let seed = HostTensor::scalar_i32(0).to_literal()?;
+        let alpha_l = HostTensor::vec1_f32(&[0.0]).to_literal()?;
+        let fixed_l = HostTensor::vec1_f32(&[0.0]).to_literal()?;
+        let mut borrowed: Vec<&Literal> = self.bottom.iter().collect();
+        borrowed.push(&x_lit);
+        borrowed.push(&seed);
+        borrowed.push(&alpha_l);
+        borrowed.push(&fixed_l);
+        let key = format!("{}/sparse_k{k}/bottom_fwd", self.meta.name);
+        let outs = self.engine.exec(&key, &borrowed)?;
+        Ok(HostTensor::from_literal(&outs[1])?.as_i32()?.to_vec())
+    }
+}
+

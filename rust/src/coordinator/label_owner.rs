@@ -1,0 +1,267 @@
+//! Label-owner party: holds Y and the top model; decodes the compressed
+//! cut-layer activations, runs the top model forward/backward, updates the
+//! top model, and returns the cut-layer gradient (compressed per Table 2).
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::compress::{
+    DenseCodec, L1Codec, Pass, Payload, QuantCodec, SparseBatch, SparseCodec,
+};
+use crate::config::Method;
+use crate::runtime::{Engine, HostTensor, ModelMeta};
+use crate::transport::Transport;
+use crate::wire::{Frame, Message};
+
+use super::{labels_tensor, StepMetrics};
+
+pub struct LabelOwner<T: Transport> {
+    engine: Rc<Engine>,
+    pub meta: ModelMeta,
+    method: Method,
+    pub transport: T,
+    top: Vec<Literal>,
+    mom_t: Vec<Literal>,
+    seq: u32,
+    pub bwd_pct_sum: f64,
+    pub bwd_msgs: u64,
+}
+
+impl<T: Transport> LabelOwner<T> {
+    pub fn new(
+        engine: Rc<Engine>,
+        model: &str,
+        method: Method,
+        transport: T,
+        init_seed: i32,
+    ) -> Result<Self> {
+        let meta = engine.manifest.model(model)?.clone();
+        let (_bottom, top) = engine.init_params(model, init_seed)?;
+        let mom_t = engine.zero_momentum(&meta.top_shapes)?;
+        Ok(LabelOwner {
+            engine,
+            meta,
+            method,
+            transport,
+            top,
+            mom_t,
+            seq: 0,
+            bwd_pct_sum: 0.0,
+            bwd_msgs: 0,
+        })
+    }
+
+    fn key(&self, fn_name: &str) -> String {
+        format!("{}/{}/{}", self.meta.name, self.method.variant(), fn_name)
+    }
+
+    fn send(&mut self, message: Message) -> Result<()> {
+        let frame = Frame { seq: self.seq, message };
+        self.seq += 1;
+        self.transport.send(&frame)
+    }
+
+    fn recv_activations(&mut self, expect_step: u64) -> Result<Payload> {
+        let frame = self.transport.recv()?;
+        let Message::Activations { step, payload } = frame.message else {
+            bail!("label owner expected Activations, got {:?}", frame.message.msg_type());
+        };
+        if step != expect_step {
+            bail!("activation step mismatch: {step} != {expect_step}");
+        }
+        Ok(payload)
+    }
+
+    fn sparse_codec(&self, k: usize) -> SparseCodec {
+        match self.method {
+            Method::SizeReduction { .. } => SparseCodec::size_reduction(self.meta.cut_dim, k),
+            _ => SparseCodec::topk(self.meta.cut_dim, k),
+        }
+    }
+
+    fn decode_to_literals(&self, payload: &Payload) -> Result<DecodedActivations> {
+        let b = self.meta.batch;
+        let d = self.meta.cut_dim;
+        match self.method {
+            Method::RandTopk { k, .. } | Method::Topk { k } | Method::SizeReduction { k } => {
+                let batch = self.sparse_codec(k).decode(payload, Pass::Forward)?;
+                Ok(DecodedActivations::Sparse {
+                    values: HostTensor::f32(batch.values, &[b, k]).to_literal()?,
+                    indices: HostTensor::i32(batch.indices, &[b, k]).to_literal()?,
+                })
+            }
+            Method::Quant { bits } => {
+                let batch = QuantCodec::new(d, bits).decode(payload)?;
+                Ok(DecodedActivations::Quant {
+                    codes: HostTensor::f32(batch.codes, &[b, d]).to_literal()?,
+                    o_min: HostTensor::f32(batch.o_min, &[b, 1]).to_literal()?,
+                    o_max: HostTensor::f32(batch.o_max, &[b, 1]).to_literal()?,
+                })
+            }
+            Method::None => {
+                let dense = DenseCodec::new(d).decode(payload)?;
+                Ok(DecodedActivations::Dense {
+                    o: HostTensor::f32(dense.data, &[b, d]).to_literal()?,
+                })
+            }
+            Method::L1 { eps, .. } => {
+                let dense = L1Codec::new(d, eps).decode(payload)?;
+                Ok(DecodedActivations::Dense {
+                    o: HostTensor::f32(dense.data, &[b, d]).to_literal()?,
+                })
+            }
+        }
+    }
+
+    /// One training step: receive activations, update top model, send the
+    /// cut-layer gradient back, report loss/metric.
+    pub fn train_step(&mut self, step: u64, y: &[i32], lr: f32) -> Result<StepMetrics> {
+        let payload = self.recv_activations(step)?;
+        let decoded = self.decode_to_literals(&payload)?;
+        let y_lit = labels_tensor(y).to_literal()?;
+        let lr_l = HostTensor::vec1_f32(&[lr]).to_literal()?;
+        let nt = self.top.len();
+        let b = self.meta.batch;
+        let d = self.meta.cut_dim;
+
+        let (outs, grad_payload) = match (&decoded, self.method) {
+            (DecodedActivations::Sparse { values, indices }, method) => {
+                let k = method.k().unwrap();
+                let mut borrowed: Vec<&Literal> =
+                    self.top.iter().chain(self.mom_t.iter()).collect();
+                borrowed.push(values);
+                borrowed.push(indices);
+                borrowed.push(&y_lit);
+                borrowed.push(&lr_l);
+                let outs = self.engine.exec(&self.key("top_fwdbwd"), &borrowed)?;
+                // outputs: new_top*, new_mom*, g_values, loss, correct
+                let g_values = HostTensor::from_literal(&outs[2 * nt])?;
+                let indices_host = HostTensor::from_literal(indices)?;
+                let batch = SparseBatch {
+                    rows: b,
+                    dim: d,
+                    k,
+                    values: g_values.as_f32()?.to_vec(),
+                    indices: indices_host.as_i32()?.to_vec(),
+                };
+                let payload = self.sparse_codec(k).encode(&batch, Pass::Backward)?;
+                (outs, payload)
+            }
+            (DecodedActivations::Quant { codes, o_min, o_max }, _) => {
+                let mut borrowed: Vec<&Literal> =
+                    self.top.iter().chain(self.mom_t.iter()).collect();
+                borrowed.push(codes);
+                borrowed.push(o_min);
+                borrowed.push(o_max);
+                borrowed.push(&y_lit);
+                borrowed.push(&lr_l);
+                let outs = self.engine.exec(&self.key("top_fwdbwd"), &borrowed)?;
+                let g = HostTensor::from_literal(&outs[2 * nt])?;
+                let dense = crate::compress::DenseBatch::new(b, d, g.as_f32()?.to_vec());
+                let payload = DenseCodec::new(d).encode(&dense)?;
+                (outs, payload)
+            }
+            (DecodedActivations::Dense { o }, method) => {
+                let lambda = match method {
+                    Method::L1 { lambda, .. } => lambda,
+                    _ => 0.0,
+                };
+                let l1_l = HostTensor::vec1_f32(&[lambda]).to_literal()?;
+                let mut borrowed: Vec<&Literal> =
+                    self.top.iter().chain(self.mom_t.iter()).collect();
+                borrowed.push(o);
+                borrowed.push(&y_lit);
+                borrowed.push(&lr_l);
+                borrowed.push(&l1_l);
+                let outs = self.engine.exec(&self.key("top_fwdbwd"), &borrowed)?;
+                let g = HostTensor::from_literal(&outs[2 * nt])?;
+                let dense = crate::compress::DenseBatch::new(b, d, g.as_f32()?.to_vec());
+                // Table 2: backward for L1 / vanilla is dense
+                let payload = DenseCodec::new(d).encode(&dense)?;
+                (outs, payload)
+            }
+        };
+
+        self.bwd_pct_sum += grad_payload.compressed_size_pct();
+        self.bwd_msgs += 1;
+        let loss = HostTensor::from_literal(&outs[2 * nt + 1])?.scalar()? as f64;
+        let metric = HostTensor::from_literal(&outs[2 * nt + 2])?.scalar()? as f64;
+        // apply parameter update
+        let mut outs = outs;
+        outs.truncate(2 * nt);
+        let mom = outs.split_off(nt);
+        self.top = outs;
+        self.mom_t = mom;
+        self.send(Message::Gradients { step, payload: grad_payload })?;
+        Ok(StepMetrics { loss, metric_count: metric })
+    }
+
+    /// One evaluation step: receive activations, run top_eval, reply with
+    /// (loss_sum, metric_count).
+    pub fn eval_step(&mut self, step: u64, y: &[i32]) -> Result<(f32, f32)> {
+        let payload = self.recv_activations(step)?;
+        let decoded = self.decode_to_literals(&payload)?;
+        let y_lit = labels_tensor(y).to_literal()?;
+        let outs = match &decoded {
+            DecodedActivations::Sparse { values, indices } => {
+                let mut borrowed: Vec<&Literal> = self.top.iter().collect();
+                borrowed.push(values);
+                borrowed.push(indices);
+                borrowed.push(&y_lit);
+                self.engine.exec(&self.key("top_eval"), &borrowed)?
+            }
+            DecodedActivations::Quant { codes, o_min, o_max } => {
+                let mut borrowed: Vec<&Literal> = self.top.iter().collect();
+                borrowed.push(codes);
+                borrowed.push(o_min);
+                borrowed.push(o_max);
+                borrowed.push(&y_lit);
+                self.engine.exec(&self.key("top_eval"), &borrowed)?
+            }
+            DecodedActivations::Dense { o } => {
+                let mut borrowed: Vec<&Literal> = self.top.iter().collect();
+                borrowed.push(o);
+                borrowed.push(&y_lit);
+                self.engine.exec(&self.key("top_eval"), &borrowed)?
+            }
+        };
+        let loss_sum = HostTensor::from_literal(&outs[0])?.scalar()?;
+        let metric_count = HostTensor::from_literal(&outs[1])?.scalar()?;
+        self.send(Message::EvalResult { step, loss_sum, metric_count })?;
+        Ok((loss_sum, metric_count))
+    }
+
+    pub fn mean_bwd_pct(&self) -> f64 {
+        if self.bwd_msgs == 0 {
+            0.0
+        } else {
+            self.bwd_pct_sum / self.bwd_msgs as f64
+        }
+    }
+
+    pub fn top_params(&self) -> &[Literal] {
+        &self.top
+    }
+
+    pub fn momentum(&self) -> &[Literal] {
+        &self.mom_t
+    }
+
+    /// Restore party state from a checkpoint.
+    pub fn restore(&mut self, top: Vec<Literal>, mom_t: Vec<Literal>) -> Result<()> {
+        if top.len() != self.top.len() || mom_t.len() != self.mom_t.len() {
+            bail!("checkpoint arity mismatch");
+        }
+        self.top = top;
+        self.mom_t = mom_t;
+        Ok(())
+    }
+}
+
+enum DecodedActivations {
+    Sparse { values: Literal, indices: Literal },
+    Quant { codes: Literal, o_min: Literal, o_max: Literal },
+    Dense { o: Literal },
+}

@@ -1,0 +1,175 @@
+//! In-process trainer: drives both parties over a simulated link, runs the
+//! epoch/eval loops, and fills the run ledger. This is the workhorse every
+//! experiment driver calls.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::data::{self, Dataset, EpochIter, Split};
+use crate::metrics::{EpochRecord, RunLedger};
+use crate::runtime::Engine;
+use crate::transport::sim::{LinkModel, SimNet};
+use crate::transport::{SimLink, Transport};
+use crate::util::Timer;
+
+use super::{FeatureOwner, LabelOwner};
+
+pub struct Trainer {
+    pub cfg: ExperimentConfig,
+    pub fo: FeatureOwner<SimLink>,
+    pub lo: LabelOwner<SimLink>,
+    pub dataset: Box<dyn Dataset>,
+    pub net: SimNet,
+    step: u64,
+    pub verbose: bool,
+}
+
+impl Trainer {
+    pub fn new(engine: Rc<Engine>, cfg: ExperimentConfig) -> Result<Self> {
+        let meta = engine.manifest.model(&cfg.model)?.clone();
+        let net = SimNet::new(LinkModel {
+            bandwidth_bytes_per_sec: cfg.bandwidth_mbps * 1e6 / 8.0,
+            latency_secs: cfg.latency_ms / 1e3,
+        });
+        let (link_fo, link_lo) = net.pair();
+        let init_seed = (cfg.seed as i32) ^ 0x5EED;
+        let fo = FeatureOwner::new(
+            engine.clone(),
+            &cfg.model,
+            cfg.method,
+            link_fo,
+            cfg.seed,
+            init_seed,
+        )?;
+        let lo = LabelOwner::new(engine.clone(), &cfg.model, cfg.method, link_lo, init_seed)?;
+        let dataset = data::for_model(&cfg.model, meta.n_classes, cfg.seed, cfg.n_train, cfg.n_test);
+        Ok(Trainer { cfg, fo, lo, dataset, net, step: 0, verbose: false })
+    }
+
+    /// One full training epoch; returns (mean loss, train metric rate).
+    pub fn train_epoch(&mut self, epoch: u32) -> Result<(f64, f64)> {
+        let lr = self.cfg.lr_at_epoch(epoch);
+        let batch_size = self.fo.meta.batch;
+        let iter = EpochIter::new(
+            self.dataset.len(Split::Train),
+            batch_size,
+            self.cfg.seed,
+            epoch,
+        );
+        let mut loss_sum = 0.0;
+        let mut metric_sum = 0.0;
+        let mut batches = 0u64;
+        for indices in iter {
+            let batch = self.dataset.batch(Split::Train, &indices, self.cfg.augment);
+            self.fo.train_forward(self.step, &batch.x)?;
+            let m = self.lo.train_step(self.step, &batch.y, lr)?;
+            self.fo.train_backward(self.step, lr)?;
+            loss_sum += m.loss;
+            metric_sum += m.metric_count;
+            batches += 1;
+            self.step += 1;
+        }
+        let n = (batches * batch_size as u64) as f64;
+        Ok((loss_sum / batches.max(1) as f64, metric_sum / n.max(1.0)))
+    }
+
+    /// Full test-set evaluation; returns (mean loss, metric rate).
+    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+        self.evaluate_split(Split::Test)
+    }
+
+    pub fn evaluate_split(&mut self, split: Split) -> Result<(f64, f64)> {
+        let batch_size = self.fo.meta.batch;
+        let iter = EpochIter::sequential(self.dataset.len(split), batch_size);
+        let mut loss_sum = 0.0;
+        let mut count = 0.0;
+        let mut n = 0usize;
+        for indices in iter {
+            let batch = self.dataset.batch(split, &indices, false);
+            self.fo.eval_forward(self.step, &batch.x)?;
+            self.lo.eval_step(self.step, &batch.y)?;
+            let (l, c) = self.fo.recv_eval_result()?;
+            loss_sum += l as f64;
+            count += c as f64;
+            n += indices.len();
+            self.step += 1;
+        }
+        Ok((loss_sum / n.max(1) as f64, count / n.max(1) as f64))
+    }
+
+    fn comm_bytes(&self) -> u64 {
+        self.fo.transport.stats().total_bytes()
+    }
+
+    /// Run the configured number of epochs, evaluating on cadence.
+    pub fn run(&mut self) -> Result<RunLedger> {
+        let mut ledger = RunLedger {
+            config_text: self.cfg.to_file_format(),
+            ..Default::default()
+        };
+        for epoch in 0..self.cfg.epochs {
+            let timer = Timer::new();
+            let (train_loss, train_metric) = self.train_epoch(epoch)?;
+            let (test_loss, test_metric) =
+                if (epoch + 1) % self.cfg.eval_every == 0 || epoch + 1 == self.cfg.epochs {
+                    self.evaluate()?
+                } else {
+                    (0.0, 0.0)
+                };
+            let rec = EpochRecord {
+                epoch,
+                train_loss,
+                train_metric,
+                test_loss,
+                test_metric,
+                comm_bytes: self.comm_bytes(),
+                sim_link_secs: self.net.sim_secs(),
+                wall_secs: timer.elapsed_secs(),
+            };
+            if self.verbose {
+                eprintln!(
+                    "[{} {}] epoch {epoch}: train_loss={train_loss:.4} train={train_metric:.4} \
+                     test={test_metric:.4} comm={:.1}MiB ({:.1}s)",
+                    self.cfg.model,
+                    self.cfg.method,
+                    rec.comm_bytes as f64 / (1024.0 * 1024.0),
+                    rec.wall_secs,
+                );
+            }
+            ledger.push(rec);
+        }
+        ledger.fwd_compressed_pct = self.fo.mean_fwd_pct();
+        ledger.bwd_compressed_pct = self.lo.mean_bwd_pct();
+        Ok(ledger)
+    }
+}
+
+impl Trainer {
+    /// Persist both parties' state (params + momentum) to `dir`.
+    pub fn save_checkpoint(&self, dir: impl AsRef<std::path::Path>) -> Result<()> {
+        crate::runtime::checkpoint::Checkpoint {
+            bottom: self.fo.bottom_params(),
+            mom_b: self.fo.momentum(),
+            top: self.lo.top_params(),
+            mom_t: self.lo.momentum(),
+        }
+        .save(dir, &self.cfg.to_file_format())
+    }
+
+    /// Restore both parties' state from `dir`.
+    pub fn load_checkpoint(&mut self, dir: impl AsRef<std::path::Path>) -> Result<()> {
+        let ck = crate::runtime::checkpoint::load_checkpoint(dir)?;
+        self.fo.restore(ck.bottom, ck.mom_b)?;
+        self.lo.restore(ck.top, ck.mom_t)?;
+        Ok(())
+    }
+}
+
+/// Convenience: build an engine-backed trainer and run it.
+pub fn train(engine: Rc<Engine>, cfg: ExperimentConfig, verbose: bool) -> Result<RunLedger> {
+    let mut t = Trainer::new(engine, cfg)?;
+    t.verbose = verbose;
+    t.run()
+}

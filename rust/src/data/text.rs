@@ -1,0 +1,137 @@
+//! SynthText: class-conditional token sequences (DBPedia / TextCNN analog).
+//!
+//! Each class owns a keyword set and a few class-specific bigrams; a
+//! sample interleaves common filler tokens with keywords and bigrams.
+//! Keywords make the task solvable by pooled unigram features, bigrams
+//! reward the width-2+ convolutions — mirroring what TextCNN exploits in
+//! real topic classification.
+
+use crate::util::Rng;
+
+use super::{Dataset, Split};
+
+const KEYWORDS: usize = 12;
+const BIGRAMS: usize = 4;
+const COMMON_POOL: usize = 500;
+
+pub struct SynthText {
+    n_classes: usize,
+    vocab: usize,
+    seq_len: usize,
+    n_train: usize,
+    n_test: usize,
+    /// n_classes * KEYWORDS
+    keywords: Vec<u32>,
+    /// n_classes * BIGRAMS * 2
+    bigrams: Vec<u32>,
+    seed: u64,
+}
+
+impl SynthText {
+    pub fn new(
+        n_classes: usize,
+        vocab: usize,
+        seq_len: usize,
+        seed: u64,
+        n_train: usize,
+        n_test: usize,
+    ) -> Self {
+        let mut rng = Rng::new(seed ^ 0x7E87_0000);
+        // keywords drawn from the non-common part of the vocabulary
+        let kw_pool = vocab - COMMON_POOL;
+        let keywords = (0..n_classes * KEYWORDS)
+            .map(|_| (COMMON_POOL + rng.below(kw_pool)) as u32)
+            .collect();
+        let bigrams = (0..n_classes * BIGRAMS * 2)
+            .map(|_| (COMMON_POOL + rng.below(kw_pool)) as u32)
+            .collect();
+        SynthText { n_classes, vocab, seq_len, n_train, n_test, keywords, bigrams, seed }
+    }
+}
+
+impl Dataset for SynthText {
+    fn name(&self) -> &str {
+        "synth-text"
+    }
+
+    fn len(&self, split: Split) -> usize {
+        match split {
+            Split::Train => self.n_train,
+            Split::Test => self.n_test,
+        }
+    }
+
+    fn feature_shape(&self) -> (Vec<usize>, bool) {
+        (vec![self.seq_len], true)
+    }
+
+    fn sample(&self, split: Split, index: usize, _augment: bool) -> (Vec<f32>, Vec<i32>, i32) {
+        let tag = match split {
+            Split::Train => 0x11u64,
+            Split::Test => 0x22u64,
+        };
+        let mut rng = Rng::new(self.seed ^ (tag << 56) ^ (index as u64).wrapping_mul(0xBEEF));
+        let label = rng.below(self.n_classes);
+        let kws = &self.keywords[label * KEYWORDS..(label + 1) * KEYWORDS];
+        let bgs = &self.bigrams[label * BIGRAMS * 2..(label + 1) * BIGRAMS * 2];
+        let mut seq = Vec::with_capacity(self.seq_len);
+        while seq.len() < self.seq_len {
+            let r = rng.next_f32();
+            if r < 0.25 {
+                seq.push(kws[rng.below(KEYWORDS)] as i32);
+            } else if r < 0.35 && seq.len() + 2 <= self.seq_len {
+                let b = rng.below(BIGRAMS);
+                seq.push(bgs[b * 2] as i32);
+                seq.push(bgs[b * 2 + 1] as i32);
+            } else {
+                seq.push(rng.below(COMMON_POOL) as i32);
+            }
+        }
+        (vec![], seq, label as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let d = SynthText::new(219, 5000, 32, 42, 128, 64);
+        assert_eq!(d.sample(Split::Test, 4, false), d.sample(Split::Test, 4, false));
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let d = SynthText::new(219, 5000, 32, 42, 512, 64);
+        for i in 0..100 {
+            let (_, seq, y) = d.sample(Split::Train, i, false);
+            assert_eq!(seq.len(), 32);
+            assert!(seq.iter().all(|&t| (0..5000).contains(&t)));
+            assert!((0..219).contains(&y));
+        }
+    }
+
+    #[test]
+    fn keywords_identify_class() {
+        // bag-of-keywords oracle: count matches against each class's set
+        let d = SynthText::new(50, 5000, 32, 7, 1024, 64);
+        let mut correct = 0;
+        let n = 300;
+        for i in 0..n {
+            let (_, seq, y) = d.sample(Split::Train, i, false);
+            let mut best = (0usize, 0usize);
+            for c in 0..50 {
+                let kws = &d.keywords[c * KEYWORDS..(c + 1) * KEYWORDS];
+                let hits = seq.iter().filter(|&&t| kws.contains(&(t as u32))).count();
+                if hits > best.0 {
+                    best = (hits, c);
+                }
+            }
+            if best.1 as i32 == y {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / n as f64 > 0.9, "oracle acc {correct}/{n}");
+    }
+}

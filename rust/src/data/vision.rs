@@ -1,0 +1,178 @@
+//! SynthVision: n-class synthetic images (CIFAR-100 / Tiny-ImageNet
+//! analogs). Each class owns a low-frequency "texture" prototype (sum of
+//! random 2-D sinusoids per channel) so that convolutional features — not
+//! raw pixels — separate the classes; samples add noise and undergo the
+//! paper's augmentations (random crop with reflection padding + horizontal
+//! flip).
+
+use crate::util::Rng;
+
+use super::{Dataset, Split};
+
+const WAVES: usize = 4;
+const PAD: usize = 3;
+
+struct ClassPattern {
+    /// per channel, WAVES x (fx, fy, phase, amp)
+    waves: Vec<[f32; 4]>,
+}
+
+pub struct SynthVision {
+    n_classes: usize,
+    size: usize,
+    n_train: usize,
+    n_test: usize,
+    patterns: Vec<ClassPattern>,
+    seed: u64,
+    noise: f32,
+}
+
+impl SynthVision {
+    pub fn new(n_classes: usize, size: usize, seed: u64, n_train: usize, n_test: usize) -> Self {
+        let mut rng = Rng::new(seed ^ 0x5EE1_D000);
+        let patterns = (0..n_classes)
+            .map(|_| ClassPattern {
+                waves: (0..3 * WAVES)
+                    .map(|_| {
+                        [
+                            0.15 + 0.85 * rng.next_f32(), // fx (cycles / 8 px)
+                            0.15 + 0.85 * rng.next_f32(), // fy
+                            rng.next_f32() * std::f32::consts::TAU,
+                            0.4 + 0.6 * rng.next_f32(),
+                        ]
+                    })
+                    .collect(),
+            })
+            .collect();
+        SynthVision { n_classes, size, n_train, n_test, patterns, seed, noise: 0.35 }
+    }
+
+    fn prototype_pixel(&self, label: usize, c: usize, x: f32, yy: f32) -> f32 {
+        let p = &self.patterns[label];
+        let mut v = 0.0;
+        for w in &p.waves[c * WAVES..(c + 1) * WAVES] {
+            v += w[3] * (w[0] * x * 0.8 + w[1] * yy * 0.8 + w[2]).sin();
+        }
+        v / (WAVES as f32).sqrt()
+    }
+}
+
+impl Dataset for SynthVision {
+    fn name(&self) -> &str {
+        "synth-vision"
+    }
+
+    fn len(&self, split: Split) -> usize {
+        match split {
+            Split::Train => self.n_train,
+            Split::Test => self.n_test,
+        }
+    }
+
+    fn feature_shape(&self) -> (Vec<usize>, bool) {
+        (vec![self.size, self.size, 3], false)
+    }
+
+    fn sample(&self, split: Split, index: usize, augment: bool) -> (Vec<f32>, Vec<i32>, i32) {
+        let tag = match split {
+            Split::Train => 0x11u64,
+            Split::Test => 0x22u64,
+        };
+        let mut rng = Rng::new(self.seed ^ (tag << 56) ^ (index as u64).wrapping_mul(0x9E37));
+        let label = rng.below(self.n_classes);
+        let s = self.size;
+        // augmentation: shift in [-PAD, PAD], optional horizontal flip
+        let (dx, dy, flip) = if augment {
+            (
+                rng.below(2 * PAD + 1) as i32 - PAD as i32,
+                rng.below(2 * PAD + 1) as i32 - PAD as i32,
+                rng.next_f32() < 0.5,
+            )
+        } else {
+            (0, 0, false)
+        };
+        let mut img = vec![0.0f32; s * s * 3];
+        for y in 0..s {
+            for x in 0..s {
+                // reflection at borders after shift
+                let sx0 = x as i32 + dx;
+                let sy0 = y as i32 + dy;
+                let sx = sx0.rem_euclid(2 * s as i32 - 2);
+                let sy = sy0.rem_euclid(2 * s as i32 - 2);
+                let sx = if sx >= s as i32 { 2 * (s as i32 - 1) - sx } else { sx } as f32;
+                let sy = if sy >= s as i32 { 2 * (s as i32 - 1) - sy } else { sy } as f32;
+                let sx = if flip { (s - 1) as f32 - sx } else { sx };
+                for c in 0..3 {
+                    let v = self.prototype_pixel(label, c, sx, sy) + self.noise * rng.normal();
+                    img[(y * s + x) * 3 + c] = v;
+                }
+            }
+        }
+        (img, vec![], label as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_without_augment() {
+        let d = SynthVision::new(100, 32, 42, 128, 64);
+        assert_eq!(d.sample(Split::Test, 3, false), d.sample(Split::Test, 3, false));
+    }
+
+    #[test]
+    fn augmentation_changes_pixels_not_label() {
+        let d = SynthVision::new(100, 32, 42, 128, 64);
+        let (x1, _, y1) = d.sample(Split::Train, 3, false);
+        let (x2, _, y2) = d.sample(Split::Train, 3, true);
+        assert_eq!(y1, y2);
+        assert_ne!(x1, x2);
+    }
+
+    #[test]
+    fn batch_shape_nhwc() {
+        let d = SynthVision::new(100, 32, 42, 128, 64);
+        let b = d.batch(Split::Train, &[0, 1], true);
+        assert_eq!(b.x.shape(), &[2, 32, 32, 3]);
+    }
+
+    #[test]
+    fn class_prototypes_distinguishable() {
+        // mean pixel correlation between two samples of the same class must
+        // beat two samples of different classes
+        let d = SynthVision::new(10, 32, 7, 512, 64);
+        let mut same = 0.0;
+        let mut diff = 0.0;
+        let mut n_same = 0;
+        let mut n_diff = 0;
+        let samples: Vec<_> = (0..40).map(|i| d.sample(Split::Train, i, false)).collect();
+        for i in 0..40 {
+            for j in (i + 1)..40 {
+                let dot: f32 = samples[i]
+                    .0
+                    .iter()
+                    .zip(&samples[j].0)
+                    .map(|(a, b)| a * b)
+                    .sum();
+                if samples[i].2 == samples[j].2 {
+                    same += dot;
+                    n_same += 1;
+                } else {
+                    diff += dot;
+                    n_diff += 1;
+                }
+            }
+        }
+        assert!(n_same > 0 && n_diff > 0);
+        assert!(same / n_same as f32 > diff / n_diff as f32 + 10.0);
+    }
+
+    #[test]
+    fn values_bounded() {
+        let d = SynthVision::new(100, 32, 42, 128, 64);
+        let (x, _, _) = d.sample(Split::Train, 0, true);
+        assert!(x.iter().all(|v| v.abs() < 10.0));
+    }
+}

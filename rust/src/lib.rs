@@ -1,0 +1,19 @@
+//! splitfed — split-learning runtime with randomized top-k sparsification.
+//!
+//! Reproduction of "Reducing Communication for Split Learning by Randomized
+//! Top-k Sparsification" (Zheng et al., IJCAI 2023) as a three-layer
+//! Rust + JAX + Pallas stack. See DESIGN.md for the architecture and the
+//! experiment index; python never runs on the request path.
+
+pub mod bench_util;
+pub mod cli;
+pub mod compress;
+pub mod coordinator;
+pub mod config;
+pub mod data;
+pub mod json;
+pub mod metrics;
+pub mod runtime;
+pub mod transport;
+pub mod util;
+pub mod wire;

@@ -1,0 +1,192 @@
+//! splitfed CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! splitfed train   --model convnet --method randtopk:k=3,alpha=0.1 --epochs 30
+//! splitfed describe                                         (models + dataset table)
+//! splitfed check   [--filter mlp]                           (compile every artifact)
+//! splitfed serve   --role label-owner --addr 127.0.0.1:7070 (two-process TCP party)
+//! ```
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use splitfed::cli::Args;
+use splitfed::config::ExperimentConfig;
+use splitfed::coordinator::{FeatureOwner, LabelOwner, Trainer};
+use splitfed::data::{for_model, EpochIter, Split};
+use splitfed::runtime::{default_artifacts_dir, Engine};
+use splitfed::transport::TcpTransport;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") | Some("eval") => cmd_train(&args),
+        Some("describe") => cmd_describe(),
+        Some("check") => cmd_check(&args),
+        Some("serve") => cmd_serve(&args),
+        _ => {
+            eprintln!(
+                "usage: splitfed <train|describe|check|serve> [--options]\n\
+                 see `splitfed describe` and README.md"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn build_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg.load_file(path)?;
+    }
+    for key in [
+        "model", "method", "epochs", "lr", "lr_decay", "seed", "n_train", "n_test",
+        "augment", "eval_every", "bandwidth_mbps", "latency_ms", "out_dir",
+    ] {
+        if let Some(v) = args.get(key) {
+            cfg.set(key, v)?;
+        }
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let engine = Rc::new(Engine::load(default_artifacts_dir())?);
+    let out_dir = cfg.out_dir.clone();
+    let mut trainer = Trainer::new(engine, cfg.clone())?;
+    trainer.verbose = !args.has_flag("quiet");
+    let ledger = trainer.run()?;
+    println!(
+        "final: test_metric={:.4} best={:.4} comm={:.2} MiB fwd={:.2}% bwd={:.2}%",
+        ledger.final_metric(),
+        ledger.best_metric(),
+        ledger.total_comm_bytes() as f64 / (1024.0 * 1024.0),
+        ledger.fwd_compressed_pct,
+        ledger.bwd_compressed_pct,
+    );
+    if let Some(dir) = out_dir {
+        let name = format!("{}_{}", cfg.model, cfg.method).replace([':', ',', '='], "_");
+        let path = ledger.save(dir, &name)?;
+        println!("ledger: {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_describe() -> Result<()> {
+    let engine = Engine::load(default_artifacts_dir())?;
+    println!(
+        "{:<10} {:>8} {:>8} {:>6} {:>7}  input",
+        "model", "classes", "cut_dim", "batch", "metric"
+    );
+    for (name, m) in &engine.manifest.models {
+        println!(
+            "{:<10} {:>8} {:>8} {:>6} {:>7}  {:?} {:?}",
+            name, m.n_classes, m.cut_dim, m.batch, m.metric, m.input_dtype, m.input_shape
+        );
+    }
+    println!("\nk levels (paper Table 3 compressed-size levels):");
+    for (name, m) in &engine.manifest.models {
+        println!("  {name}: k = {:?}, quant bits = {:?}", m.k_levels, m.quant_bits);
+    }
+    println!("\nartifacts: {}", engine.manifest.artifacts.len());
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> Result<()> {
+    let engine = Engine::load(default_artifacts_dir())?;
+    let filter = args.get("filter").unwrap_or("");
+    let keys: Vec<String> = engine
+        .manifest
+        .artifacts
+        .keys()
+        .filter(|k| k.contains(filter))
+        .cloned()
+        .collect();
+    let mut failed = 0;
+    for k in &keys {
+        let t = std::time::Instant::now();
+        match engine.executable(k) {
+            Ok(_) => println!("OK   {k} ({:.2}s)", t.elapsed().as_secs_f64()),
+            Err(e) => {
+                failed += 1;
+                println!("FAIL {k}: {}", e.to_string().lines().next().unwrap_or(""));
+            }
+        }
+    }
+    println!("{}/{} compiled", keys.len() - failed, keys.len());
+    if failed > 0 {
+        bail!("{failed} artifacts failed to compile");
+    }
+    Ok(())
+}
+
+/// Run one party of a two-process TCP training session. Both processes
+/// must use the same --model/--method/--seed so the instance streams align.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let role = args.required("role")?;
+    let addr = args.get_or("addr", "127.0.0.1:7070").to_string();
+    let steps: u64 = args.get_parse("steps")?.unwrap_or(64);
+    let engine = Rc::new(Engine::load(default_artifacts_dir())?);
+    let meta = engine.manifest.model(&cfg.model)?.clone();
+    let ds = for_model(&cfg.model, meta.n_classes, cfg.seed, cfg.n_train, cfg.n_test);
+    let init_seed = (cfg.seed as i32) ^ 0x5EED;
+    let lr = cfg.lr;
+
+    match role {
+        "label-owner" => {
+            println!("label owner listening on {addr}");
+            let transport = TcpTransport::listen(addr.as_str())?;
+            let mut lo = LabelOwner::new(engine, &cfg.model, cfg.method, transport, init_seed)?;
+            let mut step = 0u64;
+            let mut epoch = 0u32;
+            'outer: loop {
+                for indices in EpochIter::new(ds.len(Split::Train), meta.batch, cfg.seed, epoch) {
+                    if step >= steps {
+                        break 'outer;
+                    }
+                    let batch = ds.batch(Split::Train, &indices, cfg.augment);
+                    let m = lo.train_step(step, &batch.y, lr)?;
+                    if step % 10 == 0 {
+                        println!("step {step}: loss={:.4}", m.loss);
+                    }
+                    step += 1;
+                }
+                epoch += 1;
+            }
+            println!("label owner done after {step} steps");
+        }
+        "feature-owner" => {
+            println!("feature owner connecting to {addr}");
+            let transport = TcpTransport::connect(addr.as_str())?;
+            let mut fo =
+                FeatureOwner::new(engine, &cfg.model, cfg.method, transport, cfg.seed, init_seed)?;
+            let mut step = 0u64;
+            let mut epoch = 0u32;
+            'outer2: loop {
+                for indices in EpochIter::new(ds.len(Split::Train), meta.batch, cfg.seed, epoch) {
+                    if step >= steps {
+                        break 'outer2;
+                    }
+                    let batch = ds.batch(Split::Train, &indices, cfg.augment);
+                    fo.train_forward(step, &batch.x)?;
+                    fo.train_backward(step, lr)?;
+                    step += 1;
+                }
+                epoch += 1;
+            }
+            use splitfed::transport::Transport;
+            let s = fo.transport.stats();
+            println!(
+                "feature owner done: sent {:.2} MiB, recv {:.2} MiB (fwd {:.2}%)",
+                s.bytes_sent as f64 / 1048576.0,
+                s.bytes_recv as f64 / 1048576.0,
+                fo.mean_fwd_pct()
+            );
+        }
+        other => bail!("unknown role '{other}' (label-owner | feature-owner)"),
+    }
+    Ok(())
+}

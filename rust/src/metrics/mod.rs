@@ -1,0 +1,246 @@
+//! Run ledger: per-epoch training/eval records + exact communication
+//! accounting, serialized as CSV and JSON into a run directory. Every
+//! figure driver consumes these records.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::json::Json;
+
+/// One epoch's record.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EpochRecord {
+    pub epoch: u32,
+    pub train_loss: f64,
+    pub train_metric: f64,
+    pub test_loss: f64,
+    /// accuracy or hr@20 in [0, 1]; NaN-free (0 when not evaluated)
+    pub test_metric: f64,
+    /// cumulative framed bytes since the start of the run (both ways)
+    pub comm_bytes: u64,
+    /// cumulative simulated link seconds
+    pub sim_link_secs: f64,
+    /// wall-clock seconds spent in this epoch
+    pub wall_secs: f64,
+}
+
+/// Full run ledger.
+#[derive(Clone, Debug, Default)]
+pub struct RunLedger {
+    pub config_text: String,
+    pub epochs: Vec<EpochRecord>,
+    pub extra: BTreeMap<String, f64>,
+    /// measured compressed sizes in % (forward, backward) of dense
+    pub fwd_compressed_pct: f64,
+    pub bwd_compressed_pct: f64,
+}
+
+impl RunLedger {
+    pub fn push(&mut self, rec: EpochRecord) {
+        self.epochs.push(rec);
+    }
+
+    pub fn final_metric(&self) -> f64 {
+        self.epochs.last().map(|e| e.test_metric).unwrap_or(0.0)
+    }
+
+    pub fn best_metric(&self) -> f64 {
+        self.epochs.iter().map(|e| e.test_metric).fold(0.0, f64::max)
+    }
+
+    pub fn total_comm_bytes(&self) -> u64 {
+        self.epochs.last().map(|e| e.comm_bytes).unwrap_or(0)
+    }
+
+    /// First epoch whose test metric reaches `target`, with its cumulative
+    /// communication — the paper Fig. 3 "communication to reach accuracy".
+    pub fn comm_to_reach(&self, target: f64) -> Option<(u32, u64)> {
+        self.epochs
+            .iter()
+            .find(|e| e.test_metric >= target)
+            .map(|e| (e.epoch, e.comm_bytes))
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "epoch,train_loss,train_metric,test_loss,test_metric,comm_bytes,sim_link_secs,wall_secs\n",
+        );
+        for e in &self.epochs {
+            out.push_str(&format!(
+                "{},{:.6},{:.6},{:.6},{:.6},{},{:.6},{:.3}\n",
+                e.epoch,
+                e.train_loss,
+                e.train_metric,
+                e.test_loss,
+                e.test_metric,
+                e.comm_bytes,
+                e.sim_link_secs,
+                e.wall_secs
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("config".into(), Json::Str(self.config_text.clone()));
+        root.insert("fwd_compressed_pct".into(), Json::Num(self.fwd_compressed_pct));
+        root.insert("bwd_compressed_pct".into(), Json::Num(self.bwd_compressed_pct));
+        let mut extra = BTreeMap::new();
+        for (k, v) in &self.extra {
+            extra.insert(k.clone(), Json::Num(*v));
+        }
+        root.insert("extra".into(), Json::Obj(extra));
+        root.insert(
+            "epochs".into(),
+            Json::Arr(
+                self.epochs
+                    .iter()
+                    .map(|e| {
+                        let mut m = BTreeMap::new();
+                        m.insert("epoch".into(), Json::Num(e.epoch as f64));
+                        m.insert("train_loss".into(), Json::Num(e.train_loss));
+                        m.insert("train_metric".into(), Json::Num(e.train_metric));
+                        m.insert("test_loss".into(), Json::Num(e.test_loss));
+                        m.insert("test_metric".into(), Json::Num(e.test_metric));
+                        m.insert("comm_bytes".into(), Json::Num(e.comm_bytes as f64));
+                        m.insert("sim_link_secs".into(), Json::Num(e.sim_link_secs));
+                        m.insert("wall_secs".into(), Json::Num(e.wall_secs));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(root)
+    }
+
+    pub fn save(&self, dir: impl AsRef<Path>, name: &str) -> Result<PathBuf> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
+        let csv_path = dir.join(format!("{name}.csv"));
+        std::fs::write(&csv_path, self.to_csv())?;
+        let json_path = dir.join(format!("{name}.json"));
+        std::fs::write(&json_path, self.to_json().to_string_pretty())?;
+        Ok(json_path)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let src = std::fs::read_to_string(&path)?;
+        let j = Json::parse(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut ledger = RunLedger {
+            config_text: j.get("config").and_then(Json::as_str).unwrap_or("").into(),
+            fwd_compressed_pct: j.get("fwd_compressed_pct").and_then(Json::as_f64).unwrap_or(0.0),
+            bwd_compressed_pct: j.get("bwd_compressed_pct").and_then(Json::as_f64).unwrap_or(0.0),
+            ..Default::default()
+        };
+        if let Some(extra) = j.get("extra").and_then(Json::as_obj) {
+            for (k, v) in extra {
+                if let Some(n) = v.as_f64() {
+                    ledger.extra.insert(k.clone(), n);
+                }
+            }
+        }
+        for e in j.get("epochs").and_then(Json::as_arr).unwrap_or(&[]) {
+            let g = |k: &str| e.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            ledger.epochs.push(EpochRecord {
+                epoch: g("epoch") as u32,
+                train_loss: g("train_loss"),
+                train_metric: g("train_metric"),
+                test_loss: g("test_loss"),
+                test_metric: g("test_metric"),
+                comm_bytes: g("comm_bytes") as u64,
+                sim_link_secs: g("sim_link_secs"),
+                wall_secs: g("wall_secs"),
+            });
+        }
+        Ok(ledger)
+    }
+}
+
+/// Mean/std across repeated runs (the paper reports "acc (std)").
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let m = xs.iter().sum::<f64>() / xs.len() as f64;
+    if xs.len() < 2 {
+        return (m, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    (m, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_ledger() -> RunLedger {
+        let mut l = RunLedger {
+            config_text: "model = mlp".into(),
+            fwd_compressed_pct: 5.71,
+            bwd_compressed_pct: 4.69,
+            ..Default::default()
+        };
+        for i in 0..5 {
+            l.push(EpochRecord {
+                epoch: i,
+                train_loss: 2.0 / (i + 1) as f64,
+                train_metric: 0.1 * i as f64,
+                test_loss: 2.2 / (i + 1) as f64,
+                test_metric: 0.12 * i as f64,
+                comm_bytes: 1000 * (i as u64 + 1),
+                sim_link_secs: 0.1 * (i as f64 + 1.0),
+                wall_secs: 1.0,
+            });
+        }
+        l.extra.insert("note".into(), 1.0);
+        l
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let l = sample_ledger();
+        let dir = std::env::temp_dir().join("splitfed_metrics_test");
+        let path = l.save(&dir, "run").unwrap();
+        let back = RunLedger::load(&path).unwrap();
+        assert_eq!(back.epochs, l.epochs);
+        assert_eq!(back.config_text, l.config_text);
+        assert_eq!(back.extra.get("note"), Some(&1.0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = sample_ledger().to_csv();
+        assert_eq!(csv.lines().count(), 6);
+        assert!(csv.starts_with("epoch,"));
+    }
+
+    #[test]
+    fn comm_to_reach() {
+        let l = sample_ledger();
+        let (epoch, bytes) = l.comm_to_reach(0.3).unwrap();
+        assert_eq!(epoch, 3);
+        assert_eq!(bytes, 4000);
+        assert!(l.comm_to_reach(0.9).is_none());
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+        assert_eq!(mean_std(&[5.0]).1, 0.0);
+    }
+
+    #[test]
+    fn best_and_final() {
+        let mut l = sample_ledger();
+        assert!((l.final_metric() - 0.48).abs() < 1e-9);
+        l.epochs.last_mut().unwrap().test_metric = 0.1;
+        assert!((l.best_metric() - 0.36).abs() < 1e-9);
+    }
+}

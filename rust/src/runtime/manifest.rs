@@ -1,0 +1,268 @@
+//! Typed view of `artifacts/manifest.json`, emitted by `python -m
+//! compile.aot`. The manifest describes every HLO artifact's input/output
+//! signature plus per-model metadata (shapes, k levels, metric) — the rust
+//! side never hard-codes model geometry.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSig {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TensorSig {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            dtype: DType::parse(
+                j.get("dtype")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("missing dtype"))?,
+            )?,
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing shape"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub model: String,
+    pub variant: String,
+    pub fn_name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+impl ArtifactSig {
+    /// Stable lookup key, e.g. "mlp/sparse_k6/bottom_fwd" or "mlp/init".
+    pub fn key(&self) -> String {
+        if self.variant.is_empty() {
+            format!("{}/{}", self.model, self.fn_name)
+        } else {
+            format!("{}/{}/{}", self.model, self.variant, self.fn_name)
+        }
+    }
+
+    /// Position of a named (non-parameter) input.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("artifact {} has no input '{name}'", self.key()))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub n_classes: usize,
+    pub cut_dim: usize,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: DType,
+    pub metric: String,
+    pub bottom_shapes: Vec<Vec<usize>>,
+    pub top_shapes: Vec<Vec<usize>>,
+    pub k_levels: Vec<usize>,
+    pub quant_bits: Vec<usize>,
+    pub decoder_shapes: Option<Vec<Vec<usize>>>,
+    pub decoder_ks: Vec<usize>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+fn shapes_list(j: &Json) -> Result<Vec<Vec<usize>>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected shape list"))?
+        .iter()
+        .map(|s| {
+            s.as_arr()
+                .ok_or_else(|| anyhow!("bad shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect()
+        })
+        .collect()
+}
+
+fn usize_list(j: Option<&Json>) -> Vec<usize> {
+    j.and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let src = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let root = Json::parse(&src).map_err(|e| anyhow!("{e}"))?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            let meta = ModelMeta {
+                name: name.clone(),
+                n_classes: m.get("n_classes").and_then(Json::as_usize).unwrap_or(0),
+                cut_dim: m.get("cut_dim").and_then(Json::as_usize).unwrap_or(0),
+                batch: m.get("batch").and_then(Json::as_usize).unwrap_or(0),
+                input_shape: usize_list(m.get("input_shape")),
+                input_dtype: DType::parse(
+                    m.get("input_dtype").and_then(Json::as_str).unwrap_or("f32"),
+                )?,
+                metric: m
+                    .get("metric")
+                    .and_then(Json::as_str)
+                    .unwrap_or("top1")
+                    .to_string(),
+                bottom_shapes: shapes_list(
+                    m.get("bottom_shapes").ok_or_else(|| anyhow!("no bottom_shapes"))?,
+                )?,
+                top_shapes: shapes_list(
+                    m.get("top_shapes").ok_or_else(|| anyhow!("no top_shapes"))?,
+                )?,
+                k_levels: usize_list(m.get("k_levels")),
+                quant_bits: usize_list(m.get("quant_bits")),
+                decoder_shapes: m
+                    .get("decoder_shapes")
+                    .map(shapes_list)
+                    .transpose()?,
+                decoder_ks: usize_list(m.get("decoder_ks")),
+            };
+            models.insert(name.clone(), meta);
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let sig = ArtifactSig {
+                model: a.get("model").and_then(Json::as_str).unwrap_or("").into(),
+                variant: a.get("variant").and_then(Json::as_str).unwrap_or("").into(),
+                fn_name: a.get("fn").and_then(Json::as_str).unwrap_or("").into(),
+                path: dir.join(a.get("path").and_then(Json::as_str).unwrap_or("")),
+                inputs: a
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect::<Result<_>>()?,
+            };
+            artifacts.insert(sig.key(), sig);
+        }
+
+        Ok(Manifest { dir, models, artifacts })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model '{name}'"))
+    }
+
+    pub fn artifact(&self, key: &str) -> Result<&ArtifactSig> {
+        self.artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("unknown artifact '{key}' (re-run `make artifacts`?)"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.models.contains_key("mlp"));
+        let meta = m.model("mlp").unwrap();
+        assert_eq!(meta.cut_dim, 128);
+        assert_eq!(meta.batch, 32);
+        let a = m.artifact("mlp/sparse_k6/bottom_fwd").unwrap();
+        assert_eq!(a.outputs.len(), 2);
+        assert_eq!(a.outputs[0].shape, vec![32, 6]);
+        assert_eq!(a.outputs[1].dtype, DType::I32);
+        assert!(a.path.exists());
+        // named input lookup
+        assert!(a.input_index("x").is_ok());
+        assert!(a.input_index("alpha").unwrap() > a.input_index("x").unwrap());
+        assert!(a.input_index("nope").is_err());
+    }
+
+    #[test]
+    fn artifact_keys_unique_and_well_formed() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        for (k, a) in &m.artifacts {
+            assert_eq!(*k, a.key());
+            assert!(!a.inputs.is_empty());
+            assert!(!a.outputs.is_empty());
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the request path.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format —
+//! jax ≥ 0.5 serialized protos are rejected by xla_extension 0.5.1.
+
+pub mod checkpoint;
+pub mod manifest;
+pub mod tensor;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+pub use manifest::{ArtifactSig, DType, Manifest, ModelMeta, TensorSig};
+pub use tensor::{dense_bytes, zero_literal, HostTensor};
+
+/// Cumulative execution statistics (perf accounting, EXPERIMENTS.md §Perf).
+#[derive(Default, Clone, Debug)]
+pub struct EngineStats {
+    pub executions: u64,
+    pub exec_secs: f64,
+    pub compilations: u64,
+    pub compile_secs: f64,
+    pub host_transfer_bytes: u64,
+}
+
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Compile (or fetch from cache) the artifact with the given key.
+    pub fn executable(&self, key: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(key) {
+            return Ok(exe.clone());
+        }
+        let sig = self.manifest.artifact(key)?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&sig.path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", sig.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {key}: {e:?}"))?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compilations += 1;
+            s.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(key.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on literal inputs; returns the flattened output
+    /// tuple. Input arity is validated against the manifest.
+    pub fn exec<L: std::borrow::Borrow<Literal>>(
+        &self,
+        key: &str,
+        args: &[L],
+    ) -> Result<Vec<Literal>> {
+        let sig = self.manifest.artifact(key)?;
+        if args.len() != sig.inputs.len() {
+            return Err(anyhow!(
+                "artifact {key}: got {} args, want {}",
+                args.len(),
+                sig.inputs.len()
+            ));
+        }
+        let exe = self.executable(key)?;
+        let t0 = std::time::Instant::now();
+        // NOTE: we deliberately avoid `PjRtLoadedExecutable::execute` (the
+        // literal path): its C++ shim releases the uploaded input buffers
+        // without freeing them, leaking every argument (~MBs per training
+        // step). Uploading through `buffer_from_host_literal` gives us
+        // rust-owned buffers with a correct Drop, and `execute_b` borrows
+        // them without taking ownership.
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|l| {
+                self.client
+                    .buffer_from_host_literal(None, l.borrow())
+                    .map_err(|e| anyhow!("upload arg for {key}: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&bufs)
+            .map_err(|e| anyhow!("execute {key}: {e:?}"))?;
+        let buf = &result[0][0];
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {key}: {e:?}"))?;
+        let outs = lit.to_tuple().map_err(|e| anyhow!("untuple {key}: {e:?}"))?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.exec_secs += t0.elapsed().as_secs_f64();
+            s.host_transfer_bytes += outs.iter().map(|l| l.size_bytes() as u64).sum::<u64>();
+        }
+        if outs.len() != sig.outputs.len() {
+            return Err(anyhow!(
+                "artifact {key}: produced {} outputs, manifest says {}",
+                outs.len(),
+                sig.outputs.len()
+            ));
+        }
+        Ok(outs)
+    }
+
+    /// Execute and convert every output to a host tensor.
+    pub fn exec_host<L: std::borrow::Borrow<Literal>>(
+        &self,
+        key: &str,
+        args: &[L],
+    ) -> Result<Vec<HostTensor>> {
+        self.exec(key, args)?
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect()
+    }
+
+    /// Initialize a model's parameters: runs `<model>/init`, returning
+    /// (bottom_params, top_params) split per the manifest.
+    pub fn init_params(&self, model: &str, seed: i32) -> Result<(Vec<Literal>, Vec<Literal>)> {
+        let meta = self.manifest.model(model)?.clone();
+        let outs = self.exec(
+            &format!("{model}/init"),
+            &[HostTensor::scalar_i32(seed).to_literal()?],
+        )?;
+        let nb = meta.bottom_shapes.len();
+        let nt = meta.top_shapes.len();
+        if outs.len() != nb + nt {
+            return Err(anyhow!(
+                "{model}/init returned {} params, want {}",
+                outs.len(),
+                nb + nt
+            ));
+        }
+        let mut outs = outs;
+        let top = outs.split_off(nb);
+        Ok((outs, top))
+    }
+
+    /// Zero momentum buffers matching a parameter shape list.
+    pub fn zero_momentum(&self, shapes: &[Vec<usize>]) -> Result<Vec<Literal>> {
+        shapes.iter().map(|s| zero_literal(DType::F32, s)).collect()
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Warm the executable cache for a set of keys (startup, not hot path).
+    pub fn precompile(&self, keys: &[String]) -> Result<()> {
+        for k in keys {
+            self.executable(k).with_context(|| format!("precompile {k}"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Locate the artifacts directory: $SPLITFED_ARTIFACTS or ./artifacts
+/// relative to the current dir / crate root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("SPLITFED_ARTIFACTS") {
+        return p.into();
+    }
+    let cwd = std::path::PathBuf::from("artifacts");
+    if cwd.join("manifest.json").exists() {
+        return cwd;
+    }
+    std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = default_artifacts_dir();
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Engine::load(dir).unwrap())
+    }
+
+    #[test]
+    fn init_params_shapes() {
+        let Some(eng) = engine() else { return };
+        let (bottom, top) = eng.init_params("mlp", 42).unwrap();
+        let meta = eng.manifest.model("mlp").unwrap();
+        assert_eq!(bottom.len(), meta.bottom_shapes.len());
+        assert_eq!(top.len(), meta.top_shapes.len());
+        let t0 = HostTensor::from_literal(&bottom[0]).unwrap();
+        assert_eq!(t0.shape(), meta.bottom_shapes[0].as_slice());
+        // init must be deterministic in the seed
+        let (b2, _) = eng.init_params("mlp", 42).unwrap();
+        assert_eq!(
+            HostTensor::from_literal(&bottom[0]).unwrap(),
+            HostTensor::from_literal(&b2[0]).unwrap()
+        );
+        let (b3, _) = eng.init_params("mlp", 43).unwrap();
+        assert_ne!(
+            HostTensor::from_literal(&bottom[0]).unwrap(),
+            HostTensor::from_literal(&b3[0]).unwrap()
+        );
+    }
+
+    #[test]
+    fn exec_validates_arity() {
+        let Some(eng) = engine() else { return };
+        let err = eng.exec::<xla::Literal>("mlp/init", &[]).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("0 args"));
+    }
+
+    #[test]
+    fn bottom_fwd_runs_and_selects_k() {
+        let Some(eng) = engine() else { return };
+        let meta = eng.manifest.model("mlp").unwrap().clone();
+        let (bottom, _) = eng.init_params("mlp", 1).unwrap();
+        let b = meta.batch;
+        let x = HostTensor::f32(vec![0.1; b * 64], &[b, 64]).to_literal().unwrap();
+        let mut args = bottom;
+        args.push(x);
+        args.push(HostTensor::scalar_i32(7).to_literal().unwrap());
+        args.push(HostTensor::vec1_f32(&[0.0]).to_literal().unwrap());
+        args.push(HostTensor::vec1_f32(&[0.0]).to_literal().unwrap());
+        let outs = eng.exec_host("mlp/sparse_k6/bottom_fwd", &args).unwrap();
+        assert_eq!(outs[0].shape(), &[b, 6]);
+        assert_eq!(outs[1].shape(), &[b, 6]);
+        let idx = outs[1].as_i32().unwrap();
+        assert!(idx.iter().all(|&i| (0..128).contains(&i)));
+        // ascending distinct per row
+        for row in idx.chunks(6) {
+            for w in row.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Host-side tensor representation + conversions to/from `xla::Literal`.
+//!
+//! All request-path data (batches, compressed payload contents, parameter
+//! snapshots) lives in these plain buffers; literals are created right at
+//! the PJRT boundary.
+
+use anyhow::{anyhow, bail, Result};
+use xla::{ArrayElement, ElementType, Literal};
+
+use super::manifest::{DType, TensorSig};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn vec1_f32(v: &[f32]) -> Self {
+        HostTensor::F32 { data: v.to_vec(), shape: vec![v.len()] }
+    }
+
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        match dtype {
+            DType::F32 => HostTensor::f32(vec![0.0; n], shape),
+            DType::I32 => HostTensor::i32(vec![0; n], shape),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        match self {
+            HostTensor::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            HostTensor::I32 { data, .. } if data.len() == 1 => Ok(data[0] as f32),
+            _ => bail!("tensor is not a scalar"),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => Literal::vec1(data),
+            HostTensor::I32 { data, .. } => Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => Ok(HostTensor::f32(lit.to_vec::<f32>()?, &dims)),
+            ElementType::S32 => Ok(HostTensor::i32(lit.to_vec::<i32>()?, &dims)),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Validate against a manifest signature.
+    pub fn check_sig(&self, sig: &TensorSig) -> Result<()> {
+        if self.dtype() != sig.dtype || self.shape() != sig.shape.as_slice() {
+            bail!(
+                "tensor mismatch for '{}': got {:?}{:?}, want {:?}{:?}",
+                sig.name,
+                self.dtype(),
+                self.shape(),
+                sig.dtype,
+                sig.shape
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Zero-filled literal straight from a signature (momentum init).
+pub fn zero_literal(dtype: DType, shape: &[usize]) -> Result<Literal> {
+    let ty = match dtype {
+        DType::F32 => f32::TY,
+        DType::I32 => i32::TY,
+    };
+    let lit = Literal::create_from_shape(ty.primitive_type(), shape);
+    Ok(lit)
+}
+
+/// Total byte size of a dense tensor signature (for wire accounting).
+pub fn dense_bytes(sig: &TensorSig) -> usize {
+    sig.elements() * sig.dtype.size_bytes()
+}
+
+fn _assert_sync() {
+    fn _t<T>(_: std::marker::PhantomData<T>) {}
+    _t::<HostTensor>(std::marker::PhantomData);
+}
+
+#[allow(unused)]
+fn _anyhow_from(e: xla::Error) -> anyhow::Error {
+    anyhow!("{e:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_i32_scalar() {
+        let t = HostTensor::scalar_i32(-7);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[-7]);
+        assert_eq!(back.shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn zeros_literal() {
+        let lit = zero_literal(DType::F32, &[4, 5]).unwrap();
+        let t = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t.shape(), &[4, 5]);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn check_sig_mismatch() {
+        let sig = TensorSig {
+            name: "x".into(),
+            dtype: DType::F32,
+            shape: vec![2, 2],
+        };
+        assert!(HostTensor::f32(vec![0.0; 4], &[2, 2]).check_sig(&sig).is_ok());
+        assert!(HostTensor::f32(vec![0.0; 4], &[4]).check_sig(&sig).is_err());
+        assert!(HostTensor::i32(vec![0; 4], &[2, 2]).check_sig(&sig).is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! Party-to-party transports.
+//!
+//! `SimLink` is the default for experiments: an in-process queue pair with
+//! an explicit network model (bandwidth + latency), so "communication to
+//! converge" (paper Fig. 3 bottom row) is measured on real framed bytes
+//! under a controlled link. `TcpTransport` runs the same protocol over a
+//! real socket for the two-process deployment example.
+
+pub mod sim;
+pub mod tcp;
+
+pub use sim::{SimLink, SimNet};
+pub use tcp::TcpTransport;
+
+use anyhow::Result;
+
+use crate::wire::Frame;
+
+/// Per-endpoint link statistics (exact framed byte counts).
+#[derive(Clone, Debug, Default)]
+pub struct LinkStats {
+    pub frames_sent: u64,
+    pub frames_recv: u64,
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+    /// Simulated wall-clock spent on the wire (SimLink only).
+    pub sim_link_secs: f64,
+}
+
+impl LinkStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_sent + self.bytes_recv
+    }
+}
+
+pub trait Transport {
+    fn send(&mut self, frame: &Frame) -> Result<()>;
+    fn recv(&mut self) -> Result<Frame>;
+    fn stats(&self) -> LinkStats;
+}

@@ -1,0 +1,189 @@
+//! In-process simulated link.
+//!
+//! A `SimNet` models the physical link (bandwidth, propagation latency);
+//! `SimNet::pair()` returns the two endpoints. Frames are byte-encoded and
+//! decoded exactly as on a real wire (framing bugs can't hide), and every
+//! transfer advances the shared simulated clock by
+//! `latency + bytes / bandwidth` — the number used for the paper's
+//! "communication to converge" curves under a fixed link.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::wire::Frame;
+
+use super::{LinkStats, Transport};
+
+/// Link parameters. Defaults model a 100 Mbit/s WAN-ish link with 10 ms RTT.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    pub bandwidth_bytes_per_sec: f64,
+    pub latency_secs: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        LinkModel {
+            bandwidth_bytes_per_sec: 100e6 / 8.0,
+            latency_secs: 0.005,
+        }
+    }
+}
+
+struct Shared {
+    model: LinkModel,
+    /// queue[0]: a->b, queue[1]: b->a
+    queues: [VecDeque<Vec<u8>>; 2],
+    /// simulated time spent on the link in each direction
+    sim_secs: [f64; 2],
+}
+
+pub struct SimNet {
+    shared: Rc<RefCell<Shared>>,
+}
+
+impl SimNet {
+    pub fn new(model: LinkModel) -> Self {
+        SimNet {
+            shared: Rc::new(RefCell::new(Shared {
+                model,
+                queues: [VecDeque::new(), VecDeque::new()],
+                sim_secs: [0.0, 0.0],
+            })),
+        }
+    }
+
+    pub fn with_defaults() -> Self {
+        Self::new(LinkModel::default())
+    }
+
+    /// The two endpoints of the link.
+    pub fn pair(&self) -> (SimLink, SimLink) {
+        (
+            SimLink { shared: self.shared.clone(), side: 0, stats: LinkStats::default() },
+            SimLink { shared: self.shared.clone(), side: 1, stats: LinkStats::default() },
+        )
+    }
+
+    /// Total simulated seconds the link was busy (both directions).
+    pub fn sim_secs(&self) -> f64 {
+        let s = self.shared.borrow();
+        s.sim_secs[0] + s.sim_secs[1]
+    }
+}
+
+pub struct SimLink {
+    shared: Rc<RefCell<Shared>>,
+    /// 0 sends on queue 0 and receives on queue 1.
+    side: usize,
+    stats: LinkStats,
+}
+
+impl Transport for SimLink {
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        let bytes = frame.encode();
+        let mut s = self.shared.borrow_mut();
+        let cost = s.model.latency_secs
+            + bytes.len() as f64 / s.model.bandwidth_bytes_per_sec;
+        s.sim_secs[self.side] += cost;
+        self.stats.frames_sent += 1;
+        self.stats.bytes_sent += bytes.len() as u64;
+        self.stats.sim_link_secs += cost;
+        let side = self.side;
+        s.queues[side].push_back(bytes);
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        let mut s = self.shared.borrow_mut();
+        let q = 1 - self.side;
+        let Some(bytes) = s.queues[q].pop_front() else {
+            bail!("sim link: recv on empty queue (protocol deadlock?)");
+        };
+        drop(s);
+        let (frame, consumed) = Frame::decode(&bytes)?;
+        if consumed != bytes.len() {
+            bail!("sim link: partial frame consumption");
+        }
+        self.stats.frames_recv += 1;
+        self.stats.bytes_recv += bytes.len() as u64;
+        Ok(frame)
+    }
+
+    fn stats(&self) -> LinkStats {
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Payload;
+    use crate::wire::{Control, Message};
+
+    fn frame(seq: u32) -> Frame {
+        Frame {
+            seq,
+            message: Message::Activations {
+                step: seq as u64,
+                payload: Payload::Dense { rows: 1, dim: 8, bytes: vec![7; 32] },
+            },
+        }
+    }
+
+    #[test]
+    fn send_recv_in_order() {
+        let net = SimNet::with_defaults();
+        let (mut a, mut b) = net.pair();
+        a.send(&frame(1)).unwrap();
+        a.send(&frame(2)).unwrap();
+        assert_eq!(b.recv().unwrap().seq, 1);
+        assert_eq!(b.recv().unwrap().seq, 2);
+    }
+
+    #[test]
+    fn bidirectional() {
+        let net = SimNet::with_defaults();
+        let (mut a, mut b) = net.pair();
+        a.send(&frame(1)).unwrap();
+        b.send(&Frame { seq: 9, message: Message::Control(Control::Shutdown) }).unwrap();
+        assert_eq!(b.recv().unwrap().seq, 1);
+        assert_eq!(a.recv().unwrap().seq, 9);
+    }
+
+    #[test]
+    fn recv_empty_errors() {
+        let net = SimNet::with_defaults();
+        let (mut a, _b) = net.pair();
+        assert!(a.recv().is_err());
+    }
+
+    #[test]
+    fn byte_accounting_exact() {
+        let net = SimNet::with_defaults();
+        let (mut a, mut b) = net.pair();
+        let f = frame(1);
+        let n = f.encode().len() as u64;
+        a.send(&f).unwrap();
+        b.recv().unwrap();
+        assert_eq!(a.stats().bytes_sent, n);
+        assert_eq!(b.stats().bytes_recv, n);
+        assert_eq!(a.stats().frames_sent, 1);
+        assert_eq!(b.stats().frames_recv, 1);
+    }
+
+    #[test]
+    fn sim_time_advances_with_size_and_latency() {
+        let net = SimNet::new(LinkModel { bandwidth_bytes_per_sec: 1000.0, latency_secs: 0.5 });
+        let (mut a, mut b) = net.pair();
+        let f = frame(1);
+        let n = f.encode().len() as f64;
+        a.send(&f).unwrap();
+        b.recv().unwrap();
+        let expect = 0.5 + n / 1000.0;
+        assert!((net.sim_secs() - expect).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,112 @@
+//! TCP transport: the same frame protocol over a real socket, for the
+//! two-process deployment (`examples/serve_inference.rs`).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+
+use anyhow::{Context, Result};
+
+use crate::wire::{Frame, HEADER_BYTES};
+
+use super::{LinkStats, Transport};
+
+pub struct TcpTransport {
+    stream: TcpStream,
+    stats: LinkStats,
+    read_buf: Vec<u8>,
+}
+
+impl TcpTransport {
+    pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<Self> {
+        let stream = TcpStream::connect(&addr).with_context(|| format!("connect {addr:?}"))?;
+        stream.set_nodelay(true)?;
+        Ok(TcpTransport { stream, stats: LinkStats::default(), read_buf: Vec::new() })
+    }
+
+    /// Accept exactly one peer.
+    pub fn listen(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<Self> {
+        let listener = TcpListener::bind(&addr).with_context(|| format!("bind {addr:?}"))?;
+        let (stream, _) = listener.accept()?;
+        stream.set_nodelay(true)?;
+        Ok(TcpTransport { stream, stats: LinkStats::default(), read_buf: Vec::new() })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.stream.local_addr()?)
+    }
+
+    /// Wrap an already-connected stream (e.g. from a listener's accept).
+    pub fn from_stream(stream: TcpStream) -> Self {
+        stream.set_nodelay(true).ok();
+        TcpTransport { stream, stats: LinkStats::default(), read_buf: Vec::new() }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        let bytes = frame.encode();
+        self.stream.write_all(&bytes)?;
+        self.stats.frames_sent += 1;
+        self.stats.bytes_sent += bytes.len() as u64;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        // read header, learn body length, read body
+        self.read_buf.resize(HEADER_BYTES, 0);
+        self.stream.read_exact(&mut self.read_buf)?;
+        let len = u32::from_le_bytes(self.read_buf[9..13].try_into().unwrap()) as usize;
+        self.read_buf.resize(HEADER_BYTES + len, 0);
+        self.stream.read_exact(&mut self.read_buf[HEADER_BYTES..])?;
+        let (frame, consumed) = Frame::decode(&self.read_buf)?;
+        debug_assert_eq!(consumed, self.read_buf.len());
+        self.stats.frames_recv += 1;
+        self.stats.bytes_recv += self.read_buf.len() as u64;
+        Ok(frame)
+    }
+
+    fn stats(&self) -> LinkStats {
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Payload;
+    use crate::wire::Message;
+
+    #[test]
+    fn loopback_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            stream.set_nodelay(true).unwrap();
+            let mut t = TcpTransport { stream, stats: LinkStats::default(), read_buf: Vec::new() };
+            let f = t.recv().unwrap();
+            t.send(&f).unwrap(); // echo
+            t.stats()
+        });
+        let mut client = TcpTransport::connect(addr).unwrap();
+        let f = Frame {
+            seq: 5,
+            message: Message::Activations {
+                step: 1,
+                payload: Payload::Sparse {
+                    rows: 2,
+                    dim: 128,
+                    k: 3,
+                    bytes: vec![9; 30],
+                    with_indices: true,
+                },
+            },
+        };
+        client.send(&f).unwrap();
+        let echo = client.recv().unwrap();
+        assert_eq!(echo, f);
+        let server_stats = server.join().unwrap();
+        assert_eq!(server_stats.bytes_recv, f.encode().len() as u64);
+        assert_eq!(client.stats().bytes_sent, client.stats().bytes_recv);
+    }
+}

@@ -1,0 +1,170 @@
+//! Bit-level packing for compressed wire formats.
+//!
+//! Top-k sparsification sends each index in ⌈log2 d⌉ bits (paper §3.2,
+//! "offset encoding"); quantization sends each activation in b bits.
+//! Both reduce to a generic little-endian bit writer/reader.
+
+/// Number of bits needed to encode an index in [0, d).
+pub fn index_bits(d: usize) -> u32 {
+    debug_assert!(d >= 1);
+    usize::BITS - (d - 1).max(1).leading_zeros()
+}
+
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    bit_pos: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity_bits(bits: usize) -> Self {
+        BitWriter {
+            buf: Vec::with_capacity(bits.div_ceil(8)),
+            bit_pos: 0,
+        }
+    }
+
+    /// Append the low `nbits` of `value` (LSB-first).
+    pub fn write(&mut self, value: u64, nbits: u32) {
+        debug_assert!(nbits <= 64);
+        debug_assert!(nbits == 64 || value < (1u64 << nbits));
+        let mut v = value;
+        let mut remaining = nbits;
+        while remaining > 0 {
+            let byte = self.bit_pos / 8;
+            let off = (self.bit_pos % 8) as u32;
+            if byte == self.buf.len() {
+                self.buf.push(0);
+            }
+            let take = remaining.min(8 - off);
+            let mask = if take == 64 { u64::MAX } else { (1u64 << take) - 1 };
+            self.buf[byte] |= (((v & mask) as u8) << off) as u8;
+            v >>= take;
+            self.bit_pos += take as usize;
+            remaining -= take;
+        }
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.bit_pos
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    bit_pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, bit_pos: 0 }
+    }
+
+    /// Read `nbits` (LSB-first). Returns None past end of buffer.
+    pub fn read(&mut self, nbits: u32) -> Option<u64> {
+        if self.bit_pos + nbits as usize > self.buf.len() * 8 {
+            return None;
+        }
+        let mut out = 0u64;
+        let mut got = 0u32;
+        while got < nbits {
+            let byte = self.bit_pos / 8;
+            let off = (self.bit_pos % 8) as u32;
+            let take = (nbits - got).min(8 - off);
+            let mask = ((1u16 << take) - 1) as u8;
+            let bits = (self.buf[byte] >> off) & mask;
+            out |= (bits as u64) << got;
+            got += take;
+            self.bit_pos += take as usize;
+        }
+        Some(out)
+    }
+
+    pub fn remaining_bits(&self) -> usize {
+        self.buf.len() * 8 - self.bit_pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn index_bits_matches_ceil_log2() {
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(128), 7);
+        assert_eq!(index_bits(129), 8);
+        assert_eq!(index_bits(300), 9);
+        assert_eq!(index_bits(600), 10);
+        assert_eq!(index_bits(1280), 11);
+        assert_eq!(index_bits(1024), 10);
+    }
+
+    #[test]
+    fn roundtrip_fixed_width() {
+        for nbits in [1u32, 3, 7, 9, 11, 16, 24, 32] {
+            let vals: Vec<u64> = (0..100)
+                .map(|i| (i * 2654435761u64) & ((1u64 << nbits) - 1))
+                .collect();
+            let mut w = BitWriter::new();
+            for &v in &vals {
+                w.write(v, nbits);
+            }
+            let bytes = w.into_bytes();
+            assert_eq!(bytes.len(), (100 * nbits as usize).div_ceil(8));
+            let mut r = BitReader::new(&bytes);
+            for &v in &vals {
+                assert_eq!(r.read(nbits), Some(v));
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut rng = Rng::new(5);
+        let items: Vec<(u64, u32)> = (0..500)
+            .map(|_| {
+                let nbits = 1 + rng.below(33) as u32;
+                let v = rng.next_u64() & (((1u128 << nbits) - 1) as u64);
+                (v, nbits)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &items {
+            w.write(v, n);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &items {
+            assert_eq!(r.read(n), Some(v), "width {n}");
+        }
+    }
+
+    #[test]
+    fn read_past_end_is_none() {
+        let mut w = BitWriter::new();
+        w.write(0b101, 3);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(3), Some(0b101));
+        assert!(r.read(8).is_none());
+    }
+
+    #[test]
+    fn bit_len_exact() {
+        let mut w = BitWriter::new();
+        w.write(1, 5);
+        w.write(1, 9);
+        assert_eq!(w.bit_len(), 14);
+        assert_eq!(w.into_bytes().len(), 2);
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained substrates: deterministic PRNG, bit packing,
+//! timing. The offline build has no `rand`/`criterion`, so these are
+//! implemented in-tree and tested here.
+
+pub mod bitpack;
+pub mod rng;
+pub mod timer;
+
+pub use bitpack::{index_bits, BitReader, BitWriter};
+pub use rng::Rng;
+pub use timer::Timer;

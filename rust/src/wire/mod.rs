@@ -1,0 +1,417 @@
+//! Wire protocol: framing + message schema for the party-to-party link.
+//!
+//! Frame layout (little-endian):
+//!   magic  u32  = 0x53464C31 ("SFL1")
+//!   type   u8   (MsgType)
+//!   seq    u32  monotonically increasing per direction
+//!   len    u32  payload byte length
+//!   crc32  u32  of the payload
+//!   payload ...
+//!
+//! Messages wrap compressed payloads (`compress::Payload`) plus small
+//! control records. Every byte that crosses the transport goes through
+//! this module, so comm accounting is exact.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::compress::Payload;
+
+pub const MAGIC: u32 = 0x53464C31;
+pub const HEADER_BYTES: usize = 4 + 1 + 4 + 4 + 4;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum MsgType {
+    /// forward cut-layer content (any payload kind)
+    Activations = 1,
+    /// backward gradient content
+    Gradients = 2,
+    /// label owner -> feature owner: eval metrics for one batch
+    EvalResult = 3,
+    /// control: step/epoch barriers, shutdown
+    Control = 4,
+}
+
+impl MsgType {
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            1 => MsgType::Activations,
+            2 => MsgType::Gradients,
+            3 => MsgType::EvalResult,
+            4 => MsgType::Control,
+            other => bail!("unknown message type {other}"),
+        })
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    Activations { step: u64, payload: Payload },
+    Gradients { step: u64, payload: Payload },
+    EvalResult { step: u64, loss_sum: f32, metric_count: f32 },
+    Control(Control),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Control {
+    StartEpoch { epoch: u32 },
+    EndEpoch { epoch: u32 },
+    StartEval,
+    EndEval,
+    Shutdown,
+}
+
+impl Message {
+    pub fn msg_type(&self) -> MsgType {
+        match self {
+            Message::Activations { .. } => MsgType::Activations,
+            Message::Gradients { .. } => MsgType::Gradients,
+            Message::EvalResult { .. } => MsgType::EvalResult,
+            Message::Control(_) => MsgType::Control,
+        }
+    }
+}
+
+// --- payload (de)serialization -------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("message truncated");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("trailing bytes in message");
+        }
+        Ok(())
+    }
+}
+
+fn encode_payload(out: &mut Vec<u8>, p: &Payload) {
+    match p {
+        Payload::Sparse { rows, dim, k, bytes, with_indices } => {
+            out.push(0);
+            put_u32(out, *rows as u32);
+            put_u32(out, *dim as u32);
+            put_u32(out, *k as u32);
+            out.push(*with_indices as u8);
+            put_u32(out, bytes.len() as u32);
+            out.extend_from_slice(bytes);
+        }
+        Payload::Quantized { rows, dim, bits, bytes } => {
+            out.push(1);
+            put_u32(out, *rows as u32);
+            put_u32(out, *dim as u32);
+            out.push(*bits);
+            put_u32(out, bytes.len() as u32);
+            out.extend_from_slice(bytes);
+        }
+        Payload::Dense { rows, dim, bytes } => {
+            out.push(2);
+            put_u32(out, *rows as u32);
+            put_u32(out, *dim as u32);
+            put_u32(out, bytes.len() as u32);
+            out.extend_from_slice(bytes);
+        }
+        Payload::VarSparse { rows, dim, bytes } => {
+            out.push(3);
+            put_u32(out, *rows as u32);
+            put_u32(out, *dim as u32);
+            put_u32(out, bytes.len() as u32);
+            out.extend_from_slice(bytes);
+        }
+    }
+}
+
+fn decode_payload(c: &mut Cursor) -> Result<Payload> {
+    let tag = c.u8()?;
+    Ok(match tag {
+        0 => {
+            let rows = c.u32()? as usize;
+            let dim = c.u32()? as usize;
+            let k = c.u32()? as usize;
+            let with_indices = c.u8()? != 0;
+            let n = c.u32()? as usize;
+            Payload::Sparse { rows, dim, k, bytes: c.take(n)?.to_vec(), with_indices }
+        }
+        1 => {
+            let rows = c.u32()? as usize;
+            let dim = c.u32()? as usize;
+            let bits = c.u8()?;
+            let n = c.u32()? as usize;
+            Payload::Quantized { rows, dim, bits, bytes: c.take(n)?.to_vec() }
+        }
+        2 => {
+            let rows = c.u32()? as usize;
+            let dim = c.u32()? as usize;
+            let n = c.u32()? as usize;
+            Payload::Dense { rows, dim, bytes: c.take(n)?.to_vec() }
+        }
+        3 => {
+            let rows = c.u32()? as usize;
+            let dim = c.u32()? as usize;
+            let n = c.u32()? as usize;
+            Payload::VarSparse { rows, dim, bytes: c.take(n)?.to_vec() }
+        }
+        other => bail!("unknown payload tag {other}"),
+    })
+}
+
+impl Message {
+    pub fn encode_body(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Message::Activations { step, payload } => {
+                put_u64(&mut out, *step);
+                encode_payload(&mut out, payload);
+            }
+            Message::Gradients { step, payload } => {
+                put_u64(&mut out, *step);
+                encode_payload(&mut out, payload);
+            }
+            Message::EvalResult { step, loss_sum, metric_count } => {
+                put_u64(&mut out, *step);
+                put_f32(&mut out, *loss_sum);
+                put_f32(&mut out, *metric_count);
+            }
+            Message::Control(ctl) => match ctl {
+                Control::StartEpoch { epoch } => {
+                    out.push(0);
+                    put_u32(&mut out, *epoch);
+                }
+                Control::EndEpoch { epoch } => {
+                    out.push(1);
+                    put_u32(&mut out, *epoch);
+                }
+                Control::StartEval => out.push(2),
+                Control::EndEval => out.push(3),
+                Control::Shutdown => out.push(4),
+            },
+        }
+        out
+    }
+
+    pub fn decode_body(ty: MsgType, body: &[u8]) -> Result<Message> {
+        let mut c = Cursor::new(body);
+        let msg = match ty {
+            MsgType::Activations => Message::Activations {
+                step: c.u64()?,
+                payload: decode_payload(&mut c)?,
+            },
+            MsgType::Gradients => Message::Gradients {
+                step: c.u64()?,
+                payload: decode_payload(&mut c)?,
+            },
+            MsgType::EvalResult => Message::EvalResult {
+                step: c.u64()?,
+                loss_sum: c.f32()?,
+                metric_count: c.f32()?,
+            },
+            MsgType::Control => {
+                let tag = c.u8()?;
+                Message::Control(match tag {
+                    0 => Control::StartEpoch { epoch: c.u32()? },
+                    1 => Control::EndEpoch { epoch: c.u32()? },
+                    2 => Control::StartEval,
+                    3 => Control::EndEval,
+                    4 => Control::Shutdown,
+                    other => bail!("unknown control tag {other}"),
+                })
+            }
+        };
+        c.done()?;
+        Ok(msg)
+    }
+}
+
+/// A complete frame ready for the transport.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub seq: u32,
+    pub message: Message,
+}
+
+impl Frame {
+    pub fn encode(&self) -> Vec<u8> {
+        let body = self.message.encode_body();
+        let mut out = Vec::with_capacity(HEADER_BYTES + body.len());
+        put_u32(&mut out, MAGIC);
+        out.push(self.message.msg_type() as u8);
+        put_u32(&mut out, self.seq);
+        put_u32(&mut out, body.len() as u32);
+        put_u32(&mut out, crc32fast::hash(&body));
+        out.extend_from_slice(&body);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<(Frame, usize)> {
+        if buf.len() < HEADER_BYTES {
+            bail!("frame shorter than header");
+        }
+        let mut c = Cursor::new(buf);
+        let magic = c.u32()?;
+        if magic != MAGIC {
+            bail!("bad magic {magic:#x}");
+        }
+        let ty = MsgType::from_u8(c.u8()?)?;
+        let seq = c.u32()?;
+        let len = c.u32()? as usize;
+        let crc = c.u32()?;
+        let body = c.take(len).map_err(|_| anyhow!("frame body truncated"))?;
+        if crc32fast::hash(body) != crc {
+            bail!("frame crc mismatch (seq {seq})");
+        }
+        let message = Message::decode_body(ty, body)?;
+        Ok((Frame { seq, message }, HEADER_BYTES + len))
+    }
+
+    pub fn wire_len(&self) -> usize {
+        HEADER_BYTES + self.message.encode_body().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sparse_payload() -> Payload {
+        Payload::Sparse {
+            rows: 2,
+            dim: 128,
+            k: 3,
+            bytes: vec![1, 2, 3, 4, 5, 6, 7, 8],
+            with_indices: true,
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_message_kinds() {
+        let msgs = vec![
+            Message::Activations { step: 7, payload: sparse_payload() },
+            Message::Gradients {
+                step: 8,
+                payload: Payload::Dense { rows: 1, dim: 4, bytes: vec![0; 16] },
+            },
+            Message::Activations {
+                step: 9,
+                payload: Payload::Quantized { rows: 2, dim: 8, bits: 2, bytes: vec![0xAA; 20] },
+            },
+            Message::Activations {
+                step: 10,
+                payload: Payload::VarSparse { rows: 2, dim: 600, bytes: vec![1; 9] },
+            },
+            Message::EvalResult { step: 3, loss_sum: 1.5, metric_count: 20.0 },
+            Message::Control(Control::StartEpoch { epoch: 4 }),
+            Message::Control(Control::EndEpoch { epoch: 4 }),
+            Message::Control(Control::StartEval),
+            Message::Control(Control::EndEval),
+            Message::Control(Control::Shutdown),
+        ];
+        for (i, m) in msgs.into_iter().enumerate() {
+            let f = Frame { seq: i as u32, message: m };
+            let bytes = f.encode();
+            assert_eq!(bytes.len(), f.wire_len());
+            let (back, consumed) = Frame::decode(&bytes).unwrap();
+            assert_eq!(consumed, bytes.len());
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let f = Frame { seq: 1, message: Message::Activations { step: 0, payload: sparse_payload() } };
+        let mut bytes = f.encode();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        assert!(Frame::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn detects_bad_magic() {
+        let f = Frame { seq: 1, message: Message::Control(Control::Shutdown) };
+        let mut bytes = f.encode();
+        bytes[0] = 0;
+        assert!(Frame::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let f = Frame { seq: 1, message: Message::Activations { step: 0, payload: sparse_payload() } };
+        let bytes = f.encode();
+        for cut in [1, HEADER_BYTES - 1, HEADER_BYTES + 2, bytes.len() - 1] {
+            assert!(Frame::decode(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn decode_from_concatenated_stream() {
+        let f1 = Frame { seq: 1, message: Message::Control(Control::StartEval) };
+        let f2 = Frame { seq: 2, message: Message::EvalResult { step: 0, loss_sum: 2.0, metric_count: 5.0 } };
+        let mut stream = f1.encode();
+        stream.extend_from_slice(&f2.encode());
+        let (back1, n1) = Frame::decode(&stream).unwrap();
+        let (back2, n2) = Frame::decode(&stream[n1..]).unwrap();
+        assert_eq!(back1, f1);
+        assert_eq!(back2, f2);
+        assert_eq!(n1 + n2, stream.len());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage_in_body() {
+        // hand-craft: valid header, body = control shutdown + extra byte
+        let body = vec![4u8, 0u8];
+        let mut out = Vec::new();
+        put_u32(&mut out, MAGIC);
+        out.push(MsgType::Control as u8);
+        put_u32(&mut out, 1);
+        put_u32(&mut out, body.len() as u32);
+        put_u32(&mut out, crc32fast::hash(&body));
+        out.extend_from_slice(&body);
+        assert!(Frame::decode(&out).is_err());
+    }
+}

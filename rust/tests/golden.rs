@@ -1,0 +1,94 @@
+//! Golden-trace tests: execute HLO artifacts on inputs dumped by
+//! `python -m compile.golden` and compare against the python-side outputs.
+//! Pins the whole AOT bridge: lowering, HLO-text round-trip, literal
+//! marshalling, PJRT execution.
+
+use std::path::PathBuf;
+
+use splitfed::runtime::{default_artifacts_dir, Engine, HostTensor};
+use xla::{FromRawBytes, Literal};
+
+fn golden_dir() -> Option<PathBuf> {
+    let d = default_artifacts_dir().join("golden");
+    d.exists().then_some(d)
+}
+
+fn load_case(path: &PathBuf) -> (Vec<Literal>, Vec<Literal>) {
+    let entries = Literal::read_npz(path, &()).unwrap();
+    let mut ins: Vec<(usize, Literal)> = Vec::new();
+    let mut outs: Vec<(usize, Literal)> = Vec::new();
+    for (name, lit) in entries {
+        if let Some(i) = name.strip_prefix("in_") {
+            ins.push((i.parse().unwrap(), lit));
+        } else if let Some(i) = name.strip_prefix("out_") {
+            outs.push((i.parse().unwrap(), lit));
+        }
+    }
+    ins.sort_by_key(|(i, _)| *i);
+    outs.sort_by_key(|(i, _)| *i);
+    (
+        ins.into_iter().map(|(_, l)| l).collect(),
+        outs.into_iter().map(|(_, l)| l).collect(),
+    )
+}
+
+fn assert_close(a: &HostTensor, b: &HostTensor, tol: f32, ctx: &str) {
+    assert_eq!(a.shape(), b.shape(), "{ctx}: shape");
+    match (a, b) {
+        (HostTensor::F32 { data: x, .. }, HostTensor::F32 { data: y, .. }) => {
+            for (i, (u, v)) in x.iter().zip(y).enumerate() {
+                let denom = v.abs().max(1.0);
+                assert!(
+                    (u - v).abs() / denom <= tol,
+                    "{ctx}: elem {i}: {u} vs {v}"
+                );
+            }
+        }
+        (HostTensor::I32 { data: x, .. }, HostTensor::I32 { data: y, .. }) => {
+            assert_eq!(x, y, "{ctx}: i32 data");
+        }
+        _ => panic!("{ctx}: dtype mismatch"),
+    }
+}
+
+fn check_artifact(key: &str, npz: &str, tol: f32) {
+    let Some(dir) = golden_dir() else {
+        eprintln!("golden traces missing; run `make golden`");
+        return;
+    };
+    let engine = Engine::load(default_artifacts_dir()).unwrap();
+    let (ins, expected) = load_case(&dir.join(npz));
+    let outs = engine.exec(key, &ins).unwrap();
+    assert_eq!(outs.len(), expected.len(), "{key}: output arity");
+    for (i, (got, want)) in outs.iter().zip(&expected).enumerate() {
+        let got = HostTensor::from_literal(got).unwrap();
+        let want = HostTensor::from_literal(want).unwrap();
+        assert_close(&got, &want, tol, &format!("{key} out_{i}"));
+    }
+}
+
+#[test]
+fn golden_init() {
+    check_artifact("mlp/init", "mlp_init.npz", 1e-6);
+}
+
+#[test]
+fn golden_bottom_fwd() {
+    // selection indices must match bit-exactly; values to fp tolerance
+    check_artifact("mlp/sparse_k6/bottom_fwd", "mlp_sparse_k6_bottom_fwd.npz", 1e-5);
+}
+
+#[test]
+fn golden_top_fwdbwd() {
+    check_artifact("mlp/sparse_k6/top_fwdbwd", "mlp_sparse_k6_top_fwdbwd.npz", 1e-4);
+}
+
+#[test]
+fn golden_bottom_bwd() {
+    check_artifact("mlp/sparse_k6/bottom_bwd", "mlp_sparse_k6_bottom_bwd.npz", 1e-4);
+}
+
+#[test]
+fn golden_top_eval() {
+    check_artifact("mlp/sparse_k6/top_eval", "mlp_sparse_k6_top_eval.npz", 1e-4);
+}
