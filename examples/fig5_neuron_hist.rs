@@ -16,7 +16,7 @@ use anyhow::Result;
 use splitfed::cli::Args;
 use splitfed::config::{ExperimentConfig, Method};
 use splitfed::coordinator::Trainer;
-use splitfed::data::{EpochIter, Split};
+use splitfed::data::{Dataset, EpochIter, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
 
 fn gini(counts: &[u64]) -> f64 {

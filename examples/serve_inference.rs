@@ -1,27 +1,44 @@
-//! Two-party inference service — the paper's deployment scenario (§4.3:
-//! e.g. on-device face recognition where the label owner hosts the top
-//! model). The feature owner streams compressed cut-layer activations for
-//! eval batches over TCP; the label owner answers with loss/metric; we
-//! report request latency and throughput plus the exact wire traffic.
+//! Multi-session inference service — the paper's deployment scenario
+//! (§4.3: e.g. on-device face recognition where the label owner hosts the
+//! top model), scaled out: N concurrent feature owners stream compressed
+//! cut-layer activations over ONE multiplexed TCP connection to a single
+//! label-owner process (one session registry, one shared Engine). Reports
+//! aggregate and per-session throughput / latency / exact wire traffic,
+//! and asserts that per-session `LinkStats` sum exactly to the physical
+//! connection's byte counts.
 //!
 //! ```bash
-//! cargo run --release --example serve_inference -- --requests 64
+//! cargo run --release --example serve_inference -- --clients 8 --requests 16
 //! ```
 
 use std::rc::Rc;
+use std::time::Instant;
 
 use anyhow::Result;
 use splitfed::cli::Args;
 use splitfed::config::Method;
-use splitfed::coordinator::{FeatureOwner, LabelOwner};
-use splitfed::data::{for_model, Split};
+use splitfed::coordinator::serve::{
+    eval_indices, serve_tcp, EVAL_INIT_SEED, EVAL_N_TEST, EVAL_N_TRAIN,
+};
+use splitfed::coordinator::FeatureOwner;
+use splitfed::data::{for_model, Dataset, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
-use splitfed::transport::{TcpTransport, Transport};
+use splitfed::transport::{LinkStats, Mux, TcpTransport, Transport};
 use splitfed::util::timer::Stats;
+
+struct ClientResult {
+    stream_id: u32,
+    lat: Stats,
+    correct: f32,
+    samples: usize,
+    fwd_pct: f64,
+    stats: LinkStats,
+}
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
-    let requests: usize = args.get_parse("requests")?.unwrap_or(64);
+    let clients: usize = args.get_parse("clients")?.unwrap_or(4).max(1);
+    let requests: usize = args.get_parse("requests")?.unwrap_or(16).max(1);
     let model = args.get_or("model", "mlp").to_string();
     let method = Method::parse(args.get_or("method", "randtopk:k=6,alpha=0.1"))?;
     let seed = 42u64;
@@ -30,74 +47,127 @@ fn main() -> Result<()> {
     let addr = listener.local_addr()?;
     let dir = default_artifacts_dir();
 
-    // label owner: the serving party
-    let dir_lo = dir.clone();
-    let model_lo = model.clone();
-    let server = std::thread::spawn(move || -> Result<u64> {
-        let engine = Rc::new(Engine::load(&dir_lo)?);
-        let (stream, _) = listener.accept()?;
-        let transport = TcpTransport::from_stream(stream);
-        let mut lo = LabelOwner::new(engine, &model_lo, method, transport, 7)?;
-        let ds = for_model(&model_lo, lo.meta.n_classes, seed, 256, 4096);
-        let batch_size = lo.meta.batch;
-        for req in 0..requests {
-            let idx: Vec<usize> = (req * batch_size..(req + 1) * batch_size).collect();
-            let batch = ds.batch(Split::Test, &idx, false);
-            lo.eval_step(req as u64, &batch.y)?;
-        }
-        Ok(lo.transport.stats().bytes_recv)
-    });
+    // one physical connection; the server demuxes all sessions off it
+    let phys = TcpTransport::connect(addr)?;
+    let mut server = serve_tcp(&listener, 1, dir.clone(), model.clone(), method, seed)?;
+    let mux = Mux::initiator(phys);
 
-    // feature owner: the client device
-    let engine = Rc::new(Engine::load(&dir)?);
-    let transport = TcpTransport::connect(addr)?;
-    let mut fo = FeatureOwner::new(engine, &model, method, transport, seed, 7)?;
-    let ds = for_model(&model, fo.meta.n_classes, seed, 256, 4096);
-    let batch_size = fo.meta.batch;
+    let t_all = Instant::now();
+    let mut handles = Vec::new();
+    for _ in 0..clients {
+        let mux = mux.clone();
+        let dir = dir.clone();
+        let model = model.clone();
+        handles.push(std::thread::spawn(move || -> Result<ClientResult> {
+            let engine = Rc::new(Engine::load(&dir)?);
+            let stream = mux.open_stream()?;
+            let stream_id = stream.id();
+            let mut fo = FeatureOwner::new(engine, &model, method, stream, seed, EVAL_INIT_SEED)?;
+            // geometry shared with MuxServer so server-derived labels align
+            let ds = for_model(&model, fo.meta.n_classes, seed, EVAL_N_TRAIN, EVAL_N_TEST);
+            let n_test = ds.len(Split::Test);
+            let b = fo.meta.batch;
+            let mut lat = Stats::new();
+            let mut correct = 0.0f32;
+            let mut samples = 0usize;
+            for req in 0..requests {
+                let idx = eval_indices(req as u64, b, n_test);
+                let batch = ds.batch(Split::Test, &idx, false);
+                let t0 = Instant::now();
+                fo.eval_forward(req as u64, &batch.x)?;
+                let (_, c) = fo.recv_eval_result()?;
+                lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                correct += c;
+                samples += b;
+            }
+            fo.transport.close()?;
+            let stats = fo.transport.stats();
+            let dense_bytes = (requests * b * fo.meta.cut_dim * 4) as f64;
+            Ok(ClientResult {
+                stream_id,
+                lat,
+                correct,
+                samples,
+                fwd_pct: 100.0 * stats.bytes_sent as f64 / dense_bytes,
+                stats,
+            })
+        }));
+    }
 
-    let mut lat = Stats::new();
-    let mut correct = 0.0f32;
-    let mut n = 0usize;
-    let t_all = std::time::Instant::now();
-    for req in 0..requests {
-        let idx: Vec<usize> = (req * batch_size..(req + 1) * batch_size).collect();
-        let batch = ds.batch(Split::Test, &idx, false);
-        let t0 = std::time::Instant::now();
-        fo.eval_forward(req as u64, &batch.x)?;
-        let (_, c) = fo.recv_eval_result()?;
-        lat.push(t0.elapsed().as_secs_f64() * 1e3);
-        correct += c;
-        n += batch_size;
+    let mut results: Vec<ClientResult> = Vec::new();
+    for h in handles {
+        results.push(h.join().expect("client thread panicked")?);
     }
     let total = t_all.elapsed().as_secs_f64();
-    let server_bytes = server.join().unwrap()?;
+    results.sort_by_key(|r| r.stream_id);
 
-    let s = fo.transport.stats();
-    println!("serve_inference — {model} + {method}, {requests} requests x batch {batch_size}");
+    // all sessions are closed; read the physical counters, then hang up so
+    // the server's event pump sees EOF and finishes the connection
+    let phys = mux.physical_stats();
+    drop(mux);
+    let report = server.pop().expect("server handle").join().expect("server thread panicked")?;
+
     println!(
-        "  latency    : p/mean {:.2} ms, min {:.2} ms, max {:.2} ms (incl. bottom model on device)",
-        lat.mean(), lat.min, lat.max
+        "serve_inference — {model} + {method}, {clients} sessions x {requests} requests, one connection"
     );
     println!(
-        "  throughput : {:.0} samples/s ({:.1} req/s)",
-        n as f64 / total,
-        requests as f64 / total
+        "  {:<8} {:>9} {:>11} {:>11} {:>11} {:>11} {:>9}",
+        "session", "requests", "mean ms", "max ms", "sent KiB", "recv KiB", "acc %"
+    );
+    for r in &results {
+        println!(
+            "  {:<8} {:>9} {:>11.2} {:>11.2} {:>11.1} {:>11.1} {:>9.2}",
+            r.stream_id,
+            r.lat.n,
+            r.lat.mean(),
+            r.lat.max,
+            r.stats.bytes_sent as f64 / 1024.0,
+            r.stats.bytes_recv as f64 / 1024.0,
+            100.0 * r.correct as f64 / r.samples as f64,
+        );
+    }
+
+    let samples: usize = results.iter().map(|r| r.samples).sum();
+    let reqs: usize = clients * requests;
+    println!(
+        "  aggregate  : {:.0} samples/s ({:.1} req/s) over {} sessions",
+        samples as f64 / total,
+        reqs as f64 / total,
+        clients
     );
     println!(
-        "  accuracy   : {:.2}% on {} test samples",
-        100.0 * correct as f64 / n as f64,
-        n
+        "  wire       : sent {:.1} KiB ({:.2}% of dense activations), recv {:.1} KiB on one connection",
+        phys.bytes_sent as f64 / 1024.0,
+        results.iter().map(|r| r.fwd_pct).sum::<f64>() / results.len() as f64,
+        phys.bytes_recv as f64 / 1024.0
     );
-    println!(
-        "  wire       : sent {:.1} KiB ({:.2}% of dense activations), recv {:.1} KiB",
-        s.bytes_sent as f64 / 1024.0,
-        fo.mean_fwd_pct().max(
-            // eval_forward doesn't accumulate fwd_pct; derive from totals
-            100.0 * s.bytes_sent as f64
-                / (requests * batch_size * fo.meta.cut_dim * 4) as f64
-        ),
-        s.bytes_recv as f64 / 1024.0
+
+    // --- invariants -------------------------------------------------------
+    // per-session stats sum exactly to the physical connection, both ends
+    let sum_sent: u64 = results.iter().map(|r| r.stats.bytes_sent).sum();
+    let sum_recv: u64 = results.iter().map(|r| r.stats.bytes_recv).sum();
+    assert_eq!(sum_sent, phys.bytes_sent, "client session stats must sum to physical sent");
+    assert_eq!(sum_recv, phys.bytes_recv, "client session stats must sum to physical recv");
+    assert_eq!(
+        report.session_bytes_recv(),
+        report.physical.bytes_recv,
+        "server session stats must sum to physical recv"
     );
-    assert_eq!(server_bytes, s.bytes_sent);
+    assert_eq!(
+        report.session_bytes_sent(),
+        report.physical.bytes_sent,
+        "server session stats must sum to physical sent"
+    );
+    assert_eq!(phys.bytes_sent, report.physical.bytes_recv, "both ends agree on the wire");
+    assert_eq!(report.total_requests(), reqs as u64);
+
+    // every session runs the same eval stream against the same model, so
+    // accuracy must be identical across sessions (== the single-client run)
+    let acc0 = 100.0 * results[0].correct as f64 / results[0].samples as f64;
+    for r in &results {
+        let acc = 100.0 * r.correct as f64 / r.samples as f64;
+        assert!((acc - acc0).abs() < 1e-9, "session {} accuracy {acc} != {acc0}", r.stream_id);
+    }
+    println!("  accuracy   : {acc0:.2}% on {} samples/session (identical across sessions)", results[0].samples);
     Ok(())
 }

@@ -8,7 +8,7 @@ use std::rc::Rc;
 use splitfed::bench_util::Bench;
 use splitfed::config::{ExperimentConfig, Method};
 use splitfed::coordinator::Trainer;
-use splitfed::data::Split;
+use splitfed::data::{Dataset, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
 
 fn main() {

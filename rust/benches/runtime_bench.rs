@@ -7,7 +7,7 @@ use std::rc::Rc;
 use splitfed::bench_util::Bench;
 use splitfed::config::Method;
 use splitfed::coordinator::step_seed;
-use splitfed::data::{for_model, Split};
+use splitfed::data::{for_model, Dataset, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine, HostTensor};
 use xla::Literal;
 

@@ -1,20 +1,26 @@
 //! Transport + wire benches: framing overhead and link throughput for the
-//! message sizes the paper's workloads actually generate.
+//! message sizes the paper's workloads actually generate, plus the mux
+//! layer's per-frame overhead vs. the single-stream path. Emits
+//! `BENCH_transport.json` at the repo root for the perf trajectory.
 
 use splitfed::bench_util::Bench;
 use splitfed::compress::Payload;
 use splitfed::transport::sim::{LinkModel, SimNet};
-use splitfed::transport::{TcpTransport, Transport};
+use splitfed::transport::{Mux, MuxEvent, TcpTransport, Transport};
 use splitfed::wire::{Frame, Message};
 
 fn frame_of(bytes: usize) -> Frame {
-    Frame {
-        seq: 1,
-        message: Message::Activations {
+    Frame::new(
+        1,
+        Message::Activations {
             step: 1,
             payload: Payload::Dense { rows: 32, dim: bytes / 4 / 32, bytes: vec![0xAB; bytes] },
         },
-    }
+    )
+}
+
+fn fast_net() -> SimNet {
+    SimNet::new(LinkModel { bandwidth_bytes_per_sec: 1e12, latency_secs: 0.0 })
 }
 
 fn main() {
@@ -33,7 +39,7 @@ fn main() {
 
     // sim link round trip (no network model cost, just queueing + codec)
     {
-        let net = SimNet::new(LinkModel { bandwidth_bytes_per_sec: 1e12, latency_secs: 0.0 });
+        let net = fast_net();
         let (mut a, mut bb) = net.pair();
         let f = frame_of(16 * 1024);
         b.run_bytes("simlink send+recv 16KiB", 16 * 1024, || {
@@ -42,7 +48,49 @@ fn main() {
         });
     }
 
-    // TCP loopback round trip
+    // mux over the same sim link: measures demux + restamp + accounting
+    // overhead relative to the single-stream case above
+    {
+        let net = fast_net();
+        let (a, bb) = net.pair();
+        let cm = Mux::initiator(a);
+        let sm = Mux::acceptor(bb);
+        let mut cs = cm.open_stream().unwrap();
+        assert!(matches!(sm.next_event().unwrap(), MuxEvent::Opened(_)));
+        let mut ss = sm.accept_stream(cs.id()).unwrap();
+        let f = frame_of(16 * 1024);
+        b.run_bytes("mux simlink send+recv 16KiB (1 stream)", 16 * 1024, || {
+            cs.send(&f).unwrap();
+            ss.recv().unwrap()
+        });
+    }
+
+    // mux with 8 interleaved streams: per-frame routing under contention
+    {
+        let net = fast_net();
+        let (a, bb) = net.pair();
+        let cm = Mux::initiator(a);
+        let sm = Mux::acceptor(bb);
+        let mut senders = Vec::new();
+        let mut receivers = Vec::new();
+        for _ in 0..8 {
+            let cs = cm.open_stream().unwrap();
+            assert!(matches!(sm.next_event().unwrap(), MuxEvent::Opened(_)));
+            receivers.push(sm.accept_stream(cs.id()).unwrap());
+            senders.push(cs);
+        }
+        let f = frame_of(16 * 1024);
+        b.run_bytes("mux simlink 8-stream interleave 8x16KiB", 8 * 16 * 1024, || {
+            for s in senders.iter_mut() {
+                s.send(&f).unwrap();
+            }
+            for r in receivers.iter_mut() {
+                r.recv().unwrap();
+            }
+        });
+    }
+
+    // TCP loopback round trip, single stream
     {
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -68,10 +116,45 @@ fn main() {
             client.recv().unwrap()
         });
         client
-            .send(&Frame { seq: 0, message: Message::Control(splitfed::wire::Control::Shutdown) })
+            .send(&Frame::new(0, Message::Control(splitfed::wire::Control::Shutdown)))
             .unwrap();
         echo.join().unwrap();
     }
 
+    // mux over TCP loopback: the deployment path of serve_inference
+    {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let echo = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let sm = Mux::acceptor(TcpTransport::from_stream(stream));
+            let MuxEvent::Opened(id) = sm.next_event().unwrap() else {
+                panic!("expected stream open");
+            };
+            let mut t = sm.accept_stream(id).unwrap();
+            loop {
+                match t.recv() {
+                    Ok(f) => t.send(&f).unwrap(),
+                    Err(_) => break, // CloseStream or hangup
+                }
+            }
+        });
+        let cm = Mux::initiator(TcpTransport::connect(addr).unwrap());
+        let mut cs = cm.open_stream().unwrap();
+        let f = frame_of(16 * 1024);
+        b.run_bytes("mux tcp loopback roundtrip 16KiB", 2 * 16 * 1024, || {
+            cs.send(&f).unwrap();
+            cs.recv().unwrap()
+        });
+        cs.close().unwrap();
+        echo.join().unwrap();
+    }
+
     b.report();
+
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_transport.json");
+    match b.write_json(out) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
 }

@@ -78,6 +78,38 @@ impl Bench {
         });
     }
 
+    /// Machine-readable dump (`BENCH_<group>.json` at the repo root by
+    /// convention) so the perf trajectory accumulates across PRs and CI
+    /// can archive it as an artifact.
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        use crate::json::Json;
+        use std::collections::BTreeMap;
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(r.name.clone()));
+                m.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
+                m.insert("std_ns".to_string(), Json::Num(r.std_ns));
+                m.insert("min_ns".to_string(), Json::Num(r.min_ns));
+                m.insert("iters".to_string(), Json::Num(r.iters as f64));
+                if let Some(b) = r.bytes {
+                    m.insert("bytes".to_string(), Json::Num(b as f64));
+                    m.insert(
+                        "mib_per_s".to_string(),
+                        Json::Num(b as f64 / (r.mean_ns / 1e9) / 1048576.0),
+                    );
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("group".to_string(), Json::Str(self.group.clone()));
+        top.insert("results".to_string(), Json::Arr(results));
+        std::fs::write(path, Json::Obj(top).to_string_pretty())
+    }
+
     pub fn report(&self) {
         println!("\n== bench group: {} ==", self.group);
         println!(
@@ -125,6 +157,22 @@ mod tests {
         assert_eq!(b.results.len(), 1);
         assert!(b.results[0].mean_ns >= 0.0);
         assert!(b.results[0].iters > 0);
+    }
+
+    #[test]
+    fn write_json_roundtrips() {
+        let mut b = Bench::new("jsontest");
+        b.min_time = 0.01;
+        b.run_bytes("case", 1024, || std::hint::black_box(2 * 2));
+        let path = std::env::temp_dir().join("splitfed_bench_util_test.json");
+        b.write_json(&path).unwrap();
+        let src = std::fs::read_to_string(&path).unwrap();
+        let v = crate::json::Json::parse(&src).unwrap();
+        assert_eq!(v.get("group").unwrap().as_str(), Some("jsontest"));
+        let results = v.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert!(results[0].get("mib_per_s").unwrap().as_f64().unwrap() > 0.0);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -58,7 +58,7 @@ impl<T: Transport> LabelOwner<T> {
     }
 
     fn send(&mut self, message: Message) -> Result<()> {
-        let frame = Frame { seq: self.seq, message };
+        let frame = Frame::new(self.seq, message);
         self.seq += 1;
         self.transport.send(&frame)
     }

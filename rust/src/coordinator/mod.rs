@@ -19,10 +19,12 @@
 
 pub mod feature_owner;
 pub mod label_owner;
+pub mod serve;
 pub mod trainer;
 
 pub use feature_owner::FeatureOwner;
 pub use label_owner::LabelOwner;
+pub use serve::{serve_tcp, MuxServer, ServeReport, SessionReport};
 pub use trainer::{train, Trainer};
 
 use crate::runtime::HostTensor;

@@ -1,0 +1,228 @@
+//! Multi-session label-owner server (paper §4.3 deployment, fleet-scale):
+//! one physical connection carries N concurrent inference sessions over
+//! `transport::Mux`. A session registry maps stream ids to `LabelOwner`s
+//! that all share one `Engine` (and its compiled-executable cache), so a
+//! single process serves many feature owners at once. Connections are
+//! served thread-per-connection (`serve_tcp`); sessions within a
+//! connection are interleaved by the mux event pump.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Method;
+use crate::data::{for_model, Dataset, Split};
+use crate::runtime::Engine;
+use crate::transport::{LinkStats, Mux, MuxEvent, MuxStream, TcpTransport, Transport};
+
+use super::LabelOwner;
+
+/// Eval-service dataset geometry and model init, shared by the server and
+/// the feature-owner clients. The protocol carries only activations; the
+/// label owner re-derives each request's batch by index, so both ends MUST
+/// agree on these or labels silently misalign with activations.
+pub const EVAL_N_TRAIN: usize = 256;
+pub const EVAL_N_TEST: usize = 4096;
+pub const EVAL_INIT_SEED: i32 = 7;
+
+/// Deterministic sample indices for eval request `step` (wraps around the
+/// test split).
+pub fn eval_indices(step: u64, batch: usize, n_test: usize) -> Vec<usize> {
+    (0..batch).map(|i| (step as usize * batch + i) % n_test).collect()
+}
+
+/// Outcome of one completed session (stream).
+#[derive(Clone, Debug)]
+pub struct SessionReport {
+    pub stream_id: u32,
+    pub requests: u64,
+    pub samples: u64,
+    pub loss_sum: f64,
+    pub metric_sum: f64,
+    /// Exact framed bytes this session put on / took off the shared wire.
+    pub stats: LinkStats,
+}
+
+/// Outcome of serving one physical connection to completion.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub sessions: Vec<SessionReport>,
+    /// The physical connection's own byte counts. Per-session stats sum
+    /// exactly to these (no `Goaway` is sent on the happy path).
+    pub physical: LinkStats,
+}
+
+impl ServeReport {
+    pub fn total_requests(&self) -> u64 {
+        self.sessions.iter().map(|s| s.requests).sum()
+    }
+
+    pub fn session_bytes_sent(&self) -> u64 {
+        self.sessions.iter().map(|s| s.stats.bytes_sent).sum()
+    }
+
+    pub fn session_bytes_recv(&self) -> u64 {
+        self.sessions.iter().map(|s| s.stats.bytes_recv).sum()
+    }
+}
+
+struct Session<T: Transport> {
+    lo: LabelOwner<MuxStream<T>>,
+    step: u64,
+    loss_sum: f64,
+    metric_sum: f64,
+}
+
+/// Label-owner side of the multiplexed inference service.
+pub struct MuxServer {
+    engine: Rc<Engine>,
+    model: String,
+    method: Method,
+    /// Dataset seed; must match the feature owners' so labels align with
+    /// the activations streamed for each eval batch.
+    data_seed: u64,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub init_seed: i32,
+    pub verbose: bool,
+}
+
+impl MuxServer {
+    pub fn new(engine: Rc<Engine>, model: &str, method: Method, data_seed: u64) -> Self {
+        MuxServer {
+            engine,
+            model: model.to_string(),
+            method,
+            data_seed,
+            n_train: EVAL_N_TRAIN,
+            n_test: EVAL_N_TEST,
+            init_seed: EVAL_INIT_SEED,
+            verbose: false,
+        }
+    }
+
+    /// Serve sessions on one mux connection for the connection's lifetime:
+    /// until the peer sends `Goaway` or hangs up with every stream closed.
+    /// (Deliberately NOT "until the registry is empty" — an early session
+    /// can finish before a slow-starting peer thread even opens its
+    /// stream.)
+    pub fn serve_connection<T: Transport>(&self, mux: &Mux<T>) -> Result<ServeReport> {
+        let meta = self.engine.manifest.model(&self.model)?.clone();
+        let ds = for_model(&self.model, meta.n_classes, self.data_seed, self.n_train, self.n_test);
+        let n_test = ds.len(Split::Test);
+        let mut sessions: HashMap<u32, Session<T>> = HashMap::new();
+        let mut done: Vec<SessionReport> = Vec::new();
+        let mut served_any = false;
+
+        loop {
+            match mux.next_event() {
+                Ok(MuxEvent::Opened(id)) => {
+                    let stream = mux.accept_stream(id)?;
+                    let lo = LabelOwner::new(
+                        self.engine.clone(),
+                        &self.model,
+                        self.method,
+                        stream,
+                        self.init_seed,
+                    )?;
+                    sessions.insert(id, Session { lo, step: 0, loss_sum: 0.0, metric_sum: 0.0 });
+                    served_any = true;
+                    if self.verbose {
+                        println!("session {id}: opened ({} live)", sessions.len());
+                    }
+                }
+                Ok(MuxEvent::Data(id)) => {
+                    let s = sessions
+                        .get_mut(&id)
+                        .ok_or_else(|| anyhow!("data frame for unknown session {id}"))?;
+                    // one routed frame == one eval request for this session
+                    let idx = eval_indices(s.step, s.lo.meta.batch, n_test);
+                    let batch = ds.batch(Split::Test, &idx, false);
+                    let (loss, metric) = s.lo.eval_step(s.step, &batch.y)?;
+                    s.step += 1;
+                    s.loss_sum += loss as f64;
+                    s.metric_sum += metric as f64;
+                }
+                Ok(MuxEvent::Closed(id)) => {
+                    let s = sessions
+                        .remove(&id)
+                        .ok_or_else(|| anyhow!("close for unknown session {id}"))?;
+                    if self.verbose {
+                        println!("session {id}: closed after {} requests", s.step);
+                    }
+                    done.push(finalize(id, s));
+                }
+                Ok(MuxEvent::Goaway { .. }) => break,
+                Err(e) => {
+                    // a peer hangup after every session closed is the normal
+                    // end; anything else (CRC mismatch, unknown stream, ...)
+                    // is a protocol violation even with no sessions live
+                    if is_hangup(&e) && sessions.is_empty() && served_any {
+                        break;
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        // sessions still open on goaway: account for them too
+        for (id, s) in sessions.drain() {
+            done.push(finalize(id, s));
+        }
+        done.sort_by_key(|r| r.stream_id);
+        Ok(ServeReport { sessions: done, physical: mux.physical_stats() })
+    }
+}
+
+/// Did the connection simply drop (EOF/reset), as opposed to a wire-level
+/// protocol violation?
+fn is_hangup(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| {
+        c.downcast_ref::<std::io::Error>().is_some_and(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::UnexpectedEof
+                    | std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::BrokenPipe
+            )
+        })
+    })
+}
+
+fn finalize<T: Transport>(id: u32, s: Session<T>) -> SessionReport {
+    let batch = s.lo.meta.batch as u64;
+    SessionReport {
+        stream_id: id,
+        requests: s.step,
+        samples: s.step * batch,
+        loss_sum: s.loss_sum,
+        metric_sum: s.metric_sum,
+        stats: s.lo.transport.stats(),
+    }
+}
+
+/// Accept `connections` physical connections and serve each on its own
+/// thread. Each thread loads its own `Engine` (the engine is
+/// single-threaded by design; sessions WITHIN a connection share one).
+pub fn serve_tcp(
+    listener: &std::net::TcpListener,
+    connections: usize,
+    artifacts_dir: std::path::PathBuf,
+    model: String,
+    method: Method,
+    data_seed: u64,
+) -> Result<Vec<std::thread::JoinHandle<Result<ServeReport>>>> {
+    let mut handles = Vec::new();
+    for _ in 0..connections {
+        let (stream, _) = listener.accept()?;
+        let dir = artifacts_dir.clone();
+        let model = model.clone();
+        handles.push(std::thread::spawn(move || -> Result<ServeReport> {
+            let engine = Rc::new(Engine::load(&dir)?);
+            let server = MuxServer::new(engine, &model, method, data_seed);
+            server.serve_connection(&Mux::acceptor(TcpTransport::from_stream(stream)))
+        }));
+    }
+    Ok(handles)
+}

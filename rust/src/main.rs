@@ -14,7 +14,7 @@ use anyhow::{bail, Result};
 use splitfed::cli::Args;
 use splitfed::config::ExperimentConfig;
 use splitfed::coordinator::{FeatureOwner, LabelOwner, Trainer};
-use splitfed::data::{for_model, EpochIter, Split};
+use splitfed::data::{for_model, Dataset, EpochIter, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
 use splitfed::transport::TcpTransport;
 

@@ -4,11 +4,15 @@
 //! an explicit network model (bandwidth + latency), so "communication to
 //! converge" (paper Fig. 3 bottom row) is measured on real framed bytes
 //! under a controlled link. `TcpTransport` runs the same protocol over a
-//! real socket for the two-process deployment example.
+//! real socket for the two-process deployment example. `Mux` layers
+//! stream multiplexing on either, so one physical connection carries many
+//! concurrent sessions with per-stream accounting.
 
+pub mod mux;
 pub mod sim;
 pub mod tcp;
 
+pub use mux::{Mux, MuxEvent, MuxStream};
 pub use sim::{SimLink, SimNet};
 pub use tcp::TcpTransport;
 

@@ -125,13 +125,13 @@ mod tests {
     use crate::wire::{Control, Message};
 
     fn frame(seq: u32) -> Frame {
-        Frame {
+        Frame::new(
             seq,
-            message: Message::Activations {
+            Message::Activations {
                 step: seq as u64,
                 payload: Payload::Dense { rows: 1, dim: 8, bytes: vec![7; 32] },
             },
-        }
+        )
     }
 
     #[test]
@@ -149,7 +149,7 @@ mod tests {
         let net = SimNet::with_defaults();
         let (mut a, mut b) = net.pair();
         a.send(&frame(1)).unwrap();
-        b.send(&Frame { seq: 9, message: Message::Control(Control::Shutdown) }).unwrap();
+        b.send(&Frame::new(9, Message::Control(Control::Shutdown))).unwrap();
         assert_eq!(b.recv().unwrap().seq, 1);
         assert_eq!(a.recv().unwrap().seq, 9);
     }

@@ -6,7 +6,7 @@ use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 
 use anyhow::{Context, Result};
 
-use crate::wire::{Frame, HEADER_BYTES};
+use crate::wire::{Frame, HEADER_BYTES, OFF_LEN};
 
 use super::{LinkStats, Transport};
 
@@ -55,7 +55,8 @@ impl Transport for TcpTransport {
         // read header, learn body length, read body
         self.read_buf.resize(HEADER_BYTES, 0);
         self.stream.read_exact(&mut self.read_buf)?;
-        let len = u32::from_le_bytes(self.read_buf[9..13].try_into().unwrap()) as usize;
+        let len =
+            u32::from_le_bytes(self.read_buf[OFF_LEN..OFF_LEN + 4].try_into().unwrap()) as usize;
         self.read_buf.resize(HEADER_BYTES + len, 0);
         self.stream.read_exact(&mut self.read_buf[HEADER_BYTES..])?;
         let (frame, consumed) = Frame::decode(&self.read_buf)?;
@@ -89,9 +90,9 @@ mod tests {
             t.stats()
         });
         let mut client = TcpTransport::connect(addr).unwrap();
-        let f = Frame {
-            seq: 5,
-            message: Message::Activations {
+        let f = Frame::new(
+            5,
+            Message::Activations {
                 step: 1,
                 payload: Payload::Sparse {
                     rows: 2,
@@ -101,7 +102,7 @@ mod tests {
                     with_indices: true,
                 },
             },
-        };
+        );
         client.send(&f).unwrap();
         let echo = client.recv().unwrap();
         assert_eq!(echo, f);

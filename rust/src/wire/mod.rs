@@ -1,23 +1,41 @@
 //! Wire protocol: framing + message schema for the party-to-party link.
 //!
-//! Frame layout (little-endian):
-//!   magic  u32  = 0x53464C31 ("SFL1")
-//!   type   u8   (MsgType)
-//!   seq    u32  monotonically increasing per direction
-//!   len    u32  payload byte length
-//!   crc32  u32  of the payload
+//! Frame layout (little-endian, offsets are the `OFF_*` constants below):
+//!   magic      u32  = 0x53464C31 ("SFL1")
+//!   type       u8   (MsgType)
+//!   stream_id  u32  multiplexing stream (0 = connection control)
+//!   seq        u32  monotonically increasing per stream per direction
+//!   len        u32  payload byte length
+//!   crc32      u32  of the payload
 //!   payload ...
 //!
 //! Messages wrap compressed payloads (`compress::Payload`) plus small
-//! control records. Every byte that crosses the transport goes through
-//! this module, so comm accounting is exact.
+//! control records. `stream_id` is muxado-style: a single physical
+//! connection carries many independent sessions (`transport::mux`), each
+//! opened with `OpenStream` and torn down with `CloseStream`; `Goaway`
+//! (stream 0) shuts the whole connection down. Every byte that crosses the
+//! transport goes through this module, so comm accounting is exact.
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::compress::Payload;
 
 pub const MAGIC: u32 = 0x53464C31;
-pub const HEADER_BYTES: usize = 4 + 1 + 4 + 4 + 4;
+
+/// Header field offsets. Transports that read the header incrementally
+/// (e.g. `TcpTransport::recv`) must derive slice positions from these,
+/// never from hand-counted literals.
+pub const OFF_MAGIC: usize = 0;
+pub const OFF_TYPE: usize = OFF_MAGIC + 4;
+pub const OFF_STREAM_ID: usize = OFF_TYPE + 1;
+pub const OFF_SEQ: usize = OFF_STREAM_ID + 4;
+pub const OFF_LEN: usize = OFF_SEQ + 4;
+pub const OFF_CRC: usize = OFF_LEN + 4;
+pub const HEADER_BYTES: usize = OFF_CRC + 4;
+
+/// Frames on stream 0 manage the connection itself (`Goaway`); data and
+/// per-stream control frames carry a non-zero id.
+pub const CONTROL_STREAM_ID: u32 = 0;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
@@ -30,6 +48,12 @@ pub enum MsgType {
     EvalResult = 3,
     /// control: step/epoch barriers, shutdown
     Control = 4,
+    /// mux: peer opens the stream carried in the header
+    OpenStream = 5,
+    /// mux: peer is done sending on the stream carried in the header
+    CloseStream = 6,
+    /// mux: connection-level shutdown (stream 0 only)
+    Goaway = 7,
 }
 
 impl MsgType {
@@ -39,6 +63,9 @@ impl MsgType {
             2 => MsgType::Gradients,
             3 => MsgType::EvalResult,
             4 => MsgType::Control,
+            5 => MsgType::OpenStream,
+            6 => MsgType::CloseStream,
+            7 => MsgType::Goaway,
             other => bail!("unknown message type {other}"),
         })
     }
@@ -50,6 +77,13 @@ pub enum Message {
     Gradients { step: u64, payload: Payload },
     EvalResult { step: u64, loss_sum: f32, metric_count: f32 },
     Control(Control),
+    /// Open the stream named in the frame header (empty body).
+    OpenStream,
+    /// Half-close the stream named in the frame header (empty body).
+    CloseStream,
+    /// Connection shutdown: highest stream id the sender processed plus an
+    /// error code (0 = clean).
+    Goaway { last_stream_id: u32, code: u32 },
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -68,6 +102,9 @@ impl Message {
             Message::Gradients { .. } => MsgType::Gradients,
             Message::EvalResult { .. } => MsgType::EvalResult,
             Message::Control(_) => MsgType::Control,
+            Message::OpenStream => MsgType::OpenStream,
+            Message::CloseStream => MsgType::CloseStream,
+            Message::Goaway { .. } => MsgType::Goaway,
         }
     }
 }
@@ -232,6 +269,11 @@ impl Message {
                 Control::EndEval => out.push(3),
                 Control::Shutdown => out.push(4),
             },
+            Message::OpenStream | Message::CloseStream => {}
+            Message::Goaway { last_stream_id, code } => {
+                put_u32(&mut out, *last_stream_id);
+                put_u32(&mut out, *code);
+            }
         }
         out
     }
@@ -263,6 +305,9 @@ impl Message {
                     other => bail!("unknown control tag {other}"),
                 })
             }
+            MsgType::OpenStream => Message::OpenStream,
+            MsgType::CloseStream => Message::CloseStream,
+            MsgType::Goaway => Message::Goaway { last_stream_id: c.u32()?, code: c.u32()? },
         };
         c.done()?;
         Ok(msg)
@@ -272,16 +317,29 @@ impl Message {
 /// A complete frame ready for the transport.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Frame {
+    /// Multiplexing stream this frame belongs to (0 = connection control).
+    pub stream_id: u32,
     pub seq: u32,
     pub message: Message,
 }
 
 impl Frame {
+    /// Frame on the default (single-session) stream.
+    pub fn new(seq: u32, message: Message) -> Frame {
+        Frame { stream_id: CONTROL_STREAM_ID, seq, message }
+    }
+
+    /// Frame addressed to a specific mux stream.
+    pub fn on_stream(stream_id: u32, seq: u32, message: Message) -> Frame {
+        Frame { stream_id, seq, message }
+    }
+
     pub fn encode(&self) -> Vec<u8> {
         let body = self.message.encode_body();
         let mut out = Vec::with_capacity(HEADER_BYTES + body.len());
         put_u32(&mut out, MAGIC);
         out.push(self.message.msg_type() as u8);
+        put_u32(&mut out, self.stream_id);
         put_u32(&mut out, self.seq);
         put_u32(&mut out, body.len() as u32);
         put_u32(&mut out, crc32fast::hash(&body));
@@ -299,15 +357,16 @@ impl Frame {
             bail!("bad magic {magic:#x}");
         }
         let ty = MsgType::from_u8(c.u8()?)?;
+        let stream_id = c.u32()?;
         let seq = c.u32()?;
         let len = c.u32()? as usize;
         let crc = c.u32()?;
         let body = c.take(len).map_err(|_| anyhow!("frame body truncated"))?;
         if crc32fast::hash(body) != crc {
-            bail!("frame crc mismatch (seq {seq})");
+            bail!("frame crc mismatch (stream {stream_id} seq {seq})");
         }
         let message = Message::decode_body(ty, body)?;
-        Ok((Frame { seq, message }, HEADER_BYTES + len))
+        Ok((Frame { stream_id, seq, message }, HEADER_BYTES + len))
     }
 
     pub fn wire_len(&self) -> usize {
@@ -351,9 +410,12 @@ mod tests {
             Message::Control(Control::StartEval),
             Message::Control(Control::EndEval),
             Message::Control(Control::Shutdown),
+            Message::OpenStream,
+            Message::CloseStream,
+            Message::Goaway { last_stream_id: 11, code: 2 },
         ];
         for (i, m) in msgs.into_iter().enumerate() {
-            let f = Frame { seq: i as u32, message: m };
+            let f = Frame::on_stream(i as u32 * 2 + 1, i as u32, m);
             let bytes = f.encode();
             assert_eq!(bytes.len(), f.wire_len());
             let (back, consumed) = Frame::decode(&bytes).unwrap();
@@ -363,8 +425,32 @@ mod tests {
     }
 
     #[test]
+    fn stream_id_survives_roundtrip() {
+        let f = Frame::on_stream(0xDEAD_BEEF, 3, Message::OpenStream);
+        let bytes = f.encode();
+        assert_eq!(
+            u32::from_le_bytes(bytes[OFF_STREAM_ID..OFF_STREAM_ID + 4].try_into().unwrap()),
+            0xDEAD_BEEF
+        );
+        let (back, _) = Frame::decode(&bytes).unwrap();
+        assert_eq!(back.stream_id, 0xDEAD_BEEF);
+    }
+
+    #[test]
+    fn header_offsets_cover_header_exactly() {
+        // the layout constants must tile the header with no gaps
+        assert_eq!(OFF_MAGIC, 0);
+        assert_eq!(OFF_TYPE, 4);
+        assert_eq!(OFF_STREAM_ID, 5);
+        assert_eq!(OFF_SEQ, 9);
+        assert_eq!(OFF_LEN, 13);
+        assert_eq!(OFF_CRC, 17);
+        assert_eq!(HEADER_BYTES, 21);
+    }
+
+    #[test]
     fn detects_corruption() {
-        let f = Frame { seq: 1, message: Message::Activations { step: 0, payload: sparse_payload() } };
+        let f = Frame::new(1, Message::Activations { step: 0, payload: sparse_payload() });
         let mut bytes = f.encode();
         let last = bytes.len() - 1;
         bytes[last] ^= 0xFF;
@@ -373,7 +459,7 @@ mod tests {
 
     #[test]
     fn detects_bad_magic() {
-        let f = Frame { seq: 1, message: Message::Control(Control::Shutdown) };
+        let f = Frame::new(1, Message::Control(Control::Shutdown));
         let mut bytes = f.encode();
         bytes[0] = 0;
         assert!(Frame::decode(&bytes).is_err());
@@ -381,7 +467,7 @@ mod tests {
 
     #[test]
     fn detects_truncation() {
-        let f = Frame { seq: 1, message: Message::Activations { step: 0, payload: sparse_payload() } };
+        let f = Frame::new(1, Message::Activations { step: 0, payload: sparse_payload() });
         let bytes = f.encode();
         for cut in [1, HEADER_BYTES - 1, HEADER_BYTES + 2, bytes.len() - 1] {
             assert!(Frame::decode(&bytes[..cut]).is_err(), "cut {cut}");
@@ -390,8 +476,8 @@ mod tests {
 
     #[test]
     fn decode_from_concatenated_stream() {
-        let f1 = Frame { seq: 1, message: Message::Control(Control::StartEval) };
-        let f2 = Frame { seq: 2, message: Message::EvalResult { step: 0, loss_sum: 2.0, metric_count: 5.0 } };
+        let f1 = Frame::new(1, Message::Control(Control::StartEval));
+        let f2 = Frame::new(2, Message::EvalResult { step: 0, loss_sum: 2.0, metric_count: 5.0 });
         let mut stream = f1.encode();
         stream.extend_from_slice(&f2.encode());
         let (back1, n1) = Frame::decode(&stream).unwrap();
@@ -408,6 +494,7 @@ mod tests {
         let mut out = Vec::new();
         put_u32(&mut out, MAGIC);
         out.push(MsgType::Control as u8);
+        put_u32(&mut out, CONTROL_STREAM_ID);
         put_u32(&mut out, 1);
         put_u32(&mut out, body.len() as u32);
         put_u32(&mut out, crc32fast::hash(&body));

@@ -1,16 +1,17 @@
 //! Failure-injection tests for the split-learning protocol: message
-//! reordering, step mismatches, geometry mismatches, and corrupted frames
-//! must be rejected with errors, never mis-trained silently.
+//! reordering, step mismatches, geometry mismatches, corrupted frames,
+//! and mux stream violations must be rejected with errors, never
+//! mis-trained silently.
 
 use std::rc::Rc;
 
 use splitfed::compress::Payload;
 use splitfed::config::Method;
 use splitfed::coordinator::{FeatureOwner, LabelOwner};
-use splitfed::data::{for_model, Split};
+use splitfed::data::{for_model, Dataset, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
-use splitfed::transport::{SimNet, Transport};
-use splitfed::wire::{Frame, Message};
+use splitfed::transport::{Mux, SimNet, Transport};
+use splitfed::wire::{Frame, Message, HEADER_BYTES, OFF_MAGIC, OFF_TYPE};
 
 fn engine() -> Option<Rc<Engine>> {
     let dir = default_artifacts_dir();
@@ -61,7 +62,7 @@ fn backward_without_forward_rejected() {
         with_indices: false,
     };
     lo.transport
-        .send(&Frame { seq: 0, message: Message::Gradients { step: 0, payload } })
+        .send(&Frame::new(0, Message::Gradients { step: 0, payload }))
         .unwrap();
     let err = fo.train_backward(0, 0.05).unwrap_err();
     assert!(err.to_string().contains("pending"), "{err}");
@@ -88,7 +89,7 @@ fn label_owner_rejects_geometry_mismatch() {
         with_indices: true,
     };
     fo.transport
-        .send(&Frame { seq: 0, message: Message::Activations { step: 0, payload } })
+        .send(&Frame::new(0, Message::Activations { step: 0, payload }))
         .unwrap();
     let (_, y) = batch();
     let err = lo.train_step(0, &y, 0.05).map(|_| ()).unwrap_err();
@@ -107,6 +108,90 @@ fn quant_codes_out_of_range_rejected_at_encode() {
         o_max: vec![1.0],
     };
     assert!(codec.encode(&bad).is_err());
+}
+
+// --- wire framing error paths (artifact-free: always run) ----------------
+
+fn wire_frame() -> Vec<u8> {
+    Frame::on_stream(
+        3,
+        7,
+        Message::Activations {
+            step: 0,
+            payload: Payload::Dense { rows: 1, dim: 8, bytes: vec![5; 32] },
+        },
+    )
+    .encode()
+}
+
+#[test]
+fn truncated_header_rejected() {
+    let bytes = wire_frame();
+    for cut in [0, 1, HEADER_BYTES - 1] {
+        let err = Frame::decode(&bytes[..cut]).unwrap_err();
+        assert!(err.to_string().contains("shorter than header"), "cut {cut}: {err}");
+    }
+}
+
+#[test]
+fn truncated_body_rejected() {
+    let bytes = wire_frame();
+    let err = Frame::decode(&bytes[..bytes.len() - 1]).unwrap_err();
+    assert!(err.to_string().contains("body truncated"), "{err}");
+}
+
+#[test]
+fn bad_magic_rejected() {
+    let mut bytes = wire_frame();
+    bytes[OFF_MAGIC] ^= 0xFF;
+    let err = Frame::decode(&bytes).unwrap_err();
+    assert!(err.to_string().contains("bad magic"), "{err}");
+}
+
+#[test]
+fn crc_mismatch_rejected() {
+    let mut bytes = wire_frame();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01;
+    let err = Frame::decode(&bytes).unwrap_err();
+    assert!(err.to_string().contains("crc mismatch"), "{err}");
+}
+
+#[test]
+fn unknown_msg_type_rejected() {
+    let mut bytes = wire_frame();
+    bytes[OFF_TYPE] = 0xEE;
+    let err = Frame::decode(&bytes).unwrap_err();
+    assert!(err.to_string().contains("unknown message type"), "{err}");
+}
+
+// --- mux stream violations ------------------------------------------------
+
+#[test]
+fn mux_rejects_frame_for_unopened_stream() {
+    let net = SimNet::with_defaults();
+    let (mut raw, b) = net.pair();
+    let mux = Mux::acceptor(b);
+    let payload = Payload::Dense { rows: 1, dim: 8, bytes: vec![0; 32] };
+    raw.send(&Frame::on_stream(9, 0, Message::Activations { step: 0, payload }))
+        .unwrap();
+    let err = mux.next_event().unwrap_err();
+    assert!(err.to_string().contains("unknown stream"), "{err}");
+    // the violation latches the connection dead
+    let err = mux.next_event().unwrap_err();
+    assert!(err.to_string().contains("mux connection failed"), "{err}");
+}
+
+#[test]
+fn mux_rejects_data_without_stream_id() {
+    // a non-mux-aware peer sends a legacy frame on stream 0
+    let net = SimNet::with_defaults();
+    let (mut raw, b) = net.pair();
+    let mux = Mux::acceptor(b);
+    let payload = Payload::Dense { rows: 1, dim: 8, bytes: vec![0; 32] };
+    raw.send(&Frame::new(0, Message::Activations { step: 0, payload })).unwrap();
+    let err = mux.next_event().unwrap_err();
+    assert!(err.to_string().contains("control stream"), "{err}");
 }
 
 #[test]
