@@ -1,21 +1,28 @@
 //! Multi-session inference service — the paper's deployment scenario
 //! (§4.3: e.g. on-device face recognition where the label owner hosts the
-//! top model), scaled out: N concurrent feature owners stream compressed
-//! cut-layer activations over ONE multiplexed TCP connection to a single
-//! label-owner process (one session registry, one shared Engine). Reports
+//! top model), scaled out AND heterogeneous: N concurrent feature owners,
+//! each with its OWN compression method, stream compressed cut-layer
+//! activations over ONE multiplexed TCP connection to a single
+//! label-owner process. Every stream's `OpenStream` carries a
+//! `CodecSpec`; the server builds each session's `LabelOwner` from the
+//! negotiated spec (one session registry, one shared Engine). Reports
 //! aggregate and per-session throughput / latency / exact wire traffic,
-//! and asserts that per-session `LinkStats` sum exactly to the physical
-//! connection's byte counts.
+//! asserts that per-session `LinkStats` sum exactly to the physical
+//! connection's byte counts, and pins every session's traffic to the
+//! byte against its codec's `expected_wire_bytes`.
 //!
 //! ```bash
-//! cargo run --release --example serve_inference -- --clients 8 --requests 16
+//! cargo run --release --example serve_inference -- --clients 3 \
+//!     --methods "randtopk:k=6,alpha=0.1;quant:bits=2;none"
 //! ```
 
+use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::Result;
 use splitfed::cli::Args;
+use splitfed::compress::{codec_for, CodecSpec, Pass};
 use splitfed::config::Method;
 use splitfed::coordinator::serve::{
     eval_indices, serve_tcp, EVAL_INIT_SEED, EVAL_N_TEST, EVAL_N_TRAIN,
@@ -25,9 +32,11 @@ use splitfed::data::{for_model, Dataset, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
 use splitfed::transport::{LinkStats, Mux, TcpTransport, Transport};
 use splitfed::util::timer::Stats;
+use splitfed::wire::{payload_meta_wire_len, Frame, Message, OpenSpec, HEADER_BYTES};
 
 struct ClientResult {
     stream_id: u32,
+    method: Method,
     lat: Stats,
     correct: f32,
     samples: usize,
@@ -40,31 +49,59 @@ fn main() -> Result<()> {
     let clients: usize = args.get_parse("clients")?.unwrap_or(4).max(1);
     let requests: usize = args.get_parse("requests")?.unwrap_or(16).max(1);
     let model = args.get_or("model", "mlp").to_string();
-    let method = Method::parse(args.get_or("method", "randtopk:k=6,alpha=0.1"))?;
     let seed = 42u64;
+
+    // manifest geometry drives both the codec specs and the default
+    // heterogeneous method mix
+    let dir = default_artifacts_dir();
+    let meta = Engine::load(&dir)?.manifest.model(&model)?.clone();
+    let cut_dim = meta.cut_dim;
+
+    let methods: Vec<Method> = if let Some(spec) = args.get("methods") {
+        spec.split(';')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| Method::parse(s.trim()))
+            .collect::<Result<_>>()?
+    } else if let Some(one) = args.get("method") {
+        vec![Method::parse(one)?]
+    } else {
+        // default: one of each family the manifest has artifacts for
+        let mut v = Vec::new();
+        if let Some(&k) = meta.k_levels.get(1).or_else(|| meta.k_levels.first()) {
+            v.push(Method::RandTopk { k, alpha: 0.1 });
+        }
+        if let Some(&bits) = meta.quant_bits.first() {
+            v.push(Method::Quant { bits: bits as u8 });
+        }
+        v.push(Method::None);
+        v
+    };
+    anyhow::ensure!(!methods.is_empty(), "--methods parsed to an empty list");
 
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
-    let dir = default_artifacts_dir();
 
-    // one physical connection; the server demuxes all sessions off it
+    // one physical connection; the server demuxes all sessions off it and
+    // negotiates each session's codec from its OpenStream spec
     let phys = TcpTransport::connect(addr)?;
-    let mut server = serve_tcp(&listener, 1, dir.clone(), model.clone(), method, seed)?;
+    let mut server = serve_tcp(&listener, 1, dir.clone(), model.clone(), methods[0], seed)?;
     let mux = Mux::initiator(phys);
 
     let t_all = Instant::now();
     let mut handles = Vec::new();
-    for _ in 0..clients {
+    for c in 0..clients {
+        let method = methods[c % methods.len()];
         let mux = mux.clone();
         let dir = dir.clone();
         let model = model.clone();
         handles.push(std::thread::spawn(move || -> Result<ClientResult> {
             let engine = Rc::new(Engine::load(&dir)?);
-            let stream = mux.open_stream()?;
+            let spec = CodecSpec::new(method, cut_dim);
+            let stream = mux.open_stream_with(spec)?;
             let stream_id = stream.id();
             let mut fo = FeatureOwner::new(engine, &model, method, stream, seed, EVAL_INIT_SEED)?;
             // geometry shared with MuxServer so server-derived labels align
-            let ds = for_model(&model, fo.meta.n_classes, seed, EVAL_N_TRAIN, EVAL_N_TEST);
+            let ds = for_model(&model, fo.meta.n_classes, seed, EVAL_N_TRAIN, EVAL_N_TEST)?;
             let n_test = ds.len(Split::Test);
             let b = fo.meta.batch;
             let mut lat = Stats::new();
@@ -82,9 +119,35 @@ fn main() -> Result<()> {
             }
             fo.transport.close()?;
             let stats = fo.transport.stats();
-            let dense_bytes = (requests * b * fo.meta.cut_dim * 4) as f64;
+
+            // --- exact per-stream byte accounting -------------------------
+            // sent = OpenStream(spec) + requests * Activations + CloseStream,
+            // each predicted to the byte from the codec registry
+            let codec = codec_for(method, cut_dim)?;
+            if let Some(content) = codec.expected_wire_bytes(b, Pass::Forward) {
+                let meta_len = payload_meta_wire_len(&codec.meta(b, Pass::Forward));
+                let open_len = Frame::on_stream(
+                    stream_id,
+                    0,
+                    Message::OpenStream { spec: OpenSpec::Spec(spec) },
+                )
+                .wire_len();
+                let per_req = HEADER_BYTES + 8 + meta_len + content;
+                let close_len = HEADER_BYTES; // CloseStream has an empty body
+                let expect_sent = (open_len + requests * per_req + close_len) as u64;
+                assert_eq!(
+                    stats.bytes_sent, expect_sent,
+                    "session {stream_id} ({method}): sent bytes must match the codec model"
+                );
+            }
+            // recv = requests * EvalResult (step u64 + two f32)
+            let expect_recv = (requests * (HEADER_BYTES + 16)) as u64;
+            assert_eq!(stats.bytes_recv, expect_recv, "session {stream_id}: recv bytes");
+
+            let dense_bytes = (requests * b * cut_dim * 4) as f64;
             Ok(ClientResult {
                 stream_id,
+                method,
                 lat,
                 correct,
                 samples,
@@ -108,16 +171,17 @@ fn main() -> Result<()> {
     let report = server.pop().expect("server handle").join().expect("server thread panicked")?;
 
     println!(
-        "serve_inference — {model} + {method}, {clients} sessions x {requests} requests, one connection"
+        "serve_inference — {model}, {clients} heterogeneous sessions x {requests} requests, one connection"
     );
     println!(
-        "  {:<8} {:>9} {:>11} {:>11} {:>11} {:>11} {:>9}",
-        "session", "requests", "mean ms", "max ms", "sent KiB", "recv KiB", "acc %"
+        "  {:<8} {:<26} {:>9} {:>9} {:>9} {:>11} {:>11} {:>8}",
+        "session", "method", "requests", "mean ms", "max ms", "sent KiB", "recv KiB", "acc %"
     );
     for r in &results {
         println!(
-            "  {:<8} {:>9} {:>11.2} {:>11.2} {:>11.1} {:>11.1} {:>9.2}",
+            "  {:<8} {:<26} {:>9} {:>9.2} {:>9.2} {:>11.1} {:>11.1} {:>8.2}",
             r.stream_id,
+            r.method.to_string(),
             r.lat.n,
             r.lat.mean(),
             r.lat.max,
@@ -160,14 +224,34 @@ fn main() -> Result<()> {
     );
     assert_eq!(phys.bytes_sent, report.physical.bytes_recv, "both ends agree on the wire");
     assert_eq!(report.total_requests(), reqs as u64);
+    assert!(report.refused.is_empty(), "no stream should be refused: {:?}", report.refused);
 
-    // every session runs the same eval stream against the same model, so
-    // accuracy must be identical across sessions (== the single-client run)
-    let acc0 = 100.0 * results[0].correct as f64 / results[0].samples as f64;
+    // the server must have honoured each session's negotiated method
+    let by_id: HashMap<u32, Method> =
+        report.sessions.iter().map(|s| (s.stream_id, s.method)).collect();
+    for r in &results {
+        assert_eq!(by_id.get(&r.stream_id), Some(&r.method), "server ran the negotiated codec");
+    }
+
+    // sessions sharing a method run the same eval stream against the same
+    // model, so their accuracy must be identical
+    let mut acc_by_method: HashMap<String, f64> = HashMap::new();
     for r in &results {
         let acc = 100.0 * r.correct as f64 / r.samples as f64;
-        assert!((acc - acc0).abs() < 1e-9, "session {} accuracy {acc} != {acc0}", r.stream_id);
+        let entry = acc_by_method.entry(r.method.to_string()).or_insert(acc);
+        assert!(
+            (*entry - acc).abs() < 1e-9,
+            "sessions with method {} disagree: {acc} != {entry}",
+            r.method
+        );
     }
-    println!("  accuracy   : {acc0:.2}% on {} samples/session (identical across sessions)", results[0].samples);
+    println!(
+        "  accuracy   : {} (identical across sessions sharing a method)",
+        acc_by_method
+            .iter()
+            .map(|(m, a)| format!("{m}={a:.2}%"))
+            .collect::<Vec<_>>()
+            .join("  ")
+    );
     Ok(())
 }

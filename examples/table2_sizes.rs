@@ -1,24 +1,33 @@
 //! Table 2 reproduction: analytic compressed-size formulas vs *measured*
 //! wire bytes of the real codecs, for every (d, k/b) the paper evaluates.
 //!
+//! Codecs come from the `compress::codec_for` registry — the exact
+//! objects the coordinator parties encode with in production — so this
+//! cross-check covers the deployed code path, not a parallel
+//! reimplementation.
+//!
 //! ```bash
 //! cargo run --release --example table2_sizes
 //! ```
 
 use anyhow::Result;
-use splitfed::compress::{
-    DenseBatch, Pass, QuantCodec, SizeModel, SparseBatch, SparseCodec,
-};
+use splitfed::compress::{codec_for, Batch, DenseBatch, Pass, QuantBatch, SparseBatch};
+use splitfed::config::Method;
 use splitfed::util::Rng;
 
-fn random_sparse(rng: &mut Rng, rows: usize, dim: usize, k: usize) -> SparseBatch {
+fn random_sparse(rng: &mut Rng, rows: usize, dim: usize, k: usize, implicit: bool) -> SparseBatch {
     let mut values = Vec::new();
     let mut indices = Vec::new();
     for _ in 0..rows {
-        let mut all: Vec<i32> = (0..dim as i32).collect();
-        rng.shuffle(&mut all);
-        let mut sel = all[..k].to_vec();
-        sel.sort_unstable();
+        let sel: Vec<i32> = if implicit {
+            (0..k as i32).collect()
+        } else {
+            let mut all: Vec<i32> = (0..dim as i32).collect();
+            rng.shuffle(&mut all);
+            let mut s = all[..k].to_vec();
+            s.sort_unstable();
+            s
+        };
         for &i in &sel {
             indices.push(i);
             values.push(rng.normal());
@@ -32,7 +41,7 @@ fn main() -> Result<()> {
     let mut rng = Rng::new(42);
 
     println!("Table 2 — compressed size (fraction of dense), analytic vs measured");
-    println!("(measured = real codec wire bytes / dense bytes; rows = batch {rows})\n");
+    println!("(measured = registry codec wire bytes / dense bytes; rows = batch {rows})\n");
     println!(
         "{:<24} {:>6} {:>4} | {:>9} {:>9} | {:>9} {:>9}",
         "method", "d", "k/b", "fwd(ana)", "fwd(meas)", "bwd(ana)", "bwd(meas)"
@@ -47,14 +56,14 @@ fn main() -> Result<()> {
     ];
 
     for &(d, ks) in geoms {
+        let dense_bytes = (rows * d * 4) as f64;
         for &k in ks {
-            let dense_bytes = (rows * d * 4) as f64;
-            // top-k
-            let m = SizeModel::topk(d, k);
-            let codec = SparseCodec::topk(d, k);
-            let batch = random_sparse(&mut rng, rows, d, k);
+            // top-k / randtopk (identical wire form)
+            let codec = codec_for(Method::Topk { k }, d)?;
+            let batch = Batch::Sparse(random_sparse(&mut rng, rows, d, k, false));
             let fwd = codec.encode(&batch, Pass::Forward)?.wire_bytes() as f64 / dense_bytes;
             let bwd = codec.encode(&batch, Pass::Backward)?.wire_bytes() as f64 / dense_bytes;
+            let m = codec.size_model();
             println!(
                 "{:<24} {:>6} {:>4} | {:>8.3}% {:>8.3}% | {:>8.3}% {:>8.3}%",
                 "top-k / randtopk",
@@ -66,11 +75,10 @@ fn main() -> Result<()> {
                 100.0 * bwd
             );
             // size reduction
-            let m = SizeModel::size_reduction(d, k);
-            let codec = SparseCodec::size_reduction(d, k);
-            let mut sr = random_sparse(&mut rng, rows, d, k);
-            sr.indices = (0..rows).flat_map(|_| 0..k as i32).collect();
+            let codec = codec_for(Method::SizeReduction { k }, d)?;
+            let sr = Batch::Sparse(random_sparse(&mut rng, rows, d, k, true));
             let fwd = codec.encode(&sr, Pass::Forward)?.wire_bytes() as f64 / dense_bytes;
+            let m = codec.size_model();
             println!(
                 "{:<24} {:>6} {:>4} | {:>8.3}% {:>8.3}% | {:>8.3}% {:>8.3}%",
                 "size reduction",
@@ -83,11 +91,10 @@ fn main() -> Result<()> {
             );
         }
         for bits in [1u8, 2, 4] {
-            let m = SizeModel::quant(d, bits as usize);
-            let codec = QuantCodec::new(d, bits);
-            let dense = DenseBatch::new(rows, d, (0..rows * d).map(|_| rng.normal()).collect());
+            let codec = codec_for(Method::Quant { bits }, d)?;
             let levels = (1u64 << bits) as f32;
-            let batch = splitfed::compress::quant::QuantBatch {
+            let dense = DenseBatch::new(rows, d, (0..rows * d).map(|_| rng.normal()).collect());
+            let batch = Batch::Quant(QuantBatch {
                 rows,
                 dim: d,
                 codes: dense
@@ -97,8 +104,9 @@ fn main() -> Result<()> {
                     .collect(),
                 o_min: vec![-3.0; rows],
                 o_max: vec![3.0; rows],
-            };
-            let fwd = codec.encode(&batch)?.wire_bytes() as f64 / (rows * d * 4) as f64;
+            });
+            let fwd = codec.encode(&batch, Pass::Forward)?.wire_bytes() as f64 / dense_bytes;
+            let m = codec.size_model();
             println!(
                 "{:<24} {:>6} {:>4} | {:>8.3}% {:>8.3}% | {:>8.3}% {:>9}",
                 "quantization",

@@ -15,6 +15,7 @@ use std::rc::Rc;
 
 use anyhow::Result;
 use splitfed::cli::Args;
+use splitfed::compress::{codec_for, Pass};
 use splitfed::config::{ExperimentConfig, Method};
 use splitfed::coordinator::train;
 use splitfed::metrics::mean_std;
@@ -25,6 +26,8 @@ struct Row {
     method: String,
     accs: Vec<f64>,
     sizes: Vec<f64>,
+    /// Registry-predicted forward size (%), None when emergent (L1).
+    ana: Option<f64>,
 }
 
 fn level_name(model: &str, idx: usize, n_levels: usize) -> String {
@@ -68,7 +71,15 @@ fn main() -> Result<()> {
     let meta = engine.manifest.model(&task)?.clone();
     let mut rows: Vec<Row> = Vec::new();
 
+    let cut_dim = meta.cut_dim;
     let mut run_one = |method: Method, level: &str, rows: &mut Vec<Row>| -> Result<()> {
+        // the analytic prediction comes from the SAME registry codec the
+        // trainer's parties encode with — the Table 2/3 cross-check covers
+        // the production code path
+        let ana = codec_for(method, cut_dim).ok().and_then(|c| {
+            c.expected_wire_bytes(1, Pass::Forward)
+                .map(|_| 100.0 * c.size_model().forward_fraction())
+        });
         let mut accs = Vec::new();
         let mut sizes = Vec::new();
         for seed in 0..seeds {
@@ -87,12 +98,14 @@ fn main() -> Result<()> {
         }
         let (am, asd) = mean_std(&accs);
         let (sm, _) = mean_std(&sizes);
-        eprintln!("  [{level:<7}] {method}: acc {am:.2} ({asd:.2}) size {sm:.2}%");
+        let ana_str = ana.map_or("-".into(), |a| format!("{a:.2}%"));
+        eprintln!("  [{level:<7}] {method}: acc {am:.2} ({asd:.2}) size {sm:.2}% (analytic {ana_str})");
         rows.push(Row {
             level: level.into(),
             method: method.to_string(),
             accs,
             sizes,
+            ana,
         });
         Ok(())
     };
@@ -121,7 +134,10 @@ fn main() -> Result<()> {
     }
 
     println!("\nTable 3 — {task}: accuracy (std) / compressed size (%), {seeds} seed(s), {epochs} epochs");
-    println!("{:<9} {:<28} {:>16} {:>12}", "level", "method", "accuracy (std)", "size %");
+    println!(
+        "{:<9} {:<28} {:>16} {:>12} {:>8}",
+        "level", "method", "accuracy (std)", "size %", "ana %"
+    );
     for r in &rows {
         let (am, asd) = mean_std(&r.accs);
         let (sm, ssd) = mean_std(&r.sizes);
@@ -130,17 +146,22 @@ fn main() -> Result<()> {
         } else {
             format!("{sm:.2}")
         };
-        println!("{:<9} {:<28} {:>9.2} ({:>4.2}) {:>12}", r.level, r.method, am, asd, size);
+        let ana = r.ana.map_or("-".to_string(), |a| format!("{a:.2}"));
+        println!(
+            "{:<9} {:<28} {:>9.2} ({:>4.2}) {:>12} {:>8}",
+            r.level, r.method, am, asd, size, ana
+        );
     }
 
     // persist for downstream figure drivers
     let dir = std::path::Path::new("runs/table3");
     std::fs::create_dir_all(dir)?;
-    let mut csv = String::from("level,method,acc_mean,acc_std,size_mean\n");
+    let mut csv = String::from("level,method,acc_mean,acc_std,size_mean,size_analytic\n");
     for r in &rows {
         let (am, asd) = mean_std(&r.accs);
         let (sm, _) = mean_std(&r.sizes);
-        csv.push_str(&format!("{},{},{am},{asd},{sm}\n", r.level, r.method));
+        let ana = r.ana.map_or(String::new(), |a| format!("{a}"));
+        csv.push_str(&format!("{},{},{am},{asd},{sm},{ana}\n", r.level, r.method));
     }
     std::fs::write(dir.join(format!("{task}.csv")), csv)?;
     println!("\nwrote runs/table3/{task}.csv");

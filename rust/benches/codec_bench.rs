@@ -1,14 +1,20 @@
-//! Codec throughput benches: encode/decode per method across the paper's
-//! (d, k/b) geometries. L3 perf target (DESIGN.md §7): dense >= 1 GiB/s,
-//! sparse pack >= 200 MiB/s — the codecs must never be the bottleneck next
-//! to model execution.
+//! Codec throughput benches across the paper's (d, k/b) geometries,
+//! constructed through the `codec_for` registry (the production path).
+//! L3 perf target (DESIGN.md §7): dense >= 1 GiB/s, sparse pack >= 200
+//! MiB/s — the codecs must never be the bottleneck next to model
+//! execution.
+//!
+//! Also measures the encode-copy elimination end to end: the legacy path
+//! (codec -> owned payload Vec -> `Frame::encode` copies it into the
+//! frame buffer) vs the streamed path (`FrameEncoder` + `encode_into`,
+//! codec output written straight into the frame buffer). Emits
+//! `BENCH_codec.json` at the repo root for the perf trajectory.
 
 use splitfed::bench_util::Bench;
-use splitfed::compress::{
-    quant::QuantBatch, DenseBatch, DenseCodec, L1Codec, Pass, QuantCodec, SparseBatch,
-    SparseCodec,
-};
+use splitfed::compress::{codec_for, Batch, DenseBatch, Pass, QuantBatch, SparseBatch};
+use splitfed::config::Method;
 use splitfed::util::Rng;
+use splitfed::wire::{encode_payload_meta, Frame, FrameEncoder, Message, MsgType};
 
 fn random_sparse(rng: &mut Rng, rows: usize, dim: usize, k: usize) -> SparseBatch {
     let mut values = Vec::new();
@@ -32,13 +38,23 @@ fn main() {
     let mut b = Bench::new("codec");
 
     for (d, k) in [(128usize, 6usize), (600, 14), (1280, 9)] {
-        let codec = SparseCodec::topk(d, k);
-        let batch = random_sparse(&mut rng, rows, d, k);
+        let codec = codec_for(Method::Topk { k }, d).unwrap();
+        let batch = Batch::Sparse(random_sparse(&mut rng, rows, d, k));
         let payload = codec.encode(&batch, Pass::Forward).unwrap();
         let dense_bytes = (rows * d * 4) as u64;
         b.run_bytes(&format!("sparse encode fwd d={d} k={k}"), dense_bytes, || {
             codec.encode(&batch, Pass::Forward).unwrap()
         });
+        // zero-copy path: content streamed into one reused buffer
+        let mut buf = Vec::with_capacity(payload.wire_bytes());
+        b.run_bytes(
+            &format!("sparse encode_into fwd d={d} k={k} (reused buf)"),
+            dense_bytes,
+            || {
+                buf.clear();
+                codec.encode_into(&batch, Pass::Forward, &mut buf).unwrap();
+            },
+        );
         b.run_bytes(&format!("sparse decode fwd d={d} k={k}"), dense_bytes, || {
             codec.decode(&payload, Pass::Forward).unwrap()
         });
@@ -48,10 +64,30 @@ fn main() {
         });
     }
 
+    // the whole-frame comparison the refactor is about: one Activations
+    // frame built with an intermediate payload copy vs streamed
+    {
+        let (d, k) = (1280usize, 9usize);
+        let codec = codec_for(Method::Topk { k }, d).unwrap();
+        let batch = Batch::Sparse(random_sparse(&mut rng, rows, d, k));
+        let dense_bytes = (rows * d * 4) as u64;
+        b.run_bytes(&format!("frame build copy path d={d} k={k}"), dense_bytes, || {
+            let payload = codec.encode(&batch, Pass::Forward).unwrap();
+            Frame::new(0, Message::Activations { step: 7, payload }).encode()
+        });
+        b.run_bytes(&format!("frame build streamed d={d} k={k}"), dense_bytes, || {
+            let mut fe = FrameEncoder::new(0, 0, MsgType::Activations);
+            fe.put_u64(7);
+            encode_payload_meta(fe.body(), &codec.meta(rows, Pass::Forward));
+            codec.encode_into(&batch, Pass::Forward, fe.body()).unwrap();
+            fe.finish()
+        });
+    }
+
     for (d, bits) in [(128usize, 2u8), (1280, 4)] {
-        let codec = QuantCodec::new(d, bits);
+        let codec = codec_for(Method::Quant { bits }, d).unwrap();
         let levels = (1u64 << bits) as f32;
-        let batch = QuantBatch {
+        let batch = Batch::Quant(QuantBatch {
             rows,
             dim: d,
             codes: (0..rows * d)
@@ -59,38 +95,58 @@ fn main() {
                 .collect(),
             o_min: vec![-1.0; rows],
             o_max: vec![1.0; rows],
-        };
-        let payload = codec.encode(&batch).unwrap();
+        });
+        let payload = codec.encode(&batch, Pass::Forward).unwrap();
         let dense_bytes = (rows * d * 4) as u64;
         b.run_bytes(&format!("quant encode d={d} b={bits}"), dense_bytes, || {
-            codec.encode(&batch).unwrap()
+            codec.encode(&batch, Pass::Forward).unwrap()
         });
         b.run_bytes(&format!("quant decode d={d} b={bits}"), dense_bytes, || {
-            codec.decode(&payload).unwrap()
+            codec.decode(&payload, Pass::Forward).unwrap()
         });
     }
 
     for d in [128usize, 1280] {
-        let codec = DenseCodec::new(d);
-        let batch = DenseBatch::new(rows, d, (0..rows * d).map(|_| rng.normal()).collect());
-        let payload = codec.encode(&batch).unwrap();
+        let codec = codec_for(Method::None, d).unwrap();
+        let batch =
+            Batch::Dense(DenseBatch::new(rows, d, (0..rows * d).map(|_| rng.normal()).collect()));
+        let payload = codec.encode(&batch, Pass::Forward).unwrap();
         let bytes = (rows * d * 4) as u64;
-        b.run_bytes(&format!("dense encode d={d}"), bytes, || codec.encode(&batch).unwrap());
-        b.run_bytes(&format!("dense decode d={d}"), bytes, || codec.decode(&payload).unwrap());
+        b.run_bytes(&format!("dense encode d={d}"), bytes, || {
+            codec.encode(&batch, Pass::Forward).unwrap()
+        });
+        let mut buf = Vec::with_capacity(payload.wire_bytes());
+        b.run_bytes(&format!("dense encode_into d={d} (reused buf)"), bytes, || {
+            buf.clear();
+            codec.encode_into(&batch, Pass::Forward, &mut buf).unwrap();
+        });
+        b.run_bytes(&format!("dense decode d={d}"), bytes, || {
+            codec.decode(&payload, Pass::Forward).unwrap()
+        });
     }
 
     {
         let d = 600;
-        let codec = L1Codec::new(d, 1e-4);
+        let codec = codec_for(Method::L1 { lambda: 0.001, eps: 1e-4 }, d).unwrap();
         let data: Vec<f32> = (0..rows * d)
             .map(|_| if rng.next_f32() < 0.05 { rng.normal() } else { 0.0 })
             .collect();
-        let batch = DenseBatch::new(rows, d, data);
-        let payload = codec.encode(&batch).unwrap();
+        let batch = Batch::Dense(DenseBatch::new(rows, d, data));
+        let payload = codec.encode(&batch, Pass::Forward).unwrap();
         let bytes = (rows * d * 4) as u64;
-        b.run_bytes("l1 encode d=600 (5% dense)", bytes, || codec.encode(&batch).unwrap());
-        b.run_bytes("l1 decode d=600 (5% dense)", bytes, || codec.decode(&payload).unwrap());
+        b.run_bytes("l1 encode d=600 (5% dense)", bytes, || {
+            codec.encode(&batch, Pass::Forward).unwrap()
+        });
+        b.run_bytes("l1 decode d=600 (5% dense)", bytes, || {
+            codec.decode(&payload, Pass::Forward).unwrap()
+        });
     }
 
     b.report();
+
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_codec.json");
+    match b.write_json(out) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
 }

@@ -20,7 +20,7 @@ fn main() {
         let meta = engine.manifest.model(model).unwrap().clone();
         let k = meta.k_levels[meta.k_levels.len() / 2];
         let method = Method::RandTopk { k, alpha: 0.1 };
-        let ds = for_model(model, meta.n_classes, 42, 256, 64);
+        let ds = for_model(model, meta.n_classes, 42, 256, 64).unwrap();
         let batch = ds.batch(Split::Train, &(0..meta.batch).collect::<Vec<_>>(), false);
         let (bottom, top) = engine.init_params(model, 1).unwrap();
         let mom_b = engine.zero_momentum(&meta.bottom_shapes).unwrap();

@@ -14,7 +14,7 @@ fn frame_of(bytes: usize) -> Frame {
         1,
         Message::Activations {
             step: 1,
-            payload: Payload::Dense { rows: 32, dim: bytes / 4 / 32, bytes: vec![0xAB; bytes] },
+            payload: Payload::dense(32, bytes / 4 / 32, vec![0xAB; bytes]),
         },
     )
 }

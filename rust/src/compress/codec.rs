@@ -1,0 +1,217 @@
+//! The unified codec surface: one object-safe trait every wire layout
+//! implements, plus the `codec_for` registry that maps a configured
+//! `Method` to its codec.
+//!
+//! The trait encodes the paper's Table 2 semantics *per pass*: a codec
+//! owns both directions of its method, so e.g. `QuantCodec` emits b-bit
+//! codes forward and a dense payload backward — the parties ask for
+//! `Pass::Forward` / `Pass::Backward` and never dispatch on the method
+//! themselves. `encode_into` appends content straight to the caller's
+//! buffer (the frame buffer on the hot path — no intermediate payload
+//! copy; `codec_bench` measures the difference), and
+//! `expected_wire_bytes` pins the exact byte count so the Table 2
+//! analytic model is enforced, not just reported.
+
+use anyhow::{bail, Result};
+
+use crate::config::Method;
+
+use super::{
+    DenseBatch, DenseCodec, L1Codec, Pass, Payload, PayloadMeta, QuantBatch, QuantCodec,
+    SizeModel, SparseBatch, SparseCodec,
+};
+
+/// Codec input/output: the three batch shapes the artifacts produce.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Batch {
+    Dense(DenseBatch),
+    Sparse(SparseBatch),
+    Quant(QuantBatch),
+}
+
+impl Batch {
+    pub fn rows(&self) -> usize {
+        match self {
+            Batch::Dense(b) => b.rows,
+            Batch::Sparse(b) => b.rows,
+            Batch::Quant(b) => b.rows,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            Batch::Dense(b) => b.dim,
+            Batch::Sparse(b) => b.dim,
+            Batch::Quant(b) => b.dim,
+        }
+    }
+}
+
+/// One compression method's wire behaviour, both passes.
+///
+/// Object-safe: the coordinator holds `Box<dyn Codec>` from [`codec_for`]
+/// and every party-side encode/decode is a single trait call.
+pub trait Codec {
+    /// Registry name (diagnostics and bench labels).
+    fn name(&self) -> &'static str;
+
+    /// Analytic Table-2 size model for this codec's geometry.
+    fn size_model(&self) -> SizeModel;
+
+    /// Payload descriptor this codec produces for `rows` rows on `pass`.
+    /// Deterministic from the codec configuration — the framing layer
+    /// writes it before the content is encoded.
+    fn meta(&self, rows: usize, pass: Pass) -> PayloadMeta;
+
+    /// Exact content bytes `encode_into` will append for `rows` rows on
+    /// `pass`; `None` when input-dependent (L1 forward, its point).
+    fn expected_wire_bytes(&self, rows: usize, pass: Pass) -> Option<usize>;
+
+    /// Validate `batch` against the codec geometry and append the payload
+    /// content bytes to `out` (the frame buffer on the hot path).
+    fn encode_into(&self, batch: &Batch, pass: Pass, out: &mut Vec<u8>) -> Result<()>;
+
+    /// Decode a payload, validating geometry and exact content length.
+    fn decode(&self, payload: &Payload, pass: Pass) -> Result<Batch>;
+
+    /// Convenience: encode into an owned `Payload` (tests, cold paths).
+    fn encode(&self, batch: &Batch, pass: Pass) -> Result<Payload> {
+        let mut bytes = Vec::with_capacity(
+            self.expected_wire_bytes(batch.rows(), pass).unwrap_or(0),
+        );
+        self.encode_into(batch, pass, &mut bytes)?;
+        Ok(Payload::new(self.meta(batch.rows(), pass), bytes))
+    }
+}
+
+/// What one session negotiates when it opens a stream: the method and the
+/// cut-layer geometry it will speak. Carried in the `OpenStream` body
+/// (`wire`), validated against the serving model's manifest by the
+/// acceptor before a `LabelOwner` is constructed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CodecSpec {
+    pub method: Method,
+    pub cut_dim: usize,
+}
+
+impl CodecSpec {
+    pub fn new(method: Method, cut_dim: usize) -> Self {
+        CodecSpec { method, cut_dim }
+    }
+
+    /// Build the codec this spec names (validating its parameters).
+    pub fn codec(&self) -> Result<Box<dyn Codec>> {
+        codec_for(self.method, self.cut_dim)
+    }
+}
+
+impl std::fmt::Display for CodecSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} @ d={}", self.method, self.cut_dim)
+    }
+}
+
+/// The codec registry: every configured method maps to exactly one codec.
+/// Rejects parameter/geometry nonsense (k out of range, bad bit widths)
+/// so a negotiated spec is validated in one place.
+pub fn codec_for(method: Method, cut_dim: usize) -> Result<Box<dyn Codec>> {
+    if cut_dim == 0 {
+        bail!("codec registry: cut_dim must be >= 1");
+    }
+    match method {
+        Method::None => Ok(Box::new(DenseCodec::new(cut_dim))),
+        Method::RandTopk { k, .. } | Method::Topk { k } => {
+            check_k(k, cut_dim)?;
+            Ok(Box::new(SparseCodec::topk(cut_dim, k)))
+        }
+        Method::SizeReduction { k } => {
+            check_k(k, cut_dim)?;
+            Ok(Box::new(SparseCodec::size_reduction(cut_dim, k)))
+        }
+        Method::Quant { bits } => {
+            if bits == 0 || bits > 16 {
+                bail!("codec registry: quant bits {bits} outside [1, 16]");
+            }
+            Ok(Box::new(QuantCodec::new(cut_dim, bits)))
+        }
+        Method::L1 { eps, .. } => {
+            if cut_dim > u16::MAX as usize {
+                bail!("codec registry: l1 supports cut_dim <= 65535, got {cut_dim}");
+            }
+            if eps.is_nan() || eps < 0.0 {
+                bail!("codec registry: l1 eps must be >= 0, got {eps}");
+            }
+            Ok(Box::new(L1Codec::new(cut_dim, eps)))
+        }
+    }
+}
+
+fn check_k(k: usize, cut_dim: usize) -> Result<()> {
+    if k == 0 || k > cut_dim {
+        bail!("codec registry: k={k} outside [1, cut_dim={cut_dim}]");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_maps_every_method() {
+        let cases = [
+            ("none", "dense"),
+            ("randtopk:k=6,alpha=0.1", "topk"),
+            ("topk:k=6", "topk"),
+            ("sizered:k=6", "size_reduction"),
+            ("quant:bits=2", "quant"),
+            ("l1:lambda=0.001", "l1"),
+        ];
+        for (spec, name) in cases {
+            let m = Method::parse(spec).unwrap();
+            let c = codec_for(m, 128).unwrap();
+            assert_eq!(c.name(), name, "{spec}");
+        }
+    }
+
+    #[test]
+    fn registry_rejects_bad_parameters() {
+        assert!(codec_for(Method::Topk { k: 0 }, 128).is_err());
+        assert!(codec_for(Method::Topk { k: 129 }, 128).is_err());
+        assert!(codec_for(Method::SizeReduction { k: 200 }, 128).is_err());
+        assert!(codec_for(Method::Quant { bits: 0 }, 128).is_err());
+        assert!(codec_for(Method::Quant { bits: 17 }, 128).is_err());
+        assert!(codec_for(Method::None, 0).is_err());
+        assert!(codec_for(Method::L1 { lambda: 0.1, eps: 1e-4 }, 70_000).is_err());
+        // boundary values are fine
+        assert!(codec_for(Method::Topk { k: 128 }, 128).is_ok());
+        assert!(codec_for(Method::Topk { k: 1 }, 128).is_ok());
+        assert!(codec_for(Method::Quant { bits: 16 }, 128).is_ok());
+    }
+
+    #[test]
+    fn trait_encode_matches_encode_into() {
+        let m = Method::parse("topk:k=3").unwrap();
+        let codec = codec_for(m, 16).unwrap();
+        let batch = Batch::Sparse(SparseBatch {
+            rows: 2,
+            dim: 16,
+            k: 3,
+            values: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            indices: vec![0, 5, 15, 1, 2, 3],
+        });
+        let p = codec.encode(&batch, Pass::Forward).unwrap();
+        let mut streamed = Vec::new();
+        codec.encode_into(&batch, Pass::Forward, &mut streamed).unwrap();
+        assert_eq!(p.bytes, streamed);
+        assert_eq!(p.meta, codec.meta(2, Pass::Forward));
+        assert_eq!(Some(p.bytes.len()), codec.expected_wire_bytes(2, Pass::Forward));
+    }
+
+    #[test]
+    fn spec_display_and_codec() {
+        let spec = CodecSpec::new(Method::parse("quant:bits=4").unwrap(), 128);
+        assert_eq!(spec.to_string(), "quant:bits=4 @ d=128");
+        assert_eq!(spec.codec().unwrap().name(), "quant");
+    }
+}

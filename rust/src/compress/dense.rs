@@ -3,7 +3,7 @@
 
 use anyhow::{bail, Result};
 
-use super::{DenseBatch, Payload};
+use super::{Batch, Codec, DenseBatch, Pass, Payload, PayloadMeta, SizeModel};
 
 #[derive(Clone, Copy, Debug)]
 pub struct DenseCodec {
@@ -14,33 +14,59 @@ impl DenseCodec {
     pub fn new(dim: usize) -> Self {
         DenseCodec { dim }
     }
+}
 
-    pub fn encode(&self, batch: &DenseBatch) -> Result<Payload> {
+impl Codec for DenseCodec {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn size_model(&self) -> SizeModel {
+        SizeModel::Dense
+    }
+
+    fn meta(&self, rows: usize, _pass: Pass) -> PayloadMeta {
+        PayloadMeta::Dense { rows, dim: self.dim }
+    }
+
+    fn expected_wire_bytes(&self, rows: usize, _pass: Pass) -> Option<usize> {
+        Some(rows * self.dim * 4)
+    }
+
+    fn encode_into(&self, batch: &Batch, _pass: Pass, out: &mut Vec<u8>) -> Result<()> {
+        let Batch::Dense(batch) = batch else {
+            bail!("dense codec fed a non-dense batch");
+        };
         if batch.dim != self.dim {
             bail!("dense codec d={} fed batch d={}", self.dim, batch.dim);
         }
-        let mut bytes = Vec::with_capacity(batch.data.len() * 4);
+        out.reserve(batch.data.len() * 4);
         for v in &batch.data {
-            bytes.extend_from_slice(&v.to_le_bytes());
+            out.extend_from_slice(&v.to_le_bytes());
         }
-        Ok(Payload::Dense { rows: batch.rows, dim: self.dim, bytes })
+        Ok(())
     }
 
-    pub fn decode(&self, payload: &Payload) -> Result<DenseBatch> {
-        let Payload::Dense { rows, dim, bytes } = payload else {
+    fn decode(&self, payload: &Payload, _pass: Pass) -> Result<Batch> {
+        let PayloadMeta::Dense { rows, dim } = payload.meta else {
             bail!("payload is not dense");
         };
-        if *dim != self.dim {
+        if dim != self.dim {
             bail!("dense payload geometry mismatch");
         }
-        if bytes.len() != rows * dim * 4 {
-            bail!("dense payload wrong length: {} != {}", bytes.len(), rows * dim * 4);
+        if payload.bytes.len() != rows * dim * 4 {
+            bail!(
+                "dense payload wrong length: {} != {}",
+                payload.bytes.len(),
+                rows * dim * 4
+            );
         }
-        let data = bytes
+        let data = payload
+            .bytes
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        Ok(DenseBatch::new(*rows, *dim, data))
+        Ok(Batch::Dense(DenseBatch::new(rows, dim, data)))
     }
 }
 
@@ -53,17 +79,23 @@ mod tests {
     fn roundtrip() {
         let mut rng = Rng::new(1);
         let codec = DenseCodec::new(300);
-        let batch = DenseBatch::new(8, 300, (0..2400).map(|_| rng.normal()).collect());
-        let p = codec.encode(&batch).unwrap();
+        let batch = Batch::Dense(DenseBatch::new(
+            8,
+            300,
+            (0..2400).map(|_| rng.normal()).collect(),
+        ));
+        let p = codec.encode(&batch, Pass::Forward).unwrap();
         assert_eq!(p.wire_bytes(), 8 * 300 * 4);
         assert!((p.compressed_size_pct() - 100.0).abs() < 1e-9);
-        assert_eq!(codec.decode(&p).unwrap(), batch);
+        assert_eq!(codec.decode(&p, Pass::Forward).unwrap(), batch);
+        // both passes are identical for the dense baseline
+        assert_eq!(codec.meta(8, Pass::Forward), codec.meta(8, Pass::Backward));
     }
 
     #[test]
     fn rejects_wrong_length() {
         let codec = DenseCodec::new(4);
-        let p = Payload::Dense { rows: 2, dim: 4, bytes: vec![0; 31] };
-        assert!(codec.decode(&p).is_err());
+        let p = Payload::dense(2, 4, vec![0; 31]);
+        assert!(codec.decode(&p, Pass::Forward).is_err());
     }
 }

@@ -3,14 +3,15 @@
 //! The sparsity is *induced by training* (the loss carries λ·Σ|o_i|, in
 //! the dense top_fwdbwd artifact); the feature owner then ships only the
 //! entries with |o| > eps. The per-input compressed size therefore varies —
-//! exactly the paper's point about L1 being hard to control (§3.3). The
-//! backward pass is dense (Table 2).
+//! exactly the paper's point about L1 being hard to control (§3.3), and
+//! why `expected_wire_bytes` is `None` for the forward pass. The backward
+//! pass is dense (Table 2).
 
 use anyhow::{bail, Result};
 
 use crate::util::{index_bits, BitReader, BitWriter};
 
-use super::{DenseBatch, Payload};
+use super::{Batch, Codec, DenseBatch, DenseCodec, Pass, Payload, PayloadMeta, SizeModel};
 
 #[derive(Clone, Copy, Debug)]
 pub struct L1Codec {
@@ -23,10 +24,45 @@ impl L1Codec {
     pub fn new(dim: usize, eps: f32) -> Self {
         L1Codec { dim, eps }
     }
+}
 
-    /// Wire layout: per row [count u16][count * f32 values]; then all
-    /// rows' indices bit-packed at ⌈log2 d⌉ bits.
-    pub fn encode(&self, batch: &DenseBatch) -> Result<Payload> {
+impl Codec for L1Codec {
+    fn name(&self) -> &'static str {
+        "l1"
+    }
+
+    fn size_model(&self) -> SizeModel {
+        // forward size is emergent (k_mean only known after measuring);
+        // the backward fraction (dense = 1) is what this model pins
+        SizeModel::L1 { d: self.dim, k_mean: 0.0 }
+    }
+
+    fn meta(&self, rows: usize, pass: Pass) -> PayloadMeta {
+        match pass {
+            Pass::Forward => PayloadMeta::VarSparse { rows, dim: self.dim },
+            Pass::Backward => PayloadMeta::Dense { rows, dim: self.dim },
+        }
+    }
+
+    fn expected_wire_bytes(&self, rows: usize, pass: Pass) -> Option<usize> {
+        match pass {
+            // input-dependent: depends on how many entries exceed eps
+            Pass::Forward => None,
+            Pass::Backward => Some(rows * self.dim * 4),
+        }
+    }
+
+    /// Forward wire layout: per row [count u16][count * f32 values]; then
+    /// all rows' indices bit-packed at ⌈log2 d⌉ bits.
+    fn encode_into(&self, batch: &Batch, pass: Pass, out: &mut Vec<u8>) -> Result<()> {
+        // Table 2: the gradient travels dense — delegate to the one
+        // implementation of the dense wire layout
+        if pass == Pass::Backward {
+            return DenseCodec::new(self.dim).encode_into(batch, pass, out);
+        }
+        let Batch::Dense(batch) = batch else {
+            bail!("l1 codec fed a non-dense batch");
+        };
         if batch.dim != self.dim {
             bail!("l1 codec d={} fed batch d={}", self.dim, batch.dim);
         }
@@ -34,68 +70,89 @@ impl L1Codec {
             bail!("l1 codec supports d <= 65535");
         }
         let nbits = index_bits(self.dim);
-        let mut bytes = Vec::new();
         let mut w = BitWriter::new();
         for r in 0..batch.rows {
             let row = batch.row(r);
             let nz: Vec<usize> = (0..self.dim).filter(|&j| row[j].abs() > self.eps).collect();
-            bytes.extend_from_slice(&(nz.len() as u16).to_le_bytes());
+            out.extend_from_slice(&(nz.len() as u16).to_le_bytes());
             for &j in &nz {
-                bytes.extend_from_slice(&row[j].to_le_bytes());
+                out.extend_from_slice(&row[j].to_le_bytes());
                 w.write(j as u64, nbits);
             }
         }
-        bytes.extend_from_slice(&w.into_bytes());
-        Ok(Payload::VarSparse { rows: batch.rows, dim: self.dim, bytes })
+        out.extend_from_slice(&w.into_bytes());
+        Ok(())
     }
 
-    pub fn decode(&self, payload: &Payload) -> Result<DenseBatch> {
-        let Payload::VarSparse { rows, dim, bytes } = payload else {
-            bail!("payload is not var-sparse");
-        };
-        if *dim != self.dim {
-            bail!("l1 payload geometry mismatch");
-        }
-        // first scan: counts + values section
-        let mut counts = Vec::with_capacity(*rows);
-        let mut values: Vec<Vec<f32>> = Vec::with_capacity(*rows);
-        let mut pos = 0usize;
-        for _ in 0..*rows {
-            if pos + 2 > bytes.len() {
-                bail!("l1 payload truncated counts");
-            }
-            let c = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]) as usize;
-            pos += 2;
-            if c > self.dim {
-                bail!("l1 row count {c} > d");
-            }
-            if pos + 4 * c > bytes.len() {
-                bail!("l1 payload truncated values");
-            }
-            let vals = bytes[pos..pos + 4 * c]
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                .collect();
-            pos += 4 * c;
-            counts.push(c);
-            values.push(vals);
-        }
-        let nbits = index_bits(self.dim);
-        let mut reader = BitReader::new(&bytes[pos..]);
-        let mut out = DenseBatch::zeros(*rows, self.dim);
-        for r in 0..*rows {
-            for v in &values[r] {
-                let Some(j) = reader.read(nbits) else {
-                    bail!("l1 payload truncated indices");
+    fn decode(&self, payload: &Payload, pass: Pass) -> Result<Batch> {
+        match pass {
+            Pass::Forward => {
+                let PayloadMeta::VarSparse { rows, dim } = payload.meta else {
+                    bail!("payload is not var-sparse");
                 };
-                let j = j as usize;
-                if j >= self.dim {
-                    bail!("l1 decoded index {j} out of range");
+                if dim != self.dim {
+                    bail!("l1 payload geometry mismatch");
                 }
-                out.data[r * self.dim + j] = *v;
+                let bytes = &payload.bytes;
+                // cheap upfront bound before sizing any allocation by the
+                // wire-supplied `rows`: every row costs at least its 2-byte
+                // count, so a huge claimed row count cannot force a huge
+                // Vec reservation off a tiny frame
+                if bytes.len() < rows * 2 {
+                    bail!("l1 payload truncated counts");
+                }
+                // first scan: counts + values section
+                let mut values: Vec<Vec<f32>> = Vec::with_capacity(rows);
+                let mut total_nz = 0usize;
+                let mut pos = 0usize;
+                for _ in 0..rows {
+                    if pos + 2 > bytes.len() {
+                        bail!("l1 payload truncated counts");
+                    }
+                    let c = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]) as usize;
+                    pos += 2;
+                    if c > self.dim {
+                        bail!("l1 row count {c} > d");
+                    }
+                    if pos + 4 * c > bytes.len() {
+                        bail!("l1 payload truncated values");
+                    }
+                    let vals = bytes[pos..pos + 4 * c]
+                        .chunks_exact(4)
+                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect();
+                    pos += 4 * c;
+                    total_nz += c;
+                    values.push(vals);
+                }
+                let nbits = index_bits(self.dim);
+                // exact-length contract: the index section is the remainder
+                let index_bytes = (total_nz * nbits as usize).div_ceil(8);
+                if bytes.len() != pos + index_bytes {
+                    bail!(
+                        "l1 payload wrong length: {} != {}",
+                        bytes.len(),
+                        pos + index_bytes
+                    );
+                }
+                let mut reader = BitReader::new(&bytes[pos..]);
+                let mut out = DenseBatch::zeros(rows, self.dim);
+                for (r, row_vals) in values.iter().enumerate() {
+                    for v in row_vals {
+                        let Some(j) = reader.read(nbits) else {
+                            bail!("l1 payload truncated indices");
+                        };
+                        let j = j as usize;
+                        if j >= self.dim {
+                            bail!("l1 decoded index {j} out of range");
+                        }
+                        out.data[r * self.dim + j] = *v;
+                    }
+                }
+                Ok(Batch::Dense(out))
             }
+            Pass::Backward => DenseCodec::new(self.dim).decode(payload, pass),
         }
-        Ok(out)
     }
 }
 
@@ -121,18 +178,20 @@ mod tests {
     fn roundtrip_preserves_above_eps() {
         let mut rng = Rng::new(1);
         let codec = L1Codec::new(600, 1e-6);
-        let batch = sparse_dense(&mut rng, 16, 600, 0.05);
-        let p = codec.encode(&batch).unwrap();
-        let back = codec.decode(&p).unwrap();
+        let batch = Batch::Dense(sparse_dense(&mut rng, 16, 600, 0.05));
+        let p = codec.encode(&batch, Pass::Forward).unwrap();
+        let back = codec.decode(&p, Pass::Forward).unwrap();
         assert_eq!(back, batch);
     }
 
     #[test]
     fn thresholding_zeroes_small_entries() {
         let codec = L1Codec::new(4, 0.1);
-        let batch = DenseBatch::new(1, 4, vec![0.05, -0.5, 0.0, 0.2]);
-        let p = codec.encode(&batch).unwrap();
-        let back = codec.decode(&p).unwrap();
+        let batch = Batch::Dense(DenseBatch::new(1, 4, vec![0.05, -0.5, 0.0, 0.2]));
+        let p = codec.encode(&batch, Pass::Forward).unwrap();
+        let Batch::Dense(back) = codec.decode(&p, Pass::Forward).unwrap() else {
+            panic!("expected dense batch");
+        };
         assert_eq!(back.row(0), &[0.0, -0.5, 0.0, 0.2]);
     }
 
@@ -140,29 +199,48 @@ mod tests {
     fn size_scales_with_density() {
         let mut rng = Rng::new(2);
         let codec = L1Codec::new(512, 1e-6);
-        let p1 = codec.encode(&sparse_dense(&mut rng, 32, 512, 0.02)).unwrap();
-        let p2 = codec.encode(&sparse_dense(&mut rng, 32, 512, 0.2)).unwrap();
+        let p1 = codec
+            .encode(&Batch::Dense(sparse_dense(&mut rng, 32, 512, 0.02)), Pass::Forward)
+            .unwrap();
+        let p2 = codec
+            .encode(&Batch::Dense(sparse_dense(&mut rng, 32, 512, 0.2)), Pass::Forward)
+            .unwrap();
         assert!(p2.wire_bytes() > 5 * p1.wire_bytes());
+        // the forward size is emergent — the codec cannot predict it
+        assert_eq!(codec.expected_wire_bytes(32, Pass::Forward), None);
+    }
+
+    #[test]
+    fn backward_pass_is_dense() {
+        let mut rng = Rng::new(7);
+        let codec = L1Codec::new(32, 1e-4);
+        let dense = DenseBatch::new(4, 32, (0..128).map(|_| rng.normal()).collect());
+        let p = codec.encode(&Batch::Dense(dense.clone()), Pass::Backward).unwrap();
+        assert_eq!(p.wire_bytes(), 4 * 32 * 4);
+        assert_eq!(codec.expected_wire_bytes(4, Pass::Backward), Some(4 * 32 * 4));
+        // backward does NOT threshold: the gradient arrives exactly
+        assert_eq!(codec.decode(&p, Pass::Backward).unwrap(), Batch::Dense(dense));
     }
 
     #[test]
     fn empty_rows_ok() {
         let codec = L1Codec::new(32, 1e-6);
-        let batch = DenseBatch::zeros(4, 32);
-        let p = codec.encode(&batch).unwrap();
+        let batch = Batch::Dense(DenseBatch::zeros(4, 32));
+        let p = codec.encode(&batch, Pass::Forward).unwrap();
         // 4 rows * 2-byte count only
         assert_eq!(p.wire_bytes(), 8);
-        assert_eq!(codec.decode(&p).unwrap(), batch);
+        assert_eq!(codec.decode(&p, Pass::Forward).unwrap(), batch);
     }
 
     #[test]
     fn truncated_rejected() {
         let mut rng = Rng::new(3);
         let codec = L1Codec::new(64, 1e-6);
-        let p = codec.encode(&sparse_dense(&mut rng, 4, 64, 0.3)).unwrap();
-        if let Payload::VarSparse { rows, dim, bytes } = p {
-            let cut = Payload::VarSparse { rows, dim, bytes: bytes[..6].to_vec() };
-            assert!(codec.decode(&cut).is_err());
-        }
+        let p = codec
+            .encode(&Batch::Dense(sparse_dense(&mut rng, 4, 64, 0.3)), Pass::Forward)
+            .unwrap();
+        let mut cut = p;
+        cut.bytes.truncate(6);
+        assert!(codec.decode(&cut, Pass::Forward).is_err());
     }
 }

@@ -3,17 +3,25 @@
 //! Every method compresses a batch of per-instance vectors independently
 //! ("instance level", §3): the wire payload concatenates the rows. The
 //! measured payload sizes must match the paper's Table 2 analytic model —
-//! `size_model` carries those formulas and the unit tests cross-check.
+//! `size_model` carries those formulas and `codec::Codec::expected_wire_bytes`
+//! plus the roundtrip fuzz tests cross-check them against real wire bytes.
+//!
+//! All codecs are reached through the object-safe [`Codec`] trait and the
+//! [`codec_for`] registry — the coordinator parties never name a concrete
+//! codec type, so a new wire layout is one new `impl Codec` plus a registry
+//! arm, touching neither party.
 
+pub mod codec;
 pub mod dense;
 pub mod l1;
 pub mod quant;
 pub mod size_model;
 pub mod sparse;
 
+pub use codec::{codec_for, Batch, Codec, CodecSpec};
 pub use dense::DenseCodec;
 pub use l1::L1Codec;
-pub use quant::QuantCodec;
+pub use quant::{QuantBatch, QuantCodec};
 pub use size_model::SizeModel;
 pub use sparse::SparseCodec;
 
@@ -73,57 +81,70 @@ pub enum Pass {
     Backward,
 }
 
-/// What travels on the wire after compression.
-#[derive(Clone, Debug, PartialEq)]
-pub enum Payload {
+/// Payload descriptor: which wire layout the content bytes use, plus its
+/// geometry. Kept separate from the content so the framing layer can write
+/// it ahead of codec output that streams straight into the frame buffer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PayloadMeta {
     /// values (+ bit-packed indices on the forward pass).
-    Sparse {
-        rows: usize,
-        dim: usize,
-        k: usize,
-        bytes: Vec<u8>,
-        with_indices: bool,
-    },
+    Sparse { rows: usize, dim: usize, k: usize, with_indices: bool },
     /// b-bit packed codes + per-row (min, max) header.
-    Quantized {
-        rows: usize,
-        dim: usize,
-        bits: u8,
-        bytes: Vec<u8>,
-    },
+    Quantized { rows: usize, dim: usize, bits: u8 },
     /// raw f32 rows.
-    Dense {
-        rows: usize,
-        dim: usize,
-        bytes: Vec<u8>,
-    },
+    Dense { rows: usize, dim: usize },
     /// variable-k sparse (L1): per-row counts + values + packed indices.
-    VarSparse {
-        rows: usize,
-        dim: usize,
-        bytes: Vec<u8>,
-    },
+    VarSparse { rows: usize, dim: usize },
+}
+
+impl PayloadMeta {
+    /// (rows, dim) of the batch this payload carries.
+    pub fn geometry(&self) -> (usize, usize) {
+        match *self {
+            PayloadMeta::Sparse { rows, dim, .. }
+            | PayloadMeta::Quantized { rows, dim, .. }
+            | PayloadMeta::Dense { rows, dim }
+            | PayloadMeta::VarSparse { rows, dim } => (rows, dim),
+        }
+    }
+}
+
+/// What travels on the wire after compression: a descriptor plus the
+/// codec's content bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Payload {
+    pub meta: PayloadMeta,
+    pub bytes: Vec<u8>,
 }
 
 impl Payload {
+    pub fn new(meta: PayloadMeta, bytes: Vec<u8>) -> Self {
+        Payload { meta, bytes }
+    }
+
+    pub fn sparse(rows: usize, dim: usize, k: usize, with_indices: bool, bytes: Vec<u8>) -> Self {
+        Payload::new(PayloadMeta::Sparse { rows, dim, k, with_indices }, bytes)
+    }
+
+    pub fn quantized(rows: usize, dim: usize, bits: u8, bytes: Vec<u8>) -> Self {
+        Payload::new(PayloadMeta::Quantized { rows, dim, bits }, bytes)
+    }
+
+    pub fn dense(rows: usize, dim: usize, bytes: Vec<u8>) -> Self {
+        Payload::new(PayloadMeta::Dense { rows, dim }, bytes)
+    }
+
+    pub fn var_sparse(rows: usize, dim: usize, bytes: Vec<u8>) -> Self {
+        Payload::new(PayloadMeta::VarSparse { rows, dim }, bytes)
+    }
+
     /// Bytes actually sent for the tensor content (excluding framing).
     pub fn wire_bytes(&self) -> usize {
-        match self {
-            Payload::Sparse { bytes, .. }
-            | Payload::Quantized { bytes, .. }
-            | Payload::Dense { bytes, .. }
-            | Payload::VarSparse { bytes, .. } => bytes.len(),
-        }
+        self.bytes.len()
     }
 
     /// Uncompressed reference size (rows * dim * 4), the paper's "100".
     pub fn dense_reference_bytes(&self) -> usize {
-        let (rows, dim) = match self {
-            Payload::Sparse { rows, dim, .. }
-            | Payload::Quantized { rows, dim, .. }
-            | Payload::Dense { rows, dim, .. }
-            | Payload::VarSparse { rows, dim, .. } => (*rows, *dim),
-        };
+        let (rows, dim) = self.meta.geometry();
         rows * dim * 4
     }
 

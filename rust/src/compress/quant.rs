@@ -1,14 +1,16 @@
 //! Quantization codec: b-bit packed codes + per-row (min, max) f32 header.
 //!
 //! The quantize/dequantize math itself runs in-graph (L1 kernel, paper
-//! Eq. 2); this codec only packs the integer codes for the wire. Backward
-//! is dense (paper Table 2: gradient quantization hurts too much, §3.1).
+//! Eq. 2); this codec only packs the integer codes for the wire. The
+//! backward pass is dense (paper Table 2: gradient quantization hurts too
+//! much, §3.1) — the codec owns both directions, so `Pass::Backward`
+//! expects/produces a dense batch.
 
 use anyhow::{bail, Result};
 
 use crate::util::{BitReader, BitWriter};
 
-use super::{DenseBatch, Payload};
+use super::{Batch, Codec, DenseBatch, DenseCodec, Pass, Payload, PayloadMeta, SizeModel};
 
 /// Codes batch as produced by the `quant_b*` bottom_fwd artifact: f32
 /// tensors holding integers in [0, 2^bits) plus per-row min/max.
@@ -30,77 +32,13 @@ pub struct QuantCodec {
 
 impl QuantCodec {
     pub fn new(dim: usize, bits: u8) -> Self {
-        assert!(bits >= 1 && bits <= 16);
+        assert!((1..=16).contains(&bits));
         QuantCodec { dim, bits }
     }
 
-    /// Wire layout: per row [min f32, max f32]; then all codes bit-packed.
-    pub fn encode(&self, batch: &QuantBatch) -> Result<Payload> {
-        if batch.dim != self.dim {
-            bail!("quant codec d={} fed batch d={}", self.dim, batch.dim);
-        }
-        if batch.codes.len() != batch.rows * batch.dim
-            || batch.o_min.len() != batch.rows
-            || batch.o_max.len() != batch.rows
-        {
-            bail!("quant batch geometry inconsistent");
-        }
-        let mut bytes = Vec::with_capacity(batch.rows * 8 + batch.codes.len() * self.bits as usize / 8 + 8);
-        for r in 0..batch.rows {
-            bytes.extend_from_slice(&batch.o_min[r].to_le_bytes());
-            bytes.extend_from_slice(&batch.o_max[r].to_le_bytes());
-        }
-        let max_code = (1u64 << self.bits) - 1;
-        let mut w = BitWriter::with_capacity_bits(batch.codes.len() * self.bits as usize);
-        for &c in &batch.codes {
-            let ci = c as i64;
-            if ci < 0 || ci as u64 > max_code {
-                bail!("code {c} out of range for {} bits", self.bits);
-            }
-            w.write(ci as u64, self.bits as u32);
-        }
-        bytes.extend_from_slice(&w.into_bytes());
-        Ok(Payload::Quantized {
-            rows: batch.rows,
-            dim: self.dim,
-            bits: self.bits,
-            bytes,
-        })
-    }
-
-    pub fn decode(&self, payload: &Payload) -> Result<QuantBatch> {
-        let Payload::Quantized { rows, dim, bits, bytes } = payload else {
-            bail!("payload is not quantized");
-        };
-        if *dim != self.dim || *bits != self.bits {
-            bail!("quant payload geometry mismatch");
-        }
-        let header = rows * 8;
-        if bytes.len() < header {
-            bail!("quant payload truncated header");
-        }
-        let mut o_min = Vec::with_capacity(*rows);
-        let mut o_max = Vec::with_capacity(*rows);
-        for r in 0..*rows {
-            let b = &bytes[r * 8..r * 8 + 8];
-            o_min.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
-            o_max.push(f32::from_le_bytes([b[4], b[5], b[6], b[7]]));
-        }
-        let mut reader = BitReader::new(&bytes[header..]);
-        let mut codes = Vec::with_capacity(rows * dim);
-        for _ in 0..rows * dim {
-            let Some(v) = reader.read(self.bits as u32) else {
-                bail!("quant payload truncated codes");
-            };
-            codes.push(v as f32);
-        }
-        Ok(QuantBatch {
-            rows: *rows,
-            dim: *dim,
-            codes,
-            o_min,
-            o_max,
-        })
+    /// Forward content: per row [min f32, max f32]; then all codes packed.
+    fn forward_bytes(&self, rows: usize) -> usize {
+        rows * 8 + (rows * self.dim * self.bits as usize).div_ceil(8)
     }
 
     /// Dequantize to a dense batch (bin midpoints, Eq. 2) — used by
@@ -116,6 +54,107 @@ impl QuantCodec {
             }
         }
         DenseBatch::new(batch.rows, batch.dim, data)
+    }
+}
+
+impl Codec for QuantCodec {
+    fn name(&self) -> &'static str {
+        "quant"
+    }
+
+    fn size_model(&self) -> SizeModel {
+        SizeModel::quant(self.dim, self.bits as usize)
+    }
+
+    fn meta(&self, rows: usize, pass: Pass) -> PayloadMeta {
+        match pass {
+            Pass::Forward => PayloadMeta::Quantized { rows, dim: self.dim, bits: self.bits },
+            Pass::Backward => PayloadMeta::Dense { rows, dim: self.dim },
+        }
+    }
+
+    fn expected_wire_bytes(&self, rows: usize, pass: Pass) -> Option<usize> {
+        Some(match pass {
+            Pass::Forward => self.forward_bytes(rows),
+            Pass::Backward => rows * self.dim * 4,
+        })
+    }
+
+    fn encode_into(&self, batch: &Batch, pass: Pass, out: &mut Vec<u8>) -> Result<()> {
+        match pass {
+            Pass::Forward => {
+                let Batch::Quant(batch) = batch else {
+                    bail!("quant codec fed a non-quant batch on the forward pass");
+                };
+                if batch.dim != self.dim {
+                    bail!("quant codec d={} fed batch d={}", self.dim, batch.dim);
+                }
+                if batch.codes.len() != batch.rows * batch.dim
+                    || batch.o_min.len() != batch.rows
+                    || batch.o_max.len() != batch.rows
+                {
+                    bail!("quant batch geometry inconsistent");
+                }
+                out.reserve(self.forward_bytes(batch.rows));
+                for r in 0..batch.rows {
+                    out.extend_from_slice(&batch.o_min[r].to_le_bytes());
+                    out.extend_from_slice(&batch.o_max[r].to_le_bytes());
+                }
+                let max_code = (1u64 << self.bits) - 1;
+                let mut w = BitWriter::with_capacity_bits(batch.codes.len() * self.bits as usize);
+                for &c in &batch.codes {
+                    let ci = c as i64;
+                    if ci < 0 || ci as u64 > max_code {
+                        bail!("code {c} out of range for {} bits", self.bits);
+                    }
+                    w.write(ci as u64, self.bits as u32);
+                }
+                out.extend_from_slice(&w.into_bytes());
+                Ok(())
+            }
+            // Table 2: the gradient travels dense — delegate to the one
+            // implementation of the dense wire layout
+            Pass::Backward => DenseCodec::new(self.dim).encode_into(batch, pass, out),
+        }
+    }
+
+    fn decode(&self, payload: &Payload, pass: Pass) -> Result<Batch> {
+        match pass {
+            Pass::Forward => {
+                let PayloadMeta::Quantized { rows, dim, bits } = payload.meta else {
+                    bail!("payload is not quantized");
+                };
+                if dim != self.dim || bits != self.bits {
+                    bail!("quant payload geometry mismatch");
+                }
+                if payload.bytes.len() != self.forward_bytes(rows) {
+                    bail!(
+                        "quant payload wrong length: {} != {}",
+                        payload.bytes.len(),
+                        self.forward_bytes(rows)
+                    );
+                }
+                let bytes = &payload.bytes;
+                let header = rows * 8;
+                let mut o_min = Vec::with_capacity(rows);
+                let mut o_max = Vec::with_capacity(rows);
+                for r in 0..rows {
+                    let b = &bytes[r * 8..r * 8 + 8];
+                    o_min.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+                    o_max.push(f32::from_le_bytes([b[4], b[5], b[6], b[7]]));
+                }
+                let mut reader = BitReader::new(&bytes[header..]);
+                let mut codes = Vec::with_capacity(rows * dim);
+                for _ in 0..rows * dim {
+                    let Some(v) = reader.read(self.bits as u32) else {
+                        bail!("quant payload truncated codes");
+                    };
+                    codes.push(v as f32);
+                }
+                Ok(Batch::Quant(QuantBatch { rows, dim, codes, o_min, o_max }))
+            }
+            Pass::Backward => DenseCodec::new(self.dim).decode(payload, pass),
+        }
     }
 }
 
@@ -143,11 +182,27 @@ mod tests {
         let mut rng = Rng::new(1);
         for bits in [1u8, 2, 4, 8] {
             let codec = QuantCodec::new(128, bits);
-            let batch = random_quant(&mut rng, 16, 128, bits);
-            let p = codec.encode(&batch).unwrap();
-            let back = codec.decode(&p).unwrap();
+            let batch = Batch::Quant(random_quant(&mut rng, 16, 128, bits));
+            let p = codec.encode(&batch, Pass::Forward).unwrap();
+            assert_eq!(p.wire_bytes(), codec.expected_wire_bytes(16, Pass::Forward).unwrap());
+            let back = codec.decode(&p, Pass::Forward).unwrap();
             assert_eq!(batch, back, "bits={bits}");
         }
+    }
+
+    #[test]
+    fn backward_pass_is_dense() {
+        let mut rng = Rng::new(9);
+        let codec = QuantCodec::new(32, 2);
+        let dense = DenseBatch::new(4, 32, (0..128).map(|_| rng.normal()).collect());
+        let p = codec.encode(&Batch::Dense(dense.clone()), Pass::Backward).unwrap();
+        assert_eq!(p.wire_bytes(), 4 * 32 * 4);
+        assert_eq!(p.meta, PayloadMeta::Dense { rows: 4, dim: 32 });
+        let back = codec.decode(&p, Pass::Backward).unwrap();
+        assert_eq!(back, Batch::Dense(dense));
+        // a quant batch on the backward pass is a caller bug
+        let q = random_quant(&mut rng, 4, 32, 2);
+        assert!(codec.encode(&Batch::Quant(q), Pass::Backward).is_err());
     }
 
     #[test]
@@ -158,8 +213,8 @@ mod tests {
         for bits in [2u8, 4] {
             let (rows, dim) = (32, 1024);
             let codec = QuantCodec::new(dim, bits);
-            let batch = random_quant(&mut rng, rows, dim, bits);
-            let p = codec.encode(&batch).unwrap();
+            let batch = Batch::Quant(random_quant(&mut rng, rows, dim, bits));
+            let p = codec.encode(&batch, Pass::Forward).unwrap();
             let analytic =
                 SizeModel::quant(dim, bits as usize).forward_fraction() * (rows * dim * 4) as f64;
             let measured = (p.wire_bytes() - rows * 8) as f64; // codes only
@@ -180,7 +235,7 @@ mod tests {
             o_min: vec![0.0],
             o_max: vec![1.0],
         };
-        assert!(codec.encode(&batch).is_err());
+        assert!(codec.encode(&Batch::Quant(batch), Pass::Forward).is_err());
     }
 
     #[test]
@@ -201,16 +256,10 @@ mod tests {
     fn truncated_payload_rejected() {
         let mut rng = Rng::new(3);
         let codec = QuantCodec::new(64, 4);
-        let batch = random_quant(&mut rng, 4, 64, 4);
-        let p = codec.encode(&batch).unwrap();
-        if let Payload::Quantized { rows, dim, bits, bytes } = p {
-            let cut = Payload::Quantized {
-                rows,
-                dim,
-                bits,
-                bytes: bytes[..10].to_vec(),
-            };
-            assert!(codec.decode(&cut).is_err());
-        }
+        let batch = Batch::Quant(random_quant(&mut rng, 4, 64, 4));
+        let p = codec.encode(&batch, Pass::Forward).unwrap();
+        let mut cut = p;
+        cut.bytes.truncate(10);
+        assert!(codec.decode(&cut, Pass::Forward).is_err());
     }
 }

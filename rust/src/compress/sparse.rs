@@ -8,7 +8,7 @@ use anyhow::{bail, Result};
 
 use crate::util::{index_bits, BitReader, BitWriter};
 
-use super::{Pass, Payload, SparseBatch};
+use super::{Batch, Codec, Pass, Payload, PayloadMeta, SizeModel, SparseBatch};
 
 /// Wire layout: per row, k f32 LE values; then (forward only) all rows'
 /// indices bit-packed at ⌈log2 d⌉ bits each, padded to a byte boundary.
@@ -33,19 +33,76 @@ impl SparseCodec {
         self.send_indices && pass == Pass::Forward
     }
 
-    pub fn encode(&self, batch: &SparseBatch, pass: Pass) -> Result<Payload> {
+    /// Exact content length: values, plus the packed index section when
+    /// indices travel on this pass.
+    fn content_bytes(&self, rows: usize, pass: Pass) -> usize {
+        let vals = rows * self.k * 4;
+        if self.with_indices(pass) {
+            vals + (rows * self.k * index_bits(self.dim) as usize).div_ceil(8)
+        } else {
+            vals
+        }
+    }
+
+    fn check_batch(&self, batch: &SparseBatch) -> Result<()> {
         if batch.k != self.k || batch.dim != self.dim {
             bail!(
                 "sparse codec (d={}, k={}) fed batch (d={}, k={})",
                 self.dim, self.k, batch.dim, batch.k
             );
         }
-        let with_indices = self.with_indices(pass);
-        let mut bytes = Vec::with_capacity(batch.values.len() * 4);
-        for v in &batch.values {
-            bytes.extend_from_slice(&v.to_le_bytes());
+        let n = batch.rows * self.k;
+        if batch.values.len() != n || batch.indices.len() != n {
+            bail!(
+                "sparse batch arity mismatch: {} values / {} indices for rows*k={n}",
+                batch.values.len(),
+                batch.indices.len()
+            );
         }
-        if with_indices {
+        Ok(())
+    }
+}
+
+impl Codec for SparseCodec {
+    fn name(&self) -> &'static str {
+        if self.send_indices {
+            "topk"
+        } else {
+            "size_reduction"
+        }
+    }
+
+    fn size_model(&self) -> SizeModel {
+        if self.send_indices {
+            SizeModel::topk(self.dim, self.k)
+        } else {
+            SizeModel::size_reduction(self.dim, self.k)
+        }
+    }
+
+    fn meta(&self, rows: usize, pass: Pass) -> PayloadMeta {
+        PayloadMeta::Sparse {
+            rows,
+            dim: self.dim,
+            k: self.k,
+            with_indices: self.with_indices(pass),
+        }
+    }
+
+    fn expected_wire_bytes(&self, rows: usize, pass: Pass) -> Option<usize> {
+        Some(self.content_bytes(rows, pass))
+    }
+
+    fn encode_into(&self, batch: &Batch, pass: Pass, out: &mut Vec<u8>) -> Result<()> {
+        let Batch::Sparse(batch) = batch else {
+            bail!("sparse codec fed a non-sparse batch");
+        };
+        self.check_batch(batch)?;
+        out.reserve(self.content_bytes(batch.rows, pass));
+        for v in &batch.values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        if self.with_indices(pass) {
             let nbits = index_bits(self.dim);
             let mut w = BitWriter::with_capacity_bits(batch.indices.len() * nbits as usize);
             for &i in &batch.indices {
@@ -54,37 +111,33 @@ impl SparseCodec {
                 }
                 w.write(i as u64, nbits);
             }
-            bytes.extend_from_slice(&w.into_bytes());
+            out.extend_from_slice(&w.into_bytes());
         }
-        Ok(Payload::Sparse {
-            rows: batch.rows,
-            dim: self.dim,
-            k: self.k,
-            bytes,
-            with_indices,
-        })
+        Ok(())
     }
 
-    pub fn decode(&self, payload: &Payload, pass: Pass) -> Result<SparseBatch> {
-        let Payload::Sparse { rows, dim, k, bytes, with_indices } = payload else {
+    fn decode(&self, payload: &Payload, pass: Pass) -> Result<Batch> {
+        let PayloadMeta::Sparse { rows, dim, k, with_indices } = payload.meta else {
             bail!("payload is not sparse");
         };
-        if *dim != self.dim || *k != self.k {
+        if dim != self.dim || k != self.k {
             bail!("sparse payload geometry mismatch");
         }
-        if *with_indices != self.with_indices(pass) {
+        if with_indices != self.with_indices(pass) {
             bail!("sparse payload index presence mismatch for {pass:?}");
+        }
+        let expect = self.content_bytes(rows, pass);
+        if payload.bytes.len() != expect {
+            bail!("sparse payload wrong length: {} != {expect}", payload.bytes.len());
         }
         let n = rows * k;
         let val_bytes = n * 4;
-        if bytes.len() < val_bytes {
-            bail!("sparse payload truncated: {} < {}", bytes.len(), val_bytes);
-        }
+        let bytes = &payload.bytes;
         let mut values = Vec::with_capacity(n);
         for c in bytes[..val_bytes].chunks_exact(4) {
             values.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
         }
-        let indices = if *with_indices {
+        let indices = if with_indices {
             let nbits = index_bits(self.dim);
             let mut r = BitReader::new(&bytes[val_bytes..]);
             let mut out = Vec::with_capacity(n);
@@ -100,17 +153,15 @@ impl SparseCodec {
             out
         } else {
             // size reduction (or backward pass): indices are implicit 0..k
-            (0..*rows)
-                .flat_map(|_| (0..self.k as i32))
-                .collect()
+            (0..rows).flat_map(|_| (0..self.k as i32)).collect()
         };
-        Ok(SparseBatch {
-            rows: *rows,
+        Ok(Batch::Sparse(SparseBatch {
+            rows,
             dim: self.dim,
             k: self.k,
             values,
             indices,
-        })
+        }))
     }
 }
 
@@ -142,9 +193,9 @@ mod tests {
         for (dim, k) in [(128, 3), (128, 13), (300, 2), (600, 14), (1280, 9), (16, 16)] {
             let codec = SparseCodec::topk(dim, k);
             let batch = random_sparse(&mut rng, 32, dim, k);
-            let p = codec.encode(&batch, Pass::Forward).unwrap();
+            let p = codec.encode(&Batch::Sparse(batch.clone()), Pass::Forward).unwrap();
             let back = codec.decode(&p, Pass::Forward).unwrap();
-            assert_eq!(batch, back, "d={dim} k={k}");
+            assert_eq!(Batch::Sparse(batch), back, "d={dim} k={k}");
         }
     }
 
@@ -153,10 +204,13 @@ mod tests {
         let mut rng = Rng::new(2);
         let codec = SparseCodec::topk(128, 6);
         let mut batch = random_sparse(&mut rng, 8, 128, 6);
-        let p = codec.encode(&batch, Pass::Backward).unwrap();
+        let p = codec.encode(&Batch::Sparse(batch.clone()), Pass::Backward).unwrap();
         // backward payload must be exactly rows*k*4 bytes — no indices
         assert_eq!(p.wire_bytes(), 8 * 6 * 4);
-        let back = codec.decode(&p, Pass::Backward).unwrap();
+        assert_eq!(codec.expected_wire_bytes(8, Pass::Backward), Some(8 * 6 * 4));
+        let Batch::Sparse(back) = codec.decode(&p, Pass::Backward).unwrap() else {
+            panic!("expected sparse batch");
+        };
         assert_eq!(back.values, batch.values);
         // decoded indices are the implicit 0..k (receiver rewires by its own
         // cached indices, see coordinator::feature_owner)
@@ -172,13 +226,15 @@ mod tests {
             let mut rng = Rng::new(3);
             let rows = 32;
             let batch = random_sparse(&mut rng, rows, dim, k);
-            let p = codec.encode(&batch, Pass::Forward).unwrap();
+            let p = codec.encode(&Batch::Sparse(batch), Pass::Forward).unwrap();
             let analytic = SizeModel::topk(dim, k).forward_fraction() * (rows * dim * 4) as f64;
             let measured = p.wire_bytes() as f64;
             assert!(
                 (measured - analytic).abs() <= 8.0,
                 "d={dim} k={k}: measured {measured} analytic {analytic}"
             );
+            // expected_wire_bytes is the exact version of the same number
+            assert_eq!(p.wire_bytes(), codec.expected_wire_bytes(rows, Pass::Forward).unwrap());
         }
     }
 
@@ -192,10 +248,10 @@ mod tests {
             values: vec![1.0; 24],
             indices: (0..4).flat_map(|_| 0..6).collect(),
         };
-        let p = codec.encode(&batch, Pass::Forward).unwrap();
+        let p = codec.encode(&Batch::Sparse(batch.clone()), Pass::Forward).unwrap();
         assert_eq!(p.wire_bytes(), 4 * 6 * 4);
         let back = codec.decode(&p, Pass::Forward).unwrap();
-        assert_eq!(back, batch);
+        assert_eq!(back, Batch::Sparse(batch));
     }
 
     #[test]
@@ -208,7 +264,7 @@ mod tests {
             values: vec![0.0; 6],
             indices: vec![0, 1, 2, 3, 4, 5],
         };
-        assert!(codec.encode(&batch, Pass::Forward).is_err());
+        assert!(codec.encode(&Batch::Sparse(batch), Pass::Forward).is_err());
     }
 
     #[test]
@@ -221,25 +277,22 @@ mod tests {
             values: vec![1.0, 2.0],
             indices: vec![3, 16],
         };
-        assert!(codec.encode(&batch, Pass::Forward).is_err());
+        assert!(codec.encode(&Batch::Sparse(batch), Pass::Forward).is_err());
     }
 
     #[test]
-    fn rejects_truncated_payload() {
+    fn rejects_wrong_length_payload() {
         let codec = SparseCodec::topk(128, 6);
         let mut rng = Rng::new(4);
         let batch = random_sparse(&mut rng, 4, 128, 6);
-        let p = codec.encode(&batch, Pass::Forward).unwrap();
-        if let Payload::Sparse { rows, dim, k, bytes, with_indices } = p {
-            let cut = Payload::Sparse {
-                rows,
-                dim,
-                k,
-                bytes: bytes[..bytes.len() - 4].to_vec(),
-                with_indices,
-            };
-            assert!(codec.decode(&cut, Pass::Forward).is_err());
-        }
+        let p = codec.encode(&Batch::Sparse(batch), Pass::Forward).unwrap();
+        let mut cut = p.clone();
+        cut.bytes.truncate(cut.bytes.len() - 4);
+        assert!(codec.decode(&cut, Pass::Forward).is_err());
+        // trailing garbage is equally rejected (exact-length contract)
+        let mut extended = p;
+        extended.bytes.push(0xFF);
+        assert!(codec.decode(&extended, Pass::Forward).is_err());
     }
 
     #[test]

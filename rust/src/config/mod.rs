@@ -26,15 +26,45 @@ pub enum Method {
     L1 { lambda: f32, eps: f32 },
 }
 
+/// Which family of compiled artifacts a method executes — the coordinator
+/// dispatches engine marshalling on this (codec dispatch goes through the
+/// `compress::codec_for` registry instead).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VariantKind {
+    /// `sparse_k{k}` artifacts: values + selection indices at the cut.
+    Sparse { k: usize },
+    /// `quant_b{bits}` artifacts: integer codes + per-row (min, max).
+    Quant { bits: u8 },
+    /// `dense` artifacts: raw cut activations (vanilla and L1).
+    Dense,
+}
+
 impl Method {
+    /// Artifact family this method executes.
+    pub fn variant_kind(&self) -> VariantKind {
+        match self {
+            Method::None | Method::L1 { .. } => VariantKind::Dense,
+            Method::RandTopk { k, .. } | Method::Topk { k } | Method::SizeReduction { k } => {
+                VariantKind::Sparse { k: *k }
+            }
+            Method::Quant { bits } => VariantKind::Quant { bits: *bits },
+        }
+    }
+
     /// Artifact variant directory this method executes.
     pub fn variant(&self) -> String {
+        match self.variant_kind() {
+            VariantKind::Dense => "dense".into(),
+            VariantKind::Sparse { k } => format!("sparse_k{k}"),
+            VariantKind::Quant { bits } => format!("quant_b{bits}"),
+        }
+    }
+
+    /// L1 loss weight for the dense artifacts (0 for every other method).
+    pub fn l1_lambda(&self) -> f32 {
         match self {
-            Method::None | Method::L1 { .. } => "dense".into(),
-            Method::RandTopk { k, .. } | Method::Topk { k } | Method::SizeReduction { k } => {
-                format!("sparse_k{k}")
-            }
-            Method::Quant { bits } => format!("quant_b{bits}"),
+            Method::L1 { lambda, .. } => *lambda,
+            _ => 0.0,
         }
     }
 
@@ -287,6 +317,23 @@ mod tests {
         assert_eq!(Method::parse("quant:bits=2").unwrap().variant(), "quant_b2");
         assert_eq!(Method::parse("l1:lambda=0.01").unwrap().variant(), "dense");
         assert_eq!(Method::None.variant(), "dense");
+    }
+
+    #[test]
+    fn variant_kind_and_lambda() {
+        assert_eq!(
+            Method::parse("randtopk:k=6").unwrap().variant_kind(),
+            VariantKind::Sparse { k: 6 }
+        );
+        assert_eq!(
+            Method::parse("quant:bits=2").unwrap().variant_kind(),
+            VariantKind::Quant { bits: 2 }
+        );
+        assert_eq!(Method::None.variant_kind(), VariantKind::Dense);
+        let l1 = Method::parse("l1:lambda=0.01").unwrap();
+        assert_eq!(l1.variant_kind(), VariantKind::Dense);
+        assert!((l1.l1_lambda() - 0.01).abs() < 1e-9);
+        assert_eq!(Method::None.l1_lambda(), 0.0);
     }
 
     #[test]

@@ -1,16 +1,19 @@
 //! Feature-owner party: holds X and the bottom model; sends compressed
 //! cut-layer activations, receives gradients, updates the bottom model
 //! (rematerializing the forward inside the `bottom_bwd` artifact).
+//!
+//! All wire encode/decode goes through the session's `Box<dyn Codec>`
+//! (from `compress::codec_for`) — the party dispatches only on the
+//! artifact family (`VariantKind`) for engine marshalling. Sends stream
+//! codec output straight into the frame buffer (`wire::FrameEncoder`).
 
 use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 use xla::Literal;
 
-use crate::compress::{
-    DenseBatch, DenseCodec, L1Codec, Pass, Payload, QuantCodec, SparseBatch, SparseCodec,
-};
-use crate::config::Method;
+use crate::compress::{codec_for, Batch, Codec, DenseBatch, Pass, QuantBatch, SparseBatch};
+use crate::config::{Method, VariantKind};
 use crate::runtime::{Engine, HostTensor, ModelMeta};
 use crate::transport::Transport;
 use crate::wire::{Frame, Message};
@@ -21,6 +24,7 @@ pub struct FeatureOwner<T: Transport> {
     engine: Rc<Engine>,
     pub meta: ModelMeta,
     method: Method,
+    codec: Box<dyn Codec>,
     pub transport: T,
     bottom: Vec<Literal>,
     mom_b: Vec<Literal>,
@@ -48,12 +52,14 @@ impl<T: Transport> FeatureOwner<T> {
         init_seed: i32,
     ) -> Result<Self> {
         let meta = engine.manifest.model(model)?.clone();
+        let codec = codec_for(method, meta.cut_dim)?;
         let (bottom, _top) = engine.init_params(model, init_seed)?;
         let mom_b = engine.zero_momentum(&meta.bottom_shapes)?;
         Ok(FeatureOwner {
             engine,
             meta,
             method,
+            codec,
             transport,
             bottom,
             mom_b,
@@ -75,17 +81,23 @@ impl<T: Transport> FeatureOwner<T> {
         self.transport.send(&frame)
     }
 
-    /// Compute the compressed forward payload for a batch. `training`
-    /// controls RandTopk randomness (inference is deterministic top-k).
-    fn forward_payload(
+    /// Encode a batch through the session codec straight into the frame
+    /// buffer and send it; returns the payload content bytes.
+    fn send_batch(&mut self, step: u64, batch: &Batch, pass: Pass) -> Result<usize> {
+        super::send_data_frame(&mut self.transport, &mut self.seq, &*self.codec, step, batch, pass)
+    }
+
+    /// Compute the compressed forward batch. `training` controls RandTopk
+    /// randomness (inference is deterministic top-k).
+    fn forward_batch(
         &mut self,
         step: u64,
         x: &HostTensor,
         training: bool,
-    ) -> Result<(Payload, Literal, Option<Literal>)> {
+    ) -> Result<(Batch, Literal, Option<Literal>)> {
         let x_lit = x.to_literal()?;
-        match self.method {
-            Method::RandTopk { k, .. } | Method::Topk { k } | Method::SizeReduction { k } => {
+        match self.method.variant_kind() {
+            VariantKind::Sparse { k } => {
                 let (alpha, fixed_sel) = self.method.sparse_inputs(training).unwrap();
                 let seed =
                     HostTensor::scalar_i32(step_seed(self.experiment_seed, step)).to_literal()?;
@@ -100,66 +112,55 @@ impl<T: Transport> FeatureOwner<T> {
                 drop(borrowed);
                 let values = HostTensor::from_literal(&outs[0])?;
                 let indices_host = HostTensor::from_literal(&outs[1])?;
-                let batch = SparseBatch {
+                let batch = Batch::Sparse(SparseBatch {
                     rows: self.meta.batch,
                     dim: self.meta.cut_dim,
                     k,
                     values: values.as_f32()?.to_vec(),
                     indices: indices_host.as_i32()?.to_vec(),
-                };
-                let payload = self.sparse_codec(k).encode(&batch, Pass::Forward)?;
-                Ok((payload, x_lit, Some(outs.into_iter().nth(1).unwrap())))
+                });
+                Ok((batch, x_lit, Some(outs.into_iter().nth(1).unwrap())))
             }
-            Method::Quant { bits } => {
+            VariantKind::Quant { .. } => {
                 let mut borrowed: Vec<&Literal> = self.bottom.iter().collect();
                 borrowed.push(&x_lit);
                 let outs = self.engine.exec(&self.key("bottom_fwd"), &borrowed)?;
                 let codes = HostTensor::from_literal(&outs[0])?;
                 let mins = HostTensor::from_literal(&outs[1])?;
                 let maxs = HostTensor::from_literal(&outs[2])?;
-                let batch = crate::compress::quant::QuantBatch {
+                let batch = Batch::Quant(QuantBatch {
                     rows: self.meta.batch,
                     dim: self.meta.cut_dim,
                     codes: codes.as_f32()?.to_vec(),
                     o_min: mins.as_f32()?.to_vec(),
                     o_max: maxs.as_f32()?.to_vec(),
-                };
-                let payload = QuantCodec::new(self.meta.cut_dim, bits).encode(&batch)?;
-                Ok((payload, x_lit, None))
+                });
+                Ok((batch, x_lit, None))
             }
-            Method::None | Method::L1 { .. } => {
+            VariantKind::Dense => {
                 let mut borrowed: Vec<&Literal> = self.bottom.iter().collect();
                 borrowed.push(&x_lit);
                 let outs = self.engine.exec(&self.key("bottom_fwd"), &borrowed)?;
                 let o = HostTensor::from_literal(&outs[0])?;
-                let dense = DenseBatch::new(
+                let batch = Batch::Dense(DenseBatch::new(
                     self.meta.batch,
                     self.meta.cut_dim,
                     o.as_f32()?.to_vec(),
-                );
-                let payload = match self.method {
-                    Method::L1 { eps, .. } => L1Codec::new(self.meta.cut_dim, eps).encode(&dense)?,
-                    _ => DenseCodec::new(self.meta.cut_dim).encode(&dense)?,
-                };
-                Ok((payload, x_lit, None))
+                ));
+                Ok((batch, x_lit, None))
             }
-        }
-    }
-
-    fn sparse_codec(&self, k: usize) -> SparseCodec {
-        match self.method {
-            Method::SizeReduction { .. } => SparseCodec::size_reduction(self.meta.cut_dim, k),
-            _ => SparseCodec::topk(self.meta.cut_dim, k),
         }
     }
 
     /// Training forward: compute, compress, send; cache what backward needs.
     pub fn train_forward(&mut self, step: u64, x: &HostTensor) -> Result<()> {
-        let (payload, x_lit, indices) = self.forward_payload(step, x, true)?;
-        self.fwd_pct_sum += payload.compressed_size_pct();
+        let (batch, x_lit, indices) = self.forward_batch(step, x, true)?;
+        let content = self.send_batch(step, &batch, Pass::Forward)?;
+        let dense_ref = (batch.rows() * batch.dim() * 4) as f64;
+        self.fwd_pct_sum += 100.0 * content as f64 / dense_ref;
         self.fwd_msgs += 1;
         self.pending = Some(PendingStep { x: x_lit, indices });
-        self.send(Message::Activations { step, payload })
+        Ok(())
     }
 
     /// Training backward: receive the gradient, update the bottom model.
@@ -176,12 +177,13 @@ impl<T: Transport> FeatureOwner<T> {
             .take()
             .ok_or_else(|| anyhow!("backward without pending forward"))?;
         let lr_l = HostTensor::vec1_f32(&[lr]).to_literal()?;
-        match self.method {
-            Method::RandTopk { k, .. } | Method::Topk { k } | Method::SizeReduction { k } => {
-                let codec = self.sparse_codec(k);
-                let g = codec.decode(&payload, Pass::Backward)?;
-                let g_lit =
-                    HostTensor::f32(g.values, &[self.meta.batch, k]).to_literal()?;
+        let decoded = self.codec.decode(&payload, Pass::Backward)?;
+        if decoded.rows() != self.meta.batch {
+            bail!("gradient rows {} != batch {}", decoded.rows(), self.meta.batch);
+        }
+        match decoded {
+            Batch::Sparse(g) => {
+                let g_lit = HostTensor::f32(g.values, &[self.meta.batch, g.k]).to_literal()?;
                 let indices = pending
                     .indices
                     .ok_or_else(|| anyhow!("sparse backward lacks cached indices"))?;
@@ -192,14 +194,14 @@ impl<T: Transport> FeatureOwner<T> {
                 borrowed.push(&g_lit);
                 borrowed.push(&lr_l);
                 let outs = self.engine.exec(&self.key("bottom_bwd"), &borrowed)?;
+                drop(borrowed);
                 self.apply_param_update(outs);
             }
-            Method::Quant { .. } | Method::None | Method::L1 { .. } => {
-                let g = DenseCodec::new(self.meta.cut_dim).decode(&payload)?;
+            Batch::Dense(g) => {
                 let g_lit = HostTensor::f32(g.data, &[self.meta.batch, self.meta.cut_dim])
                     .to_literal()?;
-                // quant shares the dense bottom_bwd artifact (Table 2:
-                // backward is dense for quantization and L1)
+                // quant and L1 share the dense bottom_bwd artifact (Table 2:
+                // their backward pass is dense)
                 let key = format!("{}/dense/bottom_bwd", self.meta.name);
                 let mut borrowed: Vec<&Literal> =
                     self.bottom.iter().chain(self.mom_b.iter()).collect();
@@ -207,8 +209,10 @@ impl<T: Transport> FeatureOwner<T> {
                 borrowed.push(&g_lit);
                 borrowed.push(&lr_l);
                 let outs = self.engine.exec(&key, &borrowed)?;
+                drop(borrowed);
                 self.apply_param_update(outs);
             }
+            Batch::Quant(_) => bail!("quantized gradient payloads do not exist (Table 2)"),
         }
         Ok(())
     }
@@ -222,8 +226,9 @@ impl<T: Transport> FeatureOwner<T> {
 
     /// Evaluation forward (deterministic; RandTopk behaves as top-k).
     pub fn eval_forward(&mut self, step: u64, x: &HostTensor) -> Result<()> {
-        let (payload, _x, _idx) = self.forward_payload(step, x, false)?;
-        self.send(Message::Activations { step, payload })
+        let (batch, _x, _idx) = self.forward_batch(step, x, false)?;
+        self.send_batch(step, &batch, Pass::Forward)?;
+        Ok(())
     }
 
     /// Receive the label owner's eval result for one batch.
@@ -293,4 +298,3 @@ impl<T: Transport> FeatureOwner<T> {
         Ok(HostTensor::from_literal(&outs[1])?.as_i32()?.to_vec())
     }
 }
-

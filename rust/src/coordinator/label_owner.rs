@@ -1,15 +1,17 @@
 //! Label-owner party: holds Y and the top model; decodes the compressed
 //! cut-layer activations, runs the top model forward/backward, updates the
 //! top model, and returns the cut-layer gradient (compressed per Table 2).
+//!
+//! Like the feature owner, all wire encode/decode goes through the
+//! session's `Box<dyn Codec>`; engine marshalling dispatches on the
+//! decoded `Batch` shape, never on the method.
 
 use std::rc::Rc;
 
 use anyhow::{bail, Result};
 use xla::Literal;
 
-use crate::compress::{
-    DenseCodec, L1Codec, Pass, Payload, QuantCodec, SparseBatch, SparseCodec,
-};
+use crate::compress::{codec_for, Batch, Codec, DenseBatch, Pass, Payload, SparseBatch};
 use crate::config::Method;
 use crate::runtime::{Engine, HostTensor, ModelMeta};
 use crate::transport::Transport;
@@ -21,6 +23,7 @@ pub struct LabelOwner<T: Transport> {
     engine: Rc<Engine>,
     pub meta: ModelMeta,
     method: Method,
+    codec: Box<dyn Codec>,
     pub transport: T,
     top: Vec<Literal>,
     mom_t: Vec<Literal>,
@@ -38,12 +41,14 @@ impl<T: Transport> LabelOwner<T> {
         init_seed: i32,
     ) -> Result<Self> {
         let meta = engine.manifest.model(model)?.clone();
+        let codec = codec_for(method, meta.cut_dim)?;
         let (_bottom, top) = engine.init_params(model, init_seed)?;
         let mom_t = engine.zero_momentum(&meta.top_shapes)?;
         Ok(LabelOwner {
             engine,
             meta,
             method,
+            codec,
             transport,
             top,
             mom_t,
@@ -63,6 +68,12 @@ impl<T: Transport> LabelOwner<T> {
         self.transport.send(&frame)
     }
 
+    /// Encode a batch through the session codec straight into the frame
+    /// buffer and send it; returns the payload content bytes.
+    fn send_batch(&mut self, step: u64, batch: &Batch, pass: Pass) -> Result<usize> {
+        super::send_data_frame(&mut self.transport, &mut self.seq, &*self.codec, step, batch, pass)
+    }
+
     fn recv_activations(&mut self, expect_step: u64) -> Result<Payload> {
         let frame = self.transport.recv()?;
         let Message::Activations { step, payload } = frame.message else {
@@ -74,117 +85,89 @@ impl<T: Transport> LabelOwner<T> {
         Ok(payload)
     }
 
-    fn sparse_codec(&self, k: usize) -> SparseCodec {
-        match self.method {
-            Method::SizeReduction { .. } => SparseCodec::size_reduction(self.meta.cut_dim, k),
-            _ => SparseCodec::topk(self.meta.cut_dim, k),
+    /// Decode the forward payload through the session codec, validating
+    /// batch geometry against the model manifest.
+    fn decode_forward(&self, payload: &Payload) -> Result<Batch> {
+        let decoded = self.codec.decode(payload, Pass::Forward)?;
+        if decoded.rows() != self.meta.batch {
+            bail!("activation rows {} != batch {}", decoded.rows(), self.meta.batch);
         }
-    }
-
-    fn decode_to_literals(&self, payload: &Payload) -> Result<DecodedActivations> {
-        let b = self.meta.batch;
-        let d = self.meta.cut_dim;
-        match self.method {
-            Method::RandTopk { k, .. } | Method::Topk { k } | Method::SizeReduction { k } => {
-                let batch = self.sparse_codec(k).decode(payload, Pass::Forward)?;
-                Ok(DecodedActivations::Sparse {
-                    values: HostTensor::f32(batch.values, &[b, k]).to_literal()?,
-                    indices: HostTensor::i32(batch.indices, &[b, k]).to_literal()?,
-                })
-            }
-            Method::Quant { bits } => {
-                let batch = QuantCodec::new(d, bits).decode(payload)?;
-                Ok(DecodedActivations::Quant {
-                    codes: HostTensor::f32(batch.codes, &[b, d]).to_literal()?,
-                    o_min: HostTensor::f32(batch.o_min, &[b, 1]).to_literal()?,
-                    o_max: HostTensor::f32(batch.o_max, &[b, 1]).to_literal()?,
-                })
-            }
-            Method::None => {
-                let dense = DenseCodec::new(d).decode(payload)?;
-                Ok(DecodedActivations::Dense {
-                    o: HostTensor::f32(dense.data, &[b, d]).to_literal()?,
-                })
-            }
-            Method::L1 { eps, .. } => {
-                let dense = L1Codec::new(d, eps).decode(payload)?;
-                Ok(DecodedActivations::Dense {
-                    o: HostTensor::f32(dense.data, &[b, d]).to_literal()?,
-                })
-            }
-        }
+        Ok(decoded)
     }
 
     /// One training step: receive activations, update top model, send the
     /// cut-layer gradient back, report loss/metric.
     pub fn train_step(&mut self, step: u64, y: &[i32], lr: f32) -> Result<StepMetrics> {
         let payload = self.recv_activations(step)?;
-        let decoded = self.decode_to_literals(&payload)?;
+        let decoded = self.decode_forward(&payload)?;
         let y_lit = labels_tensor(y).to_literal()?;
         let lr_l = HostTensor::vec1_f32(&[lr]).to_literal()?;
         let nt = self.top.len();
         let b = self.meta.batch;
         let d = self.meta.cut_dim;
 
-        let (outs, grad_payload) = match (&decoded, self.method) {
-            (DecodedActivations::Sparse { values, indices }, method) => {
-                let k = method.k().unwrap();
+        let (outs, grad) = match decoded {
+            Batch::Sparse(act) => {
+                let k = act.k;
+                let values = HostTensor::f32(act.values, &[b, k]).to_literal()?;
+                let indices = HostTensor::i32(act.indices.clone(), &[b, k]).to_literal()?;
                 let mut borrowed: Vec<&Literal> =
                     self.top.iter().chain(self.mom_t.iter()).collect();
-                borrowed.push(values);
-                borrowed.push(indices);
+                borrowed.push(&values);
+                borrowed.push(&indices);
                 borrowed.push(&y_lit);
                 borrowed.push(&lr_l);
                 let outs = self.engine.exec(&self.key("top_fwdbwd"), &borrowed)?;
+                drop(borrowed);
                 // outputs: new_top*, new_mom*, g_values, loss, correct
                 let g_values = HostTensor::from_literal(&outs[2 * nt])?;
-                let indices_host = HostTensor::from_literal(indices)?;
-                let batch = SparseBatch {
+                let grad = Batch::Sparse(SparseBatch {
                     rows: b,
                     dim: d,
                     k,
                     values: g_values.as_f32()?.to_vec(),
-                    indices: indices_host.as_i32()?.to_vec(),
-                };
-                let payload = self.sparse_codec(k).encode(&batch, Pass::Backward)?;
-                (outs, payload)
+                    indices: act.indices,
+                });
+                (outs, grad)
             }
-            (DecodedActivations::Quant { codes, o_min, o_max }, _) => {
+            Batch::Quant(act) => {
+                let codes = HostTensor::f32(act.codes, &[b, d]).to_literal()?;
+                let o_min = HostTensor::f32(act.o_min, &[b, 1]).to_literal()?;
+                let o_max = HostTensor::f32(act.o_max, &[b, 1]).to_literal()?;
                 let mut borrowed: Vec<&Literal> =
                     self.top.iter().chain(self.mom_t.iter()).collect();
-                borrowed.push(codes);
-                borrowed.push(o_min);
-                borrowed.push(o_max);
+                borrowed.push(&codes);
+                borrowed.push(&o_min);
+                borrowed.push(&o_max);
                 borrowed.push(&y_lit);
                 borrowed.push(&lr_l);
                 let outs = self.engine.exec(&self.key("top_fwdbwd"), &borrowed)?;
+                drop(borrowed);
                 let g = HostTensor::from_literal(&outs[2 * nt])?;
-                let dense = crate::compress::DenseBatch::new(b, d, g.as_f32()?.to_vec());
-                let payload = DenseCodec::new(d).encode(&dense)?;
-                (outs, payload)
+                // Table 2: backward for quantization is dense
+                let grad = Batch::Dense(DenseBatch::new(b, d, g.as_f32()?.to_vec()));
+                (outs, grad)
             }
-            (DecodedActivations::Dense { o }, method) => {
-                let lambda = match method {
-                    Method::L1 { lambda, .. } => lambda,
-                    _ => 0.0,
-                };
-                let l1_l = HostTensor::vec1_f32(&[lambda]).to_literal()?;
+            Batch::Dense(act) => {
+                let o = HostTensor::f32(act.data, &[b, d]).to_literal()?;
+                let l1_l = HostTensor::vec1_f32(&[self.method.l1_lambda()]).to_literal()?;
                 let mut borrowed: Vec<&Literal> =
                     self.top.iter().chain(self.mom_t.iter()).collect();
-                borrowed.push(o);
+                borrowed.push(&o);
                 borrowed.push(&y_lit);
                 borrowed.push(&lr_l);
                 borrowed.push(&l1_l);
                 let outs = self.engine.exec(&self.key("top_fwdbwd"), &borrowed)?;
+                drop(borrowed);
                 let g = HostTensor::from_literal(&outs[2 * nt])?;
-                let dense = crate::compress::DenseBatch::new(b, d, g.as_f32()?.to_vec());
                 // Table 2: backward for L1 / vanilla is dense
-                let payload = DenseCodec::new(d).encode(&dense)?;
-                (outs, payload)
+                let grad = Batch::Dense(DenseBatch::new(b, d, g.as_f32()?.to_vec()));
+                (outs, grad)
             }
         };
 
-        self.bwd_pct_sum += grad_payload.compressed_size_pct();
+        let content = self.send_batch(step, &grad, Pass::Backward)?;
+        self.bwd_pct_sum += 100.0 * content as f64 / (b * d * 4) as f64;
         self.bwd_msgs += 1;
         let loss = HostTensor::from_literal(&outs[2 * nt + 1])?.scalar()? as f64;
         let metric = HostTensor::from_literal(&outs[2 * nt + 2])?.scalar()? as f64;
@@ -194,7 +177,6 @@ impl<T: Transport> LabelOwner<T> {
         let mom = outs.split_off(nt);
         self.top = outs;
         self.mom_t = mom;
-        self.send(Message::Gradients { step, payload: grad_payload })?;
         Ok(StepMetrics { loss, metric_count: metric })
     }
 
@@ -202,27 +184,36 @@ impl<T: Transport> LabelOwner<T> {
     /// (loss_sum, metric_count).
     pub fn eval_step(&mut self, step: u64, y: &[i32]) -> Result<(f32, f32)> {
         let payload = self.recv_activations(step)?;
-        let decoded = self.decode_to_literals(&payload)?;
+        let decoded = self.decode_forward(&payload)?;
         let y_lit = labels_tensor(y).to_literal()?;
-        let outs = match &decoded {
-            DecodedActivations::Sparse { values, indices } => {
+        let b = self.meta.batch;
+        let d = self.meta.cut_dim;
+        let outs = match decoded {
+            Batch::Sparse(act) => {
+                let k = act.k;
+                let values = HostTensor::f32(act.values, &[b, k]).to_literal()?;
+                let indices = HostTensor::i32(act.indices, &[b, k]).to_literal()?;
                 let mut borrowed: Vec<&Literal> = self.top.iter().collect();
-                borrowed.push(values);
-                borrowed.push(indices);
+                borrowed.push(&values);
+                borrowed.push(&indices);
                 borrowed.push(&y_lit);
                 self.engine.exec(&self.key("top_eval"), &borrowed)?
             }
-            DecodedActivations::Quant { codes, o_min, o_max } => {
+            Batch::Quant(act) => {
+                let codes = HostTensor::f32(act.codes, &[b, d]).to_literal()?;
+                let o_min = HostTensor::f32(act.o_min, &[b, 1]).to_literal()?;
+                let o_max = HostTensor::f32(act.o_max, &[b, 1]).to_literal()?;
                 let mut borrowed: Vec<&Literal> = self.top.iter().collect();
-                borrowed.push(codes);
-                borrowed.push(o_min);
-                borrowed.push(o_max);
+                borrowed.push(&codes);
+                borrowed.push(&o_min);
+                borrowed.push(&o_max);
                 borrowed.push(&y_lit);
                 self.engine.exec(&self.key("top_eval"), &borrowed)?
             }
-            DecodedActivations::Dense { o } => {
+            Batch::Dense(act) => {
+                let o = HostTensor::f32(act.data, &[b, d]).to_literal()?;
                 let mut borrowed: Vec<&Literal> = self.top.iter().collect();
-                borrowed.push(o);
+                borrowed.push(&o);
                 borrowed.push(&y_lit);
                 self.engine.exec(&self.key("top_eval"), &borrowed)?
             }
@@ -258,10 +249,4 @@ impl<T: Transport> LabelOwner<T> {
         self.mom_t = mom_t;
         Ok(())
     }
-}
-
-enum DecodedActivations {
-    Sparse { values: Literal, indices: Literal },
-    Quant { codes: Literal, o_min: Literal, o_max: Literal },
-    Dense { o: Literal },
 }

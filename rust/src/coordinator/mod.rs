@@ -24,10 +24,43 @@ pub mod trainer;
 
 pub use feature_owner::FeatureOwner;
 pub use label_owner::LabelOwner;
-pub use serve::{serve_tcp, MuxServer, ServeReport, SessionReport};
+pub use serve::{serve_tcp, MuxServer, RefusedStream, ServeReport, SessionReport};
 pub use trainer::{train, Trainer};
 
+use anyhow::Result;
+
+use crate::compress::{Batch, Codec, Pass};
 use crate::runtime::HostTensor;
+use crate::transport::Transport;
+use crate::wire::{encode_payload_meta, FrameEncoder, MsgType, CONTROL_STREAM_ID};
+
+/// Both parties' data hot path: build one Activations/Gradients frame with
+/// the codec writing payload content straight into the frame buffer
+/// (`wire::FrameEncoder` — no intermediate payload copy), bump the
+/// sequence number, and send. Returns the payload content bytes for
+/// compressed-size accounting.
+pub(crate) fn send_data_frame<T: Transport>(
+    transport: &mut T,
+    seq: &mut u32,
+    codec: &dyn Codec,
+    step: u64,
+    batch: &Batch,
+    pass: Pass,
+) -> Result<usize> {
+    let ty = match pass {
+        Pass::Forward => MsgType::Activations,
+        Pass::Backward => MsgType::Gradients,
+    };
+    let mut fe = FrameEncoder::new(CONTROL_STREAM_ID, *seq, ty);
+    fe.put_u64(step);
+    encode_payload_meta(fe.body(), &codec.meta(batch.rows(), pass));
+    let before = fe.body().len();
+    codec.encode_into(batch, pass, fe.body())?;
+    let content = fe.body().len() - before;
+    *seq += 1;
+    transport.send_encoded(fe.finish())?;
+    Ok(content)
+}
 
 /// Derive the per-step selection seed from the experiment seed. Both the
 /// forward artifact and any replay must agree, and streams must not

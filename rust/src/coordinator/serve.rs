@@ -5,16 +5,27 @@
 //! single process serves many feature owners at once. Connections are
 //! served thread-per-connection (`serve_tcp`); sessions within a
 //! connection are interleaved by the mux event pump.
+//!
+//! Sessions are heterogeneous: each stream's `OpenStream` body carries a
+//! `CodecSpec` (method + cut geometry) and the server constructs that
+//! session's `LabelOwner` from the negotiated spec — one connection can
+//! serve a randtopk client next to a quantized one next to a dense one.
+//! A spec the server cannot honour (parse failure, geometry disagreeing
+//! with the model manifest, invalid parameters) refuses THAT stream with
+//! a `CloseStream` and leaves the connection — and its other sessions —
+//! running.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
 
 use anyhow::{anyhow, Result};
 
+use crate::compress::codec_for;
 use crate::config::Method;
 use crate::data::{for_model, Dataset, Split};
 use crate::runtime::Engine;
 use crate::transport::{LinkStats, Mux, MuxEvent, MuxStream, TcpTransport, Transport};
+use crate::wire::OpenSpec;
 
 use super::LabelOwner;
 
@@ -32,10 +43,40 @@ pub fn eval_indices(step: u64, batch: usize, n_test: usize) -> Vec<usize> {
     (0..batch).map(|i| (step as usize * batch + i) % n_test).collect()
 }
 
+/// Resolve an `OpenStream` spec into the method a session will run, or a
+/// refusal reason. Pure — unit-testable without an engine.
+///
+/// - no spec: legacy client, fall back to the server's default method
+/// - parse failure (`OpenSpec::Invalid`): refuse with the decoder's reason
+/// - geometry disagreeing with the serving model's manifest: refuse
+/// - parameters the codec registry rejects (k/bits out of range): refuse
+pub fn negotiate_spec(
+    spec: &OpenSpec,
+    default_method: Method,
+    model_cut_dim: usize,
+) -> std::result::Result<Method, String> {
+    match spec {
+        OpenSpec::None => Ok(default_method),
+        OpenSpec::Invalid { reason, .. } => Err(format!("bad codec spec: {reason}")),
+        OpenSpec::Spec(s) => {
+            if s.cut_dim != model_cut_dim {
+                return Err(format!(
+                    "geometry mismatch: spec cut_dim {} != model cut_dim {model_cut_dim}",
+                    s.cut_dim
+                ));
+            }
+            codec_for(s.method, s.cut_dim).map_err(|e| e.to_string())?;
+            Ok(s.method)
+        }
+    }
+}
+
 /// Outcome of one completed session (stream).
 #[derive(Clone, Debug)]
 pub struct SessionReport {
     pub stream_id: u32,
+    /// Method this session negotiated (spec or server default).
+    pub method: Method,
     pub requests: u64,
     pub samples: u64,
     pub loss_sum: f64,
@@ -44,12 +85,24 @@ pub struct SessionReport {
     pub stats: LinkStats,
 }
 
+/// A stream the server turned away without building a session.
+#[derive(Clone, Debug)]
+pub struct RefusedStream {
+    pub stream_id: u32,
+    pub reason: String,
+    /// Framed bytes the refused stream still cost the wire (its
+    /// `OpenStream` and our `CloseStream` are attributed to it).
+    pub stats: LinkStats,
+}
+
 /// Outcome of serving one physical connection to completion.
 #[derive(Clone, Debug, Default)]
 pub struct ServeReport {
     pub sessions: Vec<SessionReport>,
-    /// The physical connection's own byte counts. Per-session stats sum
-    /// exactly to these (no `Goaway` is sent on the happy path).
+    pub refused: Vec<RefusedStream>,
+    /// The physical connection's own byte counts. Per-session plus
+    /// refused-stream stats sum exactly to these (no `Goaway` is sent on
+    /// the happy path).
     pub physical: LinkStats,
 }
 
@@ -59,16 +112,19 @@ impl ServeReport {
     }
 
     pub fn session_bytes_sent(&self) -> u64 {
-        self.sessions.iter().map(|s| s.stats.bytes_sent).sum()
+        self.sessions.iter().map(|s| s.stats.bytes_sent).sum::<u64>()
+            + self.refused.iter().map(|r| r.stats.bytes_sent).sum::<u64>()
     }
 
     pub fn session_bytes_recv(&self) -> u64 {
-        self.sessions.iter().map(|s| s.stats.bytes_recv).sum()
+        self.sessions.iter().map(|s| s.stats.bytes_recv).sum::<u64>()
+            + self.refused.iter().map(|r| r.stats.bytes_recv).sum::<u64>()
     }
 }
 
 struct Session<T: Transport> {
     lo: LabelOwner<MuxStream<T>>,
+    method: Method,
     step: u64,
     loss_sum: f64,
     metric_sum: f64,
@@ -78,7 +134,9 @@ struct Session<T: Transport> {
 pub struct MuxServer {
     engine: Rc<Engine>,
     model: String,
-    method: Method,
+    /// Method for legacy streams whose `OpenStream` carries no spec;
+    /// spec-carrying streams negotiate per session.
+    default_method: Method,
     /// Dataset seed; must match the feature owners' so labels align with
     /// the activations streamed for each eval batch.
     data_seed: u64,
@@ -89,11 +147,11 @@ pub struct MuxServer {
 }
 
 impl MuxServer {
-    pub fn new(engine: Rc<Engine>, model: &str, method: Method, data_seed: u64) -> Self {
+    pub fn new(engine: Rc<Engine>, model: &str, default_method: Method, data_seed: u64) -> Self {
         MuxServer {
             engine,
             model: model.to_string(),
-            method,
+            default_method,
             data_seed,
             n_train: EVAL_N_TRAIN,
             n_test: EVAL_N_TEST,
@@ -109,30 +167,84 @@ impl MuxServer {
     /// stream.)
     pub fn serve_connection<T: Transport>(&self, mux: &Mux<T>) -> Result<ServeReport> {
         let meta = self.engine.manifest.model(&self.model)?.clone();
-        let ds = for_model(&self.model, meta.n_classes, self.data_seed, self.n_train, self.n_test);
+        let ds =
+            for_model(&self.model, meta.n_classes, self.data_seed, self.n_train, self.n_test)?;
         let n_test = ds.len(Split::Test);
         let mut sessions: HashMap<u32, Session<T>> = HashMap::new();
         let mut done: Vec<SessionReport> = Vec::new();
+        let mut refused: Vec<RefusedStream> = Vec::new();
+        let mut refused_ids: HashSet<u32> = HashSet::new();
         let mut served_any = false;
 
         loop {
             match mux.next_event() {
                 Ok(MuxEvent::Opened(id)) => {
-                    let stream = mux.accept_stream(id)?;
-                    let lo = LabelOwner::new(
-                        self.engine.clone(),
-                        &self.model,
-                        self.method,
-                        stream,
-                        self.init_seed,
-                    )?;
-                    sessions.insert(id, Session { lo, step: 0, loss_sum: 0.0, metric_sum: 0.0 });
                     served_any = true;
-                    if self.verbose {
-                        println!("session {id}: opened ({} live)", sessions.len());
+                    let spec = mux.stream_spec(id).unwrap_or_default();
+                    let mut stream = mux.accept_stream(id)?;
+                    let negotiated = negotiate_spec(&spec, self.default_method, meta.cut_dim)
+                        .and_then(|method| {
+                            let key = format!("{}/{}/top_eval", self.model, method.variant());
+                            if self.engine.manifest.artifacts.contains_key(key.as_str()) {
+                                Ok(method)
+                            } else {
+                                Err(format!(
+                                    "model {} has no compiled variant '{}'",
+                                    self.model,
+                                    method.variant()
+                                ))
+                            }
+                        });
+                    match negotiated {
+                        Ok(method) => {
+                            // constructor failures (manifest model missing,
+                            // param init) are model-global — they would hit
+                            // every session of this connection identically —
+                            // so they ARE connection-fatal, unlike the
+                            // spec-specific refusals screened above
+                            let lo = LabelOwner::new(
+                                self.engine.clone(),
+                                &self.model,
+                                method,
+                                stream,
+                                self.init_seed,
+                            )?;
+                            sessions.insert(
+                                id,
+                                Session { lo, method, step: 0, loss_sum: 0.0, metric_sum: 0.0 },
+                            );
+                            if self.verbose {
+                                println!(
+                                    "session {id}: opened with {method} ({} live)",
+                                    sessions.len()
+                                );
+                            }
+                        }
+                        Err(reason) => {
+                            // refuse this stream; the connection (and its
+                            // other sessions) stays up
+                            if self.verbose {
+                                println!("session {id}: refused ({reason})");
+                            }
+                            stream.close()?;
+                            // drop (don't buffer) whatever the refused peer
+                            // streams before it sees our CloseStream
+                            mux.discard_stream(id)?;
+                            refused.push(RefusedStream {
+                                stream_id: id,
+                                reason,
+                                stats: LinkStats::default(),
+                            });
+                            refused_ids.insert(id);
+                        }
                     }
                 }
                 Ok(MuxEvent::Data(id)) => {
+                    if refused_ids.contains(&id) {
+                        // a refused client may have streamed eagerly before
+                        // seeing our CloseStream; drop its frames
+                        continue;
+                    }
                     let s = sessions
                         .get_mut(&id)
                         .ok_or_else(|| anyhow!("data frame for unknown session {id}"))?;
@@ -145,6 +257,9 @@ impl MuxServer {
                     s.metric_sum += metric as f64;
                 }
                 Ok(MuxEvent::Closed(id)) => {
+                    if refused_ids.contains(&id) {
+                        continue;
+                    }
                     let s = sessions
                         .remove(&id)
                         .ok_or_else(|| anyhow!("close for unknown session {id}"))?;
@@ -170,8 +285,17 @@ impl MuxServer {
             done.push(finalize(id, s));
         }
         done.sort_by_key(|r| r.stream_id);
-        Ok(ServeReport { sessions: done, physical: mux.physical_stats() })
+        // refused-stream stats are read at the end so our CloseStream reply
+        // is included in their byte accounting
+        for r in &mut refused {
+            if let Some(stats) = mux.stream_stats(r.stream_id) {
+                r.stats = stats;
+            }
+        }
+        refused.sort_by_key(|r| r.stream_id);
+        Ok(ServeReport { sessions: done, refused, physical: mux.physical_stats() })
     }
+
 }
 
 /// Did the connection simply drop (EOF/reset), as opposed to a wire-level
@@ -194,6 +318,7 @@ fn finalize<T: Transport>(id: u32, s: Session<T>) -> SessionReport {
     let batch = s.lo.meta.batch as u64;
     SessionReport {
         stream_id: id,
+        method: s.method,
         requests: s.step,
         samples: s.step * batch,
         loss_sum: s.loss_sum,
@@ -210,7 +335,7 @@ pub fn serve_tcp(
     connections: usize,
     artifacts_dir: std::path::PathBuf,
     model: String,
-    method: Method,
+    default_method: Method,
     data_seed: u64,
 ) -> Result<Vec<std::thread::JoinHandle<Result<ServeReport>>>> {
     let mut handles = Vec::new();
@@ -220,9 +345,48 @@ pub fn serve_tcp(
         let model = model.clone();
         handles.push(std::thread::spawn(move || -> Result<ServeReport> {
             let engine = Rc::new(Engine::load(&dir)?);
-            let server = MuxServer::new(engine, &model, method, data_seed);
+            let server = MuxServer::new(engine, &model, default_method, data_seed);
             server.serve_connection(&Mux::acceptor(TcpTransport::from_stream(stream)))
         }));
     }
     Ok(handles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CodecSpec;
+
+    #[test]
+    fn negotiate_accepts_valid_spec_and_falls_back_without_one() {
+        let default = Method::Topk { k: 6 };
+        assert_eq!(negotiate_spec(&OpenSpec::None, default, 128), Ok(default));
+        let spec = OpenSpec::Spec(CodecSpec::new(Method::Quant { bits: 2 }, 128));
+        assert_eq!(negotiate_spec(&spec, default, 128), Ok(Method::Quant { bits: 2 }));
+    }
+
+    #[test]
+    fn negotiate_refuses_geometry_mismatch() {
+        let spec = OpenSpec::Spec(CodecSpec::new(Method::Topk { k: 6 }, 999));
+        let err = negotiate_spec(&spec, Method::None, 128).unwrap_err();
+        assert!(err.contains("geometry mismatch"), "{err}");
+    }
+
+    #[test]
+    fn negotiate_refuses_invalid_parameters() {
+        // k > cut_dim passes the geometry check but not the registry
+        let spec = OpenSpec::Spec(CodecSpec::new(Method::Topk { k: 500 }, 128));
+        let err = negotiate_spec(&spec, Method::None, 128).unwrap_err();
+        assert!(err.contains("k=500"), "{err}");
+    }
+
+    #[test]
+    fn negotiate_refuses_unparseable_spec() {
+        let spec = OpenSpec::Invalid {
+            raw: vec![1, 2, 3],
+            reason: "unknown codec method id 238".into(),
+        };
+        let err = negotiate_spec(&spec, Method::None, 128).unwrap_err();
+        assert!(err.contains("unknown codec method"), "{err}");
+    }
 }

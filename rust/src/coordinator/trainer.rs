@@ -44,7 +44,8 @@ impl Trainer {
             init_seed,
         )?;
         let lo = LabelOwner::new(engine.clone(), &cfg.model, cfg.method, link_lo, init_seed)?;
-        let dataset = data::for_model(&cfg.model, meta.n_classes, cfg.seed, cfg.n_train, cfg.n_test);
+        let dataset =
+            data::for_model(&cfg.model, meta.n_classes, cfg.seed, cfg.n_train, cfg.n_test)?;
         Ok(Trainer { cfg, fo, lo, dataset, net, step: 0, verbose: false })
     }
 

@@ -13,6 +13,8 @@ pub mod tabular;
 pub mod text;
 pub mod vision;
 
+use anyhow::{bail, Result};
+
 use crate::runtime::HostTensor;
 use crate::util::Rng;
 
@@ -112,21 +114,23 @@ impl Iterator for EpochIter {
 }
 
 /// Build the dataset matching a model name (geometry from the manifest).
+/// A bad model name is an error, never a panic — serving processes route
+/// request-supplied names through here.
 pub fn for_model(
     model: &str,
     n_classes: usize,
     seed: u64,
     n_train: usize,
     n_test: usize,
-) -> Box<dyn Dataset> {
-    match model {
+) -> Result<Box<dyn Dataset>> {
+    Ok(match model {
         "mlp" => Box::new(SynthTabular::new(n_classes, 64, seed, n_train, n_test)),
         "convnet" => Box::new(SynthVision::new(n_classes, 32, seed, n_train, n_test)),
         "convnet_l" => Box::new(SynthVision::new(n_classes, 32, seed, n_train, n_test)),
         "gru4rec" => Box::new(SynthSession::new(n_classes, 16, seed, n_train, n_test)),
         "textcnn" => Box::new(SynthText::new(n_classes, 5000, 32, seed, n_train, n_test)),
-        other => panic!("no dataset for model {other}"),
-    }
+        other => bail!("no dataset for model '{other}'"),
+    })
 }
 
 #[cfg(test)]
@@ -162,5 +166,12 @@ mod tests {
     fn drops_ragged_tail() {
         let it = EpochIter::new(10, 4, 1, 0);
         assert_eq!(it.count(), 2);
+    }
+
+    #[test]
+    fn for_model_rejects_unknown_model_without_panicking() {
+        let err = for_model("resnet9000", 10, 1, 64, 32).err().expect("must error");
+        assert!(err.to_string().contains("resnet9000"), "{err}");
+        assert!(for_model("mlp", 100, 1, 64, 32).is_ok());
     }
 }

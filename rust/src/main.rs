@@ -131,7 +131,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let steps: u64 = args.get_parse("steps")?.unwrap_or(64);
     let engine = Rc::new(Engine::load(default_artifacts_dir())?);
     let meta = engine.manifest.model(&cfg.model)?.clone();
-    let ds = for_model(&cfg.model, meta.n_classes, cfg.seed, cfg.n_train, cfg.n_test);
+    let ds = for_model(&cfg.model, meta.n_classes, cfg.seed, cfg.n_train, cfg.n_test)?;
     let init_seed = (cfg.seed as i32) ^ 0x5EED;
     let lr = cfg.lr;
 

@@ -7,6 +7,12 @@
 //! real socket for the two-process deployment example. `Mux` layers
 //! stream multiplexing on either, so one physical connection carries many
 //! concurrent sessions with per-stream accounting.
+//!
+//! Transports implement `send_encoded` (ownership of the wire bytes); the
+//! hot path builds frames with `wire::FrameEncoder` — codec output goes
+//! straight into the frame buffer — and hands the finished buffer over
+//! without re-encoding or copying. `send(&Frame)` is the value-typed
+//! convenience wrapper.
 
 pub mod mux;
 pub mod sim;
@@ -38,7 +44,16 @@ impl LinkStats {
 }
 
 pub trait Transport {
-    fn send(&mut self, frame: &Frame) -> Result<()>;
+    /// Send one already-encoded frame, taking ownership of the bytes (the
+    /// zero-copy hot path; produce them with `Frame::encode` or
+    /// `wire::FrameEncoder`).
+    fn send_encoded(&mut self, bytes: Vec<u8>) -> Result<()>;
+
+    /// Encode + send a frame value (control paths, tests).
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        self.send_encoded(frame.encode())
+    }
+
     fn recv(&mut self) -> Result<Frame>;
     fn stats(&self) -> LinkStats;
 }

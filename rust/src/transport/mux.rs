@@ -4,12 +4,19 @@
 //! `Mux` wraps any `Transport` and demultiplexes frames by the
 //! `stream_id` header field into per-stream `MuxStream` handles, each a
 //! full `Transport` with its own `LinkStats`. The initiator opens streams
-//! with odd ids (`open_stream`); the acceptor pumps `next_event` and
-//! materializes handles with `accept_stream`. Every frame on a non-zero
-//! stream — including `OpenStream`/`CloseStream` — is attributed to that
-//! stream's stats, so per-stream stats sum exactly to the physical link's
-//! byte counts (the invariant `examples/serve_inference.rs` asserts);
-//! only stream-0 `Goaway` frames are physical-connection-only.
+//! with odd ids (`open_stream` / `open_stream_with` to negotiate a codec
+//! spec); the acceptor pumps `next_event`, inspects the spec with
+//! `stream_spec`, and materializes handles with `accept_stream`. Every
+//! frame on a non-zero stream — including `OpenStream`/`CloseStream` — is
+//! attributed to that stream's stats, so per-stream stats sum exactly to
+//! the physical link's byte counts (the invariant
+//! `examples/serve_inference.rs` asserts); only stream-0 `Goaway` frames
+//! are physical-connection-only.
+//!
+//! Sends arrive pre-encoded (`Transport::send_encoded`); the stream id is
+//! restamped in place in the byte buffer — it sits outside the payload
+//! CRC — so parties build frames without knowing their stream and the mux
+//! adds no clone or re-encode on the hot path.
 //!
 //! Concurrency: `Mux` is `Clone` (share it across threads); a `MuxStream`
 //! is a single-owner session handle. Both are `Send` when the physical
@@ -24,7 +31,8 @@ use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::wire::{Frame, Message, CONTROL_STREAM_ID};
+use crate::compress::CodecSpec;
+use crate::wire::{Frame, Message, OpenSpec, CONTROL_STREAM_ID, HEADER_BYTES, OFF_STREAM_ID};
 
 use super::{LinkStats, Transport};
 
@@ -34,6 +42,12 @@ struct StreamState {
     inbox: VecDeque<Frame>,
     stats: LinkStats,
     peer_closed: bool,
+    /// Drop (but still account) inbound data frames: set for refused
+    /// streams so an eagerly-streaming peer cannot grow the inbox
+    /// unboundedly while the connection serves its other sessions.
+    discard: bool,
+    /// What the `OpenStream` body negotiated (either side).
+    spec: OpenSpec,
 }
 
 struct Inner<T: Transport> {
@@ -50,23 +64,19 @@ struct Inner<T: Transport> {
 }
 
 impl<T: Transport> Inner<T> {
-    /// Send `frame` on stream `id`, restamping the header if needed, and
-    /// attribute the framed bytes to that stream's stats.
-    fn send_on(&mut self, id: u32, frame: &Frame) -> Result<()> {
+    /// Send pre-encoded `bytes` on stream `id`, restamping the header in
+    /// place, and attribute the framed bytes to that stream's stats.
+    fn send_on(&mut self, id: u32, mut bytes: Vec<u8>) -> Result<()> {
         if let Some(e) = &self.dead {
             bail!("mux connection failed: {e}");
         }
-        let before = self.io.stats().bytes_sent;
-        if frame.stream_id == id {
-            self.io.send(frame)?;
-        } else {
-            // restamping clones the message (parties build frames on stream
-            // 0); one extra payload memcpy next to the encode copy + engine
-            // exec per request — transport_bench tracks the overhead
-            let mut stamped = frame.clone();
-            stamped.stream_id = id;
-            self.io.send(&stamped)?;
+        if bytes.len() < HEADER_BYTES {
+            bail!("mux send: sub-header frame ({} bytes)", bytes.len());
         }
+        // stream_id is outside the payload CRC: an in-place restamp is safe
+        bytes[OFF_STREAM_ID..OFF_STREAM_ID + 4].copy_from_slice(&id.to_le_bytes());
+        let before = self.io.stats().bytes_sent;
+        self.io.send_encoded(bytes)?;
         let n = self.io.stats().bytes_sent - before;
         if id != CONTROL_STREAM_ID {
             let st = self
@@ -90,7 +100,7 @@ impl<T: Transport> Inner<T> {
     fn route(&mut self, frame: Frame, bytes: u64) -> Result<MuxEvent> {
         let id = frame.stream_id;
         match &frame.message {
-            Message::OpenStream => {
+            Message::OpenStream { spec } => {
                 if id == CONTROL_STREAM_ID {
                     bail!("OpenStream on control stream 0");
                 }
@@ -99,6 +109,7 @@ impl<T: Transport> Inner<T> {
                 }
                 let st = StreamState {
                     stats: LinkStats { frames_recv: 1, bytes_recv: bytes, ..LinkStats::default() },
+                    spec: spec.clone(),
                     ..StreamState::default()
                 };
                 self.streams.insert(id, st);
@@ -131,7 +142,9 @@ impl<T: Transport> Inner<T> {
                 })?;
                 st.stats.frames_recv += 1;
                 st.stats.bytes_recv += bytes;
-                st.inbox.push_back(frame);
+                if !st.discard {
+                    st.inbox.push_back(frame);
+                }
                 Ok(MuxEvent::Data(id))
             }
         }
@@ -141,7 +154,8 @@ impl<T: Transport> Inner<T> {
 /// What the acceptor-side pump observed on the connection.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MuxEvent {
-    /// Peer opened this stream; call `accept_stream` to get the handle.
+    /// Peer opened this stream; inspect `Mux::stream_spec`, then call
+    /// `accept_stream` to get the handle.
     Opened(u32),
     /// A data frame was routed to this stream's inbox.
     Data(u32),
@@ -190,14 +204,24 @@ impl<T: Transport> Mux<T> {
         self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
     }
 
-    /// Open a new locally-initiated stream (sends `OpenStream` eagerly; no
-    /// handshake round trip).
+    /// Open a new locally-initiated stream with no codec negotiation
+    /// (sends `OpenStream` eagerly; no handshake round trip).
     pub fn open_stream(&self) -> Result<MuxStream<T>> {
+        self.open_with(OpenSpec::None)
+    }
+
+    /// Open a stream carrying the session's codec spec in the `OpenStream`
+    /// body; the acceptor validates it before constructing the session.
+    pub fn open_stream_with(&self, spec: CodecSpec) -> Result<MuxStream<T>> {
+        self.open_with(OpenSpec::Spec(spec))
+    }
+
+    fn open_with(&self, spec: OpenSpec) -> Result<MuxStream<T>> {
         let mut g = self.lock();
         let id = g.next_id;
         g.next_id += 2;
-        g.streams.insert(id, StreamState::default());
-        g.send_on(id, &Frame::on_stream(id, 0, Message::OpenStream))?;
+        g.streams.insert(id, StreamState { spec: spec.clone(), ..StreamState::default() });
+        g.send_on(id, Frame::on_stream(id, 0, Message::OpenStream { spec }).encode())?;
         Ok(MuxStream { inner: self.inner.clone(), id })
     }
 
@@ -240,7 +264,7 @@ impl<T: Transport> Mux<T> {
         let last = g.streams.keys().max().copied().unwrap_or(0);
         g.send_on(
             CONTROL_STREAM_ID,
-            &Frame::new(0, Message::Goaway { last_stream_id: last, code }),
+            Frame::new(0, Message::Goaway { last_stream_id: last, code }).encode(),
         )
     }
 
@@ -252,6 +276,27 @@ impl<T: Transport> Mux<T> {
     /// Stats of one stream (open or closed), if it ever existed.
     pub fn stream_stats(&self, id: u32) -> Option<LinkStats> {
         self.lock().streams.get(&id).map(|s| s.stats.clone())
+    }
+
+    /// The codec spec a stream's `OpenStream` carried (peer-opened
+    /// streams) or that we sent when opening it (local streams).
+    pub fn stream_spec(&self, id: u32) -> Option<OpenSpec> {
+        self.lock().streams.get(&id).map(|s| s.spec.clone())
+    }
+
+    /// Stop buffering inbound data frames for a stream (they are dropped
+    /// on arrival, still counted in its stats). Used after refusing a
+    /// stream, whose peer may keep streaming eagerly until it sees our
+    /// `CloseStream`.
+    pub fn discard_stream(&self, id: u32) -> Result<()> {
+        let mut g = self.lock();
+        let st = g
+            .streams
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("discard of unknown stream {id}"))?;
+        st.discard = true;
+        st.inbox.clear();
+        Ok(())
     }
 
     /// Ids of every stream this connection has ever carried.
@@ -280,14 +325,14 @@ impl<T: Transport> MuxStream<T> {
     /// Half-close: tell the peer this session is done sending.
     pub fn close(&mut self) -> Result<()> {
         let id = self.id;
-        self.lock().send_on(id, &Frame::on_stream(id, 0, Message::CloseStream))
+        self.lock().send_on(id, Frame::on_stream(id, 0, Message::CloseStream).encode())
     }
 }
 
 impl<T: Transport> Transport for MuxStream<T> {
-    fn send(&mut self, frame: &Frame) -> Result<()> {
+    fn send_encoded(&mut self, bytes: Vec<u8>) -> Result<()> {
         let id = self.id;
-        self.lock().send_on(id, frame)
+        self.lock().send_on(id, bytes)
     }
 
     fn recv(&mut self) -> Result<Frame> {
@@ -326,12 +371,13 @@ impl<T: Transport> Transport for MuxStream<T> {
 mod tests {
     use super::*;
     use crate::compress::Payload;
+    use crate::config::Method;
     use crate::transport::{SimLink, SimNet};
 
     fn data(step: u64) -> Message {
         Message::Activations {
             step,
-            payload: Payload::Dense { rows: 1, dim: 8, bytes: vec![3; 32] },
+            payload: Payload::dense(1, 8, vec![3; 32]),
         }
     }
 
@@ -369,10 +415,27 @@ mod tests {
     }
 
     #[test]
+    fn open_stream_with_spec_exposes_it_to_both_sides() {
+        let (cm, sm) = mux_pair();
+        let spec = CodecSpec { method: Method::RandTopk { k: 6, alpha: 0.1 }, cut_dim: 128 };
+        let s = cm.open_stream_with(spec).unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
+        assert_eq!(sm.stream_spec(1), Some(OpenSpec::Spec(spec)));
+        assert_eq!(cm.stream_spec(s.id()), Some(OpenSpec::Spec(spec)));
+        // plain streams carry no spec; unknown ids report none
+        let s2 = cm.open_stream().unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(3));
+        assert_eq!(sm.stream_spec(s2.id()), Some(OpenSpec::None));
+        assert_eq!(sm.stream_spec(99), None);
+    }
+
+    #[test]
     fn per_stream_stats_sum_to_physical() {
         let (cm, sm) = mux_pair();
         let mut s1 = cm.open_stream().unwrap();
-        let mut s3 = cm.open_stream().unwrap();
+        let mut s3 = cm
+            .open_stream_with(CodecSpec { method: Method::Topk { k: 3 }, cut_dim: 8 })
+            .unwrap();
         s1.send(&Frame::new(0, data(1))).unwrap();
         s3.send(&Frame::new(0, data(2))).unwrap();
         s3.send(&Frame::new(1, data(3))).unwrap();
@@ -393,6 +456,25 @@ mod tests {
 
     // (unknown-stream and stream-0-data rejection are pinned by the
     // integration tests in rust/tests/protocol_errors.rs)
+
+    #[test]
+    fn discarded_stream_drops_frames_but_keeps_accounting() {
+        let (cm, sm) = mux_pair();
+        let mut s = cm.open_stream().unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
+        let mut t = sm.accept_stream(1).unwrap();
+        sm.discard_stream(1).unwrap();
+        s.send(&Frame::new(0, data(1))).unwrap();
+        s.send(&Frame::new(1, data(2))).unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Data(1));
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Data(1));
+        // bytes still attributed to the stream (accounting invariant)...
+        assert_eq!(sm.stream_stats(1).unwrap().bytes_recv, cm.physical_stats().bytes_sent);
+        // ...but nothing was buffered: a recv finds the link drained
+        let err = t.recv().unwrap_err();
+        assert!(err.to_string().contains("empty queue"), "{err}");
+        assert!(sm.discard_stream(99).is_err());
+    }
 
     #[test]
     fn close_then_recv_errors() {

@@ -83,8 +83,7 @@ pub struct SimLink {
 }
 
 impl Transport for SimLink {
-    fn send(&mut self, frame: &Frame) -> Result<()> {
-        let bytes = frame.encode();
+    fn send_encoded(&mut self, bytes: Vec<u8>) -> Result<()> {
         let mut s = self.shared.borrow_mut();
         let cost = s.model.latency_secs
             + bytes.len() as f64 / s.model.bandwidth_bytes_per_sec;
@@ -129,7 +128,7 @@ mod tests {
             seq,
             Message::Activations {
                 step: seq as u64,
-                payload: Payload::Dense { rows: 1, dim: 8, bytes: vec![7; 32] },
+                payload: Payload::dense(1, 8, vec![7; 32]),
             },
         )
     }

@@ -43,8 +43,7 @@ impl TcpTransport {
 }
 
 impl Transport for TcpTransport {
-    fn send(&mut self, frame: &Frame) -> Result<()> {
-        let bytes = frame.encode();
+    fn send_encoded(&mut self, bytes: Vec<u8>) -> Result<()> {
         self.stream.write_all(&bytes)?;
         self.stats.frames_sent += 1;
         self.stats.bytes_sent += bytes.len() as u64;
@@ -94,13 +93,7 @@ mod tests {
             5,
             Message::Activations {
                 step: 1,
-                payload: Payload::Sparse {
-                    rows: 2,
-                    dim: 128,
-                    k: 3,
-                    bytes: vec![9; 30],
-                    with_indices: true,
-                },
+                payload: Payload::sparse(2, 128, 3, true, vec![9; 30]),
             },
         );
         client.send(&f).unwrap();

@@ -9,16 +9,26 @@
 //!   crc32      u32  of the payload
 //!   payload ...
 //!
-//! Messages wrap compressed payloads (`compress::Payload`) plus small
-//! control records. `stream_id` is muxado-style: a single physical
-//! connection carries many independent sessions (`transport::mux`), each
-//! opened with `OpenStream` and torn down with `CloseStream`; `Goaway`
-//! (stream 0) shuts the whole connection down. Every byte that crosses the
-//! transport goes through this module, so comm accounting is exact.
+//! Messages wrap compressed payloads (`compress::Payload`: a
+//! `PayloadMeta` descriptor followed by the codec's content bytes, which
+//! run to the end of the body) plus small control records. `stream_id`
+//! is muxado-style: a single physical connection carries many independent
+//! sessions (`transport::mux`), each opened with `OpenStream` — whose
+//! body carries the session's negotiated `CodecSpec` — and torn down
+//! with `CloseStream`; `Goaway` (stream 0) shuts the whole connection
+//! down. Every byte that crosses the transport goes through this module,
+//! so comm accounting is exact.
+//!
+//! The hot path encodes without intermediate copies: `FrameEncoder`
+//! writes the header with placeholders, codecs append payload content
+//! straight into the frame buffer (`Codec::encode_into`), and `finish`
+//! backpatches length + CRC. `Frame::encode` produces byte-identical
+//! output for the value-typed cold path.
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::compress::Payload;
+use crate::compress::{CodecSpec, Payload, PayloadMeta};
+use crate::config::Method;
 
 pub const MAGIC: u32 = 0x53464C31;
 
@@ -48,7 +58,8 @@ pub enum MsgType {
     EvalResult = 3,
     /// control: step/epoch barriers, shutdown
     Control = 4,
-    /// mux: peer opens the stream carried in the header
+    /// mux: peer opens the stream carried in the header; the body carries
+    /// the session's codec spec (empty = no negotiation)
     OpenStream = 5,
     /// mux: peer is done sending on the stream carried in the header
     CloseStream = 6,
@@ -71,14 +82,49 @@ impl MsgType {
     }
 }
 
+/// What an `OpenStream` body said about the session's codec.
+///
+/// Spec parse failures decode to `Invalid` instead of failing the frame:
+/// a malformed spec must refuse ONE stream, not kill the connection the
+/// other sessions share (`coordinator::serve::negotiate_spec` decides).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum OpenSpec {
+    /// Plain transport stream, no codec negotiation (empty body).
+    #[default]
+    None,
+    /// Negotiated codec spec.
+    Spec(CodecSpec),
+    /// Body present but unparseable; `raw` preserves the bytes so the
+    /// frame re-encodes losslessly.
+    Invalid { raw: Vec<u8>, reason: String },
+}
+
+impl OpenSpec {
+    fn decode(raw: &[u8]) -> OpenSpec {
+        if raw.is_empty() {
+            return OpenSpec::None;
+        }
+        let mut c = Cursor::new(raw);
+        let parsed = decode_codec_spec(&mut c).and_then(|spec| {
+            c.done()?;
+            Ok(spec)
+        });
+        match parsed {
+            Ok(spec) => OpenSpec::Spec(spec),
+            Err(e) => OpenSpec::Invalid { raw: raw.to_vec(), reason: e.to_string() },
+        }
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Message {
     Activations { step: u64, payload: Payload },
     Gradients { step: u64, payload: Payload },
     EvalResult { step: u64, loss_sum: f32, metric_count: f32 },
     Control(Control),
-    /// Open the stream named in the frame header (empty body).
-    OpenStream,
+    /// Open the stream named in the frame header; the body carries the
+    /// session's codec spec.
+    OpenStream { spec: OpenSpec },
     /// Half-close the stream named in the frame header (empty body).
     CloseStream,
     /// Connection shutdown: highest stream id the sender processed plus an
@@ -102,7 +148,7 @@ impl Message {
             Message::Gradients { .. } => MsgType::Gradients,
             Message::EvalResult { .. } => MsgType::EvalResult,
             Message::Control(_) => MsgType::Control,
-            Message::OpenStream => MsgType::OpenStream,
+            Message::OpenStream { .. } => MsgType::OpenStream,
             Message::CloseStream => MsgType::CloseStream,
             Message::Goaway { .. } => MsgType::Goaway,
         }
@@ -142,6 +188,14 @@ impl<'a> Cursor<'a> {
         Ok(s)
     }
 
+    /// Everything not yet consumed (used by fields that run to the end of
+    /// the body, e.g. payload content).
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
     fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
@@ -169,112 +223,163 @@ impl<'a> Cursor<'a> {
     }
 }
 
-fn encode_payload(out: &mut Vec<u8>, p: &Payload) {
-    match p {
-        Payload::Sparse { rows, dim, k, bytes, with_indices } => {
+/// Serialize a payload descriptor — the fixed-size prefix the content
+/// bytes follow. On the hot path the caller writes this, then hands the
+/// frame buffer to `Codec::encode_into` for the content.
+pub fn encode_payload_meta(out: &mut Vec<u8>, meta: &PayloadMeta) {
+    match *meta {
+        PayloadMeta::Sparse { rows, dim, k, with_indices } => {
             out.push(0);
-            put_u32(out, *rows as u32);
-            put_u32(out, *dim as u32);
-            put_u32(out, *k as u32);
-            out.push(*with_indices as u8);
-            put_u32(out, bytes.len() as u32);
-            out.extend_from_slice(bytes);
+            put_u32(out, rows as u32);
+            put_u32(out, dim as u32);
+            put_u32(out, k as u32);
+            out.push(with_indices as u8);
         }
-        Payload::Quantized { rows, dim, bits, bytes } => {
+        PayloadMeta::Quantized { rows, dim, bits } => {
             out.push(1);
-            put_u32(out, *rows as u32);
-            put_u32(out, *dim as u32);
-            out.push(*bits);
-            put_u32(out, bytes.len() as u32);
-            out.extend_from_slice(bytes);
+            put_u32(out, rows as u32);
+            put_u32(out, dim as u32);
+            out.push(bits);
         }
-        Payload::Dense { rows, dim, bytes } => {
+        PayloadMeta::Dense { rows, dim } => {
             out.push(2);
-            put_u32(out, *rows as u32);
-            put_u32(out, *dim as u32);
-            put_u32(out, bytes.len() as u32);
-            out.extend_from_slice(bytes);
+            put_u32(out, rows as u32);
+            put_u32(out, dim as u32);
         }
-        Payload::VarSparse { rows, dim, bytes } => {
+        PayloadMeta::VarSparse { rows, dim } => {
             out.push(3);
-            put_u32(out, *rows as u32);
-            put_u32(out, *dim as u32);
-            put_u32(out, bytes.len() as u32);
-            out.extend_from_slice(bytes);
+            put_u32(out, rows as u32);
+            put_u32(out, dim as u32);
         }
     }
 }
 
+/// Encoded size of a payload descriptor (exact byte accounting for the
+/// serving assertions; pinned against `encode_payload_meta` by test).
+pub fn payload_meta_wire_len(meta: &PayloadMeta) -> usize {
+    match meta {
+        PayloadMeta::Sparse { .. } => 14,
+        PayloadMeta::Quantized { .. } => 10,
+        PayloadMeta::Dense { .. } | PayloadMeta::VarSparse { .. } => 9,
+    }
+}
+
+fn encode_payload(out: &mut Vec<u8>, p: &Payload) {
+    encode_payload_meta(out, &p.meta);
+    out.extend_from_slice(&p.bytes);
+}
+
 fn decode_payload(c: &mut Cursor) -> Result<Payload> {
     let tag = c.u8()?;
-    Ok(match tag {
-        0 => {
-            let rows = c.u32()? as usize;
-            let dim = c.u32()? as usize;
-            let k = c.u32()? as usize;
-            let with_indices = c.u8()? != 0;
-            let n = c.u32()? as usize;
-            Payload::Sparse { rows, dim, k, bytes: c.take(n)?.to_vec(), with_indices }
-        }
-        1 => {
-            let rows = c.u32()? as usize;
-            let dim = c.u32()? as usize;
-            let bits = c.u8()?;
-            let n = c.u32()? as usize;
-            Payload::Quantized { rows, dim, bits, bytes: c.take(n)?.to_vec() }
-        }
-        2 => {
-            let rows = c.u32()? as usize;
-            let dim = c.u32()? as usize;
-            let n = c.u32()? as usize;
-            Payload::Dense { rows, dim, bytes: c.take(n)?.to_vec() }
-        }
-        3 => {
-            let rows = c.u32()? as usize;
-            let dim = c.u32()? as usize;
-            let n = c.u32()? as usize;
-            Payload::VarSparse { rows, dim, bytes: c.take(n)?.to_vec() }
-        }
+    let meta = match tag {
+        0 => PayloadMeta::Sparse {
+            rows: c.u32()? as usize,
+            dim: c.u32()? as usize,
+            k: c.u32()? as usize,
+            with_indices: c.u8()? != 0,
+        },
+        1 => PayloadMeta::Quantized {
+            rows: c.u32()? as usize,
+            dim: c.u32()? as usize,
+            bits: c.u8()?,
+        },
+        2 => PayloadMeta::Dense { rows: c.u32()? as usize, dim: c.u32()? as usize },
+        3 => PayloadMeta::VarSparse { rows: c.u32()? as usize, dim: c.u32()? as usize },
         other => bail!("unknown payload tag {other}"),
-    })
+    };
+    // content runs to the end of the body; codecs enforce exact lengths
+    Ok(Payload::new(meta, c.rest().to_vec()))
+}
+
+fn encode_codec_spec(out: &mut Vec<u8>, s: &CodecSpec) {
+    put_u32(out, s.cut_dim as u32);
+    match s.method {
+        Method::None => out.push(0),
+        Method::RandTopk { k, alpha } => {
+            out.push(1);
+            put_u32(out, k as u32);
+            put_f32(out, alpha);
+        }
+        Method::Topk { k } => {
+            out.push(2);
+            put_u32(out, k as u32);
+        }
+        Method::SizeReduction { k } => {
+            out.push(3);
+            put_u32(out, k as u32);
+        }
+        Method::Quant { bits } => {
+            out.push(4);
+            out.push(bits);
+        }
+        Method::L1 { lambda, eps } => {
+            out.push(5);
+            put_f32(out, lambda);
+            put_f32(out, eps);
+        }
+    }
+}
+
+fn decode_codec_spec(c: &mut Cursor) -> Result<CodecSpec> {
+    let cut_dim = c.u32()? as usize;
+    let tag = c.u8()?;
+    let method = match tag {
+        0 => Method::None,
+        1 => Method::RandTopk { k: c.u32()? as usize, alpha: c.f32()? },
+        2 => Method::Topk { k: c.u32()? as usize },
+        3 => Method::SizeReduction { k: c.u32()? as usize },
+        4 => Method::Quant { bits: c.u8()? },
+        5 => Method::L1 { lambda: c.f32()?, eps: c.f32()? },
+        other => bail!("unknown codec method id {other}"),
+    };
+    Ok(CodecSpec { method, cut_dim })
 }
 
 impl Message {
-    pub fn encode_body(&self) -> Vec<u8> {
-        let mut out = Vec::new();
+    pub fn encode_body_into(&self, out: &mut Vec<u8>) {
         match self {
             Message::Activations { step, payload } => {
-                put_u64(&mut out, *step);
-                encode_payload(&mut out, payload);
+                put_u64(out, *step);
+                encode_payload(out, payload);
             }
             Message::Gradients { step, payload } => {
-                put_u64(&mut out, *step);
-                encode_payload(&mut out, payload);
+                put_u64(out, *step);
+                encode_payload(out, payload);
             }
             Message::EvalResult { step, loss_sum, metric_count } => {
-                put_u64(&mut out, *step);
-                put_f32(&mut out, *loss_sum);
-                put_f32(&mut out, *metric_count);
+                put_u64(out, *step);
+                put_f32(out, *loss_sum);
+                put_f32(out, *metric_count);
             }
             Message::Control(ctl) => match ctl {
                 Control::StartEpoch { epoch } => {
                     out.push(0);
-                    put_u32(&mut out, *epoch);
+                    put_u32(out, *epoch);
                 }
                 Control::EndEpoch { epoch } => {
                     out.push(1);
-                    put_u32(&mut out, *epoch);
+                    put_u32(out, *epoch);
                 }
                 Control::StartEval => out.push(2),
                 Control::EndEval => out.push(3),
                 Control::Shutdown => out.push(4),
             },
-            Message::OpenStream | Message::CloseStream => {}
+            Message::OpenStream { spec } => match spec {
+                OpenSpec::None => {}
+                OpenSpec::Spec(s) => encode_codec_spec(out, s),
+                OpenSpec::Invalid { raw, .. } => out.extend_from_slice(raw),
+            },
+            Message::CloseStream => {}
             Message::Goaway { last_stream_id, code } => {
-                put_u32(&mut out, *last_stream_id);
-                put_u32(&mut out, *code);
+                put_u32(out, *last_stream_id);
+                put_u32(out, *code);
             }
         }
+    }
+
+    pub fn encode_body(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_body_into(&mut out);
         out
     }
 
@@ -305,12 +410,53 @@ impl Message {
                     other => bail!("unknown control tag {other}"),
                 })
             }
-            MsgType::OpenStream => Message::OpenStream,
+            MsgType::OpenStream => Message::OpenStream { spec: OpenSpec::decode(c.rest()) },
             MsgType::CloseStream => Message::CloseStream,
             MsgType::Goaway => Message::Goaway { last_stream_id: c.u32()?, code: c.u32()? },
         };
         c.done()?;
         Ok(msg)
+    }
+}
+
+/// Streaming frame encoder — the zero-copy send path. The header goes in
+/// with len/crc placeholders, the caller appends the body (codecs write
+/// payload content straight into this buffer via `Codec::encode_into`),
+/// and `finish` backpatches length + CRC. Byte-identical to
+/// `Frame::encode` of the equivalent message.
+pub struct FrameEncoder {
+    buf: Vec<u8>,
+}
+
+impl FrameEncoder {
+    pub fn new(stream_id: u32, seq: u32, ty: MsgType) -> Self {
+        let mut buf = Vec::with_capacity(HEADER_BYTES + 64);
+        put_u32(&mut buf, MAGIC);
+        buf.push(ty as u8);
+        put_u32(&mut buf, stream_id);
+        put_u32(&mut buf, seq);
+        put_u32(&mut buf, 0); // len, backpatched by finish()
+        put_u32(&mut buf, 0); // crc, backpatched by finish()
+        FrameEncoder { buf }
+    }
+
+    /// The frame buffer, positioned after the header. Append-only: body
+    /// writers must never touch earlier bytes.
+    pub fn body(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        put_u64(&mut self.buf, v);
+    }
+
+    /// Backpatch length + CRC and return the finished wire bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        let len = (self.buf.len() - HEADER_BYTES) as u32;
+        self.buf[OFF_LEN..OFF_LEN + 4].copy_from_slice(&len.to_le_bytes());
+        let crc = crc32fast::hash(&self.buf[HEADER_BYTES..]);
+        self.buf[OFF_CRC..OFF_CRC + 4].copy_from_slice(&crc.to_le_bytes());
+        self.buf
     }
 }
 
@@ -335,16 +481,9 @@ impl Frame {
     }
 
     pub fn encode(&self) -> Vec<u8> {
-        let body = self.message.encode_body();
-        let mut out = Vec::with_capacity(HEADER_BYTES + body.len());
-        put_u32(&mut out, MAGIC);
-        out.push(self.message.msg_type() as u8);
-        put_u32(&mut out, self.stream_id);
-        put_u32(&mut out, self.seq);
-        put_u32(&mut out, body.len() as u32);
-        put_u32(&mut out, crc32fast::hash(&body));
-        out.extend_from_slice(&body);
-        out
+        let mut fe = FrameEncoder::new(self.stream_id, self.seq, self.message.msg_type());
+        self.message.encode_body_into(fe.body());
+        fe.finish()
     }
 
     pub fn decode(buf: &[u8]) -> Result<(Frame, usize)> {
@@ -379,13 +518,11 @@ mod tests {
     use super::*;
 
     fn sparse_payload() -> Payload {
-        Payload::Sparse {
-            rows: 2,
-            dim: 128,
-            k: 3,
-            bytes: vec![1, 2, 3, 4, 5, 6, 7, 8],
-            with_indices: true,
-        }
+        Payload::sparse(2, 128, 3, true, vec![1, 2, 3, 4, 5, 6, 7, 8])
+    }
+
+    fn test_spec() -> CodecSpec {
+        CodecSpec { method: Method::RandTopk { k: 6, alpha: 0.1 }, cut_dim: 128 }
     }
 
     #[test]
@@ -394,15 +531,15 @@ mod tests {
             Message::Activations { step: 7, payload: sparse_payload() },
             Message::Gradients {
                 step: 8,
-                payload: Payload::Dense { rows: 1, dim: 4, bytes: vec![0; 16] },
+                payload: Payload::dense(1, 4, vec![0; 16]),
             },
             Message::Activations {
                 step: 9,
-                payload: Payload::Quantized { rows: 2, dim: 8, bits: 2, bytes: vec![0xAA; 20] },
+                payload: Payload::quantized(2, 8, 2, vec![0xAA; 20]),
             },
             Message::Activations {
                 step: 10,
-                payload: Payload::VarSparse { rows: 2, dim: 600, bytes: vec![1; 9] },
+                payload: Payload::var_sparse(2, 600, vec![1; 9]),
             },
             Message::EvalResult { step: 3, loss_sum: 1.5, metric_count: 20.0 },
             Message::Control(Control::StartEpoch { epoch: 4 }),
@@ -410,7 +547,14 @@ mod tests {
             Message::Control(Control::StartEval),
             Message::Control(Control::EndEval),
             Message::Control(Control::Shutdown),
-            Message::OpenStream,
+            Message::OpenStream { spec: OpenSpec::None },
+            Message::OpenStream { spec: OpenSpec::Spec(test_spec()) },
+            Message::OpenStream {
+                spec: OpenSpec::Spec(CodecSpec {
+                    method: Method::L1 { lambda: 0.001, eps: 1e-4 },
+                    cut_dim: 600,
+                }),
+            },
             Message::CloseStream,
             Message::Goaway { last_stream_id: 11, code: 2 },
         ];
@@ -425,8 +569,96 @@ mod tests {
     }
 
     #[test]
+    fn every_codec_spec_method_roundtrips() {
+        for spec in [
+            "none",
+            "randtopk:k=6,alpha=0.25",
+            "topk:k=3",
+            "sizered:k=13",
+            "quant:bits=4",
+            "l1:lambda=0.001,eps=0.0001",
+        ] {
+            let s = CodecSpec { method: Method::parse(spec).unwrap(), cut_dim: 300 };
+            let f = Frame::on_stream(5, 0, Message::OpenStream { spec: OpenSpec::Spec(s) });
+            let (back, _) = Frame::decode(&f.encode()).unwrap();
+            assert_eq!(back.message, Message::OpenStream { spec: OpenSpec::Spec(s) }, "{spec}");
+        }
+    }
+
+    #[test]
+    fn truncated_spec_decodes_invalid_not_error() {
+        let s = test_spec();
+        let mut body = Vec::new();
+        encode_codec_spec(&mut body, &s);
+        body.truncate(body.len() - 2);
+        let frame = hand_frame(MsgType::OpenStream, 3, &body);
+        // the FRAME decodes fine; only the spec is marked invalid
+        let (back, _) = Frame::decode(&frame).unwrap();
+        let Message::OpenStream { spec: OpenSpec::Invalid { raw, reason } } = &back.message else {
+            panic!("expected invalid spec, got {:?}", back.message);
+        };
+        assert_eq!(raw, &body);
+        assert!(reason.contains("truncated"), "{reason}");
+        // and the invalid frame re-encodes losslessly
+        assert_eq!(back.encode(), frame);
+    }
+
+    #[test]
+    fn unknown_method_id_decodes_invalid_not_error() {
+        let mut body = Vec::new();
+        put_u32(&mut body, 128); // cut_dim
+        body.push(0xEE); // no such method
+        let frame = hand_frame(MsgType::OpenStream, 3, &body);
+        let (back, _) = Frame::decode(&frame).unwrap();
+        let Message::OpenStream { spec: OpenSpec::Invalid { reason, .. } } = &back.message else {
+            panic!("expected invalid spec, got {:?}", back.message);
+        };
+        assert!(reason.contains("unknown codec method"), "{reason}");
+    }
+
+    #[test]
+    fn trailing_spec_bytes_decode_invalid() {
+        let mut body = Vec::new();
+        encode_codec_spec(&mut body, &test_spec());
+        body.push(0x00);
+        let frame = hand_frame(MsgType::OpenStream, 3, &body);
+        let (back, _) = Frame::decode(&frame).unwrap();
+        assert!(matches!(
+            back.message,
+            Message::OpenStream { spec: OpenSpec::Invalid { .. } }
+        ));
+    }
+
+    #[test]
+    fn frame_encoder_matches_frame_encode() {
+        // the streaming encoder must be byte-identical to the value path
+        let payload = sparse_payload();
+        let f = Frame::on_stream(9, 4, Message::Activations { step: 31, payload: payload.clone() });
+        let mut fe = FrameEncoder::new(9, 4, MsgType::Activations);
+        fe.put_u64(31);
+        encode_payload_meta(fe.body(), &payload.meta);
+        fe.body().extend_from_slice(&payload.bytes);
+        assert_eq!(fe.finish(), f.encode());
+    }
+
+    #[test]
+    fn payload_meta_wire_len_is_exact() {
+        let metas = [
+            PayloadMeta::Sparse { rows: 2, dim: 128, k: 3, with_indices: true },
+            PayloadMeta::Quantized { rows: 2, dim: 128, bits: 4 },
+            PayloadMeta::Dense { rows: 2, dim: 128 },
+            PayloadMeta::VarSparse { rows: 2, dim: 128 },
+        ];
+        for meta in metas {
+            let mut out = Vec::new();
+            encode_payload_meta(&mut out, &meta);
+            assert_eq!(out.len(), payload_meta_wire_len(&meta), "{meta:?}");
+        }
+    }
+
+    #[test]
     fn stream_id_survives_roundtrip() {
-        let f = Frame::on_stream(0xDEAD_BEEF, 3, Message::OpenStream);
+        let f = Frame::on_stream(0xDEAD_BEEF, 3, Message::OpenStream { spec: OpenSpec::None });
         let bytes = f.encode();
         assert_eq!(
             u32::from_le_bytes(bytes[OFF_STREAM_ID..OFF_STREAM_ID + 4].try_into().unwrap()),
@@ -490,15 +722,20 @@ mod tests {
     #[test]
     fn rejects_trailing_garbage_in_body() {
         // hand-craft: valid header, body = control shutdown + extra byte
-        let body = vec![4u8, 0u8];
+        let out = hand_frame(MsgType::Control, 1, &[4u8, 0u8]);
+        assert!(Frame::decode(&out).is_err());
+    }
+
+    /// Valid header + CRC around an arbitrary body.
+    fn hand_frame(ty: MsgType, stream_id: u32, body: &[u8]) -> Vec<u8> {
         let mut out = Vec::new();
         put_u32(&mut out, MAGIC);
-        out.push(MsgType::Control as u8);
-        put_u32(&mut out, CONTROL_STREAM_ID);
+        out.push(ty as u8);
+        put_u32(&mut out, stream_id);
         put_u32(&mut out, 1);
         put_u32(&mut out, body.len() as u32);
-        put_u32(&mut out, crc32fast::hash(&body));
-        out.extend_from_slice(&body);
-        assert!(Frame::decode(&out).is_err());
+        put_u32(&mut out, crc32fast::hash(body));
+        out.extend_from_slice(body);
+        out
     }
 }

@@ -1,0 +1,242 @@
+//! Deterministic-RNG roundtrip fuzz over the codec registry: every codec
+//! × pass × geometry — including the degenerate corners k = dim, k = 1,
+//! bits = 1, dim = 1 and rows = 0 — must satisfy
+//!   decode(encode(x)) == x
+//!   wire_bytes == Codec::expected_wire_bytes  (exact)
+//!   wire_bytes == SizeModel prediction        (within documented slack:
+//!     bit-padding < 1 byte; quant's 8-byte per-row (min,max) header)
+//!
+//! Codecs are constructed through `codec_for`, the exact production path
+//! the coordinator parties use.
+
+use splitfed::compress::{codec_for, Batch, Codec, DenseBatch, Pass, QuantBatch, SparseBatch};
+use splitfed::config::Method;
+use splitfed::util::Rng;
+
+const ROWS: [usize; 3] = [0, 1, 32];
+
+fn random_sparse(rng: &mut Rng, rows: usize, dim: usize, k: usize, implicit: bool) -> SparseBatch {
+    let mut values = Vec::new();
+    let mut indices = Vec::new();
+    for _ in 0..rows {
+        let sel: Vec<i32> = if implicit {
+            (0..k as i32).collect()
+        } else {
+            let mut all: Vec<i32> = (0..dim as i32).collect();
+            rng.shuffle(&mut all);
+            let mut s = all[..k].to_vec();
+            s.sort_unstable();
+            s
+        };
+        for &i in &sel {
+            indices.push(i);
+            values.push(rng.normal());
+        }
+    }
+    SparseBatch { rows, dim, k, values, indices }
+}
+
+fn random_dense(rng: &mut Rng, rows: usize, dim: usize) -> DenseBatch {
+    DenseBatch::new(rows, dim, (0..rows * dim).map(|_| rng.normal()).collect())
+}
+
+fn random_quant(rng: &mut Rng, rows: usize, dim: usize, bits: u8) -> QuantBatch {
+    let levels = (1u64 << bits) as f32;
+    QuantBatch {
+        rows,
+        dim,
+        codes: (0..rows * dim)
+            .map(|_| (rng.next_f32() * levels).floor().min(levels - 1.0))
+            .collect(),
+        o_min: (0..rows).map(|_| -rng.next_f32()).collect(),
+        o_max: (0..rows).map(|_| 1.0 + rng.next_f32()).collect(),
+    }
+}
+
+/// Pin measured wire bytes against the Table 2 analytic model.
+fn analytic_check(
+    codec: &dyn Codec,
+    rows: usize,
+    dim: usize,
+    pass: Pass,
+    measured: usize,
+    slack: f64,
+) {
+    let frac = match pass {
+        Pass::Forward => codec.size_model().forward_fraction(),
+        Pass::Backward => codec.size_model().backward_fraction(),
+    };
+    let analytic = frac * (rows * dim * 4) as f64;
+    assert!(
+        (measured as f64 - analytic).abs() <= slack + 1e-9,
+        "{}: measured {measured} vs analytic {analytic} (rows {rows} dim {dim} {pass:?})",
+        codec.name()
+    );
+}
+
+#[test]
+fn topk_roundtrip_every_geometry() {
+    let mut rng = Rng::new(0xC0DEC);
+    let geoms = [
+        (1usize, 1usize), // dim = 1: the smallest possible cut
+        (8, 1),           // k = 1
+        (8, 8),           // k = dim
+        (128, 1),
+        (128, 6),
+        (128, 128),
+        (300, 2),
+        (600, 14),
+        (1280, 9),
+        (16, 16),
+    ];
+    for (dim, k) in geoms {
+        for rows in ROWS {
+            for method in [Method::Topk { k }, Method::RandTopk { k, alpha: 0.1 }] {
+                let codec = codec_for(method, dim).unwrap();
+                let batch = random_sparse(&mut rng, rows, dim, k, false);
+
+                // forward: values + indices, full equality
+                let p = codec.encode(&Batch::Sparse(batch.clone()), Pass::Forward).unwrap();
+                assert_eq!(
+                    p.wire_bytes(),
+                    codec.expected_wire_bytes(rows, Pass::Forward).unwrap(),
+                    "fwd d={dim} k={k} rows={rows}"
+                );
+                analytic_check(&*codec, rows, dim, Pass::Forward, p.wire_bytes(), 1.0);
+                assert_eq!(
+                    codec.decode(&p, Pass::Forward).unwrap(),
+                    Batch::Sparse(batch.clone()),
+                    "fwd d={dim} k={k} rows={rows}"
+                );
+
+                // backward: values only (receiver holds the indices)
+                let p = codec.encode(&Batch::Sparse(batch.clone()), Pass::Backward).unwrap();
+                assert_eq!(p.wire_bytes(), rows * k * 4);
+                assert_eq!(p.wire_bytes(), codec.expected_wire_bytes(rows, Pass::Backward).unwrap());
+                analytic_check(&*codec, rows, dim, Pass::Backward, p.wire_bytes(), 0.0);
+                let Batch::Sparse(back) = codec.decode(&p, Pass::Backward).unwrap() else {
+                    panic!("expected sparse");
+                };
+                assert_eq!(back.values, batch.values);
+
+                // a backward payload decoded as forward is a presence
+                // mismatch, even for rows = 0
+                assert!(codec.decode(&p, Pass::Forward).is_err());
+            }
+        }
+    }
+}
+
+#[test]
+fn size_reduction_roundtrip_every_geometry() {
+    let mut rng = Rng::new(0x51ED);
+    for (dim, k) in [(1usize, 1usize), (8, 1), (8, 8), (128, 6), (600, 14), (16, 16)] {
+        for rows in ROWS {
+            let codec = codec_for(Method::SizeReduction { k }, dim).unwrap();
+            // size reduction always ships the first k coordinates
+            let batch = random_sparse(&mut rng, rows, dim, k, true);
+            for pass in [Pass::Forward, Pass::Backward] {
+                let p = codec.encode(&Batch::Sparse(batch.clone()), pass).unwrap();
+                assert_eq!(p.wire_bytes(), rows * k * 4, "d={dim} k={k} rows={rows}");
+                assert_eq!(p.wire_bytes(), codec.expected_wire_bytes(rows, pass).unwrap());
+                analytic_check(&*codec, rows, dim, pass, p.wire_bytes(), 0.0);
+                assert_eq!(codec.decode(&p, pass).unwrap(), Batch::Sparse(batch.clone()));
+            }
+        }
+    }
+}
+
+#[test]
+fn quant_roundtrip_every_geometry() {
+    let mut rng = Rng::new(0xB175);
+    for (dim, bits) in
+        [(1usize, 1u8), (8, 1), (8, 2), (128, 4), (128, 8), (1280, 4), (32, 16)]
+    {
+        for rows in ROWS {
+            let codec = codec_for(Method::Quant { bits }, dim).unwrap();
+
+            // forward: b-bit codes + per-row (min, max)
+            let batch = random_quant(&mut rng, rows, dim, bits);
+            let p = codec.encode(&Batch::Quant(batch.clone()), Pass::Forward).unwrap();
+            assert_eq!(
+                p.wire_bytes(),
+                codec.expected_wire_bytes(rows, Pass::Forward).unwrap(),
+                "d={dim} b={bits} rows={rows}"
+            );
+            // slack: the header is outside the Table 2 fraction
+            analytic_check(&*codec, rows, dim, Pass::Forward, p.wire_bytes(), (rows * 8) as f64 + 1.0);
+            assert_eq!(codec.decode(&p, Pass::Forward).unwrap(), Batch::Quant(batch));
+
+            // backward: dense gradient (Table 2)
+            let dense = random_dense(&mut rng, rows, dim);
+            let p = codec.encode(&Batch::Dense(dense.clone()), Pass::Backward).unwrap();
+            assert_eq!(p.wire_bytes(), rows * dim * 4);
+            assert_eq!(p.wire_bytes(), codec.expected_wire_bytes(rows, Pass::Backward).unwrap());
+            analytic_check(&*codec, rows, dim, Pass::Backward, p.wire_bytes(), 0.0);
+            assert_eq!(codec.decode(&p, Pass::Backward).unwrap(), Batch::Dense(dense));
+        }
+    }
+}
+
+#[test]
+fn dense_roundtrip_every_geometry() {
+    let mut rng = Rng::new(0xD45E);
+    for dim in [1usize, 8, 300, 1280] {
+        for rows in ROWS {
+            let codec = codec_for(Method::None, dim).unwrap();
+            let batch = random_dense(&mut rng, rows, dim);
+            for pass in [Pass::Forward, Pass::Backward] {
+                let p = codec.encode(&Batch::Dense(batch.clone()), pass).unwrap();
+                assert_eq!(p.wire_bytes(), rows * dim * 4);
+                assert_eq!(p.wire_bytes(), codec.expected_wire_bytes(rows, pass).unwrap());
+                analytic_check(&*codec, rows, dim, pass, p.wire_bytes(), 0.0);
+                assert_eq!(codec.decode(&p, pass).unwrap(), Batch::Dense(batch.clone()));
+            }
+        }
+    }
+}
+
+#[test]
+fn l1_roundtrip_every_geometry() {
+    let mut rng = Rng::new(0x1111);
+    let eps = 1e-4f32;
+    for dim in [8usize, 64, 600] {
+        for rows in ROWS {
+            let codec = codec_for(Method::L1 { lambda: 0.001, eps }, dim).unwrap();
+
+            // forward: entries are exactly 0 or well above eps, so the
+            // threshold is the identity and roundtrip equality holds
+            let data: Vec<f32> = (0..rows * dim)
+                .map(|_| {
+                    if rng.next_f32() < 0.1 {
+                        let mag = 0.5 + rng.next_f32();
+                        if rng.next_f32() < 0.5 {
+                            mag
+                        } else {
+                            -mag
+                        }
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            let batch = DenseBatch::new(rows, dim, data);
+            // L1's forward size is emergent, by design
+            assert_eq!(codec.expected_wire_bytes(rows, Pass::Forward), None);
+            let p = codec.encode(&Batch::Dense(batch.clone()), Pass::Forward).unwrap();
+            assert_eq!(
+                codec.decode(&p, Pass::Forward).unwrap(),
+                Batch::Dense(batch),
+                "d={dim} rows={rows}"
+            );
+
+            // backward: dense gradient (Table 2), exact size
+            let dense = random_dense(&mut rng, rows, dim);
+            let p = codec.encode(&Batch::Dense(dense.clone()), Pass::Backward).unwrap();
+            assert_eq!(p.wire_bytes(), rows * dim * 4);
+            assert_eq!(p.wire_bytes(), codec.expected_wire_bytes(rows, Pass::Backward).unwrap());
+            analytic_check(&*codec, rows, dim, Pass::Backward, p.wire_bytes(), 0.0);
+            assert_eq!(codec.decode(&p, Pass::Backward).unwrap(), Batch::Dense(dense));
+        }
+    }
+}

@@ -1,17 +1,21 @@
 //! Failure-injection tests for the split-learning protocol: message
 //! reordering, step mismatches, geometry mismatches, corrupted frames,
-//! and mux stream violations must be rejected with errors, never
-//! mis-trained silently.
+//! malformed codec specs, and mux stream violations must be rejected with
+//! errors, never mis-trained silently — and a bad `OpenStream` spec must
+//! refuse ONE stream while the connection keeps serving the others.
 
 use std::rc::Rc;
 
-use splitfed::compress::Payload;
+use splitfed::compress::{CodecSpec, Payload};
 use splitfed::config::Method;
+use splitfed::coordinator::serve::{
+    eval_indices, negotiate_spec, serve_tcp, EVAL_INIT_SEED, EVAL_N_TEST, EVAL_N_TRAIN,
+};
 use splitfed::coordinator::{FeatureOwner, LabelOwner};
 use splitfed::data::{for_model, Dataset, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
-use splitfed::transport::{Mux, SimNet, Transport};
-use splitfed::wire::{Frame, Message, HEADER_BYTES, OFF_MAGIC, OFF_TYPE};
+use splitfed::transport::{Mux, MuxEvent, SimNet, TcpTransport, Transport};
+use splitfed::wire::{Frame, Message, OpenSpec, HEADER_BYTES, OFF_MAGIC, OFF_TYPE};
 
 fn engine() -> Option<Rc<Engine>> {
     let dir = default_artifacts_dir();
@@ -34,7 +38,7 @@ fn setup(
 }
 
 fn batch() -> (splitfed::runtime::HostTensor, Vec<i32>) {
-    let ds = for_model("mlp", 100, 1, 64, 32);
+    let ds = for_model("mlp", 100, 1, 64, 32).unwrap();
     let b = ds.batch(Split::Train, &(0..32).collect::<Vec<_>>(), false);
     (b.x, b.y)
 }
@@ -54,13 +58,7 @@ fn gradient_step_mismatch_rejected() {
 fn backward_without_forward_rejected() {
     let Some((mut fo, mut lo)) = setup("topk:k=6") else { return };
     // inject a gradient frame without any forward in flight
-    let payload = Payload::Sparse {
-        rows: 32,
-        dim: 128,
-        k: 6,
-        bytes: vec![0; 32 * 6 * 4],
-        with_indices: false,
-    };
+    let payload = Payload::sparse(32, 128, 6, false, vec![0; 32 * 6 * 4]);
     lo.transport
         .send(&Frame::new(0, Message::Gradients { step: 0, payload }))
         .unwrap();
@@ -81,13 +79,13 @@ fn label_owner_rejects_wrong_message_kind() {
 fn label_owner_rejects_geometry_mismatch() {
     let Some((mut fo, mut lo)) = setup("topk:k=6") else { return };
     // k=3 payload against a k=6 session
-    let payload = Payload::Sparse {
-        rows: 32,
-        dim: 128,
-        k: 3,
-        bytes: vec![0; 32 * 3 * 4 + (32usize * 3 * 7).div_ceil(8)],
-        with_indices: true,
-    };
+    let payload = Payload::sparse(
+        32,
+        128,
+        3,
+        true,
+        vec![0; 32 * 3 * 4 + (32usize * 3 * 7).div_ceil(8)],
+    );
     fo.transport
         .send(&Frame::new(0, Message::Activations { step: 0, payload }))
         .unwrap();
@@ -99,15 +97,16 @@ fn label_owner_rejects_geometry_mismatch() {
 #[test]
 fn quant_codes_out_of_range_rejected_at_encode() {
     // (codec-level invariant exercised through the public API)
+    use splitfed::compress::{Batch, Codec, Pass};
     let codec = splitfed::compress::QuantCodec::new(8, 2);
-    let bad = splitfed::compress::quant::QuantBatch {
+    let bad = Batch::Quant(splitfed::compress::QuantBatch {
         rows: 1,
         dim: 8,
         codes: vec![7.0; 8], // 7 > 2^2 - 1
         o_min: vec![0.0],
         o_max: vec![1.0],
-    };
-    assert!(codec.encode(&bad).is_err());
+    });
+    assert!(codec.encode(&bad, Pass::Forward).is_err());
 }
 
 // --- wire framing error paths (artifact-free: always run) ----------------
@@ -118,7 +117,7 @@ fn wire_frame() -> Vec<u8> {
         7,
         Message::Activations {
             step: 0,
-            payload: Payload::Dense { rows: 1, dim: 8, bytes: vec![5; 32] },
+            payload: Payload::dense(1, 8, vec![5; 32]),
         },
     )
     .encode()
@@ -172,7 +171,7 @@ fn mux_rejects_frame_for_unopened_stream() {
     let net = SimNet::with_defaults();
     let (mut raw, b) = net.pair();
     let mux = Mux::acceptor(b);
-    let payload = Payload::Dense { rows: 1, dim: 8, bytes: vec![0; 32] };
+    let payload = Payload::dense(1, 8, vec![0; 32]);
     raw.send(&Frame::on_stream(9, 0, Message::Activations { step: 0, payload }))
         .unwrap();
     let err = mux.next_event().unwrap_err();
@@ -188,10 +187,122 @@ fn mux_rejects_data_without_stream_id() {
     let net = SimNet::with_defaults();
     let (mut raw, b) = net.pair();
     let mux = Mux::acceptor(b);
-    let payload = Payload::Dense { rows: 1, dim: 8, bytes: vec![0; 32] };
+    let payload = Payload::dense(1, 8, vec![0; 32]);
     raw.send(&Frame::new(0, Message::Activations { step: 0, payload })).unwrap();
     let err = mux.next_event().unwrap_err();
     assert!(err.to_string().contains("control stream"), "{err}");
+}
+
+// --- OpenStream codec-spec error paths ------------------------------------
+
+/// Send an `OpenStream` whose body bytes are `raw` (the `Invalid` variant
+/// re-encodes its raw bytes verbatim, so this crafts arbitrary specs
+/// through the public API).
+fn send_raw_spec(link: &mut splitfed::transport::SimLink, stream_id: u32, raw: Vec<u8>) {
+    let msg = Message::OpenStream {
+        spec: OpenSpec::Invalid { raw, reason: String::new() },
+    };
+    link.send(&Frame::on_stream(stream_id, 0, msg)).unwrap();
+}
+
+#[test]
+fn truncated_spec_marks_stream_invalid_but_connection_survives() {
+    let net = SimNet::with_defaults();
+    let (mut raw, b) = net.pair();
+    let mux = Mux::acceptor(b);
+    // 3 bytes cannot even hold the cut_dim field
+    send_raw_spec(&mut raw, 1, vec![0, 0, 0]);
+    assert_eq!(mux.next_event().unwrap(), MuxEvent::Opened(1));
+    let Some(OpenSpec::Invalid { reason, .. }) = mux.stream_spec(1) else {
+        panic!("expected invalid spec, got {:?}", mux.stream_spec(1));
+    };
+    assert!(reason.contains("truncated"), "{reason}");
+    // negotiation refuses it...
+    assert!(negotiate_spec(&mux.stream_spec(1).unwrap(), Method::None, 128).is_err());
+    // ...and the connection still accepts a well-formed stream
+    raw.send(&Frame::on_stream(
+        3,
+        0,
+        Message::OpenStream {
+            spec: OpenSpec::Spec(CodecSpec::new(Method::Topk { k: 6 }, 128)),
+        },
+    ))
+    .unwrap();
+    assert_eq!(mux.next_event().unwrap(), MuxEvent::Opened(3));
+    assert_eq!(
+        negotiate_spec(&mux.stream_spec(3).unwrap(), Method::None, 128),
+        Ok(Method::Topk { k: 6 })
+    );
+}
+
+#[test]
+fn unknown_method_id_marks_stream_invalid() {
+    let net = SimNet::with_defaults();
+    let (mut raw, b) = net.pair();
+    let mux = Mux::acceptor(b);
+    // cut_dim = 128, then a method tag that does not exist
+    let mut body = 128u32.to_le_bytes().to_vec();
+    body.push(0xEE);
+    send_raw_spec(&mut raw, 1, body);
+    assert_eq!(mux.next_event().unwrap(), MuxEvent::Opened(1));
+    let Some(OpenSpec::Invalid { reason, .. }) = mux.stream_spec(1) else {
+        panic!("expected invalid spec");
+    };
+    assert!(reason.contains("unknown codec method"), "{reason}");
+    let err = negotiate_spec(&mux.stream_spec(1).unwrap(), Method::None, 128).unwrap_err();
+    assert!(err.contains("unknown codec method"), "{err}");
+}
+
+/// End to end over TCP + MuxServer: a spec the server cannot honour is
+/// refused with a `CloseStream` on THAT stream only; a second stream on
+/// the same physical connection then completes a full eval round trip.
+#[test]
+fn spec_refusal_keeps_connection_serving() {
+    if engine().is_none() {
+        return;
+    }
+    let dir = default_artifacts_dir();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let default_method = Method::parse("topk:k=6").unwrap();
+    // connect before serve_tcp: it accept()s on the calling thread
+    let phys = TcpTransport::connect(addr).unwrap();
+    let mut handles =
+        serve_tcp(&listener, 1, dir.clone(), "mlp".into(), default_method, 42).unwrap();
+    let mux = Mux::initiator(phys);
+
+    // stream 1: geometry the mlp manifest (cut_dim 128) cannot satisfy
+    let mut bad = mux
+        .open_stream_with(CodecSpec::new(Method::parse("topk:k=6").unwrap(), 999))
+        .unwrap();
+    let err = bad.recv().unwrap_err();
+    assert!(err.to_string().contains("closed by peer"), "{err}");
+    drop(bad);
+
+    // stream 3, same connection: valid spec, full request round trip
+    let method = Method::parse("randtopk:k=6,alpha=0.1").unwrap();
+    let stream = mux.open_stream_with(CodecSpec::new(method, 128)).unwrap();
+    let engine = Rc::new(Engine::load(&dir).unwrap());
+    let mut fo = FeatureOwner::new(engine, "mlp", method, stream, 42, EVAL_INIT_SEED).unwrap();
+    let ds = for_model("mlp", fo.meta.n_classes, 42, EVAL_N_TRAIN, EVAL_N_TEST).unwrap();
+    let idx = eval_indices(0, fo.meta.batch, ds.len(Split::Test));
+    let eval_batch = ds.batch(Split::Test, &idx, false);
+    fo.eval_forward(0, &eval_batch.x).unwrap();
+    let (loss, correct) = fo.recv_eval_result().unwrap();
+    assert!(loss.is_finite() && correct >= 0.0);
+    fo.transport.close().unwrap();
+    drop(fo);
+    drop(mux);
+
+    let report = handles.pop().unwrap().join().unwrap().unwrap();
+    assert_eq!(report.sessions.len(), 1, "the good stream served");
+    assert_eq!(report.sessions[0].method, method);
+    assert_eq!(report.total_requests(), 1);
+    assert_eq!(report.refused.len(), 1, "the bad stream was refused");
+    assert!(report.refused[0].reason.contains("geometry mismatch"), "{}", report.refused[0].reason);
+    // refusal accounting still sums exactly to the physical wire
+    assert_eq!(report.session_bytes_recv(), report.physical.bytes_recv);
+    assert_eq!(report.session_bytes_sent(), report.physical.bytes_sent);
 }
 
 #[test]

@@ -30,7 +30,7 @@ fn tcp_two_party_training_step() {
         stream.set_nodelay(true).unwrap();
         let transport = TcpTransport::from_stream(stream);
         let mut lo = LabelOwner::new(engine.clone(), "mlp", method, transport, 99).unwrap();
-        let ds = for_model("mlp", 100, seed, 256, 64);
+        let ds = for_model("mlp", 100, seed, 256, 64).unwrap();
         let mut losses = Vec::new();
         let mut step = 0u64;
         for indices in EpochIter::new(ds.len(Split::Train), 32, seed, 0).take(steps as usize) {
@@ -46,7 +46,7 @@ fn tcp_two_party_training_step() {
     let engine = std::rc::Rc::new(Engine::load(&dir).unwrap());
     let transport = TcpTransport::connect(addr).unwrap();
     let mut fo = FeatureOwner::new(engine.clone(), "mlp", method, transport, seed, 99).unwrap();
-    let ds = for_model("mlp", 100, seed, 256, 64);
+    let ds = for_model("mlp", 100, seed, 256, 64).unwrap();
     let mut step = 0u64;
     for indices in EpochIter::new(ds.len(Split::Train), 32, seed, 0).take(steps as usize) {
         let batch = ds.batch(Split::Train, &indices, false);
