@@ -1,0 +1,529 @@
+//! Deterministic chaos harness: the full split-learning wire protocol
+//! driven over a seeded fault-injecting link, FoundationDB-style.
+//!
+//! A chaos *schedule* is one seed: it derives a [`FaultPlan`] (regime +
+//! per-fault probabilities) and the synthetic workload. [`run_schedule`]
+//! runs the same two-party training session twice — once over a clean
+//! link, once over the faulty one — with the mux recovery layer enabled,
+//! and demands the resulting [`RunLedger`] **metrics be bit-identical**:
+//! if the protocol delivers every `Activations`/`Gradients` frame exactly
+//! once in order, no fault can change a single mantissa bit. Byte counts
+//! are *excluded* from the comparison (recovery traffic — acks, probes,
+//! retransmits, resume handshakes — is real and costs real bytes).
+//!
+//! The session is engine-free by design: batches are generated from the
+//! seed, pushed through the *real* codec registry (`compress::codec_for`,
+//! every wire layout), framed by the real `wire`/`transport::Mux` stack,
+//! and digested into pseudo-metrics on the receiving side. That makes the
+//! suite runnable everywhere (CI shards hundreds of seeds per codec, no
+//! compiled artifacts needed) while exercising exactly the bytes the real
+//! trainer puts on the wire. `rust/tests/chaos.rs` adds an engine-gated
+//! variant over the real `FeatureOwner`/`LabelOwner` when artifacts
+//! exist.
+//!
+//! Any failing seed replays from the CLI:
+//! `splitfed chaos --seed <N> --method <SPEC>`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::{
+    codec_for, Batch, Codec, CodecSpec, DenseBatch, Pass, QuantBatch, SparseBatch,
+};
+use crate::config::Method;
+use crate::coordinator::send_data_frame;
+use crate::json::Json;
+use crate::metrics::{EpochRecord, RunLedger};
+use crate::transport::sim::LinkModel;
+use crate::transport::{
+    FaultCounts, FaultPlan, Mux, MuxEvent, RecoveryCounts, RecoveryPolicy, SimLink, SimNet,
+    Transport,
+};
+use crate::util::Rng;
+use crate::wire::{Control, Frame, Message};
+
+/// Every codec in the registry, as method specs — the chaos matrix axis.
+pub const CHAOS_METHODS: &[&str] = &[
+    "none",
+    "randtopk:k=6,alpha=0.1",
+    "topk:k=6",
+    "sizered:k=6",
+    "quant:bits=4",
+    "l1:lambda=0.001,eps=0.05",
+];
+
+/// One schedule's workload shape.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    pub seed: u64,
+    pub method: Method,
+    pub cut_dim: usize,
+    pub rows: usize,
+    pub epochs: u32,
+    pub steps_per_epoch: u32,
+}
+
+impl ChaosConfig {
+    /// The CI-sized workload: big enough that every frame kind crosses
+    /// the wire several times per run, small enough for hundreds of
+    /// seeds per codec.
+    pub fn quick(seed: u64, method: Method) -> Self {
+        ChaosConfig { seed, method, cut_dim: 32, rows: 4, epochs: 2, steps_per_epoch: 6 }
+    }
+}
+
+/// Derive a fault plan from a schedule seed: one of four regimes (light,
+/// lossy, flaky-connection, brutal), each per-fault probability jittered
+/// by the seed so no two schedules are alike — but the same seed always
+/// produces the same plan.
+pub fn fault_plan_for_seed(seed: u64) -> FaultPlan {
+    let mut r = Rng::new(seed ^ 0xC0A0_5EED_F417_A11A);
+    let regime = r.below(4);
+    let mut plan = match regime {
+        0 => FaultPlan {
+            drop: 0.02,
+            duplicate: 0.02,
+            reorder: 0.03,
+            corrupt: 0.01,
+            truncate: 0.01,
+            disconnect: 0.002,
+            ..FaultPlan::default()
+        },
+        1 => FaultPlan {
+            drop: 0.10,
+            duplicate: 0.05,
+            reorder: 0.08,
+            corrupt: 0.05,
+            truncate: 0.03,
+            disconnect: 0.005,
+            ..FaultPlan::default()
+        },
+        2 => FaultPlan {
+            drop: 0.02,
+            duplicate: 0.01,
+            reorder: 0.02,
+            corrupt: 0.01,
+            truncate: 0.01,
+            disconnect: 0.04,
+            ..FaultPlan::default()
+        },
+        _ => FaultPlan {
+            drop: 0.15,
+            duplicate: 0.08,
+            reorder: 0.10,
+            corrupt: 0.08,
+            truncate: 0.05,
+            disconnect: 0.01,
+            ..FaultPlan::default()
+        },
+    };
+    fn jitter(r: &mut Rng, p: &mut f64) {
+        *p *= 0.5 + r.next_f32() as f64;
+    }
+    jitter(&mut r, &mut plan.drop);
+    jitter(&mut r, &mut plan.duplicate);
+    jitter(&mut r, &mut plan.reorder);
+    jitter(&mut r, &mut plan.corrupt);
+    jitter(&mut r, &mut plan.truncate);
+    jitter(&mut r, &mut plan.disconnect);
+    plan.seed = seed;
+    plan
+}
+
+/// The deterministic forward batch for `step`, shaped for the method's
+/// codec (real codec input, no engine).
+fn forward_batch(cfg: &ChaosConfig, step: u64) -> Batch {
+    let mut r = Rng::new(cfg.seed ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xF0F0);
+    let (rows, dim) = (cfg.rows, cfg.cut_dim);
+    match cfg.method {
+        Method::None | Method::L1 { .. } => {
+            let data = (0..rows * dim).map(|_| r.normal()).collect();
+            Batch::Dense(DenseBatch::new(rows, dim, data))
+        }
+        Method::RandTopk { k, .. } | Method::Topk { k } => {
+            let mut values = Vec::with_capacity(rows * k);
+            let mut indices = Vec::with_capacity(rows * k);
+            for _ in 0..rows {
+                let mut all: Vec<i32> = (0..dim as i32).collect();
+                r.shuffle(&mut all);
+                let mut sel = all[..k].to_vec();
+                sel.sort_unstable();
+                for &i in &sel {
+                    indices.push(i);
+                    values.push(r.normal());
+                }
+            }
+            Batch::Sparse(SparseBatch { rows, dim, k, values, indices })
+        }
+        Method::SizeReduction { k } => {
+            let values = (0..rows * k).map(|_| r.normal()).collect();
+            let indices = (0..rows).flat_map(|_| 0..k as i32).collect();
+            Batch::Sparse(SparseBatch { rows, dim, k, values, indices })
+        }
+        Method::Quant { bits } => {
+            let levels = 1usize << bits.min(16);
+            let codes = (0..rows * dim).map(|_| r.below(levels) as f32).collect();
+            let o_min: Vec<f32> = (0..rows).map(|_| -1.0 - r.next_f32()).collect();
+            let o_max: Vec<f32> = o_min.iter().map(|m| m + 2.0).collect();
+            Batch::Quant(QuantBatch { rows, dim, codes, o_min, o_max })
+        }
+    }
+}
+
+/// Order-fixed scalar digest of a decoded batch — the "loss" of the
+/// synthetic trainer. Any reordered, duplicated, lost, or corrupted
+/// delivery changes it, which is exactly what the bit-identity assertion
+/// catches.
+fn batch_digest(b: &Batch) -> f64 {
+    match b {
+        Batch::Dense(d) => {
+            d.data.iter().map(|v| v.abs() as f64).sum::<f64>() / d.data.len().max(1) as f64
+        }
+        Batch::Sparse(s) => {
+            let v: f64 = s.values.iter().map(|v| v.abs() as f64).sum();
+            let i: f64 = s.indices.iter().map(|&i| i as f64).sum();
+            (v + i * 1e-3) / s.values.len().max(1) as f64
+        }
+        Batch::Quant(q) => {
+            let c: f64 = q.codes.iter().map(|&c| c as f64).sum();
+            let m: f64 = q.o_min.iter().zip(&q.o_max).map(|(a, b)| (a + b) as f64).sum();
+            (c + m) / q.codes.len().max(1) as f64
+        }
+    }
+}
+
+/// The label owner's deterministic "gradient" for a decoded forward
+/// batch, shaped per Table 2 (sparse stays sparse, quant/L1/dense travel
+/// back dense).
+fn gradient_for(decoded: &Batch) -> Batch {
+    match decoded {
+        Batch::Sparse(s) => Batch::Sparse(SparseBatch {
+            rows: s.rows,
+            dim: s.dim,
+            k: s.k,
+            values: s.values.iter().map(|v| v * 0.5 - 0.1).collect(),
+            indices: s.indices.clone(),
+        }),
+        Batch::Dense(d) => Batch::Dense(DenseBatch::new(
+            d.rows,
+            d.dim,
+            d.data.iter().map(|v| v * 0.5 - 0.1).collect(),
+        )),
+        Batch::Quant(q) => {
+            let mut data = Vec::with_capacity(q.rows * q.dim);
+            for r in 0..q.rows {
+                for j in 0..q.dim {
+                    let g = q.codes[r * q.dim + j] * 0.1 + q.o_min[r] * 0.01 + q.o_max[r] * 0.001;
+                    data.push(g);
+                }
+            }
+            Batch::Dense(DenseBatch::new(q.rows, q.dim, data))
+        }
+    }
+}
+
+fn label_owner_loop(mux: Mux<SimLink>, cfg: ChaosConfig) -> Result<()> {
+    let stream_id = loop {
+        match mux.next_event()? {
+            MuxEvent::Opened(id) => break id,
+            MuxEvent::Recovery(_) => continue,
+            other => bail!("label owner: unexpected pre-open event {other:?}"),
+        }
+    };
+    let mut stream = mux.accept_stream(stream_id)?;
+    let codec = codec_for(cfg.method, cfg.cut_dim)?;
+    let mut seq = 0u32;
+    let mut epoch_loss = 0.0f64;
+    let mut epoch_steps = 0u64;
+    loop {
+        let frame = stream.recv()?;
+        match frame.message {
+            Message::Control(Control::StartEpoch { .. }) => {
+                epoch_loss = 0.0;
+                epoch_steps = 0;
+            }
+            Message::Activations { step, payload } => {
+                let decoded = codec.decode(&payload, Pass::Forward)?;
+                epoch_loss += batch_digest(&decoded);
+                epoch_steps += 1;
+                let grad = gradient_for(&decoded);
+                send_data_frame(&mut stream, &mut seq, &*codec, step, &grad, Pass::Backward)?;
+            }
+            Message::Control(Control::EndEpoch { epoch }) => {
+                let loss_sum = (epoch_loss / epoch_steps.max(1) as f64) as f32;
+                let metric_count = (epoch_loss * 0.25) as f32;
+                stream.send(&Frame::new(
+                    seq,
+                    Message::EvalResult { step: epoch as u64, loss_sum, metric_count },
+                ))?;
+                seq += 1;
+            }
+            Message::Control(Control::Shutdown) => return Ok(()),
+            other => bail!("label owner: unexpected {:?}", other.msg_type()),
+        }
+    }
+}
+
+fn feature_owner_loop(mux: &Mux<SimLink>, cfg: &ChaosConfig, net: &SimNet) -> Result<RunLedger> {
+    let mut stream = mux.open_stream_with(CodecSpec::new(cfg.method, cfg.cut_dim))?;
+    let codec = codec_for(cfg.method, cfg.cut_dim)?;
+    let mut seq = 0u32;
+    let mut ledger = RunLedger {
+        config_text: format!("chaos seed = {}\nmethod = {}", cfg.seed, cfg.method),
+        ..Default::default()
+    };
+    let mut step = 0u64;
+    let mut pct_sum = 0.0f64;
+    let mut pct_n = 0u64;
+    for epoch in 0..cfg.epochs {
+        stream.send(&Frame::new(seq, Message::Control(Control::StartEpoch { epoch })))?;
+        seq += 1;
+        let mut grad_digest = 0.0f64;
+        for _ in 0..cfg.steps_per_epoch {
+            let batch = forward_batch(cfg, step);
+            let content =
+                send_data_frame(&mut stream, &mut seq, &*codec, step, &batch, Pass::Forward)?;
+            pct_sum += 100.0 * content as f64 / (cfg.rows * cfg.cut_dim * 4) as f64;
+            pct_n += 1;
+            let frame = stream.recv()?;
+            let Message::Gradients { step: got, payload } = frame.message else {
+                bail!("feature owner expected Gradients, got {:?}", frame.message.msg_type());
+            };
+            if got != step {
+                bail!("gradient step mismatch: {got} != {step} (ordering broken)");
+            }
+            let decoded = codec.decode(&payload, Pass::Backward)?;
+            grad_digest += batch_digest(&decoded);
+            step += 1;
+        }
+        stream.send(&Frame::new(seq, Message::Control(Control::EndEpoch { epoch })))?;
+        seq += 1;
+        let frame = stream.recv()?;
+        let Message::EvalResult { loss_sum, metric_count, .. } = frame.message else {
+            bail!("feature owner expected EvalResult, got {:?}", frame.message.msg_type());
+        };
+        ledger.push(EpochRecord {
+            epoch,
+            train_loss: loss_sum as f64,
+            train_metric: grad_digest / cfg.steps_per_epoch.max(1) as f64,
+            test_loss: loss_sum as f64 * 0.5,
+            test_metric: metric_count as f64,
+            comm_bytes: stream.stats().total_bytes(),
+            sim_link_secs: net.sim_secs(),
+            wall_secs: 0.0,
+        });
+    }
+    ledger.fwd_compressed_pct = pct_sum / pct_n.max(1) as f64;
+    // quiesce the link for the shutdown: with faults still armed, the
+    // session's LAST frame can always be lost after its sender exits
+    // (two generals) — the chaos window covers the training body
+    net.set_faults_enabled(false);
+    stream.send(&Frame::new(seq, Message::Control(Control::Shutdown)))?;
+    Ok(ledger)
+}
+
+/// Everything one session produced.
+pub struct SessionOutcome {
+    pub ledger: RunLedger,
+    pub faults: FaultCounts,
+    pub recovery: RecoveryCounts,
+}
+
+/// Run one two-party synthetic training session over a `SimNet` carrying
+/// `plan`, with the mux recovery layer on both sides.
+pub fn run_session(cfg: &ChaosConfig, plan: FaultPlan) -> Result<SessionOutcome> {
+    let net = SimNet::with_faults(LinkModel::default(), plan);
+    let (a, b) = net.pair();
+    let cm = Mux::initiator(a);
+    let sm = Mux::acceptor(b);
+    let policy = RecoveryPolicy {
+        probe_after_polls: 200,
+        probe_interval_polls: 2_000,
+        poll_timeout_ms: 30_000,
+        ..RecoveryPolicy::default()
+    };
+    cm.enable_recovery(policy);
+    sm.enable_recovery(policy);
+    let nc = net.clone();
+    cm.set_reconnector(move |_| {
+        nc.reconnect();
+        Ok(None)
+    });
+    let ns = net.clone();
+    sm.set_reconnector(move |_| {
+        ns.reconnect();
+        Ok(None)
+    });
+    let sm_counts = sm.clone();
+    let cfg_lo = cfg.clone();
+    let lo = std::thread::spawn(move || label_owner_loop(sm, cfg_lo));
+    let fo_result = feature_owner_loop(&cm, cfg, &net);
+    let lo_result = lo.join().map_err(|_| anyhow::anyhow!("label-owner thread panicked"));
+    let ledger = fo_result.context("feature owner")?;
+    lo_result?.context("label owner")?;
+    let mut recovery = cm.recovery_counts();
+    recovery.add(&sm_counts.recovery_counts());
+    Ok(SessionOutcome { ledger, faults: net.fault_totals(), recovery })
+}
+
+/// Bit-exact fingerprint of a ledger's *metric* fields (losses, metrics,
+/// compressed-size percentage). Deliberately excludes byte counts and
+/// wall/sim time: recovery traffic is real traffic.
+pub fn metrics_fingerprint(l: &RunLedger) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = write!(out, "fwd:{:016x}", l.fwd_compressed_pct.to_bits());
+    for e in &l.epochs {
+        let _ = write!(
+            out,
+            "|e{}:{:016x}:{:016x}:{:016x}:{:016x}",
+            e.epoch,
+            e.train_loss.to_bits(),
+            e.train_metric.to_bits(),
+            e.test_loss.to_bits(),
+            e.test_metric.to_bits()
+        );
+    }
+    out
+}
+
+/// The verdict of one (seed, codec) schedule.
+#[derive(Clone, Debug)]
+pub struct ChaosVerdict {
+    pub seed: u64,
+    pub method_spec: String,
+    pub plan: FaultPlan,
+    pub ok: bool,
+    pub detail: String,
+    pub faults: FaultCounts,
+    pub recovery: RecoveryCounts,
+}
+
+/// Run one schedule: clean baseline, faulty run, bit-identity check.
+pub fn run_schedule(seed: u64, method_spec: &str) -> ChaosVerdict {
+    let plan = fault_plan_for_seed(seed);
+    let mut v = ChaosVerdict {
+        seed,
+        method_spec: method_spec.to_string(),
+        plan,
+        ok: false,
+        detail: String::new(),
+        faults: FaultCounts::default(),
+        recovery: RecoveryCounts::default(),
+    };
+    let method = match Method::parse(method_spec) {
+        Ok(m) => m,
+        Err(e) => {
+            v.detail = format!("bad method spec: {e}");
+            return v;
+        }
+    };
+    let cfg = ChaosConfig::quick(seed, method);
+    let clean = match run_session(&cfg, FaultPlan::none()) {
+        Ok(o) => o,
+        Err(e) => {
+            v.detail = format!("clean run failed: {e:#}");
+            return v;
+        }
+    };
+    let chaos = match run_session(&cfg, plan) {
+        Ok(o) => o,
+        Err(e) => {
+            v.detail = format!("chaos run failed: {e:#}");
+            return v;
+        }
+    };
+    v.faults = chaos.faults;
+    v.recovery = chaos.recovery;
+    let (cf, xf) = (metrics_fingerprint(&clean.ledger), metrics_fingerprint(&chaos.ledger));
+    if cf == xf {
+        v.ok = true;
+        v.detail = format!(
+            "metrics bit-identical across {} injected faults ({} retransmits, {} reconnects)",
+            v.faults.total(),
+            v.recovery.retransmits,
+            v.recovery.reconnects
+        );
+    } else {
+        v.detail = format!("metric divergence under faults:\n  clean {cf}\n  chaos {xf}");
+    }
+    v
+}
+
+/// The one-line reproduction for a failing seed.
+pub fn repro_command(seed: u64, method_spec: &str) -> String {
+    format!("cargo run --bin splitfed -- chaos --seed {seed} --method {method_spec}")
+}
+
+/// Persist a failing verdict as a CI artifact (JSON next to BENCH_*.json).
+pub fn write_repro(dir: &Path, v: &ChaosVerdict) -> Result<PathBuf> {
+    let mut root = BTreeMap::new();
+    root.insert("seed".into(), Json::Num(v.seed as f64));
+    root.insert("method".into(), Json::Str(v.method_spec.clone()));
+    root.insert("ok".into(), Json::Bool(v.ok));
+    root.insert("detail".into(), Json::Str(v.detail.clone()));
+    root.insert("repro".into(), Json::Str(repro_command(v.seed, &v.method_spec)));
+    let mut plan = BTreeMap::new();
+    plan.insert("drop".into(), Json::Num(v.plan.drop));
+    plan.insert("duplicate".into(), Json::Num(v.plan.duplicate));
+    plan.insert("reorder".into(), Json::Num(v.plan.reorder));
+    plan.insert("corrupt".into(), Json::Num(v.plan.corrupt));
+    plan.insert("truncate".into(), Json::Num(v.plan.truncate));
+    plan.insert("disconnect".into(), Json::Num(v.plan.disconnect));
+    root.insert("plan".into(), Json::Obj(plan));
+    let mut faults = BTreeMap::new();
+    faults.insert("dropped".into(), Json::Num(v.faults.dropped as f64));
+    faults.insert("duplicated".into(), Json::Num(v.faults.duplicated as f64));
+    faults.insert("reordered".into(), Json::Num(v.faults.reordered as f64));
+    faults.insert("corrupted".into(), Json::Num(v.faults.corrupted as f64));
+    faults.insert("truncated".into(), Json::Num(v.faults.truncated as f64));
+    faults.insert("disconnects".into(), Json::Num(v.faults.disconnects as f64));
+    root.insert("faults".into(), Json::Obj(faults));
+    std::fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
+    let name = format!(
+        "CHAOS_FAILED_{}_{}.json",
+        v.method_spec.replace([':', ',', '='], "-"),
+        v.seed
+    );
+    let path = dir.join(name);
+    std::fs::write(&path, Json::Obj(root).to_string_pretty())
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plan_is_deterministic_and_varied() {
+        let a = fault_plan_for_seed(5);
+        assert_eq!(a, fault_plan_for_seed(5));
+        assert_ne!(a, fault_plan_for_seed(6));
+        assert!(!a.is_clean());
+        assert_eq!(a.seed, 5);
+    }
+
+    #[test]
+    fn clean_sessions_are_bit_identical() {
+        let cfg = ChaosConfig::quick(17, Method::Topk { k: 6 });
+        let a = run_session(&cfg, FaultPlan::none()).unwrap();
+        let b = run_session(&cfg, FaultPlan::none()).unwrap();
+        assert_eq!(metrics_fingerprint(&a.ledger), metrics_fingerprint(&b.ledger));
+        assert_eq!(a.faults.total(), 0);
+        assert_eq!(a.ledger.epochs.len(), 2);
+        assert!(a.ledger.total_comm_bytes() > 0);
+    }
+
+    #[test]
+    fn one_lossy_schedule_survives_per_codec_smoke() {
+        // the full matrix lives in rust/tests/chaos.rs; this is the
+        // in-crate smoke test (one seed per codec)
+        for spec in CHAOS_METHODS {
+            let v = run_schedule(91, spec);
+            assert!(v.ok, "{spec} seed 91: {}", v.detail);
+        }
+    }
+}

@@ -24,7 +24,9 @@ pub mod trainer;
 
 pub use feature_owner::FeatureOwner;
 pub use label_owner::LabelOwner;
-pub use serve::{serve_tcp, MuxServer, RefusedStream, ServeReport, SessionReport};
+pub use serve::{
+    serve_tcp, serve_tcp_resumable, MuxServer, RefusedStream, ServeReport, SessionReport,
+};
 pub use trainer::{train, Trainer};
 
 use anyhow::Result;

@@ -24,7 +24,10 @@ use crate::compress::codec_for;
 use crate::config::Method;
 use crate::data::{for_model, Dataset, Split};
 use crate::runtime::Engine;
-use crate::transport::{LinkStats, Mux, MuxEvent, MuxStream, TcpTransport, Transport};
+use crate::transport::{
+    is_connection_failure, LinkStats, Mux, MuxEvent, MuxStream, RecoveryPolicy, TcpTransport,
+    Transport,
+};
 use crate::wire::OpenSpec;
 
 use super::LabelOwner;
@@ -268,12 +271,17 @@ impl MuxServer {
                     }
                     done.push(finalize(id, s));
                 }
+                Ok(MuxEvent::Recovery(_)) => {
+                    // ack/resume housekeeping or a discarded duplicate —
+                    // the mux already handled it
+                    continue;
+                }
                 Ok(MuxEvent::Goaway { .. }) => break,
                 Err(e) => {
                     // a peer hangup after every session closed is the normal
                     // end; anything else (CRC mismatch, unknown stream, ...)
                     // is a protocol violation even with no sessions live
-                    if is_hangup(&e) && sessions.is_empty() && served_any {
+                    if is_connection_failure(&e) && sessions.is_empty() && served_any {
                         break;
                     }
                     return Err(e);
@@ -298,22 +306,6 @@ impl MuxServer {
 
 }
 
-/// Did the connection simply drop (EOF/reset), as opposed to a wire-level
-/// protocol violation?
-fn is_hangup(e: &anyhow::Error) -> bool {
-    e.chain().any(|c| {
-        c.downcast_ref::<std::io::Error>().is_some_and(|io| {
-            matches!(
-                io.kind(),
-                std::io::ErrorKind::UnexpectedEof
-                    | std::io::ErrorKind::ConnectionReset
-                    | std::io::ErrorKind::ConnectionAborted
-                    | std::io::ErrorKind::BrokenPipe
-            )
-        })
-    })
-}
-
 fn finalize<T: Transport>(id: u32, s: Session<T>) -> SessionReport {
     let batch = s.lo.meta.batch as u64;
     SessionReport {
@@ -325,6 +317,46 @@ fn finalize<T: Transport>(id: u32, s: Session<T>) -> SessionReport {
         metric_sum: s.metric_sum,
         stats: s.lo.transport.stats(),
     }
+}
+
+/// Serve one *resumable* connection lineage: accept a connection, serve
+/// its sessions with the mux recovery layer enabled, and — if the
+/// connection dies mid-session — accept the client's replacement
+/// connection from the same listener and resume every live session
+/// (`ResumeStream` handshake + replay) instead of erroring. Session state
+/// (`LabelOwner` parameters, step counters) survives the reconnect
+/// because the `Mux` and its stream handles persist across it; only the
+/// physical transport is swapped underneath them.
+///
+/// The lineage ends like any other connection: client `Goaway`, or a
+/// hangup with no live sessions.
+///
+/// Caveat: while a session is live and its connection dies, the
+/// reconnector blocks in `listener.accept()` waiting for the client's
+/// replacement — a client that never returns leaves the serving thread
+/// parked in accept (bounding that wait needs a listener deadline, which
+/// `std::net` does not offer; callers needing one should close the
+/// listener from outside or move to a nonblocking accept loop).
+pub fn serve_tcp_resumable(
+    listener: std::net::TcpListener,
+    artifacts_dir: std::path::PathBuf,
+    model: String,
+    default_method: Method,
+    data_seed: u64,
+    policy: RecoveryPolicy,
+) -> Result<std::thread::JoinHandle<Result<ServeReport>>> {
+    let (stream, _) = listener.accept()?;
+    Ok(std::thread::spawn(move || -> Result<ServeReport> {
+        let engine = Rc::new(Engine::load(&artifacts_dir)?);
+        let server = MuxServer::new(engine, &model, default_method, data_seed);
+        let mux = Mux::acceptor(TcpTransport::from_stream(stream));
+        mux.enable_recovery(policy);
+        mux.set_reconnector(move |_attempt| {
+            let (stream, _) = listener.accept()?;
+            Ok(Some(TcpTransport::from_stream(stream)))
+        });
+        server.serve_connection(&mux)
+    }))
 }
 
 /// Accept `connections` physical connections and serve each on its own

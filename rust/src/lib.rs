@@ -6,6 +6,7 @@
 //! experiment index; python never runs on the request path.
 
 pub mod bench_util;
+pub mod chaos;
 pub mod cli;
 pub mod compress;
 pub mod coordinator;

@@ -5,6 +5,8 @@
 //! splitfed describe                                         (models + dataset table)
 //! splitfed check   [--filter mlp]                           (compile every artifact)
 //! splitfed serve   --role label-owner --addr 127.0.0.1:7070 (two-process TCP party)
+//! splitfed chaos   --seed 42 [--method topk:k=6]            (replay a fault schedule)
+//! splitfed chaos   --seeds 100 [--shard 0/8]                (run a seed matrix)
 //! ```
 
 use std::rc::Rc;
@@ -25,9 +27,10 @@ fn main() -> Result<()> {
         Some("describe") => cmd_describe(),
         Some("check") => cmd_check(&args),
         Some("serve") => cmd_serve(&args),
+        Some("chaos") => cmd_chaos(&args),
         _ => {
             eprintln!(
-                "usage: splitfed <train|describe|check|serve> [--options]\n\
+                "usage: splitfed <train|describe|check|serve|chaos> [--options]\n\
                  see `splitfed describe` and README.md"
             );
             Ok(())
@@ -119,6 +122,68 @@ fn cmd_check(args: &Args) -> Result<()> {
     if failed > 0 {
         bail!("{failed} artifacts failed to compile");
     }
+    Ok(())
+}
+
+/// Replay chaos schedules: `--seed N` runs one (the CLI repro for a CI
+/// failure), `--seeds N` runs a matrix of N seeds, `--shard i/n` takes
+/// every n-th seed (CI sharding). `--method` restricts to one codec;
+/// default is every codec in the registry. Engine-free: runs anywhere.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use splitfed::chaos::{repro_command, run_schedule, write_repro, CHAOS_METHODS};
+
+    let methods: Vec<String> = match args.get("method") {
+        Some(m) => vec![m.to_string()],
+        None => CHAOS_METHODS.iter().map(|s| s.to_string()).collect(),
+    };
+    let seeds: Vec<u64> = if let Some(seed) = args.get_parse::<u64>("seed")? {
+        vec![seed]
+    } else {
+        let n: u64 = args.get_parse("seeds")?.unwrap_or(20);
+        let (shard, shards) = match args.get("shard") {
+            Some(s) => {
+                let (i, n) = s
+                    .split_once('/')
+                    .ok_or_else(|| anyhow::anyhow!("--shard wants i/n, got '{s}'"))?;
+                (i.parse::<u64>()?, n.parse::<u64>()?.max(1))
+            }
+            None => (0, 1),
+        };
+        if shard >= shards {
+            bail!("--shard {shard}/{shards}: shard index must be < shard count");
+        }
+        let picked: Vec<u64> = (0..n).filter(|s| s % shards == shard).collect();
+        if picked.is_empty() {
+            bail!("--seeds {n} --shard {shard}/{shards} selects no seeds");
+        }
+        picked
+    };
+    let artifact_dir = std::path::PathBuf::from(args.get_or("out-dir", "."));
+    let mut failures = 0usize;
+    for method in &methods {
+        for &seed in &seeds {
+            let v = run_schedule(seed, method);
+            let status = if v.ok { "ok  " } else { "FAIL" };
+            println!(
+                "{status} seed={seed:<6} method={method:<24} faults={:<4} \
+                 retransmits={:<4} reconnects={:<3} {}",
+                v.faults.total(),
+                v.recovery.retransmits,
+                v.recovery.reconnects,
+                if v.ok { String::new() } else { v.detail.clone() }
+            );
+            if !v.ok {
+                failures += 1;
+                let path = write_repro(&artifact_dir, &v)?;
+                eprintln!("  repro: {}", repro_command(seed, method));
+                eprintln!("  artifact: {}", path.display());
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} chaos schedules failed");
+    }
+    println!("all {} schedules delivered bit-identical metrics", methods.len() * seeds.len());
     Ok(())
 }
 

@@ -8,6 +8,13 @@
 //! stream multiplexing on either, so one physical connection carries many
 //! concurrent sessions with per-stream accounting.
 //!
+//! The sim link can additionally run a seeded [`sim::FaultPlan`] that
+//! drops, duplicates, reorders, corrupts, truncates, or hard-disconnects
+//! frames deterministically — the chaos harness (`crate::chaos`) drives
+//! the full protocol over such links and `Mux`'s recovery layer
+//! (ack/replay/resume, see `mux::RecoveryPolicy`) must deliver every
+//! frame exactly once in order anyway.
+//!
 //! Transports implement `send_encoded` (ownership of the wire bytes); the
 //! hot path builds frames with `wire::FrameEncoder` — codec output goes
 //! straight into the frame buffer — and hands the finished buffer over
@@ -18,13 +25,138 @@ pub mod mux;
 pub mod sim;
 pub mod tcp;
 
-pub use mux::{Mux, MuxEvent, MuxStream};
-pub use sim::{SimLink, SimNet};
+pub use mux::{Mux, MuxEvent, MuxStream, RecoveryPolicy};
+pub use sim::{FaultPlan, SimLink, SimNet};
 pub use tcp::TcpTransport;
 
 use anyhow::Result;
 
 use crate::wire::Frame;
+
+/// Typed transport failures that recovery layers must distinguish from
+/// protocol violations. Carried inside `anyhow::Error`; classify with
+/// `TransportError::of(&err)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportError {
+    /// No frame is currently available (the queue is empty). NOT a
+    /// protocol deadlock by itself: under fault injection a gap simply
+    /// means a frame was lost in flight and a retransmit must be
+    /// solicited. Callers without a recovery layer treat it as fatal.
+    WouldBlock,
+    /// The link is hard-disconnected; nothing moves until a reconnect.
+    Disconnected,
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::WouldBlock => {
+                write!(f, "transport would block: no frame available")
+            }
+            TransportError::Disconnected => write!(f, "transport disconnected"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl TransportError {
+    /// The typed transport error inside `err`, if any.
+    pub fn of(err: &anyhow::Error) -> Option<TransportError> {
+        err.chain().find_map(|c| c.downcast_ref::<TransportError>().copied())
+    }
+}
+
+/// Did the connection simply drop (EOF/reset/typed disconnect), as opposed
+/// to a wire-level protocol violation? This is the class of failures a
+/// recovery layer may answer with a reconnect + resume.
+pub fn is_connection_failure(e: &anyhow::Error) -> bool {
+    if TransportError::of(e) == Some(TransportError::Disconnected) {
+        return true;
+    }
+    e.chain().any(|c| {
+        c.downcast_ref::<std::io::Error>().is_some_and(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::UnexpectedEof
+                    | std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::BrokenPipe
+            )
+        })
+    })
+}
+
+/// Exact per-fault accounting of what a fault-injecting link did to the
+/// frames an endpoint sent (`sim::FaultPlan`). All zero on clean links.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    /// frames silently discarded in flight
+    pub dropped: u64,
+    /// frames delivered twice
+    pub duplicated: u64,
+    /// frames delivered behind a later frame
+    pub reordered: u64,
+    /// frames with a flipped payload byte (CRC catches it at recv)
+    pub corrupted: u64,
+    /// frames cut short in flight (framing catches it at recv)
+    pub truncated: u64,
+    /// hard link failures triggered while sending
+    pub disconnects: u64,
+}
+
+impl FaultCounts {
+    pub fn total(&self) -> u64 {
+        self.dropped
+            + self.duplicated
+            + self.reordered
+            + self.corrupted
+            + self.truncated
+            + self.disconnects
+    }
+
+    pub fn add(&mut self, other: &FaultCounts) {
+        self.dropped += other.dropped;
+        self.duplicated += other.duplicated;
+        self.reordered += other.reordered;
+        self.corrupted += other.corrupted;
+        self.truncated += other.truncated;
+        self.disconnects += other.disconnects;
+    }
+}
+
+/// What the mux recovery layer did to repair a faulty link: every count
+/// is an action taken, so a clean run shows acks only.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryCounts {
+    /// replay-buffer frames re-sent (resume handshakes + nack probes)
+    pub retransmits: u64,
+    /// cumulative-ack frames sent (cadence acks + nack probes)
+    pub acks_sent: u64,
+    /// inbound frames discarded as already-delivered duplicates
+    pub dup_dropped: u64,
+    /// inbound frames discarded for arriving ahead of a gap
+    pub gap_dropped: u64,
+    /// inbound frames discarded because they failed to decode (corrupt /
+    /// truncated); connection-level — the stream id is unreadable
+    pub decode_dropped: u64,
+    /// `ResumeStream` handshakes completed (sent or answered)
+    pub resumes: u64,
+    /// physical reconnections performed
+    pub reconnects: u64,
+}
+
+impl RecoveryCounts {
+    pub fn add(&mut self, other: &RecoveryCounts) {
+        self.retransmits += other.retransmits;
+        self.acks_sent += other.acks_sent;
+        self.dup_dropped += other.dup_dropped;
+        self.gap_dropped += other.gap_dropped;
+        self.decode_dropped += other.decode_dropped;
+        self.resumes += other.resumes;
+        self.reconnects += other.reconnects;
+    }
+}
 
 /// Per-endpoint link statistics (exact framed byte counts).
 #[derive(Clone, Debug, Default)]
@@ -35,6 +167,9 @@ pub struct LinkStats {
     pub bytes_recv: u64,
     /// Simulated wall-clock spent on the wire (SimLink only).
     pub sim_link_secs: f64,
+    /// Exact per-fault accounting of injected faults (SimLink only; the
+    /// sender's endpoint accounts the fault at the injection site).
+    pub faults: FaultCounts,
 }
 
 impl LinkStats {

@@ -1,4 +1,4 @@
-//! In-process simulated link.
+//! In-process simulated link, with deterministic fault injection.
 //!
 //! A `SimNet` models the physical link (bandwidth, propagation latency);
 //! `SimNet::pair()` returns the two endpoints. Frames are byte-encoded and
@@ -6,16 +6,30 @@
 //! transfer advances the shared simulated clock by
 //! `latency + bytes / bandwidth` — the number used for the paper's
 //! "communication to converge" curves under a fixed link.
+//!
+//! A [`FaultPlan`] turns the link hostile, FoundationDB-style: every
+//! sequenced data frame a side sends draws one fate from a seeded
+//! `util::Rng` stream (one RNG per direction, forked from the plan seed),
+//! so a schedule is replayable from the seed alone. Faults are exempted
+//! for the recovery plane (`Ack`, `ResumeStream`, `Goaway`) and for
+//! retransmissions (a `(stream, seq)` the side already sent once): the
+//! fault schedule is indexed purely by the deterministic first-transmission
+//! order, independent of how many probes, retransmits, or resumes recovery
+//! needed — or how threads interleaved. Every injected fault is accounted
+//! exactly in the sending endpoint's `LinkStats::faults`.
+//!
+//! The shared state is `Arc<Mutex<..>>`, so both endpoints are `Send` and
+//! the chaos harness can drive the two parties from two threads.
 
-use std::cell::RefCell;
-use std::collections::VecDeque;
-use std::rc::Rc;
+use std::collections::{HashSet, VecDeque};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::{bail, Result};
 
-use crate::wire::Frame;
+use crate::util::Rng;
+use crate::wire::{Frame, MsgType, HEADER_BYTES, OFF_TYPE};
 
-use super::{LinkStats, Transport};
+use super::{FaultCounts, LinkStats, Transport, TransportError};
 
 /// Link parameters. Defaults model a 100 Mbit/s WAN-ish link with 10 ms RTT.
 #[derive(Clone, Copy, Debug)]
@@ -33,31 +47,156 @@ impl Default for LinkModel {
     }
 }
 
+/// Seeded fault schedule for one `SimNet`. Each probability is the chance
+/// that a sequenced data frame suffers that fate (fates are exclusive —
+/// one draw per frame, walked in field order). All-zero = clean link.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed of the per-direction fault RNG streams.
+    pub seed: u64,
+    /// Hard-disconnect the link while this frame is in flight.
+    pub disconnect: f64,
+    /// Silently discard the frame.
+    pub drop: f64,
+    /// Deliver the frame twice.
+    pub duplicate: f64,
+    /// Deliver the frame behind the next one (swap with queue tail).
+    pub reorder: f64,
+    /// Flip one payload byte (the body CRC catches it at recv).
+    pub corrupt: f64,
+    /// Cut the frame short in flight (framing catches it at recv).
+    pub truncate: f64,
+}
+
+impl FaultPlan {
+    /// A clean link (the default).
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.disconnect == 0.0
+            && self.drop == 0.0
+            && self.duplicate == 0.0
+            && self.reorder == 0.0
+            && self.corrupt == 0.0
+            && self.truncate == 0.0
+    }
+}
+
+/// The fate one send draws. `Deliver` also covers exempt frame types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Fate {
+    Deliver,
+    Disconnect,
+    Drop,
+    Duplicate,
+    Reorder,
+    Corrupt,
+    Truncate,
+}
+
 struct Shared {
     model: LinkModel,
+    plan: FaultPlan,
     /// queue[0]: a->b, queue[1]: b->a
     queues: [VecDeque<Vec<u8>>; 2],
     /// simulated time spent on the link in each direction
     sim_secs: [f64; 2],
+    /// per-direction fault RNG streams (index = sending side)
+    fault_rng: [Rng; 2],
+    /// link-wide fault totals (sum of both endpoints' accounting)
+    fault_totals: FaultCounts,
+    /// hard-disconnected: everything fails until `reconnect`
+    broken: bool,
+    /// fault kill-switch: the chaos harness disables injection for the
+    /// final shutdown handshake (someone has to stop probing first)
+    faults_enabled: bool,
+    /// (stream_id << 32 | seq) keys of sequenced frames each side has
+    /// already sent once: a repeat is a RETRANSMISSION and is fault-exempt,
+    /// so the schedule is indexed purely by first transmissions — which
+    /// are deterministic in count and order per direction — and replays
+    /// exactly from the seed regardless of recovery timing
+    seen: [HashSet<u64>; 2],
 }
 
+/// Walk the cumulative fate thresholds with one uniform draw.
+fn fate_for(p: &FaultPlan, u: f64) -> Fate {
+    let mut acc = p.disconnect;
+    if u < acc {
+        return Fate::Disconnect;
+    }
+    acc += p.drop;
+    if u < acc {
+        return Fate::Drop;
+    }
+    acc += p.duplicate;
+    if u < acc {
+        return Fate::Duplicate;
+    }
+    acc += p.reorder;
+    if u < acc {
+        return Fate::Reorder;
+    }
+    acc += p.corrupt;
+    if u < acc {
+        return Fate::Corrupt;
+    }
+    acc += p.truncate;
+    if u < acc {
+        return Fate::Truncate;
+    }
+    Fate::Deliver
+}
+
+impl Shared {
+    /// Draw one fate plus two auxiliary values (corrupt position/bit,
+    /// truncate length). Every first transmission consumes exactly THREE
+    /// draws, whatever the fate and whatever the link state, so the RNG
+    /// stream alignment — and therefore the whole schedule — is a pure
+    /// function of the per-direction first-transmission order.
+    fn draw_fate(&mut self, side: usize) -> (Fate, u64, u64) {
+        let u = self.fault_rng[side].next_f32() as f64;
+        let aux1 = self.fault_rng[side].next_u64();
+        let aux2 = self.fault_rng[side].next_u64();
+        (fate_for(&self.plan, u), aux1, aux2)
+    }
+}
+
+#[derive(Clone)]
 pub struct SimNet {
-    shared: Rc<RefCell<Shared>>,
+    shared: Arc<Mutex<Shared>>,
 }
 
 impl SimNet {
     pub fn new(model: LinkModel) -> Self {
-        SimNet {
-            shared: Rc::new(RefCell::new(Shared {
-                model,
-                queues: [VecDeque::new(), VecDeque::new()],
-                sim_secs: [0.0, 0.0],
-            })),
-        }
+        Self::with_faults(model, FaultPlan::none())
     }
 
     pub fn with_defaults() -> Self {
         Self::new(LinkModel::default())
+    }
+
+    /// A link that runs the given seeded fault schedule.
+    pub fn with_faults(model: LinkModel, plan: FaultPlan) -> Self {
+        let mut root = Rng::new(plan.seed);
+        SimNet {
+            shared: Arc::new(Mutex::new(Shared {
+                model,
+                plan,
+                queues: [VecDeque::new(), VecDeque::new()],
+                sim_secs: [0.0, 0.0],
+                fault_rng: [root.fork(0xA), root.fork(0xB)],
+                fault_totals: FaultCounts::default(),
+                broken: false,
+                faults_enabled: true,
+                seen: [HashSet::new(), HashSet::new()],
+            })),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Shared> {
+        self.shared.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
     }
 
     /// The two endpoints of the link.
@@ -70,21 +209,124 @@ impl SimNet {
 
     /// Total simulated seconds the link was busy (both directions).
     pub fn sim_secs(&self) -> f64 {
-        let s = self.shared.borrow();
+        let s = self.lock();
         s.sim_secs[0] + s.sim_secs[1]
+    }
+
+    /// Link-wide totals of every fault injected so far.
+    pub fn fault_totals(&self) -> FaultCounts {
+        self.lock().fault_totals
+    }
+
+    /// Is the link currently hard-disconnected?
+    pub fn is_broken(&self) -> bool {
+        self.lock().broken
+    }
+
+    /// Toggle fault injection (the plan stays armed). The chaos harness
+    /// quiesces the link before the shutdown handshake: with faults, the
+    /// last message of a session can always be lost after its sender has
+    /// exited — the two-generals end of every chaos run.
+    pub fn set_faults_enabled(&self, enabled: bool) {
+        self.lock().faults_enabled = enabled;
+    }
+
+    /// Hard-disconnect the link (frames in flight are stranded until a
+    /// reconnect discards them) — deterministic kill for tests.
+    pub fn kill(&self) {
+        let mut s = self.lock();
+        if !s.broken {
+            s.broken = true;
+            s.fault_totals.disconnects += 1;
+        }
+    }
+
+    /// Re-establish a broken link, discarding everything in flight (as a
+    /// real reconnection would). Idempotent: if another endpoint already
+    /// reconnected, nothing is flushed. Returns whether this call did the
+    /// flush.
+    pub fn reconnect(&self) -> bool {
+        let mut s = self.lock();
+        if !s.broken {
+            return false;
+        }
+        s.broken = false;
+        s.queues[0].clear();
+        s.queues[1].clear();
+        true
     }
 }
 
+/// Recovery-plane and connection-teardown frames are exempt from fault
+/// injection so the fault schedule is indexed purely by data-frame sends
+/// (replayable from the seed) and recovery itself cannot be starved.
+fn fault_exempt(bytes: &[u8]) -> bool {
+    bytes.get(OFF_TYPE).is_some_and(|&t| {
+        t == MsgType::Ack as u8 || t == MsgType::ResumeStream as u8 || t == MsgType::Goaway as u8
+    })
+}
+
+/// Dedup key for retransmission detection: (stream_id, seq). `None` for
+/// unsequenced frames (seq 0 — legacy peers), which always draw a fate.
+fn frame_key(bytes: &[u8]) -> Option<u64> {
+    use crate::wire::{OFF_SEQ, OFF_STREAM_ID};
+    if bytes.len() < HEADER_BYTES {
+        return None;
+    }
+    let stream = u32::from_le_bytes(bytes[OFF_STREAM_ID..OFF_STREAM_ID + 4].try_into().unwrap());
+    let seq = u32::from_le_bytes(bytes[OFF_SEQ..OFF_SEQ + 4].try_into().unwrap());
+    (seq != 0).then_some(((stream as u64) << 32) | seq as u64)
+}
+
 pub struct SimLink {
-    shared: Rc<RefCell<Shared>>,
+    shared: Arc<Mutex<Shared>>,
     /// 0 sends on queue 0 and receives on queue 1.
     side: usize,
     stats: LinkStats,
 }
 
+/// Lock a `SimNet`'s shared state. Free function on the field (not a
+/// `&self` method) so the guard borrows only `shared`, leaving
+/// `SimLink::stats` free for the per-fault accounting done under it.
+fn lock_shared(shared: &Mutex<Shared>) -> MutexGuard<'_, Shared> {
+    shared.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 impl Transport for SimLink {
     fn send_encoded(&mut self, bytes: Vec<u8>) -> Result<()> {
-        let mut s = self.shared.borrow_mut();
+        let mut s = lock_shared(&self.shared);
+        // Classify and draw BEFORE the broken check: every sequenced
+        // first transmission consumes exactly one RNG draw in this side's
+        // deterministic program order, whether or not the link happens to
+        // be broken at that instant (which IS timing-dependent under
+        // threading) — this is what makes a schedule replay exactly.
+        let (fate, aux1, aux2) = if !s.faults_enabled
+            || s.plan.is_clean()
+            || fault_exempt(&bytes)
+        {
+            (Fate::Deliver, 0, 0)
+        } else {
+            // a (stream, seq) this side already sent is a retransmit:
+            // exempt, so the schedule stays indexed by first transmissions
+            let retransmit =
+                frame_key(&bytes).is_some_and(|key| !s.seen[self.side].insert(key));
+            if retransmit {
+                (Fate::Deliver, 0, 0)
+            } else {
+                s.draw_fate(self.side)
+            }
+        };
+        if s.broken {
+            // lost to the already-broken link; the draw above is spent
+            // regardless so RNG alignment stays deterministic
+            return Err(TransportError::Disconnected.into());
+        }
+        if fate == Fate::Disconnect {
+            s.broken = true;
+            s.fault_totals.disconnects += 1;
+            self.stats.faults.disconnects += 1;
+            return Err(TransportError::Disconnected.into());
+        }
         let cost = s.model.latency_secs
             + bytes.len() as f64 / s.model.bandwidth_bytes_per_sec;
         s.sim_secs[self.side] += cost;
@@ -92,23 +334,77 @@ impl Transport for SimLink {
         self.stats.bytes_sent += bytes.len() as u64;
         self.stats.sim_link_secs += cost;
         let side = self.side;
-        s.queues[side].push_back(bytes);
+        match fate {
+            Fate::Disconnect => unreachable!("handled above"),
+            Fate::Deliver => s.queues[side].push_back(bytes),
+            Fate::Drop => {
+                s.fault_totals.dropped += 1;
+                self.stats.faults.dropped += 1;
+            }
+            Fate::Duplicate => {
+                // the link carries it twice: bill the wire for both copies
+                s.sim_secs[side] += cost;
+                self.stats.sim_link_secs += cost;
+                s.queues[side].push_back(bytes.clone());
+                s.queues[side].push_back(bytes);
+                s.fault_totals.duplicated += 1;
+                self.stats.faults.duplicated += 1;
+            }
+            Fate::Reorder => {
+                s.queues[side].push_back(bytes);
+                let n = s.queues[side].len();
+                if n >= 2 {
+                    s.queues[side].swap(n - 1, n - 2);
+                    s.fault_totals.reordered += 1;
+                    self.stats.faults.reordered += 1;
+                }
+            }
+            Fate::Corrupt => {
+                let mut bytes = bytes;
+                // flip a body byte only: header fields outside the CRC
+                // (stream_id, seq) must stay intact or a corrupted frame
+                // could masquerade as a valid one (see DESIGN.md); the
+                // position/bit come from the fixed three-draw budget
+                if bytes.len() > HEADER_BYTES {
+                    let pos = HEADER_BYTES + (aux1 % (bytes.len() - HEADER_BYTES) as u64) as usize;
+                    let bit = 1u8 << (aux2 % 8);
+                    bytes[pos] ^= bit;
+                    s.fault_totals.corrupted += 1;
+                    self.stats.faults.corrupted += 1;
+                }
+                s.queues[side].push_back(bytes);
+            }
+            Fate::Truncate => {
+                let mut bytes = bytes;
+                let keep = (aux1 % bytes.len() as u64) as usize;
+                bytes.truncate(keep);
+                s.queues[side].push_back(bytes);
+                s.fault_totals.truncated += 1;
+                self.stats.faults.truncated += 1;
+            }
+        }
         Ok(())
     }
 
     fn recv(&mut self) -> Result<Frame> {
-        let mut s = self.shared.borrow_mut();
+        let mut s = lock_shared(&self.shared);
+        if s.broken {
+            return Err(TransportError::Disconnected.into());
+        }
         let q = 1 - self.side;
         let Some(bytes) = s.queues[q].pop_front() else {
-            bail!("sim link: recv on empty queue (protocol deadlock?)");
+            // typed: a recovery layer distinguishes a fault-induced gap
+            // from a protocol deadlock; bare callers treat it as fatal
+            return Err(TransportError::WouldBlock.into());
         };
         drop(s);
+        // the bytes arrived even if they no longer parse: account first
+        self.stats.frames_recv += 1;
+        self.stats.bytes_recv += bytes.len() as u64;
         let (frame, consumed) = Frame::decode(&bytes)?;
         if consumed != bytes.len() {
             bail!("sim link: partial frame consumption");
         }
-        self.stats.frames_recv += 1;
-        self.stats.bytes_recv += bytes.len() as u64;
         Ok(frame)
     }
 
@@ -154,10 +450,11 @@ mod tests {
     }
 
     #[test]
-    fn recv_empty_errors() {
+    fn recv_empty_is_typed_would_block() {
         let net = SimNet::with_defaults();
         let (mut a, _b) = net.pair();
-        assert!(a.recv().is_err());
+        let err = a.recv().unwrap_err();
+        assert_eq!(TransportError::of(&err), Some(TransportError::WouldBlock), "{err}");
     }
 
     #[test]
@@ -172,6 +469,7 @@ mod tests {
         assert_eq!(b.stats().bytes_recv, n);
         assert_eq!(a.stats().frames_sent, 1);
         assert_eq!(b.stats().frames_recv, 1);
+        assert_eq!(a.stats().faults.total(), 0);
     }
 
     #[test]
@@ -184,5 +482,143 @@ mod tests {
         b.recv().unwrap();
         let expect = 0.5 + n / 1000.0;
         assert!((net.sim_secs() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drop_fault_loses_frames_and_accounts_them() {
+        let plan = FaultPlan { seed: 3, drop: 1.0, ..FaultPlan::default() };
+        let net = SimNet::with_faults(LinkModel::default(), plan);
+        let (mut a, mut b) = net.pair();
+        for i in 0..5 {
+            a.send(&frame(i)).unwrap();
+        }
+        let err = b.recv().unwrap_err();
+        assert_eq!(TransportError::of(&err), Some(TransportError::WouldBlock), "{err}");
+        assert_eq!(a.stats().faults.dropped, 5);
+        assert_eq!(net.fault_totals().dropped, 5);
+        // dropped frames still consumed the wire
+        assert_eq!(a.stats().frames_sent, 5);
+    }
+
+    #[test]
+    fn duplicate_fault_delivers_twice() {
+        let plan = FaultPlan { seed: 3, duplicate: 1.0, ..FaultPlan::default() };
+        let net = SimNet::with_faults(LinkModel::default(), plan);
+        let (mut a, mut b) = net.pair();
+        a.send(&frame(1)).unwrap();
+        assert_eq!(b.recv().unwrap().seq, 1);
+        assert_eq!(b.recv().unwrap().seq, 1);
+        assert_eq!(a.stats().faults.duplicated, 1);
+    }
+
+    #[test]
+    fn reorder_fault_swaps_adjacent_frames() {
+        let plan = FaultPlan { seed: 3, reorder: 1.0, ..FaultPlan::default() };
+        let net = SimNet::with_faults(LinkModel::default(), plan);
+        let (mut a, mut b) = net.pair();
+        a.send(&frame(1)).unwrap(); // alone in the queue: no swap possible
+        a.send(&frame(2)).unwrap(); // swaps behind 1? no — swaps with 1
+        assert_eq!(b.recv().unwrap().seq, 2);
+        assert_eq!(b.recv().unwrap().seq, 1);
+        assert_eq!(a.stats().faults.reordered, 1);
+    }
+
+    #[test]
+    fn corrupt_fault_fails_crc_at_recv() {
+        let plan = FaultPlan { seed: 5, corrupt: 1.0, ..FaultPlan::default() };
+        let net = SimNet::with_faults(LinkModel::default(), plan);
+        let (mut a, mut b) = net.pair();
+        a.send(&frame(1)).unwrap();
+        let err = b.recv().unwrap_err();
+        // body-byte flip: either the CRC or the body schema rejects it,
+        // and it is NOT a typed transport error
+        assert_eq!(TransportError::of(&err), None, "{err}");
+        assert_eq!(a.stats().faults.corrupted, 1);
+        // the garbage still crossed the wire: bytes accounted at recv
+        assert!(b.stats().bytes_recv > 0);
+    }
+
+    #[test]
+    fn truncate_fault_fails_framing_at_recv() {
+        let plan = FaultPlan { seed: 7, truncate: 1.0, ..FaultPlan::default() };
+        let net = SimNet::with_faults(LinkModel::default(), plan);
+        let (mut a, mut b) = net.pair();
+        a.send(&frame(1)).unwrap();
+        let err = b.recv().unwrap_err();
+        assert_eq!(TransportError::of(&err), None, "{err}");
+        assert_eq!(a.stats().faults.truncated, 1);
+    }
+
+    #[test]
+    fn disconnect_fault_breaks_link_until_reconnect() {
+        let plan = FaultPlan { seed: 11, disconnect: 1.0, ..FaultPlan::default() };
+        let net = SimNet::with_faults(LinkModel::default(), plan);
+        let (mut a, mut b) = net.pair();
+        let err = a.send(&frame(1)).unwrap_err();
+        assert_eq!(TransportError::of(&err), Some(TransportError::Disconnected));
+        assert!(net.is_broken());
+        let err = b.recv().unwrap_err();
+        assert_eq!(TransportError::of(&err), Some(TransportError::Disconnected));
+        assert!(net.reconnect());
+        assert!(!net.reconnect(), "second reconnect is a no-op");
+        // the link works again (this send draws the next fate, which with
+        // p=1 disconnects again — so check with a fresh clean-ish plan)
+        assert_eq!(a.stats().faults.disconnects, 1);
+    }
+
+    #[test]
+    fn reconnect_discards_in_flight_frames() {
+        let net = SimNet::with_defaults();
+        let (mut a, mut b) = net.pair();
+        a.send(&frame(1)).unwrap();
+        net.kill();
+        assert_eq!(net.fault_totals().disconnects, 1);
+        assert!(net.reconnect());
+        let err = b.recv().unwrap_err();
+        assert_eq!(TransportError::of(&err), Some(TransportError::WouldBlock), "{err}");
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_from_seed() {
+        let plan = FaultPlan {
+            seed: 42,
+            drop: 0.2,
+            duplicate: 0.1,
+            reorder: 0.1,
+            corrupt: 0.1,
+            truncate: 0.05,
+            ..FaultPlan::default()
+        };
+        let run = || {
+            let net = SimNet::with_faults(LinkModel::default(), plan);
+            let (mut a, _b) = net.pair();
+            for i in 0..200 {
+                a.send(&frame(i)).unwrap();
+            }
+            a.stats().faults
+        };
+        let first = run();
+        assert_eq!(first, run());
+        assert!(first.total() > 0, "{first:?}");
+    }
+
+    #[test]
+    fn recovery_plane_frames_are_fault_exempt() {
+        let plan = FaultPlan { seed: 3, drop: 1.0, ..FaultPlan::default() };
+        let net = SimNet::with_faults(LinkModel::default(), plan);
+        let (mut a, mut b) = net.pair();
+        a.send(&Frame::new(0, Message::Ack { cum_seq: 7, nack: false })).unwrap();
+        a.send(&Frame::new(
+            0,
+            Message::ResumeStream {
+                last_acked: 3,
+                want_reply: true,
+                spec: crate::wire::OpenSpec::None,
+            },
+        ))
+        .unwrap();
+        assert!(matches!(b.recv().unwrap().message, Message::Ack { .. }));
+        assert!(matches!(b.recv().unwrap().message, Message::ResumeStream { .. }));
+        assert_eq!(a.stats().faults.total(), 0);
     }
 }

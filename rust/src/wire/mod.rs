@@ -16,8 +16,11 @@
 //! sessions (`transport::mux`), each opened with `OpenStream` — whose
 //! body carries the session's negotiated `CodecSpec` — and torn down
 //! with `CloseStream`; `Goaway` (stream 0) shuts the whole connection
-//! down. Every byte that crosses the transport goes through this module,
-//! so comm accounting is exact.
+//! down. `Ack` and `ResumeStream` are the recovery plane: per-stream
+//! cumulative acks bound the sender's replay buffer, and a reconnecting
+//! peer re-attaches to its streams with `ResumeStream` (see DESIGN.md,
+//! "Fault model & session resume"). Every byte that crosses the
+//! transport goes through this module, so comm accounting is exact.
 //!
 //! The hot path encodes without intermediate copies: `FrameEncoder`
 //! writes the header with placeholders, codecs append payload content
@@ -65,10 +68,17 @@ pub enum MsgType {
     CloseStream = 6,
     /// mux: connection-level shutdown (stream 0 only)
     Goaway = 7,
+    /// recovery: per-stream cumulative ack — "I hold every sequenced
+    /// frame with seq <= cum_seq"; `nack` solicits a retransmit
+    Ack = 8,
+    /// recovery: re-attach to the stream carried in the header after a
+    /// reconnect; the body carries the last-acked seq (+ the original
+    /// codec spec so a shell can be rebuilt if the OpenStream was lost)
+    ResumeStream = 9,
 }
 
 impl MsgType {
-    fn from_u8(v: u8) -> Result<Self> {
+    pub(crate) fn from_u8(v: u8) -> Result<Self> {
         Ok(match v {
             1 => MsgType::Activations,
             2 => MsgType::Gradients,
@@ -77,8 +87,18 @@ impl MsgType {
             5 => MsgType::OpenStream,
             6 => MsgType::CloseStream,
             7 => MsgType::Goaway,
+            8 => MsgType::Ack,
+            9 => MsgType::ResumeStream,
             other => bail!("unknown message type {other}"),
         })
+    }
+
+    /// Does this frame type ride the per-stream sequence space (stamped,
+    /// acked, replayed by the recovery layer)? The recovery plane itself
+    /// (`Ack`, `ResumeStream`) and connection teardown (`Goaway`) are
+    /// outside it: they must flow while the sequence space is broken.
+    pub fn sequenced(self) -> bool {
+        !matches!(self, MsgType::Ack | MsgType::ResumeStream | MsgType::Goaway)
     }
 }
 
@@ -130,6 +150,18 @@ pub enum Message {
     /// Connection shutdown: highest stream id the sender processed plus an
     /// error code (0 = clean).
     Goaway { last_stream_id: u32, code: u32 },
+    /// Cumulative ack for the stream named in the header: every sequenced
+    /// frame with `seq <= cum_seq` arrived. `nack = true` is a probe that
+    /// additionally solicits retransmission of everything after `cum_seq`.
+    Ack { cum_seq: u32, nack: bool },
+    /// Re-attach to the stream named in the header after a reconnect:
+    /// `last_acked` is the sender's cumulative receive position (the peer
+    /// retransmits everything after it); `want_reply` asks the peer to
+    /// answer with its own `ResumeStream` (replies carry `false`, so the
+    /// handshake terminates). `spec` echoes the stream's original codec
+    /// spec so a session shell can be rebuilt if the `OpenStream` itself
+    /// was lost with the old connection.
+    ResumeStream { last_acked: u32, want_reply: bool, spec: OpenSpec },
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -151,6 +183,8 @@ impl Message {
             Message::OpenStream { .. } => MsgType::OpenStream,
             Message::CloseStream => MsgType::CloseStream,
             Message::Goaway { .. } => MsgType::Goaway,
+            Message::Ack { .. } => MsgType::Ack,
+            Message::ResumeStream { .. } => MsgType::ResumeStream,
         }
     }
 }
@@ -374,6 +408,19 @@ impl Message {
                 put_u32(out, *last_stream_id);
                 put_u32(out, *code);
             }
+            Message::Ack { cum_seq, nack } => {
+                put_u32(out, *cum_seq);
+                out.push(*nack as u8);
+            }
+            Message::ResumeStream { last_acked, want_reply, spec } => {
+                put_u32(out, *last_acked);
+                out.push(*want_reply as u8);
+                match spec {
+                    OpenSpec::None => {}
+                    OpenSpec::Spec(s) => encode_codec_spec(out, s),
+                    OpenSpec::Invalid { raw, .. } => out.extend_from_slice(raw),
+                }
+            }
         }
     }
 
@@ -413,6 +460,12 @@ impl Message {
             MsgType::OpenStream => Message::OpenStream { spec: OpenSpec::decode(c.rest()) },
             MsgType::CloseStream => Message::CloseStream,
             MsgType::Goaway => Message::Goaway { last_stream_id: c.u32()?, code: c.u32()? },
+            MsgType::Ack => Message::Ack { cum_seq: c.u32()?, nack: c.u8()? != 0 },
+            MsgType::ResumeStream => Message::ResumeStream {
+                last_acked: c.u32()?,
+                want_reply: c.u8()? != 0,
+                spec: OpenSpec::decode(c.rest()),
+            },
         };
         c.done()?;
         Ok(msg)
@@ -557,6 +610,14 @@ mod tests {
             },
             Message::CloseStream,
             Message::Goaway { last_stream_id: 11, code: 2 },
+            Message::Ack { cum_seq: 0, nack: false },
+            Message::Ack { cum_seq: 0xFFFF_FFFF, nack: true },
+            Message::ResumeStream { last_acked: 7, want_reply: true, spec: OpenSpec::None },
+            Message::ResumeStream {
+                last_acked: 0,
+                want_reply: false,
+                spec: OpenSpec::Spec(test_spec()),
+            },
         ];
         for (i, m) in msgs.into_iter().enumerate() {
             let f = Frame::on_stream(i as u32 * 2 + 1, i as u32, m);
@@ -654,6 +715,43 @@ mod tests {
             encode_payload_meta(&mut out, &meta);
             assert_eq!(out.len(), payload_meta_wire_len(&meta), "{meta:?}");
         }
+    }
+
+    #[test]
+    fn recovery_plane_is_unsequenced_everything_else_sequenced() {
+        for ty in [
+            MsgType::Activations,
+            MsgType::Gradients,
+            MsgType::EvalResult,
+            MsgType::Control,
+            MsgType::OpenStream,
+            MsgType::CloseStream,
+        ] {
+            assert!(ty.sequenced(), "{ty:?}");
+        }
+        for ty in [MsgType::Ack, MsgType::ResumeStream, MsgType::Goaway] {
+            assert!(!ty.sequenced(), "{ty:?}");
+        }
+    }
+
+    #[test]
+    fn resume_stream_with_invalid_spec_reencodes_losslessly() {
+        // a ResumeStream echoing a malformed spec must survive a roundtrip
+        let mut body = Vec::new();
+        put_u32(&mut body, 9); // last_acked
+        body.push(1); // want_reply
+        body.extend_from_slice(&[0, 0, 0]); // 3 bytes: not even a cut_dim
+        let frame = hand_frame(MsgType::ResumeStream, 5, &body);
+        let (back, _) = Frame::decode(&frame).unwrap();
+        let Message::ResumeStream {
+            last_acked: 9,
+            want_reply: true,
+            spec: OpenSpec::Invalid { .. },
+        } = &back.message
+        else {
+            panic!("expected invalid-spec resume, got {:?}", back.message);
+        };
+        assert_eq!(back.encode(), frame);
     }
 
     #[test]

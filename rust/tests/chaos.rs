@@ -1,0 +1,258 @@
+//! Seeded chaos suite: the full training protocol over hundreds of
+//! deterministic fault schedules, for every codec in the registry, with
+//! `RunLedger` metrics required to be bit-identical to the clean-link
+//! run. Any failing seed is written out as a repro artifact and replays
+//! with a single CLI invocation (`splitfed chaos --seed N --method M`).
+//!
+//! Environment knobs (the CI matrix uses them):
+//! - `CHAOS_SEEDS`: seeds per codec (default 100)
+//! - `CHAOS_SHARD`: `i/n` — run only seeds where `seed % n == i`
+//! - `CHAOS_ARTIFACT_DIR`: where failing-seed repro JSON goes (default `.`)
+//!
+//! The matrix test is engine-free (synthetic workload through the real
+//! codec/wire/mux stack). The `real_training_*` tests additionally drive
+//! the actual `FeatureOwner`/`LabelOwner` over a faulty link and are
+//! skipped when compiled artifacts are absent.
+
+use std::rc::Rc;
+
+use splitfed::chaos::{
+    fault_plan_for_seed, metrics_fingerprint, repro_command, run_schedule, run_session,
+    write_repro, ChaosConfig, CHAOS_METHODS,
+};
+use splitfed::config::Method;
+use splitfed::coordinator::{FeatureOwner, LabelOwner};
+use splitfed::data::{for_model, Dataset, EpochIter, Split};
+use splitfed::runtime::{default_artifacts_dir, Engine};
+use splitfed::transport::sim::LinkModel;
+use splitfed::transport::{FaultPlan, Mux, MuxEvent, RecoveryPolicy, SimNet};
+
+fn seeds_for_this_shard() -> Vec<u64> {
+    let n: u64 = std::env::var("CHAOS_SEEDS").ok().and_then(|v| v.parse().ok()).unwrap_or(100);
+    let (shard, shards) = match std::env::var("CHAOS_SHARD") {
+        Ok(s) => {
+            let (i, n) = s.split_once('/').expect("CHAOS_SHARD wants i/n");
+            (i.parse::<u64>().unwrap(), n.parse::<u64>().unwrap().max(1))
+        }
+        Err(_) => (0, 1),
+    };
+    (0..n).filter(|s| s % shards == shard).collect()
+}
+
+fn artifact_dir() -> std::path::PathBuf {
+    std::env::var("CHAOS_ARTIFACT_DIR").map(Into::into).unwrap_or_else(|_| ".".into())
+}
+
+/// The acceptance gate: every codec in the registry survives the full
+/// seed matrix with bit-identical metrics. A failure writes the repro
+/// artifact and names the one-line CLI replay.
+#[test]
+fn chaos_matrix_every_codec_bit_identical_metrics() {
+    let seeds = seeds_for_this_shard();
+    assert!(!seeds.is_empty(), "empty shard");
+    let mut failures = Vec::new();
+    for method in CHAOS_METHODS {
+        for &seed in &seeds {
+            let v = run_schedule(seed, method);
+            if !v.ok {
+                let path = write_repro(&artifact_dir(), &v).expect("write repro artifact");
+                eprintln!(
+                    "chaos FAIL seed={seed} method={method}: {}\n  repro: {}\n  artifact: {}",
+                    v.detail,
+                    repro_command(seed, method),
+                    path.display()
+                );
+                failures.push((seed, method.to_string()));
+            }
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "{} schedules failed ({} seeds x {} codecs); repro artifacts written: {failures:?}",
+        failures.len(),
+        seeds.len(),
+        CHAOS_METHODS.len()
+    );
+}
+
+/// Each fault kind in isolation, at a probability high enough that it
+/// fires many times per run (p = 0.5 over dozens of frames): the
+/// protocol still delivers bit-identical metrics, and the per-fault
+/// accounting proves the fault actually happened.
+#[test]
+fn every_fault_kind_in_isolation_is_survivable_and_accounted() {
+    let cfg = ChaosConfig::quick(29, Method::Topk { k: 6 });
+    let clean = run_session(&cfg, FaultPlan::none()).unwrap();
+    let base = FaultPlan { seed: 29, ..FaultPlan::default() };
+    let cases: [(&str, FaultPlan, fn(&splitfed::transport::FaultCounts) -> u64); 6] = [
+        ("drop", FaultPlan { drop: 0.5, ..base }, |f| f.dropped),
+        ("duplicate", FaultPlan { duplicate: 0.5, ..base }, |f| f.duplicated),
+        ("reorder", FaultPlan { reorder: 0.5, ..base }, |f| f.reordered),
+        ("corrupt", FaultPlan { corrupt: 0.5, ..base }, |f| f.corrupted),
+        ("truncate", FaultPlan { truncate: 0.5, ..base }, |f| f.truncated),
+        ("disconnect", FaultPlan { disconnect: 0.3, ..base }, |f| f.disconnects),
+    ];
+    for (name, plan, count) in cases {
+        let out = run_session(&cfg, plan).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(
+            metrics_fingerprint(&clean.ledger),
+            metrics_fingerprint(&out.ledger),
+            "{name}: metrics diverged"
+        );
+        assert!(count(&out.faults) > 0, "{name} never fired: {:?}", out.faults);
+        // every other fault counter stayed at zero (exact accounting)
+        assert_eq!(out.faults.total(), count(&out.faults), "{name}: {:?}", out.faults);
+    }
+}
+
+#[test]
+fn repro_command_matches_cli_grammar() {
+    assert_eq!(
+        repro_command(42, "quant:bits=4"),
+        "cargo run --bin splitfed -- chaos --seed 42 --method quant:bits=4"
+    );
+}
+
+#[test]
+fn fault_plans_replay_exactly_from_seed() {
+    for seed in [0u64, 7, 91, 4096] {
+        assert_eq!(fault_plan_for_seed(seed), fault_plan_for_seed(seed));
+    }
+}
+
+#[test]
+fn chaos_comm_costs_more_but_metrics_do_not_move() {
+    // recovery traffic is real traffic: under a hostile plan the wire
+    // carries MORE bytes than clean, while metrics stay bit-identical
+    let cfg = ChaosConfig::quick(3, Method::Topk { k: 6 });
+    let clean = run_session(&cfg, FaultPlan::none()).unwrap();
+    let chaos = run_session(&cfg, fault_plan_for_seed(3)).unwrap();
+    assert_eq!(metrics_fingerprint(&clean.ledger), metrics_fingerprint(&chaos.ledger));
+    if chaos.faults.total() > 0 {
+        assert!(
+            chaos.ledger.total_comm_bytes() >= clean.ledger.total_comm_bytes(),
+            "chaos {} < clean {}",
+            chaos.ledger.total_comm_bytes(),
+            clean.ledger.total_comm_bytes()
+        );
+    }
+}
+
+// --- real-trainer chaos (engine-gated) ------------------------------------
+
+fn engine_dir() -> Option<std::path::PathBuf> {
+    let dir = default_artifacts_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// Run `steps` real training steps (mlp, randtopk) with the two parties
+/// on separate threads over a faulty `SimNet` + recovering mux; returns
+/// the per-step label-owner losses.
+fn real_training_losses(plan: FaultPlan, seed: u64, steps: usize) -> Vec<f64> {
+    let dir = engine_dir().unwrap();
+    let net = SimNet::with_faults(LinkModel::default(), plan);
+    let (a, b) = net.pair();
+    let cm = Mux::initiator(a);
+    let sm = Mux::acceptor(b);
+    for m in [&cm, &sm] {
+        m.enable_recovery(RecoveryPolicy {
+            probe_after_polls: 500,
+            probe_interval_polls: 5_000,
+            poll_timeout_ms: 60_000,
+            ..RecoveryPolicy::default()
+        });
+    }
+    let nc = net.clone();
+    cm.set_reconnector(move |_| {
+        nc.reconnect();
+        Ok(None)
+    });
+    let ns = net.clone();
+    sm.set_reconnector(move |_| {
+        ns.reconnect();
+        Ok(None)
+    });
+    let method = Method::parse("randtopk:k=6,alpha=0.1").unwrap();
+
+    let dir_lo = dir.clone();
+    let sm2 = sm.clone();
+    let server = std::thread::spawn(move || {
+        let engine = Rc::new(Engine::load(&dir_lo).unwrap());
+        let id = loop {
+            match sm2.next_event().unwrap() {
+                MuxEvent::Opened(id) => break id,
+                MuxEvent::Recovery(_) => continue,
+                other => panic!("unexpected {other:?}"),
+            }
+        };
+        let stream = sm2.accept_stream(id).unwrap();
+        let mut lo = LabelOwner::new(engine, "mlp", method, stream, 99).unwrap();
+        let ds = for_model("mlp", 100, seed, 256, 64).unwrap();
+        let mut losses = Vec::new();
+        let mut step = 0u64;
+        for indices in EpochIter::new(ds.len(Split::Train), 32, seed, 0).take(steps) {
+            let batch = ds.batch(Split::Train, &indices, false);
+            losses.push(lo.train_step(step, &batch.y, 0.05).unwrap().loss);
+            step += 1;
+        }
+        losses
+    });
+
+    let engine = Rc::new(Engine::load(&dir).unwrap());
+    let stream = cm.open_stream().unwrap();
+    let mut fo = FeatureOwner::new(engine, "mlp", method, stream, seed, 99).unwrap();
+    let ds = for_model("mlp", 100, seed, 256, 64).unwrap();
+    let mut step = 0u64;
+    for indices in EpochIter::new(ds.len(Split::Train), 32, seed, 0).take(steps) {
+        if step as usize == steps - 1 {
+            // quiesce for the final exchange: with faults armed, the last
+            // frame of a session can always be lost after its sender
+            // exits (two generals)
+            net.set_faults_enabled(false);
+        }
+        let batch = ds.batch(Split::Train, &indices, false);
+        fo.train_forward(step, &batch.x).unwrap();
+        fo.train_backward(step, 0.05).unwrap();
+        step += 1;
+    }
+    server.join().unwrap()
+}
+
+/// The acceptance criterion on the REAL trainer: a lossy link changes
+/// nothing about what the model learns — per-step losses are bit-equal.
+#[test]
+fn real_training_metrics_survive_lossy_link() {
+    if engine_dir().is_none() {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return;
+    }
+    let steps = 4;
+    let clean = real_training_losses(FaultPlan::none(), 11, steps);
+    let plan = FaultPlan {
+        seed: 77,
+        drop: 0.08,
+        duplicate: 0.05,
+        reorder: 0.05,
+        corrupt: 0.04,
+        truncate: 0.02,
+        ..FaultPlan::default()
+    };
+    let lossy = real_training_losses(plan, 11, steps);
+    assert_eq!(clean.len(), steps);
+    assert_eq!(clean, lossy, "losses diverged under a lossy link");
+}
+
+/// Mid-epoch hard disconnect: the session resumes and the final losses
+/// match an uninterrupted run bit-for-bit.
+#[test]
+fn real_training_survives_hard_disconnect() {
+    if engine_dir().is_none() {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return;
+    }
+    let steps = 4;
+    let clean = real_training_losses(FaultPlan::none(), 13, steps);
+    let plan = FaultPlan { seed: 5, disconnect: 0.08, ..FaultPlan::default() };
+    let flaky = real_training_losses(plan, 13, steps);
+    assert_eq!(clean, flaky, "losses diverged across disconnect/resume");
+}

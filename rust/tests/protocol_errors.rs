@@ -6,8 +6,9 @@
 
 use std::rc::Rc;
 
-use splitfed::compress::{CodecSpec, Payload};
+use splitfed::compress::{codec_for, Codec, CodecSpec, Pass, Payload};
 use splitfed::config::Method;
+use splitfed::util::Rng;
 use splitfed::coordinator::serve::{
     eval_indices, negotiate_spec, serve_tcp, EVAL_INIT_SEED, EVAL_N_TEST, EVAL_N_TRAIN,
 };
@@ -301,6 +302,260 @@ fn spec_refusal_keeps_connection_serving() {
     assert_eq!(report.refused.len(), 1, "the bad stream was refused");
     assert!(report.refused[0].reason.contains("geometry mismatch"), "{}", report.refused[0].reason);
     // refusal accounting still sums exactly to the physical wire
+    assert_eq!(report.session_bytes_recv(), report.physical.bytes_recv);
+    assert_eq!(report.session_bytes_sent(), report.physical.bytes_sent);
+}
+
+// --- seeded byte-flip fuzz: decode paths must never panic -----------------
+
+/// One valid encoding of every message kind (the fuzz corpus).
+fn fuzz_corpus() -> Vec<Vec<u8>> {
+    use splitfed::wire::Control;
+    let payloads = vec![
+        Payload::dense(2, 8, vec![9; 64]),
+        Payload::sparse(2, 128, 3, true, vec![1; 2 * 3 * 4 + (2usize * 3 * 7).div_ceil(8)]),
+        Payload::quantized(2, 8, 2, vec![0xAA; 20]),
+        Payload::var_sparse(2, 600, vec![1; 9]),
+    ];
+    let mut msgs = vec![
+        Message::EvalResult { step: 3, loss_sum: 1.5, metric_count: 20.0 },
+        Message::Control(Control::StartEpoch { epoch: 4 }),
+        Message::Control(Control::Shutdown),
+        Message::OpenStream { spec: OpenSpec::None },
+        Message::OpenStream {
+            spec: OpenSpec::Spec(CodecSpec::new(
+                Method::parse("randtopk:k=6,alpha=0.1").unwrap(),
+                128,
+            )),
+        },
+        Message::CloseStream,
+        Message::Goaway { last_stream_id: 11, code: 2 },
+        Message::Ack { cum_seq: 900, nack: true },
+        Message::ResumeStream {
+            last_acked: 7,
+            want_reply: true,
+            spec: OpenSpec::Spec(CodecSpec::new(Method::parse("quant:bits=4").unwrap(), 32)),
+        },
+    ];
+    for p in payloads {
+        msgs.push(Message::Activations { step: 7, payload: p.clone() });
+        msgs.push(Message::Gradients { step: 8, payload: p });
+    }
+    msgs.into_iter()
+        .enumerate()
+        .map(|(i, m)| Frame::on_stream(i as u32 + 1, i as u32, m).encode())
+        .collect()
+}
+
+/// `Frame::decode` (which includes `CodecSpec`/`OpenSpec` parsing) must
+/// return `Ok` or `Err` on ANY mutation of a valid encoding — a panic
+/// fails this test. Seeded, so a failure replays.
+#[test]
+fn frame_decode_never_panics_on_mutated_encodings() {
+    let corpus = fuzz_corpus();
+    let mut rng = Rng::new(0xF0_2217);
+    for _ in 0..5000 {
+        let mut bytes = corpus[rng.below(corpus.len())].clone();
+        match rng.below(3) {
+            // flip 1..=4 random bits
+            0 => {
+                for _ in 0..=rng.below(4) {
+                    let i = rng.below(bytes.len());
+                    bytes[i] ^= 1 << rng.below(8);
+                }
+            }
+            // truncate anywhere (including to empty)
+            1 => bytes.truncate(rng.below(bytes.len() + 1)),
+            // append random garbage
+            _ => {
+                for _ in 0..=rng.below(8) {
+                    bytes.push(rng.next_u32() as u8);
+                }
+            }
+        }
+        let _ = Frame::decode(&bytes);
+    }
+}
+
+#[test]
+fn frame_decode_never_panics_on_arbitrary_bytes() {
+    let mut rng = Rng::new(0xF0_2218);
+    for _ in 0..5000 {
+        let len = rng.below(128);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        let _ = Frame::decode(&bytes);
+    }
+}
+
+/// Mutated `OpenStream` bodies must decode to `Invalid` (re-encoding
+/// losslessly) or a well-formed spec — never a frame error, never a
+/// panic. This is the property the one-bad-stream refusal path rests on.
+#[test]
+fn mutated_codec_specs_decode_invalid_or_valid_never_panic() {
+    let spec = CodecSpec::new(Method::parse("l1:lambda=0.001,eps=0.0001").unwrap(), 600);
+    let valid =
+        Frame::on_stream(1, 0, Message::OpenStream { spec: OpenSpec::Spec(spec) }).encode();
+    let body = valid[HEADER_BYTES..].to_vec();
+    let mut rng = Rng::new(0xC0DE_C5);
+    for _ in 0..3000 {
+        let mut raw = body.clone();
+        match rng.below(3) {
+            0 if !raw.is_empty() => {
+                let i = rng.below(raw.len());
+                raw[i] ^= 1 << rng.below(8);
+            }
+            1 => raw.truncate(rng.below(raw.len() + 1)),
+            _ => raw.push(rng.next_u32() as u8),
+        }
+        // the Invalid variant re-encodes raw bytes verbatim: this crafts
+        // an arbitrary-body OpenStream through the public API
+        let spec = OpenSpec::Invalid { raw: raw.clone(), reason: String::new() };
+        let f = Frame::on_stream(1, 0, Message::OpenStream { spec });
+        let bytes = f.encode();
+        let (back, _) = Frame::decode(&bytes).expect("valid framing must decode");
+        match back.message {
+            Message::OpenStream { spec: OpenSpec::Invalid { .. } } => {
+                assert_eq!(back.encode(), bytes, "invalid specs must re-encode losslessly");
+            }
+            Message::OpenStream { .. } => {} // mutation happened to parse
+            other => panic!("unexpected {:?}", other.msg_type()),
+        }
+    }
+}
+
+/// Every codec's `decode` must reject (never panic on) arbitrary content
+/// bytes of any length, both passes.
+#[test]
+fn codec_decode_never_panics_on_arbitrary_content() {
+    let specs = [
+        "none",
+        "randtopk:k=3,alpha=0.1",
+        "topk:k=3",
+        "sizered:k=3",
+        "quant:bits=2",
+        "l1:lambda=0.001,eps=0.01",
+    ];
+    let mut rng = Rng::new(0xDEC0DE);
+    for spec in specs {
+        let codec = codec_for(Method::parse(spec).unwrap(), 16).unwrap();
+        for pass in [Pass::Forward, Pass::Backward] {
+            let meta = codec.meta(2, pass);
+            let expect = codec.expected_wire_bytes(2, pass);
+            for i in 0..500 {
+                // mostly exact-length random content (passes the length
+                // check, stresses the content parser); sometimes random
+                // lengths
+                let len = match expect {
+                    Some(n) if i % 4 != 0 => n,
+                    Some(n) => rng.below(n + 16),
+                    None => rng.below(96),
+                };
+                let bytes: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+                let _ = codec.decode(&Payload::new(meta, bytes), pass);
+            }
+        }
+    }
+}
+
+// --- discard / refusal accounting under interleaving ----------------------
+
+/// `Mux::discard_stream` with live and discarded streams interleaving on
+/// one connection: the live stream's inbox is untouched and ordered, the
+/// discarded stream buffers nothing, and per-stream byte accounting
+/// still sums exactly to the physical link.
+#[test]
+fn discard_accounting_with_interleaved_streams() {
+    let net = SimNet::with_defaults();
+    let (a, b) = net.pair();
+    let cm = Mux::initiator(a);
+    let sm = Mux::acceptor(b);
+    let mut live = cm.open_stream().unwrap(); // id 1
+    let mut dead = cm.open_stream().unwrap(); // id 3
+    assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
+    assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(3));
+    let mut t_live = sm.accept_stream(1).unwrap();
+    let mut t_dead = sm.accept_stream(3).unwrap();
+    sm.discard_stream(3).unwrap();
+
+    let act = |step: u64| Message::Activations { step, payload: Payload::dense(1, 8, vec![5; 32]) };
+    // interleave: discarded, live, discarded, live, discarded
+    dead.send(&Frame::new(0, act(0))).unwrap();
+    live.send(&Frame::new(0, act(1))).unwrap();
+    dead.send(&Frame::new(1, act(2))).unwrap();
+    live.send(&Frame::new(1, act(3))).unwrap();
+    dead.send(&Frame::new(2, act(4))).unwrap();
+    for _ in 0..5 {
+        assert!(matches!(sm.next_event().unwrap(), MuxEvent::Data(_)));
+    }
+    // live stream delivered in order, untouched by the sibling discards
+    let f1 = t_live.recv().unwrap();
+    let f2 = t_live.recv().unwrap();
+    assert!(matches!(f1.message, Message::Activations { step: 1, .. }));
+    assert!(matches!(f2.message, Message::Activations { step: 3, .. }));
+    // discarded stream buffered nothing...
+    assert!(t_dead.recv().is_err());
+    // ...but was accounted exactly: 1 open + 3 data frames
+    let dstats = sm.stream_stats(3).unwrap();
+    assert_eq!(dstats.frames_recv, 4);
+    // and per-stream sums still match the physical wire to the byte
+    let recvd: u64 =
+        sm.stream_ids().iter().map(|id| sm.stream_stats(*id).unwrap().bytes_recv).sum();
+    assert_eq!(recvd, sm.physical_stats().bytes_recv);
+    assert_eq!(recvd, cm.physical_stats().bytes_sent);
+}
+
+/// `ServeReport::refused` when the refused client keeps streaming,
+/// interleaved with a live session's eval requests, on one connection —
+/// the previously untested hostile half of the refusal path.
+#[test]
+fn refused_stream_interleaves_with_live_session() {
+    if engine().is_none() {
+        return;
+    }
+    let dir = default_artifacts_dir();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let default_method = Method::parse("topk:k=6").unwrap();
+    let phys = TcpTransport::connect(addr).unwrap();
+    let mut handles =
+        serve_tcp(&listener, 1, dir.clone(), "mlp".into(), default_method, 42).unwrap();
+    let mux = Mux::initiator(phys);
+
+    // stream 1: refused (bad geometry); stream 3: live session
+    let mut bad = mux
+        .open_stream_with(CodecSpec::new(Method::parse("topk:k=6").unwrap(), 999))
+        .unwrap();
+    let method = Method::parse("randtopk:k=6,alpha=0.1").unwrap();
+    let good = mux.open_stream_with(CodecSpec::new(method, 128)).unwrap();
+    let engine = Rc::new(Engine::load(&dir).unwrap());
+    let mut fo = FeatureOwner::new(engine, "mlp", method, good, 42, EVAL_INIT_SEED).unwrap();
+    let ds = for_model("mlp", fo.meta.n_classes, 42, EVAL_N_TRAIN, EVAL_N_TEST).unwrap();
+
+    // interleave live eval round trips with eager garbage on the refused
+    // stream (a refused peer keeps streaming until it sees CloseStream)
+    for step in 0..2u64 {
+        let eager = Message::Activations { step, payload: Payload::dense(1, 8, vec![7; 32]) };
+        bad.send(&Frame::new(step as u32, eager)).unwrap();
+        let idx = eval_indices(step, fo.meta.batch, ds.len(Split::Test));
+        let batch = ds.batch(Split::Test, &idx, false);
+        fo.eval_forward(step, &batch.x).unwrap();
+        let (loss, correct) = fo.recv_eval_result().unwrap();
+        assert!(loss.is_finite() && correct >= 0.0);
+    }
+    bad.close().unwrap();
+    fo.transport.close().unwrap();
+    drop(fo);
+    drop(bad);
+    drop(mux);
+
+    let report = handles.pop().unwrap().join().unwrap().unwrap();
+    assert_eq!(report.sessions.len(), 1);
+    assert_eq!(report.sessions[0].requests, 2, "both live requests served");
+    assert_eq!(report.refused.len(), 1);
+    assert!(report.refused[0].reason.contains("geometry mismatch"), "{}", report.refused[0].reason);
+    // the refused stream's eager frames cost the wire and are accounted
+    // to it; everything still sums to the physical connection exactly
+    assert!(report.refused[0].stats.bytes_recv > 0);
     assert_eq!(report.session_bytes_recv(), report.physical.bytes_recv);
     assert_eq!(report.session_bytes_sent(), report.physical.bytes_sent);
 }

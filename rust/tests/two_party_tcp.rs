@@ -2,11 +2,13 @@
 //! label owner run on separate threads, each with its own Engine, talking
 //! only through the framed wire protocol — the deployment topology.
 
+use splitfed::compress::CodecSpec;
 use splitfed::config::Method;
-use splitfed::coordinator::{FeatureOwner, LabelOwner};
+use splitfed::coordinator::serve::{eval_indices, EVAL_INIT_SEED, EVAL_N_TEST, EVAL_N_TRAIN};
+use splitfed::coordinator::{serve_tcp_resumable, FeatureOwner, LabelOwner};
 use splitfed::data::{for_model, Dataset, EpochIter, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
-use splitfed::transport::{TcpTransport, Transport};
+use splitfed::transport::{Mux, MuxEvent, RecoveryPolicy, TcpTransport, Transport};
 
 #[test]
 fn tcp_two_party_training_step() {
@@ -61,4 +63,152 @@ fn tcp_two_party_training_step() {
     // byte accounting symmetrical
     let s = fo.transport.stats();
     assert!(s.bytes_sent > 0 && s.bytes_recv > 0);
+}
+
+/// Run `steps` training steps over a recovering mux on TCP; if
+/// `kill_after` is set, the client hard-kills the socket after that many
+/// completed steps and both sides must reconnect + resume mid-epoch.
+/// Returns the per-step label-owner losses.
+fn mux_tcp_training_losses(steps: usize, kill_after: Option<usize>) -> Vec<f64> {
+    let dir = default_artifacts_dir();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let method = Method::parse("randtopk:k=6,alpha=0.1").unwrap();
+    let seed = 23u64;
+
+    // label-owner thread (server): accepts, serves one session, and on a
+    // dead connection accepts the client's replacement from the same
+    // listener — LabelOwner state (top model, momentum, step counter)
+    // survives because only the transport under the mux is swapped
+    let dir_lo = dir.clone();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mux = Mux::acceptor(TcpTransport::from_stream(stream));
+        mux.enable_recovery(RecoveryPolicy::for_tcp());
+        mux.set_reconnector(move |_| {
+            let (stream, _) = listener.accept()?;
+            Ok(Some(TcpTransport::from_stream(stream)))
+        });
+        let engine = std::rc::Rc::new(Engine::load(&dir_lo).unwrap());
+        let id = loop {
+            match mux.next_event().unwrap() {
+                MuxEvent::Opened(id) => break id,
+                MuxEvent::Recovery(_) => continue,
+                other => panic!("unexpected {other:?}"),
+            }
+        };
+        let transport = mux.accept_stream(id).unwrap();
+        let mut lo = LabelOwner::new(engine, "mlp", method, transport, 99).unwrap();
+        let ds = for_model("mlp", 100, seed, 256, 64).unwrap();
+        let mut losses = Vec::new();
+        let mut step = 0u64;
+        for indices in EpochIter::new(ds.len(Split::Train), 32, seed, 0).take(steps) {
+            let batch = ds.batch(Split::Train, &indices, false);
+            losses.push(lo.train_step(step, &batch.y, 0.05).unwrap().loss);
+            step += 1;
+        }
+        losses
+    });
+
+    // feature-owner side (client)
+    let sock = std::net::TcpStream::connect(addr).unwrap();
+    let killer = sock.try_clone().unwrap();
+    let mux = Mux::initiator(TcpTransport::from_stream(sock));
+    mux.enable_recovery(RecoveryPolicy::for_tcp());
+    mux.set_reconnector(move |_| Ok(Some(TcpTransport::connect(addr)?)));
+    let engine = std::rc::Rc::new(Engine::load(&dir).unwrap());
+    let transport = mux.open_stream().unwrap();
+    let mut fo = FeatureOwner::new(engine, "mlp", method, transport, seed, 99).unwrap();
+    let ds = for_model("mlp", 100, seed, 256, 64).unwrap();
+    let mut step = 0u64;
+    for indices in EpochIter::new(ds.len(Split::Train), 32, seed, 0).take(steps) {
+        if kill_after == Some(step as usize) {
+            // hard-kill the physical connection mid-epoch; the next
+            // operation on either side must detect it, reconnect, resume
+            // the stream, and replay whatever was in flight
+            killer.shutdown(std::net::Shutdown::Both).unwrap();
+        }
+        let batch = ds.batch(Split::Train, &indices, false);
+        fo.train_forward(step, &batch.x).unwrap();
+        fo.train_backward(step, 0.05).unwrap();
+        step += 1;
+    }
+    server.join().unwrap()
+}
+
+/// The serving path of the same story: a `MuxServer` session lineage
+/// (`serve_tcp_resumable`) survives a client-side connection kill — the
+/// session's step counter and report keep counting across the resume.
+#[test]
+fn serve_resumable_session_survives_connection_kill() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return;
+    }
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // connect before serve_tcp_resumable: it accept()s on this thread
+    let sock = std::net::TcpStream::connect(addr).unwrap();
+    let handle = serve_tcp_resumable(
+        listener,
+        dir.clone(),
+        "mlp".into(),
+        Method::parse("topk:k=6").unwrap(),
+        42,
+        RecoveryPolicy::for_tcp(),
+    )
+    .unwrap();
+
+    let killer = sock.try_clone().unwrap();
+    let mux = Mux::initiator(TcpTransport::from_stream(sock));
+    mux.enable_recovery(RecoveryPolicy::for_tcp());
+    mux.set_reconnector(move |_| Ok(Some(TcpTransport::connect(addr)?)));
+    let method = Method::parse("randtopk:k=6,alpha=0.1").unwrap();
+    let stream = mux.open_stream_with(CodecSpec::new(method, 128)).unwrap();
+    let engine = std::rc::Rc::new(Engine::load(&dir).unwrap());
+    let mut fo = FeatureOwner::new(engine, "mlp", method, stream, 42, EVAL_INIT_SEED).unwrap();
+    let ds = for_model("mlp", fo.meta.n_classes, 42, EVAL_N_TRAIN, EVAL_N_TEST).unwrap();
+    let requests = 4u64;
+    for step in 0..requests {
+        if step == 2 {
+            // hard-kill mid-session; the next request must ride a fresh
+            // connection with the session resumed server-side
+            killer.shutdown(std::net::Shutdown::Both).unwrap();
+        }
+        let idx = eval_indices(step, fo.meta.batch, ds.len(Split::Test));
+        let batch = ds.batch(Split::Test, &idx, false);
+        fo.eval_forward(step, &batch.x).unwrap();
+        let (loss, correct) = fo.recv_eval_result().unwrap();
+        assert!(loss.is_finite() && correct >= 0.0, "step {step}");
+    }
+    fo.transport.close().unwrap();
+    mux.goaway(0).unwrap();
+    drop(fo);
+    drop(mux);
+
+    let report = handle.join().unwrap().unwrap();
+    assert_eq!(report.sessions.len(), 1, "ONE session across both connections");
+    assert_eq!(report.sessions[0].requests, requests, "no request lost or double-served");
+    assert!(report.refused.is_empty());
+}
+
+/// Satellite: kill-connection-mid-epoch -> reconnect -> resume, with the
+/// final training metrics bit-identical to an uninterrupted run.
+#[test]
+fn tcp_kill_reconnect_resume_matches_uninterrupted_run() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return;
+    }
+    let steps = 4;
+    let uninterrupted = mux_tcp_training_losses(steps, None);
+    let resumed = mux_tcp_training_losses(steps, Some(2));
+    assert_eq!(uninterrupted.len(), steps);
+    assert!(uninterrupted.iter().all(|l| l.is_finite() && *l > 0.0));
+    assert_eq!(
+        uninterrupted, resumed,
+        "training diverged across a mid-epoch disconnect/resume"
+    );
 }
