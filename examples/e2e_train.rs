@@ -7,7 +7,7 @@
 //! cargo run --release --example e2e_train -- --epochs 8 --n_train 4096
 //! ```
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 use splitfed::cli::Args;
@@ -17,7 +17,7 @@ use splitfed::runtime::{default_artifacts_dir, Engine};
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
-    let engine = Rc::new(Engine::load(default_artifacts_dir())?);
+    let engine = Arc::new(Engine::load(default_artifacts_dir())?);
 
     let mut cfg = ExperimentConfig::default();
     cfg.model = args.get_or("model", "convnet").to_string();

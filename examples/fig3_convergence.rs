@@ -6,7 +6,7 @@
 //! cargo run --release --example fig3_convergence -- --task mlp --epochs 10
 //! ```
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 use splitfed::cli::Args;
@@ -16,7 +16,7 @@ use splitfed::runtime::{default_artifacts_dir, Engine};
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
-    let engine = Rc::new(Engine::load(default_artifacts_dir())?);
+    let engine = Arc::new(Engine::load(default_artifacts_dir())?);
     let task = args.get_or("task", "mlp").to_string();
     let epochs: u32 = args.get_parse("epochs")?.unwrap_or(10);
     let n_train: usize = args.get_parse("n_train")?.unwrap_or(4096);

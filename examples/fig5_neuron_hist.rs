@@ -10,7 +10,7 @@
 //! cargo run --release --example fig5_neuron_hist -- --task mlp --epochs 8
 //! ```
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 use splitfed::cli::Args;
@@ -37,7 +37,7 @@ fn gini(counts: &[u64]) -> f64 {
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
-    let engine = Rc::new(Engine::load(default_artifacts_dir())?);
+    let engine = Arc::new(Engine::load(default_artifacts_dir())?);
     let task = args.get_or("task", "mlp").to_string();
     let epochs: u32 = args.get_parse("epochs")?.unwrap_or(8);
     let n_train: usize = args.get_parse("n_train")?.unwrap_or(4096);

@@ -7,7 +7,7 @@
 //! cargo run --release --example fig7_inversion -- --epochs 4 --dec-epochs 6
 //! ```
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 use splitfed::cli::Args;
@@ -18,14 +18,14 @@ use splitfed::runtime::{default_artifacts_dir, Engine, HostTensor};
 use xla::Literal;
 
 struct Decoder {
-    engine: Rc<Engine>,
+    engine: Arc<Engine>,
     params: Vec<Literal>,
     moms: Vec<Literal>,
     k: usize,
 }
 
 impl Decoder {
-    fn new(engine: Rc<Engine>, k: usize, seed: i32) -> Result<Self> {
+    fn new(engine: Arc<Engine>, k: usize, seed: i32) -> Result<Self> {
         let outs = engine.exec(
             "convnet/decoder/init",
             &[HostTensor::scalar_i32(seed).to_literal()?],
@@ -105,7 +105,7 @@ fn activations(
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
-    let engine = Rc::new(Engine::load(default_artifacts_dir())?);
+    let engine = Arc::new(Engine::load(default_artifacts_dir())?);
     let epochs: u32 = args.get_parse("epochs")?.unwrap_or(4);
     let dec_epochs: u32 = args.get_parse("dec-epochs")?.unwrap_or(6);
     let n_train: usize = args.get_parse("n_train")?.unwrap_or(1024);

@@ -5,7 +5,7 @@
 //! cargo run --release --example fig8_alpha -- --task mlp --epochs 8 --seeds 2
 //! ```
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 use splitfed::cli::Args;
@@ -16,7 +16,7 @@ use splitfed::runtime::{default_artifacts_dir, Engine};
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
-    let engine = Rc::new(Engine::load(default_artifacts_dir())?);
+    let engine = Arc::new(Engine::load(default_artifacts_dir())?);
     let task = args.get_or("task", "mlp").to_string();
     let epochs: u32 = args.get_parse("epochs")?.unwrap_or(8);
     let seeds: u64 = args.get_parse("seeds")?.unwrap_or(2);

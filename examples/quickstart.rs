@@ -4,7 +4,7 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 use splitfed::config::{ExperimentConfig, Method};
@@ -12,7 +12,7 @@ use splitfed::coordinator::Trainer;
 use splitfed::runtime::{default_artifacts_dir, Engine};
 
 fn main() -> Result<()> {
-    let engine = Rc::new(Engine::load(default_artifacts_dir())?);
+    let engine = Arc::new(Engine::load(default_artifacts_dir())?);
 
     let mut cfg = ExperimentConfig::default();
     cfg.model = "mlp".into();

@@ -17,7 +17,7 @@
 //! ```
 
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -51,10 +51,12 @@ fn main() -> Result<()> {
     let model = args.get_or("model", "mlp").to_string();
     let seed = 42u64;
 
-    // manifest geometry drives both the codec specs and the default
-    // heterogeneous method mix
+    // ONE engine shared by every client thread (the server side loads its
+    // own inside serve_tcp and shares it across connections): the engine
+    // is Send + Sync, so N sessions cost one compile per artifact, not N
     let dir = default_artifacts_dir();
-    let meta = Engine::load(&dir)?.manifest.model(&model)?.clone();
+    let engine = Arc::new(Engine::load(&dir)?);
+    let meta = engine.manifest.model(&model)?.clone();
     let cut_dim = meta.cut_dim;
 
     let methods: Vec<Method> = if let Some(spec) = args.get("methods") {
@@ -84,7 +86,7 @@ fn main() -> Result<()> {
     // one physical connection; the server demuxes all sessions off it and
     // negotiates each session's codec from its OpenStream spec
     let phys = TcpTransport::connect(addr)?;
-    let mut server = serve_tcp(&listener, 1, dir.clone(), model.clone(), methods[0], seed)?;
+    let server = serve_tcp(&listener, 1, 0, dir.clone(), model.clone(), methods[0], seed)?;
     let mux = Mux::initiator(phys);
 
     let t_all = Instant::now();
@@ -92,10 +94,9 @@ fn main() -> Result<()> {
     for c in 0..clients {
         let method = methods[c % methods.len()];
         let mux = mux.clone();
-        let dir = dir.clone();
+        let engine = engine.clone();
         let model = model.clone();
         handles.push(std::thread::spawn(move || -> Result<ClientResult> {
-            let engine = Rc::new(Engine::load(&dir)?);
             let spec = CodecSpec::new(method, cut_dim);
             let stream = mux.open_stream_with(spec)?;
             let stream_id = stream.id();
@@ -168,7 +169,7 @@ fn main() -> Result<()> {
     // the server's event pump sees EOF and finishes the connection
     let phys = mux.physical_stats();
     drop(mux);
-    let report = server.pop().expect("server handle").join().expect("server thread panicked")?;
+    let report = server.join()?.pop().expect("one connection report");
 
     println!(
         "serve_inference — {model}, {clients} heterogeneous sessions x {requests} requests, one connection"
@@ -204,6 +205,10 @@ fn main() -> Result<()> {
         phys.bytes_sent as f64 / 1024.0,
         results.iter().map(|r| r.fwd_pct).sum::<f64>() / results.len() as f64,
         phys.bytes_recv as f64 / 1024.0
+    );
+    println!(
+        "  engine     : {} compilations ({:.2}s) — warmed at startup, shared by all sessions",
+        report.compilations, report.compile_secs
     );
 
     // --- invariants -------------------------------------------------------

@@ -11,7 +11,7 @@
 //! matched k; Quantization only at the levels where 1/2/4-bit sizes fit;
 //! L1 with a lambda grid (its size is emergent, reported as measured).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 use splitfed::cli::Args;
@@ -42,7 +42,7 @@ fn level_name(model: &str, idx: usize, n_levels: usize) -> String {
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
-    let engine = Rc::new(Engine::load(default_artifacts_dir())?);
+    let engine = Arc::new(Engine::load(default_artifacts_dir())?);
 
     if args.has_flag("describe") {
         // Table 4: dataset details

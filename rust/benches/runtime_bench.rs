@@ -2,7 +2,7 @@
 //! split training step, for each model/variant. These are the numbers the
 //! §Perf pass optimizes (EXPERIMENTS.md).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use splitfed::bench_util::Bench;
 use splitfed::config::Method;
@@ -12,7 +12,7 @@ use splitfed::runtime::{default_artifacts_dir, Engine, HostTensor};
 use xla::Literal;
 
 fn main() {
-    let engine = Rc::new(Engine::load(default_artifacts_dir()).expect("run `make artifacts`"));
+    let engine = Arc::new(Engine::load(default_artifacts_dir()).expect("run `make artifacts`"));
     let mut b = Bench::new("runtime");
     b.min_time = 1.0;
 

@@ -19,6 +19,9 @@ pub struct CaseResult {
     pub min_ns: f64,
     pub iters: u64,
     pub bytes: Option<u64>,
+    /// Work items (e.g. training steps) per call: reported as units/s
+    /// (`e2e_step_bench` uses it for steps/sec at each pipeline depth).
+    pub units: Option<u64>,
 }
 
 pub struct Bench {
@@ -35,15 +38,27 @@ impl Bench {
 
     /// Time `f`, which must do one unit of work per call.
     pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
-        self.run_with_bytes(name, None, &mut f)
+        self.run_case(name, None, None, &mut f)
     }
 
     /// Like `run`, also reporting MiB/s for `bytes` of traffic per call.
     pub fn run_bytes<T>(&mut self, name: &str, bytes: u64, mut f: impl FnMut() -> T) {
-        self.run_with_bytes(name, Some(bytes), &mut f)
+        self.run_case(name, Some(bytes), None, &mut f)
     }
 
-    fn run_with_bytes<T>(&mut self, name: &str, bytes: Option<u64>, f: &mut impl FnMut() -> T) {
+    /// Like `run`, also reporting units/s for `units` work items per call
+    /// (e.g. steps/sec when one call runs a whole training session).
+    pub fn run_units<T>(&mut self, name: &str, units: u64, mut f: impl FnMut() -> T) {
+        self.run_case(name, None, Some(units), &mut f)
+    }
+
+    fn run_case<T>(
+        &mut self,
+        name: &str,
+        bytes: Option<u64>,
+        units: Option<u64>,
+        f: &mut impl FnMut() -> T,
+    ) {
         // warmup + calibrate
         let t0 = Instant::now();
         std::hint::black_box(f());
@@ -75,7 +90,13 @@ impl Bench {
             min_ns: min,
             iters: total_iters,
             bytes,
+            units,
         });
+    }
+
+    /// Mean ns of the first case whose name contains `needle`.
+    pub fn mean_of(&self, needle: &str) -> Option<f64> {
+        self.results.iter().find(|r| r.name.contains(needle)).map(|r| r.mean_ns)
     }
 
     /// Machine-readable dump (`BENCH_<group>.json` at the repo root by
@@ -101,6 +122,13 @@ impl Bench {
                         Json::Num(b as f64 / (r.mean_ns / 1e9) / 1048576.0),
                     );
                 }
+                if let Some(u) = r.units {
+                    m.insert("units".to_string(), Json::Num(u as f64));
+                    m.insert(
+                        "units_per_s".to_string(),
+                        Json::Num(u as f64 / (r.mean_ns / 1e9)),
+                    );
+                }
                 Json::Obj(m)
             })
             .collect();
@@ -117,9 +145,10 @@ impl Bench {
             "case", "mean", "std", "min", "throughput"
         );
         for r in &self.results {
-            let tput = match r.bytes {
-                Some(b) => format!("{:.1} MiB/s", b as f64 / (r.mean_ns / 1e9) / 1048576.0),
-                None => "-".into(),
+            let tput = match (r.bytes, r.units) {
+                (Some(b), _) => format!("{:.1} MiB/s", b as f64 / (r.mean_ns / 1e9) / 1048576.0),
+                (None, Some(u)) => format!("{:.1} units/s", u as f64 / (r.mean_ns / 1e9)),
+                (None, None) => "-".into(),
             };
             println!(
                 "{:<52} {:>12} {:>10} {:>12} {:>12}",
@@ -172,6 +201,22 @@ mod tests {
         let results = v.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), 1);
         assert!(results[0].get("mib_per_s").unwrap().as_f64().unwrap() > 0.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn run_units_reports_units_per_s() {
+        let mut b = Bench::new("units");
+        b.min_time = 0.01;
+        b.run_units("stepcase", 10, || std::hint::black_box(3 * 3));
+        assert_eq!(b.results[0].units, Some(10));
+        assert!(b.mean_of("stepcase").unwrap() >= 0.0);
+        assert!(b.mean_of("nope").is_none());
+        let path = std::env::temp_dir().join("splitfed_bench_units_test.json");
+        b.write_json(&path).unwrap();
+        let v = crate::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let results = v.get("results").unwrap().as_arr().unwrap();
+        assert!(results[0].get("units_per_s").unwrap().as_f64().unwrap() > 0.0);
         std::fs::remove_file(&path).ok();
     }
 

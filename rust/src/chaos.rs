@@ -63,6 +63,10 @@ pub struct ChaosConfig {
     pub rows: usize,
     pub epochs: u32,
     pub steps_per_epoch: u32,
+    /// Feature-owner in-flight window (`coordinator::PipelinedTrainer`
+    /// semantics): forwards may run up to this many steps ahead of their
+    /// gradients, flushed at every epoch boundary. 1 = lockstep.
+    pub pipeline_depth: usize,
 }
 
 impl ChaosConfig {
@@ -70,7 +74,20 @@ impl ChaosConfig {
     /// the wire several times per run, small enough for hundreds of
     /// seeds per codec.
     pub fn quick(seed: u64, method: Method) -> Self {
-        ChaosConfig { seed, method, cut_dim: 32, rows: 4, epochs: 2, steps_per_epoch: 6 }
+        ChaosConfig {
+            seed,
+            method,
+            cut_dim: 32,
+            rows: 4,
+            epochs: 2,
+            steps_per_epoch: 6,
+            pipeline_depth: 1,
+        }
+    }
+
+    pub fn with_depth(mut self, depth: usize) -> Self {
+        self.pipeline_depth = depth.max(1);
+        self
     }
 }
 
@@ -266,7 +283,100 @@ fn label_owner_loop(mux: Mux<SimLink>, cfg: ChaosConfig) -> Result<()> {
     }
 }
 
+/// Receive and digest the gradient for `expect` (the oldest in-flight
+/// step); the in-order assertion is what catches any delivery anomaly a
+/// fault slipped past recovery.
+fn retire_gradient(
+    stream: &mut crate::transport::MuxStream<SimLink>,
+    codec: &dyn Codec,
+    expect: u64,
+) -> Result<f64> {
+    let frame = stream.recv()?;
+    let Message::Gradients { step: got, payload } = frame.message else {
+        bail!("feature owner expected Gradients, got {:?}", frame.message.msg_type());
+    };
+    if got != expect {
+        bail!("gradient step mismatch: {got} != {expect} (ordering broken)");
+    }
+    let decoded = codec.decode(&payload, Pass::Backward)?;
+    Ok(batch_digest(&decoded))
+}
+
+/// Windowed feature-owner loop (`cfg.pipeline_depth` forwards may run
+/// ahead of their gradients; the window flushes at each epoch boundary).
+/// At depth 1 the send/recv sequence is frame-for-frame the lockstep
+/// protocol's, which [`run_session_lockstep`] pins bit-exactly.
 fn feature_owner_loop(mux: &Mux<SimLink>, cfg: &ChaosConfig, net: &SimNet) -> Result<RunLedger> {
+    let depth = cfg.pipeline_depth.max(1);
+    let mut stream = mux.open_stream_with(CodecSpec::new(cfg.method, cfg.cut_dim))?;
+    let codec = codec_for(cfg.method, cfg.cut_dim)?;
+    let mut seq = 0u32;
+    let mut ledger = RunLedger {
+        config_text: format!("chaos seed = {}\nmethod = {}", cfg.seed, cfg.method),
+        ..Default::default()
+    };
+    let mut step = 0u64;
+    let mut pct_sum = 0.0f64;
+    let mut pct_n = 0u64;
+    for epoch in 0..cfg.epochs {
+        stream.send(&Frame::new(seq, Message::Control(Control::StartEpoch { epoch })))?;
+        seq += 1;
+        let mut grad_digest = 0.0f64;
+        let mut inflight: std::collections::VecDeque<u64> =
+            std::collections::VecDeque::with_capacity(depth);
+        for _ in 0..cfg.steps_per_epoch {
+            if inflight.len() >= depth {
+                let oldest = inflight.pop_front().expect("window non-empty");
+                grad_digest += retire_gradient(&mut stream, &*codec, oldest)?;
+            }
+            let batch = forward_batch(cfg, step);
+            let content =
+                send_data_frame(&mut stream, &mut seq, &*codec, step, &batch, Pass::Forward)?;
+            pct_sum += 100.0 * content as f64 / (cfg.rows * cfg.cut_dim * 4) as f64;
+            pct_n += 1;
+            inflight.push_back(step);
+            step += 1;
+        }
+        // epoch boundary = pipeline flush: per-epoch comm accounting is
+        // preserved at every depth
+        while let Some(oldest) = inflight.pop_front() {
+            grad_digest += retire_gradient(&mut stream, &*codec, oldest)?;
+        }
+        stream.send(&Frame::new(seq, Message::Control(Control::EndEpoch { epoch })))?;
+        seq += 1;
+        let frame = stream.recv()?;
+        let Message::EvalResult { loss_sum, metric_count, .. } = frame.message else {
+            bail!("feature owner expected EvalResult, got {:?}", frame.message.msg_type());
+        };
+        ledger.push(EpochRecord {
+            epoch,
+            train_loss: loss_sum as f64,
+            train_metric: grad_digest / cfg.steps_per_epoch.max(1) as f64,
+            test_loss: loss_sum as f64 * 0.5,
+            test_metric: metric_count as f64,
+            comm_bytes: stream.stats().total_bytes(),
+            sim_link_secs: net.sim_secs(),
+            wall_secs: 0.0,
+        });
+    }
+    ledger.fwd_compressed_pct = pct_sum / pct_n.max(1) as f64;
+    // quiesce the link for the shutdown: with faults still armed, the
+    // session's LAST frame can always be lost after its sender exits
+    // (two generals) — the chaos window covers the training body
+    net.set_faults_enabled(false);
+    stream.send(&Frame::new(seq, Message::Control(Control::Shutdown)))?;
+    Ok(ledger)
+}
+
+/// The straight-line lockstep feature-owner loop, kept verbatim as the
+/// REFERENCE implementation: `rust/tests/pipeline.rs` pins the windowed
+/// executor at depth 1 bit-identical to this path, so the pipeline
+/// refactor can never silently change the depth-1 protocol.
+fn feature_owner_lockstep(
+    mux: &Mux<SimLink>,
+    cfg: &ChaosConfig,
+    net: &SimNet,
+) -> Result<RunLedger> {
     let mut stream = mux.open_stream_with(CodecSpec::new(cfg.method, cfg.cut_dim))?;
     let codec = codec_for(cfg.method, cfg.cut_dim)?;
     let mut seq = 0u32;
@@ -316,9 +426,6 @@ fn feature_owner_loop(mux: &Mux<SimLink>, cfg: &ChaosConfig, net: &SimNet) -> Re
         });
     }
     ledger.fwd_compressed_pct = pct_sum / pct_n.max(1) as f64;
-    // quiesce the link for the shutdown: with faults still armed, the
-    // session's LAST frame can always be lost after its sender exits
-    // (two generals) — the chaos window covers the training body
     net.set_faults_enabled(false);
     stream.send(&Frame::new(seq, Message::Control(Control::Shutdown)))?;
     Ok(ledger)
@@ -332,34 +439,77 @@ pub struct SessionOutcome {
 }
 
 /// Run one two-party synthetic training session over a `SimNet` carrying
-/// `plan`, with the mux recovery layer on both sides.
+/// `plan`, with the mux recovery layer on both sides. The feature owner
+/// runs the windowed executor (`cfg.pipeline_depth`; 1 = lockstep order).
 pub fn run_session(cfg: &ChaosConfig, plan: FaultPlan) -> Result<SessionOutcome> {
+    run_session_with(cfg, plan, true, feature_owner_loop)
+}
+
+/// [`run_session`] driven by the straight-line lockstep reference loop —
+/// the baseline the windowed executor at depth 1 must match bit-exactly.
+pub fn run_session_lockstep(cfg: &ChaosConfig, plan: FaultPlan) -> Result<SessionOutcome> {
+    run_session_with(cfg, plan, true, feature_owner_lockstep)
+}
+
+/// Clean-link session with the recovery layer OFF (blocking receives
+/// instead of nack-probe polling). Recovery traffic — probes, cadence
+/// acks — depends on thread scheduling, so only this mode produces
+/// byte-deterministic ledgers; the pipeline accounting tests compare
+/// per-epoch `comm_bytes` on it.
+pub fn run_session_clean(cfg: &ChaosConfig) -> Result<SessionOutcome> {
+    run_session_with(cfg, FaultPlan::none(), false, feature_owner_loop)
+}
+
+/// [`run_session_clean`] on the lockstep reference loop.
+pub fn run_session_clean_lockstep(cfg: &ChaosConfig) -> Result<SessionOutcome> {
+    run_session_with(cfg, FaultPlan::none(), false, feature_owner_lockstep)
+}
+
+fn run_session_with(
+    cfg: &ChaosConfig,
+    plan: FaultPlan,
+    recovery: bool,
+    fo_loop: impl FnOnce(&Mux<SimLink>, &ChaosConfig, &SimNet) -> Result<RunLedger>,
+) -> Result<SessionOutcome> {
+    if !recovery && !plan.is_clean() {
+        bail!("a faulty link needs the recovery layer");
+    }
     let net = SimNet::with_faults(LinkModel::default(), plan);
-    let (a, b) = net.pair();
+    let (mut a, mut b) = net.pair();
+    if !recovery {
+        // no recovery layer to poll through an empty queue: park on the
+        // link instead (the timeout converts a real deadlock into an
+        // error rather than a hang)
+        let timeout = std::time::Duration::from_secs(60);
+        a.set_blocking(timeout);
+        b.set_blocking(timeout);
+    }
     let cm = Mux::initiator(a);
     let sm = Mux::acceptor(b);
-    let policy = RecoveryPolicy {
-        probe_after_polls: 200,
-        probe_interval_polls: 2_000,
-        poll_timeout_ms: 30_000,
-        ..RecoveryPolicy::default()
-    };
-    cm.enable_recovery(policy);
-    sm.enable_recovery(policy);
-    let nc = net.clone();
-    cm.set_reconnector(move |_| {
-        nc.reconnect();
-        Ok(None)
-    });
-    let ns = net.clone();
-    sm.set_reconnector(move |_| {
-        ns.reconnect();
-        Ok(None)
-    });
+    if recovery {
+        let policy = RecoveryPolicy {
+            probe_after_polls: 200,
+            probe_interval_polls: 2_000,
+            poll_timeout_ms: 30_000,
+            ..RecoveryPolicy::default()
+        };
+        cm.enable_recovery(policy);
+        sm.enable_recovery(policy);
+        let nc = net.clone();
+        cm.set_reconnector(move |_| {
+            nc.reconnect();
+            Ok(None)
+        });
+        let ns = net.clone();
+        sm.set_reconnector(move |_| {
+            ns.reconnect();
+            Ok(None)
+        });
+    }
     let sm_counts = sm.clone();
     let cfg_lo = cfg.clone();
     let lo = std::thread::spawn(move || label_owner_loop(sm, cfg_lo));
-    let fo_result = feature_owner_loop(&cm, cfg, &net);
+    let fo_result = fo_loop(&cm, cfg, &net);
     let lo_result = lo.join().map_err(|_| anyhow::anyhow!("label-owner thread panicked"));
     let ledger = fo_result.context("feature owner")?;
     lo_result?.context("label owner")?;
@@ -525,5 +675,16 @@ mod tests {
             let v = run_schedule(91, spec);
             assert!(v.ok, "{spec} seed 91: {}", v.detail);
         }
+    }
+
+    #[test]
+    fn windowed_depth1_matches_lockstep_reference_smoke() {
+        // the per-codec matrix lives in rust/tests/pipeline.rs; the
+        // no-recovery runner makes byte counts comparable (no probes)
+        let cfg = ChaosConfig::quick(23, Method::Topk { k: 6 });
+        let a = run_session_clean_lockstep(&cfg).unwrap();
+        let b = run_session_clean(&cfg).unwrap();
+        assert_eq!(a.ledger.epochs, b.ledger.epochs, "depth-1 window must BE lockstep");
+        assert_eq!(metrics_fingerprint(&a.ledger), metrics_fingerprint(&b.ledger));
     }
 }

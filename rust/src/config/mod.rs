@@ -159,6 +159,12 @@ pub struct ExperimentConfig {
     pub eval_every: u32,
     pub bandwidth_mbps: f64,
     pub latency_ms: f64,
+    /// Training-step pipeline window (`coordinator::PipelinedTrainer`):
+    /// how many steps may sit between a forward send and its gradient
+    /// apply. 1 = today's lockstep protocol (bit-identical ledger);
+    /// deeper windows overlap compute with the link at the price of
+    /// `depth - 1` steps of gradient staleness.
+    pub pipeline_depth: usize,
     pub out_dir: Option<String>,
 }
 
@@ -177,6 +183,7 @@ impl Default for ExperimentConfig {
             eval_every: 1,
             bandwidth_mbps: 100.0,
             latency_ms: 5.0,
+            pipeline_depth: 1,
             out_dir: None,
         }
     }
@@ -199,6 +206,12 @@ impl ExperimentConfig {
             "eval_every" => self.eval_every = v.parse()?,
             "bandwidth_mbps" => self.bandwidth_mbps = v.parse()?,
             "latency_ms" => self.latency_ms = v.parse()?,
+            "pipeline_depth" => {
+                self.pipeline_depth = v.parse()?;
+                if self.pipeline_depth == 0 {
+                    bail!("pipeline_depth must be >= 1 (1 = lockstep)");
+                }
+            }
             "out_dir" => self.out_dir = Some(v.into()),
             other => bail!("unknown config key '{other}'"),
         }
@@ -227,7 +240,7 @@ impl ExperimentConfig {
         format!(
             "model = {}\nmethod = {}\nepochs = {}\nlr = {}\nlr_decay = {}\nseed = {}\n\
              n_train = {}\nn_test = {}\naugment = {}\neval_every = {}\n\
-             bandwidth_mbps = {}\nlatency_ms = {}\n",
+             bandwidth_mbps = {}\nlatency_ms = {}\npipeline_depth = {}\n",
             self.model,
             self.method,
             self.epochs,
@@ -239,7 +252,8 @@ impl ExperimentConfig {
             self.augment,
             self.eval_every,
             self.bandwidth_mbps,
-            self.latency_ms
+            self.latency_ms,
+            self.pipeline_depth
         )
     }
 
@@ -367,6 +381,16 @@ mod tests {
     fn config_rejects_unknown_key() {
         let mut cfg = ExperimentConfig::default();
         assert!(cfg.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn pipeline_depth_parses_and_rejects_zero() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.pipeline_depth, 1, "default is lockstep");
+        cfg.set("pipeline_depth", "3").unwrap();
+        assert_eq!(cfg.pipeline_depth, 3);
+        assert!(cfg.set("pipeline_depth", "0").is_err());
+        assert!(cfg.to_file_format().contains("pipeline_depth = 3"));
     }
 
     #[test]

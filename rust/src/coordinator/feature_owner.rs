@@ -6,8 +6,15 @@
 //! (from `compress::codec_for`) — the party dispatches only on the
 //! artifact family (`VariantKind`) for engine marshalling. Sends stream
 //! codec output straight into the frame buffer (`wire::FrameEncoder`).
+//!
+//! Forwards may be pipelined: `train_forward` pushes what backward needs
+//! onto a FIFO of in-flight steps, so a `PipelinedTrainer` window can keep
+//! several steps between forward and backward (`in_flight()` reports the
+//! window). Gradients arrive in order, so `train_backward` always retires
+//! the oldest outstanding step.
 
-use std::rc::Rc;
+use std::collections::VecDeque;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 use xla::Literal;
@@ -21,7 +28,7 @@ use crate::wire::{Frame, Message};
 use super::step_seed;
 
 pub struct FeatureOwner<T: Transport> {
-    engine: Rc<Engine>,
+    engine: Arc<Engine>,
     pub meta: ModelMeta,
     method: Method,
     codec: Box<dyn Codec>,
@@ -30,8 +37,10 @@ pub struct FeatureOwner<T: Transport> {
     mom_b: Vec<Literal>,
     experiment_seed: u64,
     seq: u32,
-    /// cached selection indices of the in-flight step (sparse methods)
-    pending: Option<PendingStep>,
+    /// in-flight steps awaiting their gradient, oldest first (sparse
+    /// methods additionally cache selection indices); lockstep training
+    /// keeps at most one entry, a pipelined window up to its depth
+    pending: VecDeque<(u64, PendingStep)>,
     /// running compressed-size accounting (percent of dense)
     pub fwd_pct_sum: f64,
     pub fwd_msgs: u64,
@@ -44,7 +53,7 @@ struct PendingStep {
 
 impl<T: Transport> FeatureOwner<T> {
     pub fn new(
-        engine: Rc<Engine>,
+        engine: Arc<Engine>,
         model: &str,
         method: Method,
         transport: T,
@@ -65,10 +74,16 @@ impl<T: Transport> FeatureOwner<T> {
             mom_b,
             experiment_seed,
             seq: 0,
-            pending: None,
+            pending: VecDeque::new(),
             fwd_pct_sum: 0.0,
             fwd_msgs: 0,
         })
+    }
+
+    /// Steps whose forward was sent but whose gradient has not yet been
+    /// applied — the pipeline's current in-flight window.
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
     }
 
     fn key(&self, fn_name: &str) -> String {
@@ -159,11 +174,15 @@ impl<T: Transport> FeatureOwner<T> {
         let dense_ref = (batch.rows() * batch.dim() * 4) as f64;
         self.fwd_pct_sum += 100.0 * content as f64 / dense_ref;
         self.fwd_msgs += 1;
-        self.pending = Some(PendingStep { x: x_lit, indices });
+        self.pending.push_back((step, PendingStep { x: x_lit, indices }));
         Ok(())
     }
 
-    /// Training backward: receive the gradient, update the bottom model.
+    /// Training backward: receive the gradient for the OLDEST in-flight
+    /// step (gradients arrive in protocol order) and update the bottom
+    /// model. At pipeline depth > 1 the update applies to parameters that
+    /// already served newer forwards — the staleness the pipeline trades
+    /// for overlap (see DESIGN.md "Execution plane").
     pub fn train_backward(&mut self, step: u64, lr: f32) -> Result<()> {
         let frame = self.transport.recv()?;
         let Message::Gradients { step: got_step, payload } = frame.message else {
@@ -172,10 +191,13 @@ impl<T: Transport> FeatureOwner<T> {
         if got_step != step {
             bail!("gradient step mismatch: {got_step} != {step}");
         }
-        let pending = self
+        let (pending_step, pending) = self
             .pending
-            .take()
+            .pop_front()
             .ok_or_else(|| anyhow!("backward without pending forward"))?;
+        if pending_step != step {
+            bail!("backward for step {step} but oldest in-flight forward is {pending_step}");
+        }
         let lr_l = HostTensor::vec1_f32(&[lr]).to_literal()?;
         let decoded = self.codec.decode(&payload, Pass::Backward)?;
         if decoded.rows() != self.meta.batch {

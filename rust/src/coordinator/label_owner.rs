@@ -6,7 +6,7 @@
 //! session's `Box<dyn Codec>`; engine marshalling dispatches on the
 //! decoded `Batch` shape, never on the method.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 use xla::Literal;
@@ -20,7 +20,7 @@ use crate::wire::{Frame, Message};
 use super::{labels_tensor, StepMetrics};
 
 pub struct LabelOwner<T: Transport> {
-    engine: Rc<Engine>,
+    engine: Arc<Engine>,
     pub meta: ModelMeta,
     method: Method,
     codec: Box<dyn Codec>,
@@ -34,7 +34,7 @@ pub struct LabelOwner<T: Transport> {
 
 impl<T: Transport> LabelOwner<T> {
     pub fn new(
-        engine: Rc<Engine>,
+        engine: Arc<Engine>,
         model: &str,
         method: Method,
         transport: T,

@@ -15,17 +15,23 @@
 //!
 //! Parties are transport-generic: the trainer drives both ends in-process
 //! over a `SimLink` for experiments; `examples/two_party_tcp.rs` runs the
-//! same code in two processes over TCP.
+//! same code in two processes over TCP. `PipelinedTrainer` runs the same
+//! two parties on separate threads with a bounded in-flight window
+//! (`pipeline_depth`), overlapping the feature owner's forward/encode
+//! with the label owner's top step and the link itself.
 
 pub mod feature_owner;
 pub mod label_owner;
+pub mod pipeline;
 pub mod serve;
 pub mod trainer;
 
 pub use feature_owner::FeatureOwner;
 pub use label_owner::LabelOwner;
+pub use pipeline::{train_pipelined, PipelinedTrainer};
 pub use serve::{
-    serve_tcp, serve_tcp_resumable, MuxServer, RefusedStream, ServeReport, SessionReport,
+    serve_tcp, serve_tcp_resumable, MuxServer, RefusedStream, ServePool, ServeReport,
+    SessionReport,
 };
 pub use trainer::{train, Trainer};
 

@@ -1,0 +1,341 @@
+//! Pipelined step executor: the feature owner and label owner run on
+//! separate threads over the same `SimLink` transports the lockstep
+//! `Trainer` uses, with a bounded in-flight window so step *i+1*'s
+//! `bottom_fwd` + encode runs while step *i*'s `top_fwdbwd` + gradient
+//! return is still in flight (cf. Chen et al. 2021, "Communication and
+//! Computation Reduction for Split Learning using Asynchronous
+//! Training"). This is only possible because `runtime::Engine` is
+//! `Send + Sync`: both party threads execute through ONE shared
+//! `Arc<Engine>` and its compiled-executable cache.
+//!
+//! `pipeline_depth` (from `ExperimentConfig`) bounds the window:
+//!
+//! - depth 1 ≡ today's lockstep protocol. The send/recv sequence on the
+//!   wire is identical frame for frame, so the resulting `RunLedger` is
+//!   bit-identical to `Trainer::run` (pinned by `rust/tests/pipeline.rs`).
+//! - depth d > 1 lets up to `d` forwards run ahead of their gradients.
+//!   A gradient then updates bottom parameters that already served newer
+//!   forwards — classic pipeline staleness, bounded by `d - 1` steps and
+//!   accounted per step (`extra["mean_staleness_steps"]` in the ledger).
+//!
+//! The window always drains at the epoch boundary, so per-epoch
+//! communication accounting (`comm_bytes`, `sim_link_secs`) is preserved
+//! at every depth. Epoch/eval phase boundaries travel on an in-process
+//! side channel (mpsc), never the wire — the wire carries exactly the
+//! frames the lockstep protocol does.
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::data::{self, Dataset, EpochIter, Split};
+use crate::metrics::{EpochRecord, RunLedger};
+use crate::runtime::Engine;
+use crate::transport::sim::{LinkModel, SimNet};
+use crate::transport::{SimLink, Transport};
+use crate::util::Timer;
+
+use super::{FeatureOwner, LabelOwner};
+
+/// How long a party waits on an empty link before declaring the peer
+/// dead. Generous: an engine step on a loaded machine sits well inside
+/// it, a hung peer does not.
+const RECV_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(120);
+
+/// Phase commands the feature-owner side sends the label-owner thread.
+/// Both sides derive the batch schedule for a phase from the shared
+/// config (same dataset seed, same `EpochIter`), so a command carries
+/// only the phase identity.
+enum LoCmd {
+    TrainEpoch { epoch: u32 },
+    Eval,
+    Done,
+}
+
+/// Label-owner per-epoch sums, reported back over the side channel when
+/// its train loop for the epoch completes.
+struct EpochSums {
+    loss_sum: f64,
+    metric_sum: f64,
+    batches: u64,
+    /// samples actually consumed (partial final batches count exactly)
+    samples: u64,
+}
+
+/// Two-thread, windowed variant of `coordinator::Trainer`. Construction
+/// is cheap; all threads and links live only for the duration of `run`.
+/// Checkpointing mid-run is not supported here — pipeline state (the
+/// in-flight window) has no checkpoint representation; use the lockstep
+/// `Trainer` for checkpointed runs.
+pub struct PipelinedTrainer {
+    pub cfg: ExperimentConfig,
+    engine: Arc<Engine>,
+    pub verbose: bool,
+}
+
+impl PipelinedTrainer {
+    pub fn new(engine: Arc<Engine>, cfg: ExperimentConfig) -> Result<Self> {
+        // fail fast on an unknown model, like Trainer::new
+        engine.manifest.model(&cfg.model)?;
+        Ok(PipelinedTrainer { cfg, engine, verbose: false })
+    }
+
+    /// Run the configured number of epochs, evaluating on cadence —
+    /// `Trainer::run` with the parties on separate threads and up to
+    /// `cfg.pipeline_depth` steps in flight.
+    pub fn run(&mut self) -> Result<RunLedger> {
+        let depth = self.cfg.pipeline_depth.max(1);
+        let net = SimNet::new(LinkModel {
+            bandwidth_bytes_per_sec: self.cfg.bandwidth_mbps * 1e6 / 8.0,
+            latency_secs: self.cfg.latency_ms / 1e3,
+        });
+        let (mut link_fo, mut link_lo) = net.pair();
+        // two threads, no recovery layer: an empty queue means "the peer
+        // is still computing", so receives must park, not error; the
+        // timeout converts a dead peer into a visible failure
+        link_fo.set_blocking(RECV_TIMEOUT);
+        link_lo.set_blocking(RECV_TIMEOUT);
+        let init_seed = (self.cfg.seed as i32) ^ 0x5EED;
+        let (cmd_tx, cmd_rx) = mpsc::channel::<LoCmd>();
+        let (sum_tx, sum_rx) = mpsc::channel::<EpochSums>();
+
+        let engine_lo = self.engine.clone();
+        let cfg_lo = self.cfg.clone();
+        let net_lo = net.clone();
+        let lo_thread = std::thread::spawn(move || {
+            let r = label_owner_thread(engine_lo, cfg_lo, link_lo, init_seed, cmd_rx, sum_tx);
+            if r.is_err() {
+                // the peer may be parked in a blocking recv waiting for a
+                // frame this side will never send: break the link so it
+                // fails now instead of sleeping out RECV_TIMEOUT
+                net_lo.kill();
+            }
+            r
+        });
+
+        let drove = self.drive_feature_owner(link_fo, init_seed, depth, &net, &cmd_tx, &sum_rx);
+        // on a feature-owner failure the label owner may be parked in a
+        // blocking recv: break the link (a completed label owner has left
+        // the link already, so this is safe on the success path too)
+        if drove.is_err() {
+            net.kill();
+        }
+        drop(cmd_tx);
+        let lo_out =
+            lo_thread.join().map_err(|_| anyhow!("label-owner thread panicked"));
+        match (drove, lo_out) {
+            (Ok(mut ledger), Ok(Ok(bwd_pct))) => {
+                ledger.bwd_compressed_pct = bwd_pct;
+                Ok(ledger)
+            }
+            (Ok(_), Ok(Err(e))) => Err(e.context("label owner")),
+            // both sides failed: one error is usually the other's
+            // disconnect symptom, so keep both texts in the chain
+            (Err(fe), Ok(Err(le))) => {
+                Err(le.context(format!("label owner failed; feature owner: {fe:#}")))
+            }
+            (Err(e), _) => Err(e.context("feature owner")),
+            (Ok(_), Err(e)) => Err(e),
+        }
+    }
+
+    fn drive_feature_owner(
+        &self,
+        link_fo: SimLink,
+        init_seed: i32,
+        depth: usize,
+        net: &SimNet,
+        cmd_tx: &mpsc::Sender<LoCmd>,
+        sum_rx: &mpsc::Receiver<EpochSums>,
+    ) -> Result<RunLedger> {
+        let cfg = &self.cfg;
+        let mut fo = FeatureOwner::new(
+            self.engine.clone(),
+            &cfg.model,
+            cfg.method,
+            link_fo,
+            cfg.seed,
+            init_seed,
+        )?;
+        let meta = fo.meta.clone();
+        let dataset =
+            data::for_model(&cfg.model, meta.n_classes, cfg.seed, cfg.n_train, cfg.n_test)?;
+        let mut ledger = RunLedger {
+            config_text: cfg.to_file_format(),
+            ..Default::default()
+        };
+        let mut step = 0u64;
+        let mut staleness_sum = 0u64;
+        let mut staleness_n = 0u64;
+
+        for epoch in 0..cfg.epochs {
+            let timer = Timer::new();
+            let lr = cfg.lr_at_epoch(epoch);
+            cmd_tx
+                .send(LoCmd::TrainEpoch { epoch })
+                .map_err(|_| anyhow!("label-owner thread exited early"))?;
+            let mut inflight: VecDeque<u64> = VecDeque::with_capacity(depth);
+            for indices in
+                EpochIter::new(dataset.len(Split::Train), meta.batch, cfg.seed, epoch)
+            {
+                if inflight.len() >= depth {
+                    let oldest = inflight.pop_front().expect("window non-empty");
+                    // the window between this gradient's forward and now
+                    // is its staleness in steps (0 in lockstep)
+                    staleness_sum += inflight.len() as u64;
+                    staleness_n += 1;
+                    fo.train_backward(oldest, lr)?;
+                }
+                let batch = dataset.batch(Split::Train, &indices, cfg.augment);
+                fo.train_forward(step, &batch.x)?;
+                inflight.push_back(step);
+                step += 1;
+            }
+            // drain: the epoch boundary is a pipeline flush, so per-epoch
+            // comm accounting matches the lockstep protocol exactly
+            while let Some(oldest) = inflight.pop_front() {
+                staleness_sum += inflight.len() as u64;
+                staleness_n += 1;
+                fo.train_backward(oldest, lr)?;
+            }
+            let sums = sum_rx
+                .recv()
+                .map_err(|_| anyhow!("label-owner thread exited before epoch sums"))?;
+            let train_loss = sums.loss_sum / sums.batches.max(1) as f64;
+            let train_metric = sums.metric_sum / sums.samples.max(1) as f64;
+
+            let (test_loss, test_metric) =
+                if (epoch + 1) % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
+                    cmd_tx
+                        .send(LoCmd::Eval)
+                        .map_err(|_| anyhow!("label-owner thread exited early"))?;
+                    self.eval_round(&mut fo, &*dataset, &mut step)?
+                } else {
+                    (0.0, 0.0)
+                };
+            let rec = EpochRecord {
+                epoch,
+                train_loss,
+                train_metric,
+                test_loss,
+                test_metric,
+                comm_bytes: fo.transport.stats().total_bytes(),
+                sim_link_secs: net.sim_secs(),
+                wall_secs: timer.elapsed_secs(),
+            };
+            if self.verbose {
+                eprintln!(
+                    "[{} {} depth={depth}] epoch {epoch}: train_loss={train_loss:.4} \
+                     train={train_metric:.4} test={test_metric:.4} comm={:.1}MiB ({:.1}s)",
+                    cfg.model,
+                    cfg.method,
+                    rec.comm_bytes as f64 / (1024.0 * 1024.0),
+                    rec.wall_secs,
+                );
+            }
+            ledger.push(rec);
+        }
+        cmd_tx.send(LoCmd::Done).ok();
+        ledger.fwd_compressed_pct = fo.mean_fwd_pct();
+        if depth > 1 {
+            // lockstep ledgers carry no extras, keeping depth-1 output
+            // bit-identical to Trainer::run
+            ledger.extra.insert("pipeline_depth".into(), depth as f64);
+            ledger.extra.insert(
+                "mean_staleness_steps".into(),
+                staleness_sum as f64 / staleness_n.max(1) as f64,
+            );
+        }
+        Ok(ledger)
+    }
+
+    /// Evaluation is lockstep at every depth: each request waits for its
+    /// `EvalResult`, mirroring `Trainer::evaluate_split`.
+    fn eval_round(
+        &self,
+        fo: &mut FeatureOwner<SimLink>,
+        dataset: &dyn Dataset,
+        step: &mut u64,
+    ) -> Result<(f64, f64)> {
+        let batch_size = fo.meta.batch;
+        let mut loss_sum = 0.0;
+        let mut count = 0.0;
+        let mut n = 0usize;
+        for indices in EpochIter::sequential(dataset.len(Split::Test), batch_size) {
+            let batch = dataset.batch(Split::Test, &indices, false);
+            fo.eval_forward(*step, &batch.x)?;
+            let (l, c) = fo.recv_eval_result()?;
+            loss_sum += l as f64;
+            count += c as f64;
+            n += indices.len();
+            *step += 1;
+        }
+        Ok((loss_sum / n.max(1) as f64, count / n.max(1) as f64))
+    }
+}
+
+/// The label-owner thread body: execute each commanded phase against its
+/// own copy of the (seed-deterministic) dataset, mirroring the schedule
+/// the feature owner walks. Returns the mean backward compressed-size
+/// percentage for the ledger.
+fn label_owner_thread(
+    engine: Arc<Engine>,
+    cfg: ExperimentConfig,
+    link: SimLink,
+    init_seed: i32,
+    cmd_rx: mpsc::Receiver<LoCmd>,
+    sum_tx: mpsc::Sender<EpochSums>,
+) -> Result<f64> {
+    let meta = engine.manifest.model(&cfg.model)?.clone();
+    let mut lo = LabelOwner::new(engine, &cfg.model, cfg.method, link, init_seed)?;
+    let dataset = data::for_model(&cfg.model, meta.n_classes, cfg.seed, cfg.n_train, cfg.n_test)?;
+    let mut step = 0u64;
+    while let Ok(cmd) = cmd_rx.recv() {
+        match cmd {
+            LoCmd::TrainEpoch { epoch } => {
+                let lr = cfg.lr_at_epoch(epoch);
+                let mut sums =
+                    EpochSums { loss_sum: 0.0, metric_sum: 0.0, batches: 0, samples: 0 };
+                for indices in
+                    EpochIter::new(dataset.len(Split::Train), meta.batch, cfg.seed, epoch)
+                {
+                    let batch = dataset.batch(Split::Train, &indices, cfg.augment);
+                    let m = lo
+                        .train_step(step, &batch.y, lr)
+                        .with_context(|| format!("train step {step}"))?;
+                    sums.loss_sum += m.loss;
+                    sums.metric_sum += m.metric_count;
+                    sums.batches += 1;
+                    sums.samples += indices.len() as u64;
+                    step += 1;
+                }
+                sum_tx
+                    .send(sums)
+                    .map_err(|_| anyhow!("feature-owner side exited early"))?;
+            }
+            LoCmd::Eval => {
+                for indices in EpochIter::sequential(dataset.len(Split::Test), meta.batch) {
+                    let batch = dataset.batch(Split::Test, &indices, false);
+                    lo.eval_step(step, &batch.y)
+                        .with_context(|| format!("eval step {step}"))?;
+                    step += 1;
+                }
+            }
+            LoCmd::Done => break,
+        }
+    }
+    Ok(lo.mean_bwd_pct())
+}
+
+/// Convenience: build a pipelined trainer on a shared engine and run it.
+pub fn train_pipelined(
+    engine: Arc<Engine>,
+    cfg: ExperimentConfig,
+    verbose: bool,
+) -> Result<RunLedger> {
+    let mut t = PipelinedTrainer::new(engine, cfg)?;
+    t.verbose = verbose;
+    t.run()
+}

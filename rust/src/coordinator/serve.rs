@@ -1,10 +1,15 @@
 //! Multi-session label-owner server (paper §4.3 deployment, fleet-scale):
 //! one physical connection carries N concurrent inference sessions over
 //! `transport::Mux`. A session registry maps stream ids to `LabelOwner`s
-//! that all share one `Engine` (and its compiled-executable cache), so a
-//! single process serves many feature owners at once. Connections are
-//! served thread-per-connection (`serve_tcp`); sessions within a
-//! connection are interleaved by the mux event pump.
+//! that all share ONE process-wide `Arc<Engine>` (and its
+//! compiled-executable cache) — across sessions AND across connections,
+//! so every artifact compiles exactly once no matter how many clients
+//! connect. Connections are served by a bounded worker pool
+//! (`serve_tcp`): accepted sockets queue until a worker frees up, which
+//! bounds thread count and memory instead of spawning per connection.
+//! Sessions within a connection are interleaved by the mux event pump.
+//! `MuxServer::warm_up` precompiles every artifact a negotiation could
+//! select, so the first request never pays a compile.
 //!
 //! Sessions are heterogeneous: each stream's `OpenStream` body carries a
 //! `CodecSpec` (method + cut geometry) and the server constructs that
@@ -15,10 +20,10 @@
 //! a `CloseStream` and leaves the connection — and its other sessions —
 //! running.
 
-use std::collections::{HashMap, HashSet};
-use std::rc::Rc;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::compress::codec_for;
 use crate::config::Method;
@@ -107,6 +112,12 @@ pub struct ServeReport {
     /// refused-stream stats sum exactly to these (no `Goaway` is sent on
     /// the happy path).
     pub physical: LinkStats,
+    /// Engine compilations observed when this connection finished. With a
+    /// shared engine these are PROCESS-WIDE totals — the point: N
+    /// connections hold this at the artifact count instead of N× it, and
+    /// after `MuxServer::warm_up` no request-path compile moves it at all.
+    pub compilations: u64,
+    pub compile_secs: f64,
 }
 
 impl ServeReport {
@@ -135,7 +146,7 @@ struct Session<T: Transport> {
 
 /// Label-owner side of the multiplexed inference service.
 pub struct MuxServer {
-    engine: Rc<Engine>,
+    engine: Arc<Engine>,
     model: String,
     /// Method for legacy streams whose `OpenStream` carries no spec;
     /// spec-carrying streams negotiate per session.
@@ -150,7 +161,7 @@ pub struct MuxServer {
 }
 
 impl MuxServer {
-    pub fn new(engine: Rc<Engine>, model: &str, default_method: Method, data_seed: u64) -> Self {
+    pub fn new(engine: Arc<Engine>, model: &str, default_method: Method, data_seed: u64) -> Self {
         MuxServer {
             engine,
             model: model.to_string(),
@@ -161,6 +172,37 @@ impl MuxServer {
             init_seed: EVAL_INIT_SEED,
             verbose: false,
         }
+    }
+
+    /// Precompile every artifact a session negotiation could select for
+    /// this server's model — `init` (the `LabelOwner` constructor runs
+    /// it) plus every variant's `top_eval` — so artifacts compile at
+    /// startup, before the first request, never on the request path.
+    /// Returns the warmed keys.
+    pub fn warm_up(&self) -> Result<Vec<String>> {
+        let init_key = format!("{}/init", self.model);
+        let variant_prefix = format!("{}/", self.model);
+        let keys: Vec<String> = self
+            .engine
+            .manifest
+            .artifacts
+            .keys()
+            .filter(|k| {
+                **k == init_key || (k.starts_with(&variant_prefix) && k.ends_with("/top_eval"))
+            })
+            .cloned()
+            .collect();
+        self.engine.precompile(&keys)?;
+        if self.verbose {
+            let s = self.engine.stats();
+            println!(
+                "warm-up: {} artifacts ready ({} compilations, {:.2}s)",
+                keys.len(),
+                s.compilations,
+                s.compile_secs
+            );
+        }
+        Ok(keys)
     }
 
     /// Serve sessions on one mux connection for the connection's lifetime:
@@ -301,9 +343,15 @@ impl MuxServer {
             }
         }
         refused.sort_by_key(|r| r.stream_id);
-        Ok(ServeReport { sessions: done, refused, physical: mux.physical_stats() })
+        let engine_stats = self.engine.stats();
+        Ok(ServeReport {
+            sessions: done,
+            refused,
+            physical: mux.physical_stats(),
+            compilations: engine_stats.compilations,
+            compile_secs: engine_stats.compile_secs,
+        })
     }
-
 }
 
 fn finalize<T: Transport>(id: u32, s: Session<T>) -> SessionReport {
@@ -347,8 +395,9 @@ pub fn serve_tcp_resumable(
 ) -> Result<std::thread::JoinHandle<Result<ServeReport>>> {
     let (stream, _) = listener.accept()?;
     Ok(std::thread::spawn(move || -> Result<ServeReport> {
-        let engine = Rc::new(Engine::load(&artifacts_dir)?);
+        let engine = Arc::new(Engine::load(&artifacts_dir)?);
         let server = MuxServer::new(engine, &model, default_method, data_seed);
+        server.warm_up()?;
         let mux = Mux::acceptor(TcpTransport::from_stream(stream));
         mux.enable_recovery(policy);
         mux.set_reconnector(move |_attempt| {
@@ -359,29 +408,127 @@ pub fn serve_tcp_resumable(
     }))
 }
 
-/// Accept `connections` physical connections and serve each on its own
-/// thread. Each thread loads its own `Engine` (the engine is
-/// single-threaded by design; sessions WITHIN a connection share one).
+/// Accepted-but-unserved connections waiting for a pool worker. Bounded
+/// backpressure: the queue only ever holds sockets the OS already
+/// accepted; workers drain it in accept order and the acceptor closes it
+/// (`done`) after the last expected connection.
+struct ConnQueue {
+    jobs: Mutex<(VecDeque<(usize, std::net::TcpStream)>, bool)>,
+    ready: Condvar,
+}
+
+impl ConnQueue {
+    fn new() -> Self {
+        ConnQueue { jobs: Mutex::new((VecDeque::new(), false)), ready: Condvar::new() }
+    }
+
+    fn push(&self, idx: usize, stream: std::net::TcpStream) {
+        let mut g = self.jobs.lock().unwrap_or_else(|p| p.into_inner());
+        g.0.push_back((idx, stream));
+        self.ready.notify_one();
+    }
+
+    fn close(&self) {
+        let mut g = self.jobs.lock().unwrap_or_else(|p| p.into_inner());
+        g.1 = true;
+        self.ready.notify_all();
+    }
+
+    /// Next connection to serve, or `None` once the queue is closed and
+    /// drained.
+    fn pop(&self) -> Option<(usize, std::net::TcpStream)> {
+        let mut g = self.jobs.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if let Some(job) = g.0.pop_front() {
+                return Some(job);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.ready.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+/// Per-connection outcomes a single pool worker collected, keyed by
+/// accept order.
+type ConnReports = Vec<(usize, Result<ServeReport>)>;
+
+/// Handle to a running `serve_tcp` worker pool.
+pub struct ServePool {
+    workers: Vec<std::thread::JoinHandle<ConnReports>>,
+}
+
+impl ServePool {
+    /// Wait for every connection to finish; reports come back in accept
+    /// order. The first connection error fails the join.
+    pub fn join(self) -> Result<Vec<ServeReport>> {
+        let mut indexed: ConnReports = Vec::new();
+        for w in self.workers {
+            indexed.extend(w.join().map_err(|_| anyhow!("serve worker panicked"))?);
+        }
+        indexed.sort_by_key(|(idx, _)| *idx);
+        indexed
+            .into_iter()
+            .map(|(idx, r)| r.with_context(|| format!("connection {idx}")))
+            .collect()
+    }
+}
+
+/// Pool worker count for a given connection count: never more workers
+/// than connections, never more than the machine has cores for.
+fn default_workers(connections: usize) -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    connections.clamp(1, cores.max(1))
+}
+
+/// Accept `connections` physical connections and serve them from a
+/// bounded pool of `workers` threads (`0` = min(connections, cores)),
+/// every connection sharing ONE `Arc<Engine>` — one compilation per
+/// artifact process-wide, warmed before the first socket is accepted.
+/// Accepted sockets queue until a worker frees up (bounded threads +
+/// memory, unlike the old thread-per-connection spawn); the OS accept
+/// backlog provides the upstream backpressure while they wait.
 pub fn serve_tcp(
     listener: &std::net::TcpListener,
     connections: usize,
+    workers: usize,
     artifacts_dir: std::path::PathBuf,
     model: String,
     default_method: Method,
     data_seed: u64,
-) -> Result<Vec<std::thread::JoinHandle<Result<ServeReport>>>> {
-    let mut handles = Vec::new();
-    for _ in 0..connections {
-        let (stream, _) = listener.accept()?;
-        let dir = artifacts_dir.clone();
-        let model = model.clone();
-        handles.push(std::thread::spawn(move || -> Result<ServeReport> {
-            let engine = Rc::new(Engine::load(&dir)?);
-            let server = MuxServer::new(engine, &model, default_method, data_seed);
-            server.serve_connection(&Mux::acceptor(TcpTransport::from_stream(stream)))
+) -> Result<ServePool> {
+    let engine = Arc::new(Engine::load(&artifacts_dir)?);
+    let server = Arc::new(MuxServer::new(engine, &model, default_method, data_seed));
+    server.warm_up()?;
+    let queue = Arc::new(ConnQueue::new());
+    let n_workers = if workers == 0 { default_workers(connections) } else { workers.max(1) };
+    let mut pool = ServePool { workers: Vec::with_capacity(n_workers) };
+    for _ in 0..n_workers {
+        let queue = queue.clone();
+        let server = server.clone();
+        pool.workers.push(std::thread::spawn(move || {
+            let mut reports = Vec::new();
+            while let Some((idx, stream)) = queue.pop() {
+                let mux = Mux::acceptor(TcpTransport::from_stream(stream));
+                reports.push((idx, server.serve_connection(&mux)));
+            }
+            reports
         }));
     }
-    Ok(handles)
+    // accept on the caller's thread (as before the pool): workers start
+    // serving connection 0 while connection 1 is still in accept()
+    for idx in 0..connections {
+        match listener.accept() {
+            Ok((stream, _)) => queue.push(idx, stream),
+            Err(e) => {
+                queue.close();
+                return Err(e).with_context(|| format!("accepting connection {idx}"));
+            }
+        }
+    }
+    queue.close();
+    Ok(pool)
 }
 
 #[cfg(test)]

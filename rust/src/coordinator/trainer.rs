@@ -2,7 +2,7 @@
 //! epoch/eval loops, and fills the run ledger. This is the workhorse every
 //! experiment driver calls.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -27,7 +27,7 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    pub fn new(engine: Rc<Engine>, cfg: ExperimentConfig) -> Result<Self> {
+    pub fn new(engine: Arc<Engine>, cfg: ExperimentConfig) -> Result<Self> {
         let meta = engine.manifest.model(&cfg.model)?.clone();
         let net = SimNet::new(LinkModel {
             bandwidth_bytes_per_sec: cfg.bandwidth_mbps * 1e6 / 8.0,
@@ -62,6 +62,7 @@ impl Trainer {
         let mut loss_sum = 0.0;
         let mut metric_sum = 0.0;
         let mut batches = 0u64;
+        let mut samples = 0u64;
         for indices in iter {
             let batch = self.dataset.batch(Split::Train, &indices, self.cfg.augment);
             self.fo.train_forward(self.step, &batch.x)?;
@@ -70,10 +71,14 @@ impl Trainer {
             loss_sum += m.loss;
             metric_sum += m.metric_count;
             batches += 1;
+            // denominator = samples actually consumed, not batches *
+            // batch_size, so the rate stays exact if a batch is ever
+            // ragged (today's EpochIter drops the tail, so every batch is
+            // full — this pins the invariant rather than changing values)
+            samples += indices.len() as u64;
             self.step += 1;
         }
-        let n = (batches * batch_size as u64) as f64;
-        Ok((loss_sum / batches.max(1) as f64, metric_sum / n.max(1.0)))
+        Ok((loss_sum / batches.max(1) as f64, metric_sum / (samples.max(1) as f64)))
     }
 
     /// Full test-set evaluation; returns (mean loss, metric rate).
@@ -169,7 +174,7 @@ impl Trainer {
 }
 
 /// Convenience: build an engine-backed trainer and run it.
-pub fn train(engine: Rc<Engine>, cfg: ExperimentConfig, verbose: bool) -> Result<RunLedger> {
+pub fn train(engine: Arc<Engine>, cfg: ExperimentConfig, verbose: bool) -> Result<RunLedger> {
     let mut t = Trainer::new(engine, cfg)?;
     t.verbose = verbose;
     t.run()

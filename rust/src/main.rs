@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! splitfed train   --model convnet --method randtopk:k=3,alpha=0.1 --epochs 30
+//! splitfed train   --pipeline_depth 2 ...                   (two-thread pipelined steps)
 //! splitfed describe                                         (models + dataset table)
 //! splitfed check   [--filter mlp]                           (compile every artifact)
 //! splitfed serve   --role label-owner --addr 127.0.0.1:7070 (two-process TCP party)
@@ -9,13 +10,13 @@
 //! splitfed chaos   --seeds 100 [--shard 0/8]                (run a seed matrix)
 //! ```
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use splitfed::cli::Args;
 use splitfed::config::ExperimentConfig;
-use splitfed::coordinator::{FeatureOwner, LabelOwner, Trainer};
+use splitfed::coordinator::{FeatureOwner, LabelOwner, PipelinedTrainer, Trainer};
 use splitfed::data::{for_model, Dataset, EpochIter, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
 use splitfed::transport::TcpTransport;
@@ -45,7 +46,7 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     }
     for key in [
         "model", "method", "epochs", "lr", "lr_decay", "seed", "n_train", "n_test",
-        "augment", "eval_every", "bandwidth_mbps", "latency_ms", "out_dir",
+        "augment", "eval_every", "bandwidth_mbps", "latency_ms", "pipeline_depth", "out_dir",
     ] {
         if let Some(v) = args.get(key) {
             cfg.set(key, v)?;
@@ -56,11 +57,21 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
-    let engine = Rc::new(Engine::load(default_artifacts_dir())?);
+    let engine = Arc::new(Engine::load(default_artifacts_dir())?);
     let out_dir = cfg.out_dir.clone();
-    let mut trainer = Trainer::new(engine, cfg.clone())?;
-    trainer.verbose = !args.has_flag("quiet");
-    let ledger = trainer.run()?;
+    let verbose = !args.has_flag("quiet");
+    // depth 1 is the lockstep trainer (checkpointable, bit-identical to
+    // the pipelined executor at depth 1); deeper windows overlap the two
+    // parties' compute with the link on separate threads
+    let ledger = if cfg.pipeline_depth > 1 {
+        let mut trainer = PipelinedTrainer::new(engine, cfg.clone())?;
+        trainer.verbose = verbose;
+        trainer.run()?
+    } else {
+        let mut trainer = Trainer::new(engine, cfg.clone())?;
+        trainer.verbose = verbose;
+        trainer.run()?
+    };
     println!(
         "final: test_metric={:.4} best={:.4} comm={:.2} MiB fwd={:.2}% bwd={:.2}%",
         ledger.final_metric(),
@@ -194,11 +205,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let role = args.required("role")?;
     let addr = args.get_or("addr", "127.0.0.1:7070").to_string();
     let steps: u64 = args.get_parse("steps")?.unwrap_or(64);
-    let engine = Rc::new(Engine::load(default_artifacts_dir())?);
+    let engine = Arc::new(Engine::load(default_artifacts_dir())?);
     let meta = engine.manifest.model(&cfg.model)?.clone();
     let ds = for_model(&cfg.model, meta.n_classes, cfg.seed, cfg.n_train, cfg.n_test)?;
     let init_seed = (cfg.seed as i32) ^ 0x5EED;
     let lr = cfg.lr;
+
+    // warm-up: compile this party's artifacts before any peer connects,
+    // so the first protocol step never pays a compile
+    let variant = cfg.method.variant();
+    let mut warm: Vec<String> = vec![format!("{}/init", cfg.model)];
+    match role {
+        "label-owner" => {
+            warm.push(format!("{}/{}/top_fwdbwd", cfg.model, variant));
+            warm.push(format!("{}/{}/top_eval", cfg.model, variant));
+        }
+        "feature-owner" => {
+            warm.push(format!("{}/{}/bottom_fwd", cfg.model, variant));
+            warm.push(format!("{}/{}/bottom_bwd", cfg.model, variant));
+            // quant/L1 gradients travel back dense (Table 2)
+            warm.push(format!("{}/dense/bottom_bwd", cfg.model));
+        }
+        _ => {}
+    }
+    warm.retain(|k| engine.manifest.artifacts.contains_key(k.as_str()));
+    engine.precompile(&warm)?;
+    let warm_stats = engine.stats();
+    println!(
+        "warm-up: {} artifacts compiled in {:.2}s",
+        warm_stats.compilations, warm_stats.compile_secs
+    );
 
     match role {
         "label-owner" => {

@@ -5,15 +5,24 @@
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute`. HLO *text* is the interchange format —
 //! jax ≥ 0.5 serialized protos are rejected by xla_extension 0.5.1.
+//!
+//! The engine is `Send + Sync`: one process-wide `Arc<Engine>` serves
+//! every trainer thread, serving worker, and pipelined party, sharing one
+//! compiled-executable cache (one compilation per artifact, ever). The
+//! hot path (`exec`) takes a cache read lock plus relaxed atomic stat
+//! bumps — it never serializes concurrent executions; compilation
+//! serializes under a per-key build lock (cached keys stay readable
+//! while another key compiles) so racing callers of the same key produce
+//! exactly one executable. See DESIGN.md "Execution plane".
 
 pub mod checkpoint;
 pub mod manifest;
 pub mod tensor;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{anyhow, Context, Result};
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
@@ -22,6 +31,8 @@ pub use manifest::{ArtifactSig, DType, Manifest, ModelMeta, TensorSig};
 pub use tensor::{dense_bytes, zero_literal, HostTensor};
 
 /// Cumulative execution statistics (perf accounting, EXPERIMENTS.md §Perf).
+/// A snapshot of the engine's atomic counters; with a shared engine these
+/// are process-wide totals across every thread using it.
 #[derive(Default, Clone, Debug)]
 pub struct EngineStats {
     pub executions: u64,
@@ -31,11 +42,64 @@ pub struct EngineStats {
     pub host_transfer_bytes: u64,
 }
 
+/// Internal stat cells: relaxed atomics so concurrent `exec` calls never
+/// serialize on a stats lock. Durations are stored as integer nanoseconds
+/// (`fetch_add` needs an integer; ns granularity loses nothing we report).
+#[derive(Default)]
+struct StatCells {
+    executions: AtomicU64,
+    exec_nanos: AtomicU64,
+    compilations: AtomicU64,
+    compile_nanos: AtomicU64,
+    host_transfer_bytes: AtomicU64,
+}
+
+/// Shared handle to one compiled artifact.
+///
+/// SAFETY: `PjRtLoadedExecutable` is immutable after compilation and the
+/// PJRT runtime documents execution as thread-safe; the xla-rs wrapper is
+/// a thin pointer that simply lacks the auto traits, so the promise is
+/// made here, on the only type that hands the pointer across threads.
+#[derive(Clone)]
+pub struct Executable(Arc<PjRtLoadedExecutable>);
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl std::ops::Deref for Executable {
+    type Target = PjRtLoadedExecutable;
+
+    fn deref(&self) -> &Self::Target {
+        &self.0
+    }
+}
+
 pub struct Engine {
     client: PjRtClient,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
-    stats: RefCell<EngineStats>,
+    cache: RwLock<HashMap<String, Executable>>,
+    /// Per-key build locks so a compile serializes only callers of the
+    /// SAME key — the cache's read/write locks are never held across a
+    /// compile, so cached keys stay readable while another key builds.
+    building: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+    stats: StatCells,
+}
+
+// SAFETY: `PjRtClient` wraps the PJRT CPU client, whose compile /
+// buffer-upload / execute entry points are documented thread-safe (the
+// same client object serves every thread in a JAX process); `Manifest` is
+// plain data, the cache is behind an `RwLock`, and the stats are atomics.
+// The xla-rs wrapper types are thin pointers without the auto traits, so
+// the promise is made once, here.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+/// Read/write the executable cache; a poisoned lock (a panicking thread
+/// mid-insert) still holds a coherent map, so recover the guard.
+macro_rules! lock_unpoisoned {
+    ($lock:expr) => {
+        $lock.unwrap_or_else(|poisoned| poisoned.into_inner())
+    };
 }
 
 impl Engine {
@@ -45,18 +109,39 @@ impl Engine {
         Ok(Engine {
             client,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(EngineStats::default()),
+            cache: RwLock::new(HashMap::new()),
+            building: Mutex::new(HashMap::new()),
+            stats: StatCells::default(),
         })
     }
 
     pub fn stats(&self) -> EngineStats {
-        self.stats.borrow().clone()
+        EngineStats {
+            executions: self.stats.executions.load(Ordering::Relaxed),
+            exec_secs: self.stats.exec_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            compilations: self.stats.compilations.load(Ordering::Relaxed),
+            compile_secs: self.stats.compile_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            host_transfer_bytes: self.stats.host_transfer_bytes.load(Ordering::Relaxed),
+        }
     }
 
     /// Compile (or fetch from cache) the artifact with the given key.
-    pub fn executable(&self, key: &str) -> Result<Rc<PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(key) {
+    /// Thread-safe and compile-once: the hot path is a cache read lock. A
+    /// miss takes that key's build lock (racers on the SAME key serialize
+    /// and the losers find the winner's entry on re-check; other keys —
+    /// and every cached read — proceed untouched), compiles with no cache
+    /// lock held, then inserts under a brief write lock. Every key
+    /// compiles exactly once process-wide no matter how many threads race.
+    pub fn executable(&self, key: &str) -> Result<Executable> {
+        if let Some(exe) = lock_unpoisoned!(self.cache.read()).get(key) {
+            return Ok(exe.clone());
+        }
+        let build_lock = lock_unpoisoned!(self.building.lock())
+            .entry(key.to_string())
+            .or_default()
+            .clone();
+        let _building = lock_unpoisoned!(build_lock.lock());
+        if let Some(exe) = lock_unpoisoned!(self.cache.read()).get(key) {
             return Ok(exe.clone());
         }
         let sig = self.manifest.artifact(key)?;
@@ -68,13 +153,12 @@ impl Engine {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compile {key}: {e:?}"))?;
-        {
-            let mut s = self.stats.borrow_mut();
-            s.compilations += 1;
-            s.compile_secs += t0.elapsed().as_secs_f64();
-        }
-        let exe = Rc::new(exe);
-        self.cache.borrow_mut().insert(key.to_string(), exe.clone());
+        self.stats.compilations.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .compile_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let exe = Executable(Arc::new(exe));
+        lock_unpoisoned!(self.cache.write()).insert(key.to_string(), exe.clone());
         Ok(exe)
     }
 
@@ -117,12 +201,14 @@ impl Engine {
             .to_literal_sync()
             .map_err(|e| anyhow!("fetch result {key}: {e:?}"))?;
         let outs = lit.to_tuple().map_err(|e| anyhow!("untuple {key}: {e:?}"))?;
-        {
-            let mut s = self.stats.borrow_mut();
-            s.executions += 1;
-            s.exec_secs += t0.elapsed().as_secs_f64();
-            s.host_transfer_bytes += outs.iter().map(|l| l.size_bytes() as u64).sum::<u64>();
-        }
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .exec_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.host_transfer_bytes.fetch_add(
+            outs.iter().map(|l| l.size_bytes() as u64).sum::<u64>(),
+            Ordering::Relaxed,
+        );
         if outs.len() != sig.outputs.len() {
             return Err(anyhow!(
                 "artifact {key}: produced {} outputs, manifest says {}",

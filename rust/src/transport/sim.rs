@@ -20,9 +20,17 @@
 //!
 //! The shared state is `Arc<Mutex<..>>`, so both endpoints are `Send` and
 //! the chaos harness can drive the two parties from two threads.
+//!
+//! `recv` on an empty queue is a typed `WouldBlock` *error* by default —
+//! the lockstep trainer never sees one and recovery layers poll through
+//! them. Two-thread callers without a recovery layer (the pipelined
+//! trainer) instead opt into blocking receives (`SimLink::set_blocking`):
+//! an empty queue parks on a condvar until the peer sends, the link
+//! breaks, or the timeout declares a real deadlock.
 
 use std::collections::{HashSet, VecDeque};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -166,6 +174,9 @@ impl Shared {
 #[derive(Clone)]
 pub struct SimNet {
     shared: Arc<Mutex<Shared>>,
+    /// Signalled on every delivery / link-state change, for endpoints in
+    /// blocking-recv mode.
+    ready: Arc<Condvar>,
 }
 
 impl SimNet {
@@ -192,6 +203,7 @@ impl SimNet {
                 faults_enabled: true,
                 seen: [HashSet::new(), HashSet::new()],
             })),
+            ready: Arc::new(Condvar::new()),
         }
     }
 
@@ -202,8 +214,20 @@ impl SimNet {
     /// The two endpoints of the link.
     pub fn pair(&self) -> (SimLink, SimLink) {
         (
-            SimLink { shared: self.shared.clone(), side: 0, stats: LinkStats::default() },
-            SimLink { shared: self.shared.clone(), side: 1, stats: LinkStats::default() },
+            SimLink {
+                shared: self.shared.clone(),
+                ready: self.ready.clone(),
+                side: 0,
+                stats: LinkStats::default(),
+                block_recv: None,
+            },
+            SimLink {
+                shared: self.shared.clone(),
+                ready: self.ready.clone(),
+                side: 1,
+                stats: LinkStats::default(),
+                block_recv: None,
+            },
         )
     }
 
@@ -239,6 +263,8 @@ impl SimNet {
             s.broken = true;
             s.fault_totals.disconnects += 1;
         }
+        drop(s);
+        self.ready.notify_all();
     }
 
     /// Re-establish a broken link, discarding everything in flight (as a
@@ -280,9 +306,24 @@ fn frame_key(bytes: &[u8]) -> Option<u64> {
 
 pub struct SimLink {
     shared: Arc<Mutex<Shared>>,
+    ready: Arc<Condvar>,
     /// 0 sends on queue 0 and receives on queue 1.
     side: usize,
     stats: LinkStats,
+    /// `Some(timeout)` = an empty queue parks on the condvar instead of
+    /// returning a typed `WouldBlock` (two-thread callers with no
+    /// recovery layer); the timeout bounds a genuine peer-death deadlock.
+    block_recv: Option<Duration>,
+}
+
+impl SimLink {
+    /// Switch this endpoint's `recv` to blocking mode: an empty queue
+    /// waits for the peer instead of erroring, up to `timeout` — after
+    /// which the empty queue is reported as the usual `WouldBlock` (a
+    /// real deadlock, fatal to callers without a recovery layer).
+    pub fn set_blocking(&mut self, timeout: Duration) {
+        self.block_recv = Some(timeout);
+    }
 }
 
 /// Lock a `SimNet`'s shared state. Free function on the field (not a
@@ -325,6 +366,9 @@ impl Transport for SimLink {
             s.broken = true;
             s.fault_totals.disconnects += 1;
             self.stats.faults.disconnects += 1;
+            drop(s);
+            // a blocked receiver must observe the break, not sleep on it
+            self.ready.notify_all();
             return Err(TransportError::Disconnected.into());
         }
         let cost = s.model.latency_secs
@@ -383,19 +427,44 @@ impl Transport for SimLink {
                 self.stats.faults.truncated += 1;
             }
         }
+        drop(s);
+        // wake any peer parked in a blocking recv (cheap when none is)
+        self.ready.notify_all();
         Ok(())
     }
 
     fn recv(&mut self) -> Result<Frame> {
         let mut s = lock_shared(&self.shared);
-        if s.broken {
-            return Err(TransportError::Disconnected.into());
-        }
         let q = 1 - self.side;
-        let Some(bytes) = s.queues[q].pop_front() else {
+        let bytes = loop {
+            if s.broken {
+                return Err(TransportError::Disconnected.into());
+            }
+            if let Some(bytes) = s.queues[q].pop_front() {
+                break bytes;
+            }
             // typed: a recovery layer distinguishes a fault-induced gap
             // from a protocol deadlock; bare callers treat it as fatal
-            return Err(TransportError::WouldBlock.into());
+            let Some(timeout) = self.block_recv else {
+                return Err(TransportError::WouldBlock.into());
+            };
+            let deadline = Instant::now() + timeout;
+            let mut timed_out = false;
+            while s.queues[q].is_empty() && !s.broken && !timed_out {
+                let now = Instant::now();
+                if now >= deadline {
+                    timed_out = true;
+                    break;
+                }
+                let (guard, _) = self
+                    .ready
+                    .wait_timeout(s, deadline - now)
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
+                s = guard;
+            }
+            if timed_out && s.queues[q].is_empty() && !s.broken {
+                return Err(TransportError::WouldBlock.into());
+            }
         };
         drop(s);
         // the bytes arrived even if they no longer parse: account first
@@ -455,6 +524,41 @@ mod tests {
         let (mut a, _b) = net.pair();
         let err = a.recv().unwrap_err();
         assert_eq!(TransportError::of(&err), Some(TransportError::WouldBlock), "{err}");
+    }
+
+    #[test]
+    fn blocking_recv_waits_for_the_peer() {
+        let net = SimNet::with_defaults();
+        let (mut a, mut b) = net.pair();
+        b.set_blocking(Duration::from_secs(10));
+        let t = std::thread::spawn(move || b.recv().unwrap().seq);
+        std::thread::sleep(Duration::from_millis(20));
+        a.send(&frame(7)).unwrap();
+        assert_eq!(t.join().unwrap(), 7);
+    }
+
+    #[test]
+    fn blocking_recv_times_out_to_would_block() {
+        let net = SimNet::with_defaults();
+        let (_a, mut b) = net.pair();
+        b.set_blocking(Duration::from_millis(30));
+        let err = b.recv().unwrap_err();
+        assert_eq!(TransportError::of(&err), Some(TransportError::WouldBlock), "{err}");
+    }
+
+    #[test]
+    fn blocking_recv_observes_a_kill() {
+        let net = SimNet::with_defaults();
+        let (_a, mut b) = net.pair();
+        b.set_blocking(Duration::from_secs(10));
+        let killer = net.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            killer.kill();
+        });
+        let err = b.recv().unwrap_err();
+        assert_eq!(TransportError::of(&err), Some(TransportError::Disconnected), "{err}");
+        t.join().unwrap();
     }
 
     #[test]

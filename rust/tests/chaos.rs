@@ -14,7 +14,7 @@
 //! the actual `FeatureOwner`/`LabelOwner` over a faulty link and are
 //! skipped when compiled artifacts are absent.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use splitfed::chaos::{
     fault_plan_for_seed, metrics_fingerprint, repro_command, run_schedule, run_session,
@@ -177,7 +177,7 @@ fn real_training_losses(plan: FaultPlan, seed: u64, steps: usize) -> Vec<f64> {
     let dir_lo = dir.clone();
     let sm2 = sm.clone();
     let server = std::thread::spawn(move || {
-        let engine = Rc::new(Engine::load(&dir_lo).unwrap());
+        let engine = Arc::new(Engine::load(&dir_lo).unwrap());
         let id = loop {
             match sm2.next_event().unwrap() {
                 MuxEvent::Opened(id) => break id,
@@ -198,7 +198,7 @@ fn real_training_losses(plan: FaultPlan, seed: u64, steps: usize) -> Vec<f64> {
         losses
     });
 
-    let engine = Rc::new(Engine::load(&dir).unwrap());
+    let engine = Arc::new(Engine::load(&dir).unwrap());
     let stream = cm.open_stream().unwrap();
     let mut fo = FeatureOwner::new(engine, "mlp", method, stream, seed, 99).unwrap();
     let ds = for_model("mlp", 100, seed, 256, 64).unwrap();

@@ -1,0 +1,106 @@
+//! Engine sharing across threads: one `Arc<Engine>` executing the same
+//! artifact from many threads must compile it exactly once, keep
+//! `EngineStats` totals consistent under concurrency, and return
+//! bit-identical results on every thread. Engine-gated like the other
+//! artifact-backed suites.
+
+use std::sync::Arc;
+
+use splitfed::runtime::{default_artifacts_dir, Engine, HostTensor};
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = default_artifacts_dir();
+    dir.join("manifest.json")
+        .exists()
+        .then(|| Arc::new(Engine::load(dir).unwrap()))
+}
+
+/// f32-sum digest of every output tensor: cheap, order-fixed, and any
+/// cross-thread nondeterminism in execution or marshalling changes it.
+fn exec_digest(engine: &Engine, key: &str, seed: i32) -> Vec<u64> {
+    let args = [HostTensor::scalar_i32(seed).to_literal().unwrap()];
+    engine
+        .exec_host(key, &args)
+        .unwrap()
+        .iter()
+        .map(|t| match t {
+            HostTensor::F32 { data, .. } => {
+                data.iter().map(|v| v.to_bits() as u64).sum::<u64>()
+            }
+            HostTensor::I32 { data, .. } => data.iter().map(|&v| v as u64).sum::<u64>(),
+        })
+        .collect()
+}
+
+#[test]
+fn four_threads_one_arc_engine_compile_once_consistent_stats() {
+    let Some(engine) = engine() else {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return;
+    };
+    const THREADS: usize = 4;
+    const ITERS: u64 = 3;
+    let key = "mlp/init";
+
+    let before = engine.stats();
+    assert_eq!(before.executions, 0);
+    assert_eq!(before.compilations, 0);
+
+    let mut handles = Vec::new();
+    for _ in 0..THREADS {
+        let engine = engine.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut digests = Vec::new();
+            for _ in 0..ITERS {
+                digests.push(exec_digest(&engine, key, 42));
+            }
+            digests
+        }));
+    }
+    let per_thread: Vec<Vec<Vec<u64>>> =
+        handles.into_iter().map(|h| h.join().expect("exec thread panicked")).collect();
+
+    // every thread saw the same deterministic outputs through the shared
+    // executable
+    let reference = &per_thread[0][0];
+    for (t, digests) in per_thread.iter().enumerate() {
+        for (i, d) in digests.iter().enumerate() {
+            assert_eq!(d, reference, "thread {t} iteration {i} diverged");
+        }
+    }
+
+    // exactly ONE compilation despite 4 threads racing the cold cache,
+    // and the atomic totals account every execution
+    let after = engine.stats();
+    assert_eq!(after.compilations, 1, "racing threads must share one compile");
+    assert_eq!(after.executions, (THREADS as u64) * ITERS);
+    assert!(after.compile_secs > 0.0);
+    assert!(after.exec_secs > 0.0);
+    assert!(after.host_transfer_bytes > 0);
+
+    // warm path: another executable() fetch compiles nothing
+    engine.executable(key).unwrap();
+    assert_eq!(engine.stats().compilations, 1);
+}
+
+#[test]
+fn precompile_then_exec_adds_no_compilations() {
+    let Some(engine) = engine() else {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return;
+    };
+    let keys: Vec<String> = engine
+        .manifest
+        .artifacts
+        .keys()
+        .filter(|k| k.starts_with("mlp/") && k.ends_with("/top_eval"))
+        .cloned()
+        .collect();
+    assert!(!keys.is_empty(), "mlp should have at least one top_eval variant");
+    engine.precompile(&keys).unwrap();
+    let warmed = engine.stats().compilations;
+    assert_eq!(warmed, keys.len() as u64);
+    // a second warm-up is free
+    engine.precompile(&keys).unwrap();
+    assert_eq!(engine.stats().compilations, warmed);
+}

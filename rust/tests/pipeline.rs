@@ -1,0 +1,216 @@
+//! Pipelined step executor guarantees, engine-free where possible:
+//!
+//! - depth 1 IS the lockstep protocol: the windowed executor produces a
+//!   bit-identical `RunLedger` to the preserved straight-line reference
+//!   loop, for every codec, on clean AND faulty links;
+//! - depth > 1 preserves per-epoch communication accounting (the window
+//!   flushes at epoch boundaries), and recovery still delivers
+//!   bit-identical metrics under chaos;
+//! - (engine-gated) `PipelinedTrainer` at depth 1 reproduces the legacy
+//!   `Trainer` ledger on the real mlp task, and depth 2 keeps the comm
+//!   accounting while reporting its staleness.
+
+use std::sync::Arc;
+
+use splitfed::chaos::{
+    fault_plan_for_seed, metrics_fingerprint, run_session, run_session_clean,
+    run_session_clean_lockstep, run_session_lockstep, ChaosConfig, CHAOS_METHODS,
+};
+use splitfed::config::{ExperimentConfig, Method};
+use splitfed::coordinator::{PipelinedTrainer, Trainer};
+use splitfed::metrics::RunLedger;
+use splitfed::runtime::{default_artifacts_dir, Engine};
+use splitfed::transport::FaultPlan;
+
+#[test]
+fn depth1_bit_identical_to_lockstep_every_codec_clean_link() {
+    for spec in CHAOS_METHODS {
+        let method = Method::parse(spec).unwrap();
+        let cfg = ChaosConfig::quick(41, method); // depth 1
+        // the no-recovery clean runner: byte counts carry no
+        // scheduling-dependent probe traffic, so full EpochRecord
+        // equality (incl. comm_bytes, sim_link_secs) is deterministic
+        let lockstep = run_session_clean_lockstep(&cfg).unwrap();
+        let windowed = run_session_clean(&cfg).unwrap();
+        assert_eq!(
+            lockstep.ledger.epochs, windowed.ledger.epochs,
+            "{spec}: depth-1 window diverged from the lockstep reference"
+        );
+        assert_eq!(
+            metrics_fingerprint(&lockstep.ledger),
+            metrics_fingerprint(&windowed.ledger),
+            "{spec}"
+        );
+        assert_eq!(
+            lockstep.ledger.fwd_compressed_pct.to_bits(),
+            windowed.ledger.fwd_compressed_pct.to_bits(),
+            "{spec}"
+        );
+    }
+}
+
+/// Under fault injection the depth-1 window sends the exact same
+/// first-transmission sequence, so the seeded fault schedule replays
+/// identically and the METRICS match bit for bit. (Byte counts are
+/// excluded, as everywhere in the chaos suite: probe/retransmit traffic
+/// is real but timing-dependent.)
+#[test]
+fn depth1_bit_identical_to_lockstep_under_faults() {
+    for seed in [3u64, 17, 91] {
+        let plan = fault_plan_for_seed(seed);
+        let cfg = ChaosConfig::quick(seed, Method::Topk { k: 6 });
+        let lockstep = run_session_lockstep(&cfg, plan).unwrap();
+        let windowed = run_session(&cfg, plan).unwrap();
+        assert_eq!(
+            metrics_fingerprint(&lockstep.ledger),
+            metrics_fingerprint(&windowed.ledger),
+            "seed {seed}: faulty-link depth-1 metric divergence"
+        );
+        assert_eq!(lockstep.faults, windowed.faults, "seed {seed}: fault schedules differ");
+    }
+}
+
+#[test]
+fn deeper_windows_preserve_per_epoch_comm_accounting() {
+    for spec in CHAOS_METHODS {
+        let method = Method::parse(spec).unwrap();
+        let base = run_session_clean(&ChaosConfig::quick(7, method)).unwrap();
+        for depth in [2usize, 3, 16] {
+            let cfg = ChaosConfig::quick(7, method).with_depth(depth);
+            let deep = run_session_clean(&cfg).unwrap();
+            // the window flushes at every epoch boundary, so cumulative
+            // comm bytes at each epoch record match lockstep exactly
+            // (depth 16 > steps_per_epoch exercises the never-full window)
+            for (a, b) in base.ledger.epochs.iter().zip(&deep.ledger.epochs) {
+                assert_eq!(
+                    a.comm_bytes, b.comm_bytes,
+                    "{spec} depth {depth} epoch {}: comm accounting drifted",
+                    a.epoch
+                );
+            }
+            // the synthetic workload has no parameter feedback, so its
+            // metrics are depth-invariant too
+            assert_eq!(
+                metrics_fingerprint(&base.ledger),
+                metrics_fingerprint(&deep.ledger),
+                "{spec} depth {depth}"
+            );
+        }
+    }
+}
+
+/// Chaos still holds with a deep window: recovery delivers exactly-once
+/// in-order no matter how many forwards run ahead.
+#[test]
+fn depth2_survives_fault_schedules_bit_identically() {
+    for seed in [5u64, 29] {
+        let cfg = ChaosConfig::quick(seed, Method::Topk { k: 6 }).with_depth(2);
+        let clean = run_session(&cfg, FaultPlan::none()).unwrap();
+        let chaos = run_session(&cfg, fault_plan_for_seed(seed)).unwrap();
+        assert_eq!(
+            metrics_fingerprint(&clean.ledger),
+            metrics_fingerprint(&chaos.ledger),
+            "seed {seed}: depth-2 metrics diverged under faults"
+        );
+    }
+}
+
+// --- real-trainer pipelining (engine-gated) -------------------------------
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = default_artifacts_dir();
+    dir.join("manifest.json")
+        .exists()
+        .then(|| Arc::new(Engine::load(dir).unwrap()))
+}
+
+fn quick_cfg(method: &str, depth: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp".into();
+    cfg.method = Method::parse(method).unwrap();
+    cfg.epochs = 2;
+    cfg.n_train = 256;
+    cfg.n_test = 64;
+    cfg.seed = 9;
+    cfg.pipeline_depth = depth;
+    cfg
+}
+
+/// Everything except wall-clock must match bit for bit (wall time is the
+/// one field two executions can never share).
+fn assert_ledgers_match(a: &RunLedger, b: &RunLedger, ctx: &str) {
+    assert_eq!(a.epochs.len(), b.epochs.len(), "{ctx}: epoch count");
+    for (x, y) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(x.epoch, y.epoch, "{ctx}");
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{ctx} e{}", x.epoch);
+        assert_eq!(x.train_metric.to_bits(), y.train_metric.to_bits(), "{ctx} e{}", x.epoch);
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{ctx} e{}", x.epoch);
+        assert_eq!(x.test_metric.to_bits(), y.test_metric.to_bits(), "{ctx} e{}", x.epoch);
+        assert_eq!(x.comm_bytes, y.comm_bytes, "{ctx} e{}", x.epoch);
+        assert_eq!(
+            x.sim_link_secs.to_bits(),
+            y.sim_link_secs.to_bits(),
+            "{ctx} e{}",
+            x.epoch
+        );
+    }
+    assert_eq!(
+        a.fwd_compressed_pct.to_bits(),
+        b.fwd_compressed_pct.to_bits(),
+        "{ctx}: fwd pct"
+    );
+    assert_eq!(
+        a.bwd_compressed_pct.to_bits(),
+        b.bwd_compressed_pct.to_bits(),
+        "{ctx}: bwd pct"
+    );
+    assert_eq!(a.config_text, b.config_text, "{ctx}: config");
+    assert_eq!(a.extra, b.extra, "{ctx}: extras");
+}
+
+#[test]
+fn pipelined_depth1_reproduces_lockstep_trainer_ledger() {
+    let Some(engine) = engine() else {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return;
+    };
+    for method in ["randtopk:k=6,alpha=0.1", "quant:bits=4", "none"] {
+        let cfg = quick_cfg(method, 1);
+        let mut lockstep = Trainer::new(engine.clone(), cfg.clone()).unwrap();
+        let a = lockstep.run().unwrap();
+        let mut pipelined = PipelinedTrainer::new(engine.clone(), cfg).unwrap();
+        let b = pipelined.run().unwrap();
+        assert_ledgers_match(&a, &b, method);
+    }
+}
+
+#[test]
+fn pipelined_depth2_trains_and_keeps_comm_accounting() {
+    let Some(engine) = engine() else {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return;
+    };
+    let mut d1 = PipelinedTrainer::new(engine.clone(), quick_cfg("randtopk:k=6,alpha=0.1", 1))
+        .unwrap();
+    let a = d1.run().unwrap();
+    let mut d2 = PipelinedTrainer::new(engine, quick_cfg("randtopk:k=6,alpha=0.1", 2)).unwrap();
+    let b = d2.run().unwrap();
+    // identical frame counts and sizes per epoch — staleness changes the
+    // gradients' VALUES, never the wire footprint
+    for (x, y) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(x.comm_bytes, y.comm_bytes, "epoch {}", x.epoch);
+    }
+    // the model still learns through a stale window
+    assert!(b.final_metric() > 0.02, "depth-2 final metric {}", b.final_metric());
+    assert!(
+        b.epochs.last().unwrap().train_loss.is_finite()
+            && b.epochs.last().unwrap().train_loss > 0.0
+    );
+    // staleness is accounted: a full depth-2 window averages just under
+    // one step of lag (the epoch-boundary flush retires the last step
+    // with an empty window)
+    assert_eq!(b.extra.get("pipeline_depth"), Some(&2.0));
+    let staleness = *b.extra.get("mean_staleness_steps").unwrap();
+    assert!(staleness > 0.5 && staleness < 1.0, "staleness {staleness}");
+    assert!(a.extra.is_empty(), "depth-1 ledger must carry no extras");
+}

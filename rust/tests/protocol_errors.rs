@@ -4,7 +4,7 @@
 //! errors, never mis-trained silently — and a bad `OpenStream` spec must
 //! refuse ONE stream while the connection keeps serving the others.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use splitfed::compress::{codec_for, Codec, CodecSpec, Pass, Payload};
 use splitfed::config::Method;
@@ -18,11 +18,11 @@ use splitfed::runtime::{default_artifacts_dir, Engine};
 use splitfed::transport::{Mux, MuxEvent, SimNet, TcpTransport, Transport};
 use splitfed::wire::{Frame, Message, OpenSpec, HEADER_BYTES, OFF_MAGIC, OFF_TYPE};
 
-fn engine() -> Option<Rc<Engine>> {
+fn engine() -> Option<Arc<Engine>> {
     let dir = default_artifacts_dir();
     dir.join("manifest.json")
         .exists()
-        .then(|| Rc::new(Engine::load(dir).unwrap()))
+        .then(|| Arc::new(Engine::load(dir).unwrap()))
 }
 
 fn setup(
@@ -268,8 +268,7 @@ fn spec_refusal_keeps_connection_serving() {
     let default_method = Method::parse("topk:k=6").unwrap();
     // connect before serve_tcp: it accept()s on the calling thread
     let phys = TcpTransport::connect(addr).unwrap();
-    let mut handles =
-        serve_tcp(&listener, 1, dir.clone(), "mlp".into(), default_method, 42).unwrap();
+    let pool = serve_tcp(&listener, 1, 0, dir.clone(), "mlp".into(), default_method, 42).unwrap();
     let mux = Mux::initiator(phys);
 
     // stream 1: geometry the mlp manifest (cut_dim 128) cannot satisfy
@@ -283,7 +282,7 @@ fn spec_refusal_keeps_connection_serving() {
     // stream 3, same connection: valid spec, full request round trip
     let method = Method::parse("randtopk:k=6,alpha=0.1").unwrap();
     let stream = mux.open_stream_with(CodecSpec::new(method, 128)).unwrap();
-    let engine = Rc::new(Engine::load(&dir).unwrap());
+    let engine = Arc::new(Engine::load(&dir).unwrap());
     let mut fo = FeatureOwner::new(engine, "mlp", method, stream, 42, EVAL_INIT_SEED).unwrap();
     let ds = for_model("mlp", fo.meta.n_classes, 42, EVAL_N_TRAIN, EVAL_N_TEST).unwrap();
     let idx = eval_indices(0, fo.meta.batch, ds.len(Split::Test));
@@ -295,7 +294,7 @@ fn spec_refusal_keeps_connection_serving() {
     drop(fo);
     drop(mux);
 
-    let report = handles.pop().unwrap().join().unwrap().unwrap();
+    let report = pool.join().unwrap().pop().expect("one connection report");
     assert_eq!(report.sessions.len(), 1, "the good stream served");
     assert_eq!(report.sessions[0].method, method);
     assert_eq!(report.total_requests(), 1);
@@ -517,8 +516,7 @@ fn refused_stream_interleaves_with_live_session() {
     let addr = listener.local_addr().unwrap();
     let default_method = Method::parse("topk:k=6").unwrap();
     let phys = TcpTransport::connect(addr).unwrap();
-    let mut handles =
-        serve_tcp(&listener, 1, dir.clone(), "mlp".into(), default_method, 42).unwrap();
+    let pool = serve_tcp(&listener, 1, 0, dir.clone(), "mlp".into(), default_method, 42).unwrap();
     let mux = Mux::initiator(phys);
 
     // stream 1: refused (bad geometry); stream 3: live session
@@ -527,7 +525,7 @@ fn refused_stream_interleaves_with_live_session() {
         .unwrap();
     let method = Method::parse("randtopk:k=6,alpha=0.1").unwrap();
     let good = mux.open_stream_with(CodecSpec::new(method, 128)).unwrap();
-    let engine = Rc::new(Engine::load(&dir).unwrap());
+    let engine = Arc::new(Engine::load(&dir).unwrap());
     let mut fo = FeatureOwner::new(engine, "mlp", method, good, 42, EVAL_INIT_SEED).unwrap();
     let ds = for_model("mlp", fo.meta.n_classes, 42, EVAL_N_TRAIN, EVAL_N_TEST).unwrap();
 
@@ -548,7 +546,7 @@ fn refused_stream_interleaves_with_live_session() {
     drop(bad);
     drop(mux);
 
-    let report = handles.pop().unwrap().join().unwrap().unwrap();
+    let report = pool.join().unwrap().pop().expect("one connection report");
     assert_eq!(report.sessions.len(), 1);
     assert_eq!(report.sessions[0].requests, 2, "both live requests served");
     assert_eq!(report.refused.len(), 1);

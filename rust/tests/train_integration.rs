@@ -1,17 +1,17 @@
 //! End-to-end integration: the full split-learning protocol over the
 //! simulated link, for every compression method, against real artifacts.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use splitfed::config::{ExperimentConfig, Method};
 use splitfed::coordinator::Trainer;
 use splitfed::runtime::{default_artifacts_dir, Engine};
 
-fn engine() -> Option<Rc<Engine>> {
+fn engine() -> Option<Arc<Engine>> {
     let dir = default_artifacts_dir();
     dir.join("manifest.json")
         .exists()
-        .then(|| Rc::new(Engine::load(dir).unwrap()))
+        .then(|| Arc::new(Engine::load(dir).unwrap()))
 }
 
 fn quick_cfg(method: &str) -> ExperimentConfig {

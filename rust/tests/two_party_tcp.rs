@@ -1,6 +1,8 @@
 //! Two-party protocol over a real TCP socket: the feature owner and the
-//! label owner run on separate threads, each with its own Engine, talking
-//! only through the framed wire protocol — the deployment topology.
+//! label owner run on separate threads, sharing ONE `Arc<Engine>` (the
+//! engine is `Send + Sync`, so both parties compile through a single
+//! executable cache), talking only through the framed wire protocol —
+//! the deployment topology.
 
 use splitfed::compress::CodecSpec;
 use splitfed::config::Method;
@@ -24,14 +26,17 @@ fn tcp_two_party_training_step() {
     let seed = 11u64;
     let steps = 4u64;
 
+    // ONE shared engine for both party threads: the label owner's thread
+    // gets a clone of the same Arc the feature owner execs through
+    let engine = std::sync::Arc::new(Engine::load(&dir).unwrap());
+
     // label-owner thread (server)
-    let dir_lo = dir.clone();
+    let engine_lo = engine.clone();
     let server = std::thread::spawn(move || {
-        let engine = std::rc::Rc::new(Engine::load(&dir_lo).unwrap());
         let (stream, _) = listener.accept().unwrap();
         stream.set_nodelay(true).unwrap();
         let transport = TcpTransport::from_stream(stream);
-        let mut lo = LabelOwner::new(engine.clone(), "mlp", method, transport, 99).unwrap();
+        let mut lo = LabelOwner::new(engine_lo, "mlp", method, transport, 99).unwrap();
         let ds = for_model("mlp", 100, seed, 256, 64).unwrap();
         let mut losses = Vec::new();
         let mut step = 0u64;
@@ -45,7 +50,6 @@ fn tcp_two_party_training_step() {
     });
 
     // feature-owner side (client)
-    let engine = std::rc::Rc::new(Engine::load(&dir).unwrap());
     let transport = TcpTransport::connect(addr).unwrap();
     let mut fo = FeatureOwner::new(engine.clone(), "mlp", method, transport, seed, 99).unwrap();
     let ds = for_model("mlp", 100, seed, 256, 64).unwrap();
@@ -76,11 +80,14 @@ fn mux_tcp_training_losses(steps: usize, kill_after: Option<usize>) -> Vec<f64> 
     let method = Method::parse("randtopk:k=6,alpha=0.1").unwrap();
     let seed = 23u64;
 
+    // one engine shared across the two party threads (Send + Sync)
+    let engine = std::sync::Arc::new(Engine::load(&dir).unwrap());
+
     // label-owner thread (server): accepts, serves one session, and on a
     // dead connection accepts the client's replacement from the same
     // listener — LabelOwner state (top model, momentum, step counter)
     // survives because only the transport under the mux is swapped
-    let dir_lo = dir.clone();
+    let engine_lo = engine.clone();
     let server = std::thread::spawn(move || {
         let (stream, _) = listener.accept().unwrap();
         let mux = Mux::acceptor(TcpTransport::from_stream(stream));
@@ -89,7 +96,7 @@ fn mux_tcp_training_losses(steps: usize, kill_after: Option<usize>) -> Vec<f64> 
             let (stream, _) = listener.accept()?;
             Ok(Some(TcpTransport::from_stream(stream)))
         });
-        let engine = std::rc::Rc::new(Engine::load(&dir_lo).unwrap());
+        let engine = engine_lo;
         let id = loop {
             match mux.next_event().unwrap() {
                 MuxEvent::Opened(id) => break id,
@@ -116,7 +123,6 @@ fn mux_tcp_training_losses(steps: usize, kill_after: Option<usize>) -> Vec<f64> 
     let mux = Mux::initiator(TcpTransport::from_stream(sock));
     mux.enable_recovery(RecoveryPolicy::for_tcp());
     mux.set_reconnector(move |_| Ok(Some(TcpTransport::connect(addr)?)));
-    let engine = std::rc::Rc::new(Engine::load(&dir).unwrap());
     let transport = mux.open_stream().unwrap();
     let mut fo = FeatureOwner::new(engine, "mlp", method, transport, seed, 99).unwrap();
     let ds = for_model("mlp", 100, seed, 256, 64).unwrap();
@@ -166,7 +172,7 @@ fn serve_resumable_session_survives_connection_kill() {
     mux.set_reconnector(move |_| Ok(Some(TcpTransport::connect(addr)?)));
     let method = Method::parse("randtopk:k=6,alpha=0.1").unwrap();
     let stream = mux.open_stream_with(CodecSpec::new(method, 128)).unwrap();
-    let engine = std::rc::Rc::new(Engine::load(&dir).unwrap());
+    let engine = std::sync::Arc::new(Engine::load(&dir).unwrap());
     let mut fo = FeatureOwner::new(engine, "mlp", method, stream, 42, EVAL_INIT_SEED).unwrap();
     let ds = for_model("mlp", fo.meta.n_classes, 42, EVAL_N_TRAIN, EVAL_N_TEST).unwrap();
     let requests = 4u64;
