@@ -163,6 +163,7 @@ fn bench_engine(b: &mut Bench, engine: &Arc<Engine>) {
             mean_ns,
             std_ns: 0.0,
             min_ns: mean_ns,
+            p99_ns: mean_ns,
             iters,
             bytes: None,
             units: None,

@@ -6,8 +6,11 @@
 use splitfed::bench_util::Bench;
 use splitfed::compress::Payload;
 use splitfed::transport::sim::{LinkModel, SimNet};
-use splitfed::transport::{Mux, MuxEvent, TcpTransport, Transport};
+use splitfed::transport::{FragPolicy, Mux, MuxEvent, TcpTransport, Transport};
 use splitfed::wire::{Frame, Message};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
 
 fn frame_of(bytes: usize) -> Frame {
     Frame::new(
@@ -157,4 +160,135 @@ fn main() {
         Ok(()) => println!("\nwrote {out}"),
         Err(e) => eprintln!("\nfailed to write {out}: {e}"),
     }
+
+    // ---- fragmentation: BENCH_frag.json ---------------------------------
+    let mut fb = Bench::new("frag");
+    fb.min_time = 0.5;
+
+    // fragmented vs whole delivery of the same 16KiB message over the
+    // mux'd sim link: the delta is the per-fragment envelope encode,
+    // extra frame headers, and reassembly-buffer append on the far side
+    // (max_frame_size 1024 splits the frame ~17 ways).
+    for frag in [None, Some(1024usize)] {
+        let net = fast_net();
+        let (a, bb) = net.pair();
+        let cm = Mux::initiator(a);
+        let sm = Mux::acceptor(bb);
+        if let Some(max) = frag {
+            cm.enable_fragmentation(FragPolicy::with_max_frame_size(max)).unwrap();
+            sm.enable_fragmentation(FragPolicy::with_max_frame_size(max)).unwrap();
+        }
+        let mut cs = cm.open_stream().unwrap();
+        assert!(matches!(sm.next_event().unwrap(), MuxEvent::Opened(_)));
+        let mut ss = sm.accept_stream(cs.id()).unwrap();
+        let f = frame_of(16 * 1024);
+        let name = match frag {
+            None => "mux simlink 16KiB whole".to_string(),
+            Some(max) => format!("mux simlink 16KiB frag max={max}"),
+        };
+        fb.run_bytes(&name, 16 * 1024, || {
+            cs.send(&f).unwrap();
+            ss.recv().unwrap()
+        });
+    }
+
+    // head-of-line blocking over a real TCP connection: a mouse stream
+    // echoes 512B frames while an elephant stream pushes 256KiB messages
+    // down the same mux. Whole frames park the mouse behind a full
+    // elephant write; fragmentation interleaves it after at most one
+    // max_frame_size chunk. The p99 column is the paper-facing stall.
+    for frag in [None, Some(4096usize)] {
+        let samples = elephant_mouse_stall(frag);
+        let name = match frag {
+            None => "mouse echo p99 under elephant, whole frames".to_string(),
+            Some(max) => format!("mouse echo p99 under elephant, frag max={max}"),
+        };
+        fb.record_samples(&name, &samples, None);
+    }
+
+    fb.report();
+
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_frag.json");
+    match fb.write_json(out) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+}
+
+/// Wall-clock ns per mouse echo roundtrip while an elephant stream
+/// saturates the same mux'd TCP loopback connection with 256KiB frames.
+fn elephant_mouse_stall(frag: Option<usize>) -> Vec<f64> {
+    const ELEPHANT_BYTES: usize = 256 * 1024;
+    const MOUSE_BYTES: usize = 512;
+    const WARMUP: usize = 20;
+    const SAMPLES: usize = 200;
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let sm = Mux::acceptor(TcpTransport::from_stream(stream));
+        if let Some(max) = frag {
+            sm.enable_fragmentation(FragPolicy::with_max_frame_size(max)).unwrap();
+        }
+        let mut opened = Vec::new();
+        while opened.len() < 2 {
+            if let MuxEvent::Opened(id) = sm.next_event().unwrap() {
+                opened.push(id);
+            }
+        }
+        opened.sort_unstable();
+        let elephant = sm.accept_stream(opened[0]).unwrap();
+        let mut mouse = sm.accept_stream(opened[1]).unwrap();
+        let drain = std::thread::spawn(move || {
+            let mut elephant = elephant;
+            while elephant.recv().is_ok() {}
+        });
+        loop {
+            match mouse.recv() {
+                Ok(f) if matches!(f.message, Message::Control(_)) => break,
+                Ok(f) => mouse.send(&f).unwrap(),
+                Err(_) => break,
+            }
+        }
+        drain.join().unwrap();
+    });
+
+    let cm = Mux::initiator(TcpTransport::connect(addr).unwrap());
+    if let Some(max) = frag {
+        cm.enable_fragmentation(FragPolicy::with_max_frame_size(max)).unwrap();
+    }
+    let es = cm.open_stream().unwrap();
+    let mut ms = cm.open_stream().unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let elephant_stop = Arc::clone(&stop);
+    let elephant = std::thread::spawn(move || {
+        let mut es = es;
+        let f = frame_of(ELEPHANT_BYTES);
+        while !elephant_stop.load(Ordering::Relaxed) {
+            es.send(&f).unwrap();
+        }
+        es
+    });
+
+    let f = frame_of(MOUSE_BYTES);
+    for _ in 0..WARMUP {
+        ms.send(&f).unwrap();
+        ms.recv().unwrap();
+    }
+    let mut samples = Vec::with_capacity(SAMPLES);
+    for _ in 0..SAMPLES {
+        let t = Instant::now();
+        ms.send(&f).unwrap();
+        ms.recv().unwrap();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    let mut es = elephant.join().unwrap();
+    es.close().unwrap();
+    ms.send(&Frame::new(0, Message::Control(splitfed::wire::Control::Shutdown))).unwrap();
+    server.join().unwrap();
+    samples
 }

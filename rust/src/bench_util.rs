@@ -17,11 +17,27 @@ pub struct CaseResult {
     pub mean_ns: f64,
     pub std_ns: f64,
     pub min_ns: f64,
+    /// 99th-percentile sample (tail latency; equals the max below 100
+    /// samples). For `run*` cases samples are per-batch means, so this is
+    /// a smoothed tail — `record_samples` cases carry raw per-event
+    /// samples and report a true p99 (the stall benches use it).
+    pub p99_ns: f64,
     pub iters: u64,
     pub bytes: Option<u64>,
     /// Work items (e.g. training steps) per call: reported as units/s
     /// (`e2e_step_bench` uses it for steps/sec at each pipeline depth).
     pub units: Option<u64>,
+}
+
+/// The `p`-quantile (0..=1) of `samples` by nearest-rank on a sorted copy.
+pub fn quantile_ns(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
 }
 
 pub struct Bench {
@@ -79,6 +95,26 @@ impl Bench {
                 break;
             }
         }
+        self.push_stats(name, &samples, total_iters, bytes, units);
+    }
+
+    /// Record a case from externally-measured per-event samples (ns each)
+    /// — e.g. individual small-frame stalls timed while an elephant
+    /// stream competes for the link. Unlike `run*`, the distribution is
+    /// raw, so `p99_ns` is a true per-event tail.
+    pub fn record_samples(&mut self, name: &str, samples_ns: &[f64], bytes: Option<u64>) {
+        assert!(!samples_ns.is_empty(), "record_samples needs at least one sample");
+        self.push_stats(name, samples_ns, samples_ns.len() as u64, bytes, None);
+    }
+
+    fn push_stats(
+        &mut self,
+        name: &str,
+        samples: &[f64],
+        total_iters: u64,
+        bytes: Option<u64>,
+        units: Option<u64>,
+    ) {
         let n = samples.len() as f64;
         let mean = samples.iter().sum::<f64>() / n;
         let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
@@ -88,6 +124,7 @@ impl Bench {
             mean_ns: mean,
             std_ns: var.sqrt(),
             min_ns: min,
+            p99_ns: quantile_ns(samples, 0.99),
             iters: total_iters,
             bytes,
             units,
@@ -114,6 +151,7 @@ impl Bench {
                 m.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
                 m.insert("std_ns".to_string(), Json::Num(r.std_ns));
                 m.insert("min_ns".to_string(), Json::Num(r.min_ns));
+                m.insert("p99_ns".to_string(), Json::Num(r.p99_ns));
                 m.insert("iters".to_string(), Json::Num(r.iters as f64));
                 if let Some(b) = r.bytes {
                     m.insert("bytes".to_string(), Json::Num(b as f64));
@@ -141,8 +179,8 @@ impl Bench {
     pub fn report(&self) {
         println!("\n== bench group: {} ==", self.group);
         println!(
-            "{:<52} {:>12} {:>10} {:>12} {:>12}",
-            "case", "mean", "std", "min", "throughput"
+            "{:<52} {:>12} {:>10} {:>12} {:>12} {:>12}",
+            "case", "mean", "std", "min", "p99", "throughput"
         );
         for r in &self.results {
             let tput = match (r.bytes, r.units) {
@@ -151,11 +189,12 @@ impl Bench {
                 (None, None) => "-".into(),
             };
             println!(
-                "{:<52} {:>12} {:>10} {:>12} {:>12}",
+                "{:<52} {:>12} {:>10} {:>12} {:>12} {:>12}",
                 r.name,
                 fmt_ns(r.mean_ns),
                 fmt_ns(r.std_ns),
                 fmt_ns(r.min_ns),
+                fmt_ns(r.p99_ns),
                 tput
             );
         }
@@ -217,6 +256,38 @@ mod tests {
         let v = crate::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         let results = v.get("results").unwrap().as_arr().unwrap();
         assert!(results[0].get("units_per_s").unwrap().as_f64().unwrap() > 0.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn quantile_nearest_rank() {
+        assert_eq!(quantile_ns(&[], 0.99), 0.0);
+        assert_eq!(quantile_ns(&[7.0], 0.5), 7.0);
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(quantile_ns(&v, 0.99), 99.0);
+        assert_eq!(quantile_ns(&v, 0.5), 50.0);
+        assert_eq!(quantile_ns(&v, 1.0), 100.0);
+        // order-independent
+        let mut rev = v.clone();
+        rev.reverse();
+        assert_eq!(quantile_ns(&rev, 0.99), 99.0);
+    }
+
+    #[test]
+    fn record_samples_reports_true_tail() {
+        let mut b = Bench::new("stall");
+        let mut samples: Vec<f64> = vec![100.0; 99];
+        samples.push(10_000.0); // one elephant-induced stall
+        b.record_samples("mouse p99", &samples, Some(64));
+        let r = &b.results[0];
+        assert_eq!(r.iters, 100);
+        assert_eq!(r.p99_ns, 100.0);
+        assert!(r.mean_ns > 100.0 && r.mean_ns < 10_000.0);
+        let path = std::env::temp_dir().join("splitfed_bench_p99_test.json");
+        b.write_json(&path).unwrap();
+        let v = crate::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let results = v.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results[0].get("p99_ns").unwrap().as_f64().unwrap(), 100.0);
         std::fs::remove_file(&path).ok();
     }
 

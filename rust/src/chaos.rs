@@ -38,8 +38,8 @@ use crate::json::Json;
 use crate::metrics::{EpochRecord, RunLedger};
 use crate::transport::sim::LinkModel;
 use crate::transport::{
-    FaultCounts, FaultPlan, Mux, MuxEvent, RecoveryCounts, RecoveryPolicy, SimLink, SimNet,
-    Transport,
+    FaultCounts, FaultPlan, FragPolicy, Mux, MuxEvent, RecoveryCounts, RecoveryPolicy, SimLink,
+    SimNet, Transport,
 };
 use crate::util::Rng;
 use crate::wire::{Control, Frame, Message};
@@ -67,6 +67,11 @@ pub struct ChaosConfig {
     /// semantics): forwards may run up to this many steps ahead of their
     /// gradients, flushed at every epoch boundary. 1 = lockstep.
     pub pipeline_depth: usize,
+    /// `Some(n)` = enable frame fragmentation on both muxes: frames over
+    /// `n` bytes travel as `Fragment` frames and are reassembled on the
+    /// far side, so the fault schedule can hit individual fragments.
+    /// `None` = whole frames (the historical wire behavior).
+    pub max_frame_size: Option<usize>,
 }
 
 impl ChaosConfig {
@@ -82,11 +87,21 @@ impl ChaosConfig {
             epochs: 2,
             steps_per_epoch: 6,
             pipeline_depth: 1,
+            max_frame_size: None,
         }
     }
 
     pub fn with_depth(mut self, depth: usize) -> Self {
         self.pipeline_depth = depth.max(1);
+        self
+    }
+
+    /// Fragment every frame larger than `n` bytes. The quick workload's
+    /// dense payloads run ~500 bytes, so e.g. `n = 96` splits each data
+    /// frame into several fragments — enough for the schedule to drop,
+    /// duplicate, reorder, or corrupt a *middle* fragment.
+    pub fn with_max_frame_size(mut self, n: usize) -> Self {
+        self.max_frame_size = Some(n);
         self
     }
 }
@@ -486,6 +501,10 @@ fn run_session_with(
     }
     let cm = Mux::initiator(a);
     let sm = Mux::acceptor(b);
+    if let Some(n) = cfg.max_frame_size {
+        cm.enable_fragmentation(FragPolicy::with_max_frame_size(n))?;
+        sm.enable_fragmentation(FragPolicy::with_max_frame_size(n))?;
+    }
     if recovery {
         let policy = RecoveryPolicy {
             probe_after_polls: 200,
@@ -549,10 +568,24 @@ pub struct ChaosVerdict {
     pub detail: String,
     pub faults: FaultCounts,
     pub recovery: RecoveryCounts,
+    /// `Some(n)` when both runs fragmented at this `max_frame_size`.
+    pub max_frame_size: Option<usize>,
 }
 
 /// Run one schedule: clean baseline, faulty run, bit-identity check.
 pub fn run_schedule(seed: u64, method_spec: &str) -> ChaosVerdict {
+    run_schedule_fragmented(seed, method_spec, None)
+}
+
+/// [`run_schedule`] with frame fragmentation on (`Some(max_frame_size)`)
+/// on both muxes of BOTH runs: the clean baseline and the faulty run
+/// fragment identically, so the bit-identity verdict covers reassembly
+/// under every injected fault hitting arbitrary fragments.
+pub fn run_schedule_fragmented(
+    seed: u64,
+    method_spec: &str,
+    max_frame_size: Option<usize>,
+) -> ChaosVerdict {
     let plan = fault_plan_for_seed(seed);
     let mut v = ChaosVerdict {
         seed,
@@ -562,6 +595,7 @@ pub fn run_schedule(seed: u64, method_spec: &str) -> ChaosVerdict {
         detail: String::new(),
         faults: FaultCounts::default(),
         recovery: RecoveryCounts::default(),
+        max_frame_size,
     };
     let method = match Method::parse(method_spec) {
         Ok(m) => m,
@@ -570,7 +604,8 @@ pub fn run_schedule(seed: u64, method_spec: &str) -> ChaosVerdict {
             return v;
         }
     };
-    let cfg = ChaosConfig::quick(seed, method);
+    let mut cfg = ChaosConfig::quick(seed, method);
+    cfg.max_frame_size = max_frame_size;
     let clean = match run_session(&cfg, FaultPlan::none()) {
         Ok(o) => o,
         Err(e) => {
@@ -607,6 +642,19 @@ pub fn repro_command(seed: u64, method_spec: &str) -> String {
     format!("cargo run --bin splitfed -- chaos --seed {seed} --method {method_spec}")
 }
 
+/// [`repro_command`] for a schedule that ran with fragmentation on.
+pub fn repro_command_fragmented(seed: u64, method_spec: &str, max_frame_size: usize) -> String {
+    format!("{} --max-frame-size {max_frame_size}", repro_command(seed, method_spec))
+}
+
+/// The reproduction line for a verdict, fragmented or not.
+pub fn repro_for(v: &ChaosVerdict) -> String {
+    match v.max_frame_size {
+        Some(n) => repro_command_fragmented(v.seed, &v.method_spec, n),
+        None => repro_command(v.seed, &v.method_spec),
+    }
+}
+
 /// Persist a failing verdict as a CI artifact (JSON next to BENCH_*.json).
 pub fn write_repro(dir: &Path, v: &ChaosVerdict) -> Result<PathBuf> {
     let mut root = BTreeMap::new();
@@ -614,7 +662,10 @@ pub fn write_repro(dir: &Path, v: &ChaosVerdict) -> Result<PathBuf> {
     root.insert("method".into(), Json::Str(v.method_spec.clone()));
     root.insert("ok".into(), Json::Bool(v.ok));
     root.insert("detail".into(), Json::Str(v.detail.clone()));
-    root.insert("repro".into(), Json::Str(repro_command(v.seed, &v.method_spec)));
+    root.insert("repro".into(), Json::Str(repro_for(v)));
+    if let Some(n) = v.max_frame_size {
+        root.insert("max_frame_size".into(), Json::Num(n as f64));
+    }
     let mut plan = BTreeMap::new();
     plan.insert("drop".into(), Json::Num(v.plan.drop));
     plan.insert("duplicate".into(), Json::Num(v.plan.duplicate));
@@ -675,6 +726,42 @@ mod tests {
             let v = run_schedule(91, spec);
             assert!(v.ok, "{spec} seed 91: {}", v.detail);
         }
+    }
+
+    #[test]
+    fn fragmented_clean_session_matches_whole_frame_metrics() {
+        // fragmentation is a pure transport concern: the synthetic
+        // trainer's metrics cannot move when frames travel in pieces
+        let whole = ChaosConfig::quick(33, Method::None);
+        let frag = whole.clone().with_max_frame_size(96);
+        let a = run_session(&whole, FaultPlan::none()).unwrap();
+        let b = run_session(&frag, FaultPlan::none()).unwrap();
+        assert_eq!(metrics_fingerprint(&a.ledger), metrics_fingerprint(&b.ledger));
+        // the dense quick workload (~500 B payloads) really did fragment:
+        // the envelope overhead makes the fragmented run cost more bytes
+        assert!(
+            b.ledger.total_comm_bytes() > a.ledger.total_comm_bytes(),
+            "fragmented {} <= whole {}",
+            b.ledger.total_comm_bytes(),
+            a.ledger.total_comm_bytes()
+        );
+    }
+
+    #[test]
+    fn one_fragmented_lossy_schedule_survives_per_codec_smoke() {
+        // the full fragmented matrix lives in rust/tests/chaos.rs
+        for spec in CHAOS_METHODS {
+            let v = run_schedule_fragmented(91, spec, Some(96));
+            assert!(v.ok, "{spec} seed 91 frag 96: {}", v.detail);
+        }
+    }
+
+    #[test]
+    fn repro_line_reflects_fragmentation() {
+        assert_eq!(
+            repro_command_fragmented(7, "topk:k=6", 96),
+            "cargo run --bin splitfed -- chaos --seed 7 --method topk:k=6 --max-frame-size 96"
+        );
     }
 
     #[test]

@@ -165,6 +165,12 @@ pub struct ExperimentConfig {
     /// deeper windows overlap compute with the link at the price of
     /// `depth - 1` steps of gradient staleness.
     pub pipeline_depth: usize,
+    /// Largest frame put on the wire, in bytes. 0 (the default) disables
+    /// fragmentation; any nonzero value must clear `wire::MIN_FRAME_SIZE`
+    /// (header + fragment envelope + 1 payload byte). Frames above the
+    /// limit are split into `Fragment` frames and interleaved round-robin
+    /// across streams (`transport::FragPolicy`).
+    pub max_frame_size: usize,
     pub out_dir: Option<String>,
 }
 
@@ -184,6 +190,7 @@ impl Default for ExperimentConfig {
             bandwidth_mbps: 100.0,
             latency_ms: 5.0,
             pipeline_depth: 1,
+            max_frame_size: 0,
             out_dir: None,
         }
     }
@@ -210,6 +217,16 @@ impl ExperimentConfig {
                 self.pipeline_depth = v.parse()?;
                 if self.pipeline_depth == 0 {
                     bail!("pipeline_depth must be >= 1 (1 = lockstep)");
+                }
+            }
+            "max_frame_size" => {
+                self.max_frame_size = v.parse()?;
+                if self.max_frame_size != 0 && self.max_frame_size < crate::wire::MIN_FRAME_SIZE {
+                    bail!(
+                        "max_frame_size must be 0 (off) or >= {} (frame header + \
+                         fragment envelope + 1 payload byte)",
+                        crate::wire::MIN_FRAME_SIZE
+                    );
                 }
             }
             "out_dir" => self.out_dir = Some(v.into()),
@@ -240,7 +257,7 @@ impl ExperimentConfig {
         format!(
             "model = {}\nmethod = {}\nepochs = {}\nlr = {}\nlr_decay = {}\nseed = {}\n\
              n_train = {}\nn_test = {}\naugment = {}\neval_every = {}\n\
-             bandwidth_mbps = {}\nlatency_ms = {}\npipeline_depth = {}\n",
+             bandwidth_mbps = {}\nlatency_ms = {}\npipeline_depth = {}\nmax_frame_size = {}\n",
             self.model,
             self.method,
             self.epochs,
@@ -253,7 +270,8 @@ impl ExperimentConfig {
             self.eval_every,
             self.bandwidth_mbps,
             self.latency_ms,
-            self.pipeline_depth
+            self.pipeline_depth,
+            self.max_frame_size
         )
     }
 
@@ -391,6 +409,27 @@ mod tests {
         assert_eq!(cfg.pipeline_depth, 3);
         assert!(cfg.set("pipeline_depth", "0").is_err());
         assert!(cfg.to_file_format().contains("pipeline_depth = 3"));
+    }
+
+    #[test]
+    fn max_frame_size_parses_and_rejects_sub_minimum() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.max_frame_size, 0, "default is fragmentation off");
+        cfg.set("max_frame_size", "4096").unwrap();
+        assert_eq!(cfg.max_frame_size, 4096);
+        // the exact floor is representable...
+        cfg.set("max_frame_size", &crate::wire::MIN_FRAME_SIZE.to_string()).unwrap();
+        assert_eq!(cfg.max_frame_size, crate::wire::MIN_FRAME_SIZE);
+        // ...anything nonzero below it is not (no room for a payload byte)
+        let err = cfg
+            .set("max_frame_size", &(crate::wire::MIN_FRAME_SIZE - 1).to_string())
+            .unwrap_err();
+        assert!(err.to_string().contains("max_frame_size"), "{err}");
+        // 0 stays a legal off switch
+        cfg.set("max_frame_size", "0").unwrap();
+        assert_eq!(cfg.max_frame_size, 0);
+        cfg.set("max_frame_size", "100").unwrap();
+        assert!(cfg.to_file_format().contains("max_frame_size = 100"));
     }
 
     #[test]

@@ -318,6 +318,37 @@ impl MuxServer {
                     // the mux already handled it
                     continue;
                 }
+                Ok(MuxEvent::Fragment(_)) => {
+                    // a slice of a large request was absorbed into the
+                    // reassembly buffer; the complete message arrives as
+                    // a Data event
+                    continue;
+                }
+                Ok(MuxEvent::StreamError(id)) => {
+                    // fragmentation fault: the mux already closed and
+                    // accounted the stream — fail the one session, keep
+                    // the connection and its other sessions up
+                    let reason = mux
+                        .stream_frag_fault(id)
+                        .map(|f| f.to_string())
+                        .unwrap_or_else(|| "fragmentation fault".into());
+                    if self.verbose {
+                        println!("session {id}: failed ({reason})");
+                    }
+                    if let Some(s) = sessions.remove(&id) {
+                        // a live session: report what it served before the
+                        // fault (its stream stats ride the session report,
+                        // so no refused entry — bytes must count once)
+                        done.push(finalize(id, s));
+                    } else {
+                        refused.push(RefusedStream {
+                            stream_id: id,
+                            reason,
+                            stats: LinkStats::default(),
+                        });
+                    }
+                    refused_ids.insert(id);
+                }
                 Ok(MuxEvent::Goaway { .. }) => break,
                 Err(e) => {
                     // a peer hangup after every session closed is the normal

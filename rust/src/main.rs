@@ -139,14 +139,27 @@ fn cmd_check(args: &Args) -> Result<()> {
 /// Replay chaos schedules: `--seed N` runs one (the CLI repro for a CI
 /// failure), `--seeds N` runs a matrix of N seeds, `--shard i/n` takes
 /// every n-th seed (CI sharding). `--method` restricts to one codec;
-/// default is every codec in the registry. Engine-free: runs anywhere.
+/// default is every codec in the registry. `--max-frame-size N` runs the
+/// schedules with frame fragmentation on. Engine-free: runs anywhere.
 fn cmd_chaos(args: &Args) -> Result<()> {
-    use splitfed::chaos::{repro_command, run_schedule, write_repro, CHAOS_METHODS};
+    use splitfed::chaos::{repro_for, run_schedule_fragmented, write_repro, CHAOS_METHODS};
 
     let methods: Vec<String> = match args.get("method") {
         Some(m) => vec![m.to_string()],
         None => CHAOS_METHODS.iter().map(|s| s.to_string()).collect(),
     };
+    // fragment every frame over this size (both the clean baseline and
+    // the faulty run); absent = whole frames, the historical wire shape
+    let max_frame_size: Option<usize> = args.get_parse("max-frame-size")?;
+    if let Some(n) = max_frame_size {
+        if n < splitfed::wire::MIN_FRAME_SIZE {
+            bail!(
+                "--max-frame-size {n} is below the minimum {} (frame header + \
+                 fragment envelope + 1 payload byte)",
+                splitfed::wire::MIN_FRAME_SIZE
+            );
+        }
+    }
     let seeds: Vec<u64> = if let Some(seed) = args.get_parse::<u64>("seed")? {
         vec![seed]
     } else {
@@ -173,7 +186,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     let mut failures = 0usize;
     for method in &methods {
         for &seed in &seeds {
-            let v = run_schedule(seed, method);
+            let v = run_schedule_fragmented(seed, method, max_frame_size);
             let status = if v.ok { "ok  " } else { "FAIL" };
             println!(
                 "{status} seed={seed:<6} method={method:<24} faults={:<4} \
@@ -186,7 +199,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
             if !v.ok {
                 failures += 1;
                 let path = write_repro(&artifact_dir, &v)?;
-                eprintln!("  repro: {}", repro_command(seed, method));
+                eprintln!("  repro: {}", repro_for(&v));
                 eprintln!("  artifact: {}", path.display());
             }
         }

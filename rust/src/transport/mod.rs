@@ -25,8 +25,8 @@ pub mod mux;
 pub mod sim;
 pub mod tcp;
 
-pub use mux::{Mux, MuxEvent, MuxStream, RecoveryPolicy};
-pub use sim::{FaultPlan, SimLink, SimNet};
+pub use mux::{FragFault, FragPolicy, Mux, MuxEvent, MuxStream, RecoveryPolicy};
+pub use sim::{FaultPlan, ScriptedFault, SimLink, SimNet};
 pub use tcp::TcpTransport;
 
 use anyhow::Result;

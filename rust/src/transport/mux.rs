@@ -60,8 +60,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::compress::CodecSpec;
 use crate::wire::{
-    Frame, Message, MsgType, OpenSpec, CONTROL_STREAM_ID, HEADER_BYTES, OFF_SEQ, OFF_STREAM_ID,
-    OFF_TYPE,
+    fragment_frames, FragPart, Frame, Message, MsgType, OpenSpec, CONTROL_STREAM_ID, HEADER_BYTES,
+    MIN_FRAME_SIZE, OFF_SEQ, OFF_STREAM_ID, OFF_TYPE,
 };
 
 use super::{is_connection_failure, LinkStats, RecoveryCounts, Transport, TransportError};
@@ -114,6 +114,86 @@ impl RecoveryPolicy {
     }
 }
 
+/// Tuning for frame fragmentation (opt-in, [`Mux::enable_fragmentation`]).
+/// Splitting applies to the send side only; reassembly of inbound
+/// `Fragment` frames is always on, so a fragmenting peer interoperates
+/// with any receiver.
+#[derive(Clone, Copy, Debug)]
+pub struct FragPolicy {
+    /// Total wire size (header + body) above which an outbound data frame
+    /// is split into `Fragment` frames of at most this size.
+    pub max_frame_size: usize,
+    /// Per-stream cap on the reassembly buffer; a message growing past it
+    /// fails that one stream with [`FragFault::ReassemblyOverflow`].
+    pub reasm_cap: usize,
+    /// Fragments put on the wire per scheduler turn before the connection
+    /// lock is released, letting other threads' frames interleave.
+    pub burst: usize,
+}
+
+impl Default for FragPolicy {
+    fn default() -> Self {
+        FragPolicy { max_frame_size: 64 * 1024, reasm_cap: 64 * 1024 * 1024, burst: 4 }
+    }
+}
+
+impl FragPolicy {
+    /// Default policy at a given split threshold.
+    pub fn with_max_frame_size(n: usize) -> Self {
+        FragPolicy { max_frame_size: n, ..FragPolicy::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_frame_size < MIN_FRAME_SIZE {
+            bail!(
+                "max_frame_size {} is smaller than frame header + fragment envelope + 1 \
+                 byte ({MIN_FRAME_SIZE})",
+                self.max_frame_size
+            );
+        }
+        if self.reasm_cap < self.max_frame_size {
+            bail!(
+                "reasm_cap {} cannot hold even one max_frame_size ({}) message",
+                self.reasm_cap,
+                self.max_frame_size
+            );
+        }
+        if self.burst == 0 {
+            bail!("burst must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Reassembly buffer cap applied when the receiving side never called
+/// `enable_fragmentation` (reassembly itself is unconditional).
+const DEFAULT_REASM_CAP: usize = 64 * 1024 * 1024;
+
+/// Why the fragmentation layer failed a stream. Stream-local by design:
+/// the offending stream is closed and accounted, the connection and its
+/// other streams survive. Typed so callers can `downcast_ref` it off the
+/// stream's `recv` error.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FragFault {
+    /// Reassembling one more fragment would exceed the per-stream cap.
+    ReassemblyOverflow { needed: usize, cap: usize },
+    /// Malformed or inconsistent fragment envelope.
+    Protocol(String),
+}
+
+impl std::fmt::Display for FragFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FragFault::ReassemblyOverflow { needed, cap } => {
+                write!(f, "reassembly overflow: message needs {needed} bytes, cap is {cap}")
+            }
+            FragFault::Protocol(reason) => write!(f, "fragment protocol fault: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for FragFault {}
+
 /// Per-stream demux state.
 #[derive(Default)]
 struct StreamState {
@@ -141,6 +221,26 @@ struct StreamState {
     replay: VecDeque<(u32, Vec<u8>)>,
     /// Recovery actions taken on this stream.
     recovery: RecoveryCounts,
+    /// Outbound frames queued behind the fragment scheduler, stream id
+    /// already stamped; seq is stamped at flush time so the replay buffer
+    /// stays in wire order.
+    pending_out: VecDeque<Vec<u8>>,
+    /// Sender-side id for the next fragmented message on this stream.
+    frag_msg_seq: u64,
+    /// In-progress inbound reassembly.
+    reasm: Option<Reassembly>,
+    /// Latched fragmentation fault: the stream was closed-and-accounted.
+    frag_fault: Option<FragFault>,
+}
+
+/// In-order, single-copy reassembly of one fragmented message: each chunk
+/// is appended at its final offset in `buf` — no per-fragment staging
+/// buffers, no end-of-message concatenation pass.
+struct Reassembly {
+    msg_id: u64,
+    num_frag: u32,
+    next_ndx: u32,
+    buf: Vec<u8>,
 }
 
 /// What the inbound sequencing gate decided for a frame.
@@ -151,6 +251,16 @@ enum Gate {
     Gap,
     /// In order; `ack` = a cadence ack is due.
     Accept { ack: bool },
+}
+
+/// What one fragment-scheduler turn accomplished.
+enum Flush {
+    /// No stream has queued output.
+    Idle,
+    /// A frame hit the wire (or the inbound pump made progress).
+    Progress,
+    /// Replay buffer full and nothing inbound to read; caller backs off.
+    Blocked,
 }
 
 type Reconnector<T> = Box<dyn FnMut(u32) -> Result<Option<T>> + Send>;
@@ -169,6 +279,10 @@ struct Inner<T: Transport> {
     dead: Option<String>,
     /// opt-in reliability layer
     recovery: Option<RecoveryPolicy>,
+    /// opt-in send-side fragmentation (reassembly is always on)
+    frag: Option<FragPolicy>,
+    /// streams with queued outbound frames, in round-robin flush order
+    outbox: VecDeque<u32>,
     /// how to re-establish the physical connection (`None` result =
     /// reuse the existing transport, e.g. a reconnected `SimNet`)
     reconnect: Option<Reconnector<T>>,
@@ -197,9 +311,10 @@ impl<T: Transport> Inner<T> {
     }
 
     /// Send pre-encoded `bytes` on stream `id`, restamping the header in
-    /// place, and attribute the framed bytes to that stream's stats. With
-    /// recovery enabled, sequenced frames are seq-stamped and buffered
-    /// for replay, and a dead connection is resumed instead of failing.
+    /// place. With fragmentation enabled, an oversized data frame is
+    /// split into `Fragment` frames and queued on the stream's outbox
+    /// (flushed round-robin across streams by `flush_step`); everything
+    /// else takes the direct path via `stamp_and_send`.
     fn send_on(&mut self, id: u32, mut bytes: Vec<u8>) -> Result<()> {
         if let Some(e) = &self.dead {
             let e = e.clone();
@@ -214,6 +329,49 @@ impl<T: Transport> Inner<T> {
         }
         // stream_id is outside the payload CRC: an in-place restamp is safe
         bytes[OFF_STREAM_ID..OFF_STREAM_ID + 4].copy_from_slice(&id.to_le_bytes());
+        if id != CONTROL_STREAM_ID {
+            if let Some(policy) = self.frag {
+                // only data-plane frames are split; the per-stream control
+                // plane (Open/Close) and the recovery plane are always
+                // small enough to ride whole
+                let splittable = matches!(
+                    MsgType::from_u8(bytes[OFF_TYPE]),
+                    Ok(MsgType::Activations
+                        | MsgType::Gradients
+                        | MsgType::EvalResult
+                        | MsgType::Control)
+                );
+                if splittable && bytes.len() > policy.max_frame_size {
+                    let st = self
+                        .streams
+                        .get_mut(&id)
+                        .ok_or_else(|| anyhow!("send on unregistered stream {id}"))?;
+                    st.frag_msg_seq += 1;
+                    let frames = fragment_frames(id, st.frag_msg_seq, &bytes, policy.max_frame_size)?;
+                    st.pending_out.extend(frames);
+                    if !self.outbox.contains(&id) {
+                        self.outbox.push_back(id);
+                    }
+                    return Ok(());
+                }
+                // keep per-stream FIFO order: a small frame must not
+                // overtake this stream's own queued fragments
+                if self.streams.get(&id).is_some_and(|s| !s.pending_out.is_empty()) {
+                    let st = self.streams.get_mut(&id).expect("checked above");
+                    st.pending_out.push_back(bytes);
+                    if !self.outbox.contains(&id) {
+                        self.outbox.push_back(id);
+                    }
+                    return Ok(());
+                }
+            }
+        }
+        self.stamp_and_send(id, bytes)
+    }
+
+    /// Stamp the per-stream seq (recovery), buffer for replay, and write
+    /// to the wire. `bytes` must already carry the stream id.
+    fn stamp_and_send(&mut self, id: u32, mut bytes: Vec<u8>) -> Result<()> {
         let sequenced = self.recovery.is_some()
             && id != CONTROL_STREAM_ID
             && MsgType::from_u8(bytes[OFF_TYPE]).map(MsgType::sequenced).unwrap_or(false);
@@ -246,6 +404,62 @@ impl<T: Transport> Inner<T> {
             }
             Err(e) => Err(e),
         }
+    }
+
+    /// Does `id` still have frames queued behind the fragment scheduler?
+    fn has_pending(&self, id: u32) -> bool {
+        self.streams.get(&id).is_some_and(|s| !s.pending_out.is_empty())
+    }
+
+    /// Put ONE queued frame on the wire — from the stream at the front of
+    /// the round-robin order — then rotate, so concurrent elephants on
+    /// different streams alternate fragment-by-fragment. When the replay
+    /// buffer is at capacity the inbound link is pumped instead (acks
+    /// trim it); `Blocked` means even that found nothing to read yet.
+    fn flush_step(&mut self) -> Result<Flush> {
+        let Some(&id) = self.outbox.front() else { return Ok(Flush::Idle) };
+        if let Some(policy) = self.recovery {
+            let front_sequenced = self
+                .streams
+                .get(&id)
+                .and_then(|s| s.pending_out.front())
+                .and_then(|b| b.get(OFF_TYPE))
+                .and_then(|&t| MsgType::from_u8(t).ok())
+                .is_some_and(MsgType::sequenced);
+            let replay_full =
+                self.streams.get(&id).is_some_and(|s| s.replay.len() >= policy.replay_cap);
+            if front_sequenced && replay_full {
+                return match self.pump_one() {
+                    // an ack may have trimmed the replay buffer; even a
+                    // data frame for another stream is forward progress
+                    Ok(_) => Ok(Flush::Progress),
+                    Err(e) if TransportError::of(&e) == Some(TransportError::WouldBlock) => {
+                        Ok(Flush::Blocked)
+                    }
+                    Err(e) if is_connection_failure(&e) => {
+                        self.dead = Some(e.to_string());
+                        self.recover().map_err(|re| {
+                            anyhow!("mux connection failed: {e} (recovery failed: {re})")
+                        })?;
+                        Ok(Flush::Progress)
+                    }
+                    Err(e) => Err(e),
+                };
+            }
+        }
+        let frame = {
+            let st = self
+                .streams
+                .get_mut(&id)
+                .ok_or_else(|| anyhow!("queued frames for unregistered stream {id}"))?;
+            st.pending_out.pop_front().ok_or_else(|| anyhow!("outbox names a drained stream"))?
+        };
+        self.outbox.pop_front();
+        if self.has_pending(id) {
+            self.outbox.push_back(id);
+        }
+        self.stamp_and_send(id, frame)?;
+        Ok(Flush::Progress)
     }
 
     /// Send a cumulative ack for `id` (`nack` solicits retransmission).
@@ -590,6 +804,12 @@ impl<T: Transport> Inner<T> {
                 }
                 Ok(MuxEvent::Closed(id))
             }
+            MsgType::Fragment => {
+                let Message::Fragment(part) = frame.message else {
+                    bail!("msg_type/message mismatch");
+                };
+                self.on_fragment(id, part, bytes, counted)
+            }
             _ => {
                 let st = self.streams.get_mut(&id).ok_or_else(|| {
                     anyhow!("frame for unknown stream {id} (no OpenStream seen)")
@@ -604,6 +824,148 @@ impl<T: Transport> Inner<T> {
                 Ok(MuxEvent::Data(id))
             }
         }
+    }
+
+    /// Absorb one inbound fragment. Completion re-enters `dispatch` with
+    /// the reassembled frame (bytes already counted per fragment); any
+    /// envelope violation fails the ONE stream via `frag_fail`.
+    fn on_fragment(&mut self, id: u32, part: FragPart, bytes: u64, counted: bool) -> Result<MuxEvent> {
+        let cap = self.frag.map(|p| p.reasm_cap).unwrap_or(DEFAULT_REASM_CAP);
+        {
+            let st = self
+                .streams
+                .get_mut(&id)
+                .ok_or_else(|| anyhow!("fragment for unknown stream {id} (no OpenStream seen)"))?;
+            if !counted {
+                st.stats.frames_recv += 1;
+                st.stats.bytes_recv += bytes;
+            }
+            if st.frag_fault.is_some() || st.discard {
+                // already failed/refused: drop (accounted above)
+                return Ok(MuxEvent::Fragment(id));
+            }
+        }
+        match self.absorb_fragment(id, part, cap) {
+            Ok(None) => Ok(MuxEvent::Fragment(id)),
+            Ok(Some(inner)) => self.dispatch(inner, 0, true),
+            Err(fault) => self.frag_fail(id, fault),
+        }
+    }
+
+    /// The reassembly state machine: strictly in-order fragments (the
+    /// recovery gate — or a FIFO link — guarantees arrival order), each
+    /// chunk appended once at its final offset. `Some(frame)` = message
+    /// complete and decoded; the inner frame's own CRC re-checks the
+    /// whole reassembly end to end.
+    fn absorb_fragment(
+        &mut self,
+        id: u32,
+        part: FragPart,
+        cap: usize,
+    ) -> std::result::Result<Option<Frame>, FragFault> {
+        let (msg_id, num_frag, frag_ndx, data) = match part {
+            FragPart::Piece { msg_id, num_frag, frag_ndx, data } => {
+                (msg_id, num_frag, frag_ndx, data)
+            }
+            FragPart::Invalid { reason, .. } => return Err(FragFault::Protocol(reason)),
+        };
+        if num_frag == 0 {
+            return Err(FragFault::Protocol("fragment with num_frag = 0".into()));
+        }
+        if frag_ndx >= num_frag {
+            return Err(FragFault::Protocol(format!(
+                "frag_ndx {frag_ndx} >= num_frag {num_frag} (msg {msg_id})"
+            )));
+        }
+        let st = self.streams.get_mut(&id).expect("caller checked");
+        let mut r = match st.reasm.take() {
+            None => {
+                if frag_ndx != 0 {
+                    return Err(FragFault::Protocol(format!(
+                        "fragment {frag_ndx}/{num_frag} of msg {msg_id} without a start"
+                    )));
+                }
+                Reassembly { msg_id, num_frag, next_ndx: 0, buf: Vec::new() }
+            }
+            Some(r) => {
+                if r.msg_id != msg_id {
+                    return Err(FragFault::Protocol(format!(
+                        "fragment of msg {msg_id} while msg {} is incomplete",
+                        r.msg_id
+                    )));
+                }
+                if r.num_frag != num_frag {
+                    return Err(FragFault::Protocol(format!(
+                        "conflicting num_frag for msg {msg_id}: {} then {num_frag}",
+                        r.num_frag
+                    )));
+                }
+                if frag_ndx < r.next_ndx {
+                    return Err(FragFault::Protocol(format!(
+                        "duplicate fragment {frag_ndx} of msg {msg_id}"
+                    )));
+                }
+                if frag_ndx > r.next_ndx {
+                    return Err(FragFault::Protocol(format!(
+                        "fragment gap on msg {msg_id}: got {frag_ndx}, expected {}",
+                        r.next_ndx
+                    )));
+                }
+                r
+            }
+        };
+        let needed = r.buf.len() + data.len();
+        if needed > cap {
+            return Err(FragFault::ReassemblyOverflow { needed, cap });
+        }
+        if r.next_ndx == 0 {
+            // size hint from the first chunk, clamped so a hostile
+            // num_frag cannot pre-allocate past the cap
+            r.buf.reserve(data.len().saturating_mul(num_frag as usize).min(cap));
+        }
+        r.buf.extend_from_slice(&data);
+        r.next_ndx += 1;
+        if r.next_ndx < r.num_frag {
+            st.reasm = Some(r);
+            return Ok(None);
+        }
+        let (frame, used) = Frame::decode(&r.buf)
+            .map_err(|e| FragFault::Protocol(format!("reassembled frame invalid: {e}")))?;
+        if used != r.buf.len() {
+            return Err(FragFault::Protocol(format!(
+                "reassembled frame leaves {} trailing bytes",
+                r.buf.len() - used
+            )));
+        }
+        if frame.stream_id != id {
+            return Err(FragFault::Protocol(format!(
+                "reassembled frame names stream {}, arrived on {id}",
+                frame.stream_id
+            )));
+        }
+        match frame.message.msg_type() {
+            MsgType::Activations | MsgType::Gradients | MsgType::EvalResult | MsgType::Control => {
+                Ok(Some(frame))
+            }
+            other => Err(FragFault::Protocol(format!("frame type {other:?} may not be fragmented"))),
+        }
+    }
+
+    /// Fail ONE stream on a fragmentation fault: reassembly state and
+    /// inbox dropped, further inbound discarded (still accounted), the
+    /// peer told via `CloseStream`. The connection and its other streams
+    /// survive; the fault is latched for `recv` / `stream_frag_fault`.
+    fn frag_fail(&mut self, id: u32, fault: FragFault) -> Result<MuxEvent> {
+        let st = self
+            .streams
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("fragment fault on unregistered stream {id}"))?;
+        st.reasm = None;
+        st.frag_fault = Some(fault);
+        st.discard = true;
+        st.inbox.clear();
+        self.stamp_and_send(id, Frame::on_stream(id, 0, Message::CloseStream).encode())?;
+        Ok(MuxEvent::StreamError(id))
     }
 }
 
@@ -622,6 +984,13 @@ pub enum MuxEvent {
     /// Recovery-plane housekeeping (ack/resume processed, duplicate or
     /// gap-ahead frame discarded); no caller action needed.
     Recovery(u32),
+    /// A fragment was absorbed into this stream's reassembly buffer; the
+    /// completed message arrives as a later `Data` event.
+    Fragment(u32),
+    /// A fragmentation fault failed this ONE stream (closed and
+    /// accounted; `Mux::stream_frag_fault` says why). The connection and
+    /// its other streams survive.
+    StreamError(u32),
 }
 
 /// One multiplexed physical connection.
@@ -656,6 +1025,8 @@ impl<T: Transport> Mux<T> {
                 goaway: None,
                 dead: None,
                 recovery: None,
+                frag: None,
+                outbox: VecDeque::new(),
                 reconnect: None,
                 conn_epoch: 0,
                 conn_recovery: RecoveryCounts::default(),
@@ -672,6 +1043,21 @@ impl<T: Transport> Mux<T> {
     /// side without recovery is a protocol violation.
     pub fn enable_recovery(&self, policy: RecoveryPolicy) {
         self.lock().recovery = Some(policy);
+    }
+
+    /// Turn on send-side fragmentation: outbound data frames larger than
+    /// `policy.max_frame_size` are split into `Fragment` frames and
+    /// interleaved round-robin across streams. One-sided is fine —
+    /// reassembly of inbound fragments is always on.
+    pub fn enable_fragmentation(&self, policy: FragPolicy) -> Result<()> {
+        policy.validate()?;
+        self.lock().frag = Some(policy);
+        Ok(())
+    }
+
+    /// Why the fragmentation layer failed a stream, if it did.
+    pub fn stream_frag_fault(&self, id: u32) -> Option<FragFault> {
+        self.lock().streams.get(&id).and_then(|s| s.frag_fault.clone())
     }
 
     /// How to re-establish a dead physical connection: return a fresh
@@ -879,6 +1265,62 @@ pub struct MuxStream<T: Transport> {
     id: u32,
 }
 
+/// Enqueue `bytes` on `id` and drain that stream's queue, releasing the
+/// connection lock between bounded flush bursts — this gap is what lets
+/// another thread's small frame on another stream reach the wire between
+/// an elephant's fragments instead of waiting out the whole message.
+fn send_and_flush<T: Transport>(
+    inner: &Arc<Mutex<Inner<T>>>,
+    id: u32,
+    bytes: Vec<u8>,
+) -> Result<()> {
+    let lock = || inner.lock().unwrap_or_else(|p| p.into_inner());
+    let (burst, timeout_ms) = {
+        let mut g = lock();
+        g.send_on(id, bytes)?;
+        if !g.has_pending(id) {
+            return Ok(()); // direct path: nothing queued
+        }
+        (
+            g.frag.map(|p| p.burst.max(1)).unwrap_or(1),
+            g.recovery.map(|p| p.poll_timeout_ms).unwrap_or(10_000),
+        )
+    };
+    let mut deadline: Option<Instant> = None;
+    loop {
+        let mut g = lock();
+        let mut blocked = false;
+        for _ in 0..burst {
+            match g.flush_step()? {
+                Flush::Idle => break,
+                Flush::Progress => {}
+                Flush::Blocked => {
+                    blocked = true;
+                    break;
+                }
+            }
+        }
+        if !g.has_pending(id) {
+            return Ok(());
+        }
+        drop(g);
+        if blocked {
+            let dl = *deadline
+                .get_or_insert_with(|| Instant::now() + Duration::from_millis(timeout_ms));
+            if Instant::now() > dl {
+                bail!(
+                    "stream {id}: fragment flush made no progress within {timeout_ms} ms \
+                     (replay buffer full, peer not acking)"
+                );
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        } else {
+            deadline = None;
+            std::thread::yield_now();
+        }
+    }
+}
+
 impl<T: Transport> MuxStream<T> {
     pub fn id(&self) -> u32 {
         self.id
@@ -888,17 +1330,17 @@ impl<T: Transport> MuxStream<T> {
         self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
     }
 
-    /// Half-close: tell the peer this session is done sending.
+    /// Half-close: tell the peer this session is done sending (queued
+    /// behind any in-flight fragments of this stream).
     pub fn close(&mut self) -> Result<()> {
         let id = self.id;
-        self.lock().send_on(id, Frame::on_stream(id, 0, Message::CloseStream).encode())
+        send_and_flush(&self.inner, id, Frame::on_stream(id, 0, Message::CloseStream).encode())
     }
 }
 
 impl<T: Transport> Transport for MuxStream<T> {
     fn send_encoded(&mut self, bytes: Vec<u8>) -> Result<()> {
-        let id = self.id;
-        self.lock().send_on(id, bytes)
+        send_and_flush(&self.inner, self.id, bytes)
     }
 
     fn recv(&mut self) -> Result<Frame> {
@@ -919,6 +1361,11 @@ impl<T: Transport> Transport for MuxStream<T> {
                 .streams
                 .get_mut(&self.id)
                 .ok_or_else(|| anyhow!("recv on unregistered stream {}", self.id))?;
+            if let Some(fault) = &st.frag_fault {
+                let fault = fault.clone();
+                return Err(anyhow::Error::new(fault)
+                    .context(format!("stream {} failed and was closed", self.id)));
+            }
             if let Some(frame) = st.inbox.pop_front() {
                 return Ok(frame);
             }
@@ -1306,5 +1753,307 @@ mod tests {
         assert_eq!(sm.next_event().unwrap(), MuxEvent::Data(1));
         let mut t = sm.accept_stream(1).unwrap();
         assert!(matches!(t.recv().unwrap().message, Message::Activations { step: 5, .. }));
+    }
+
+    // --- fragmentation layer ------------------------------------------------
+
+    /// A frame whose encoding (~550 B) far exceeds the small
+    /// `max_frame_size` the fragmentation tests use.
+    fn big(step: u64) -> Message {
+        Message::Activations { step, payload: Payload::dense(4, 32, vec![9; 512]) }
+    }
+
+    #[test]
+    fn frag_policy_validates_bounds() {
+        assert!(FragPolicy::default().validate().is_ok());
+        assert!(FragPolicy::with_max_frame_size(crate::wire::MIN_FRAME_SIZE).validate().is_ok());
+        let e = FragPolicy::with_max_frame_size(crate::wire::MIN_FRAME_SIZE - 1)
+            .validate()
+            .unwrap_err();
+        assert!(e.to_string().contains("max_frame_size"), "{e}");
+        let e = FragPolicy { max_frame_size: 1024, reasm_cap: 512, burst: 1 }
+            .validate()
+            .unwrap_err();
+        assert!(e.to_string().contains("reasm_cap"), "{e}");
+        let e = FragPolicy { burst: 0, ..FragPolicy::default() }.validate().unwrap_err();
+        assert!(e.to_string().contains("burst"), "{e}");
+        let (cm, _sm) = mux_pair();
+        assert!(cm.enable_fragmentation(FragPolicy { burst: 0, ..FragPolicy::default() }).is_err());
+    }
+
+    #[test]
+    fn fragmented_send_reassembles_bit_identical_with_exact_accounting() {
+        let (cm, sm) = mux_pair();
+        cm.enable_fragmentation(FragPolicy::with_max_frame_size(64)).unwrap();
+        let mut s = cm.open_stream().unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
+        let mut t = sm.accept_stream(1).unwrap();
+        let open_bytes = cm.stream_stats(1).unwrap().bytes_sent;
+        let f = Frame::on_stream(1, 0, big(42));
+        let inner_len = f.encode().len();
+        assert!(inner_len > 64, "test frame must actually fragment");
+        s.send(&f).unwrap();
+        let got = t.recv().unwrap();
+        assert_eq!(got.message, f.message, "reassembly must be bit-identical");
+        // wire bytes are exactly the inner frame plus one (header +
+        // envelope) per fragment — no hidden padding, no lost bytes
+        let nfrag = crate::wire::fragment_count(inner_len, 64) as u64;
+        assert!(nfrag > 1);
+        let overhead = nfrag * (HEADER_BYTES + crate::wire::FRAG_ENVELOPE_BYTES) as u64;
+        let sent = cm.stream_stats(1).unwrap().bytes_sent - open_bytes;
+        assert_eq!(sent, inner_len as u64 + overhead);
+        // per-stream attribution still sums to physical on both ends
+        assert_eq!(cm.stream_stats(1).unwrap().bytes_sent, cm.physical_stats().bytes_sent);
+        assert_eq!(sm.stream_stats(1).unwrap().bytes_recv, sm.physical_stats().bytes_recv);
+        assert_eq!(cm.physical_stats().bytes_sent, sm.physical_stats().bytes_recv);
+    }
+
+    #[test]
+    fn small_frames_ride_whole_even_with_fragmentation_on() {
+        let (cm, sm) = mux_pair();
+        cm.enable_fragmentation(FragPolicy::with_max_frame_size(4096)).unwrap();
+        let mut s = cm.open_stream().unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
+        let mut t = sm.accept_stream(1).unwrap();
+        let f = Frame::on_stream(1, 0, data(7));
+        let n = f.encode().len() as u64;
+        let before = cm.stream_stats(1).unwrap().bytes_sent;
+        s.send(&f).unwrap();
+        assert_eq!(cm.stream_stats(1).unwrap().bytes_sent - before, n, "no envelope overhead");
+        assert_eq!(t.recv().unwrap().message, f.message);
+    }
+
+    #[test]
+    fn fragments_interleave_round_robin_across_streams() {
+        // enqueue two elephants on different streams, then watch the raw
+        // wire: their fragments must alternate, not ship message-by-message
+        let net = SimNet::with_defaults();
+        let (a, mut raw) = net.pair();
+        let cm = Mux::initiator(a);
+        cm.enable_fragmentation(FragPolicy { max_frame_size: 64, reasm_cap: 1 << 20, burst: 1 })
+            .unwrap();
+        let _s1 = cm.open_stream().unwrap();
+        let _s3 = cm.open_stream().unwrap();
+        {
+            let mut g = cm.inner.lock().unwrap();
+            g.send_on(1, Frame::on_stream(1, 0, big(1)).encode()).unwrap();
+            g.send_on(3, Frame::on_stream(3, 0, big(3)).encode()).unwrap();
+            loop {
+                match g.flush_step().unwrap() {
+                    Flush::Idle => break,
+                    Flush::Progress => {}
+                    Flush::Blocked => panic!("no recovery layer, cannot block"),
+                }
+            }
+        }
+        let mut frag_order = Vec::new();
+        loop {
+            match raw.recv() {
+                Ok(f) => {
+                    if f.message.msg_type() == MsgType::Fragment {
+                        frag_order.push(f.stream_id);
+                    }
+                }
+                Err(_) => break, // link drained
+            }
+        }
+        assert!(frag_order.len() >= 10, "expected many fragments, got {frag_order:?}");
+        for pair in frag_order.chunks(2) {
+            if let [x, y] = pair {
+                assert_ne!(x, y, "fragments did not alternate: {frag_order:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn own_small_frame_queues_behind_own_fragments_in_fifo_order() {
+        let (cm, sm) = mux_pair();
+        cm.enable_fragmentation(FragPolicy::with_max_frame_size(64)).unwrap();
+        let mut s = cm.open_stream().unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
+        let mut t = sm.accept_stream(1).unwrap();
+        // enqueue a big frame WITHOUT flushing, then a small one; the
+        // small frame must not overtake the big one's fragments
+        {
+            let mut g = cm.inner.lock().unwrap();
+            g.send_on(1, Frame::on_stream(1, 0, big(1)).encode()).unwrap();
+            g.send_on(1, Frame::on_stream(1, 0, data(2)).encode()).unwrap();
+            loop {
+                match g.flush_step().unwrap() {
+                    Flush::Idle => break,
+                    _ => {}
+                }
+            }
+        }
+        let a = t.recv().unwrap();
+        let b = t.recv().unwrap();
+        assert_eq!(a.message, big(1), "big message first");
+        assert_eq!(b.message, data(2), "small message after");
+    }
+
+    #[test]
+    fn bad_fragment_envelope_fails_one_stream_not_the_connection() {
+        let net = SimNet::with_defaults();
+        let (mut raw, b) = net.pair();
+        let sm = Mux::acceptor(b);
+        raw.send(&Frame::on_stream(1, 0, Message::OpenStream { spec: OpenSpec::None })).unwrap();
+        raw.send(&Frame::on_stream(3, 0, Message::OpenStream { spec: OpenSpec::None })).unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(3));
+        let mut t1 = sm.accept_stream(1).unwrap();
+        let mut t3 = sm.accept_stream(3).unwrap();
+        raw.send(&Frame::on_stream(
+            1,
+            0,
+            Message::Fragment(FragPart::Piece {
+                msg_id: 1,
+                num_frag: 2,
+                frag_ndx: 5, // >= num_frag: protocol fault
+                data: vec![1, 2, 3],
+            }),
+        ))
+        .unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::StreamError(1));
+        let err = t1.recv().unwrap_err();
+        let fault = err.downcast_ref::<FragFault>().expect("typed FragFault on recv");
+        assert!(matches!(fault, FragFault::Protocol(_)), "{fault:?}");
+        assert_eq!(sm.stream_frag_fault(1), Some(fault.clone()));
+        // the peer was told: a CloseStream for stream 1 went out
+        let f = raw.recv().unwrap();
+        assert_eq!((f.stream_id, f.message), (1, Message::CloseStream));
+        // the fault is stream-local: stream 3 still works
+        raw.send(&Frame::on_stream(3, 0, data(7))).unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Data(3));
+        assert!(matches!(t3.recv().unwrap().message, Message::Activations { step: 7, .. }));
+        // later fragments for the failed stream are dropped but accounted
+        let recv_before = sm.stream_stats(1).unwrap().bytes_recv;
+        raw.send(&Frame::on_stream(
+            1,
+            0,
+            Message::Fragment(FragPart::Piece { msg_id: 2, num_frag: 2, frag_ndx: 0, data: vec![0] }),
+        ))
+        .unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Fragment(1));
+        assert!(sm.stream_stats(1).unwrap().bytes_recv > recv_before);
+    }
+
+    #[test]
+    fn reassembly_overflow_is_typed_and_stream_local() {
+        let (cm, sm) = mux_pair();
+        cm.enable_fragmentation(FragPolicy::with_max_frame_size(64)).unwrap();
+        // receiver caps reassembly below the ~550 B message
+        sm.enable_fragmentation(FragPolicy { max_frame_size: 64, reasm_cap: 64, burst: 1 })
+            .unwrap();
+        let mut s = cm.open_stream().unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
+        let mut t = sm.accept_stream(1).unwrap();
+        s.send(&Frame::on_stream(1, 0, big(1))).unwrap();
+        let err = t.recv().unwrap_err();
+        match err.downcast_ref::<FragFault>() {
+            Some(FragFault::ReassemblyOverflow { cap, needed }) => {
+                assert_eq!(*cap, 64);
+                assert!(*needed > 64);
+            }
+            other => panic!("expected ReassemblyOverflow, got {other:?}: {err:#}"),
+        }
+    }
+
+    #[test]
+    fn lossy_link_delivers_fragmented_messages_exactly_once() {
+        let plan = FaultPlan {
+            seed: 977,
+            drop: 0.1,
+            duplicate: 0.08,
+            reorder: 0.08,
+            corrupt: 0.05,
+            truncate: 0.04,
+            ..FaultPlan::default()
+        };
+        let (net, cm, sm) = recovering_pair(plan);
+        cm.enable_fragmentation(FragPolicy::with_max_frame_size(64)).unwrap();
+        sm.enable_fragmentation(FragPolicy::with_max_frame_size(64)).unwrap();
+        let n = 12u64;
+        let server = std::thread::spawn(move || {
+            let id = loop {
+                match sm.next_event().unwrap() {
+                    MuxEvent::Opened(id) => break id,
+                    MuxEvent::Recovery(_) | MuxEvent::Fragment(_) => continue,
+                    other => panic!("unexpected {other:?}"),
+                }
+            };
+            let mut t = sm.accept_stream(id).unwrap();
+            let mut steps = Vec::new();
+            for _ in 0..n {
+                let f = t.recv().unwrap();
+                let Message::Activations { step, payload } = f.message else {
+                    panic!("unexpected {:?}", f.message.msg_type());
+                };
+                assert_eq!(Message::Activations { step, payload }, big(step), "payload intact");
+                steps.push(step);
+                t.send(&Frame::new(0, big(step + 1000))).unwrap();
+            }
+            steps
+        });
+        let mut s = cm.open_stream().unwrap();
+        for i in 0..n {
+            s.send(&Frame::new(0, big(i))).unwrap();
+            let f = s.recv().unwrap();
+            let Message::Activations { step, .. } = f.message else {
+                panic!("unexpected {:?}", f.message.msg_type());
+            };
+            assert_eq!(step, i + 1000);
+        }
+        let steps = server.join().unwrap();
+        assert_eq!(steps, (0..n).collect::<Vec<_>>());
+        assert!(net.fault_totals().total() > 0, "plan injected nothing");
+    }
+
+    #[test]
+    fn mid_message_disconnect_resumes_without_restarting_the_message() {
+        // fragments are ordinary sequenced frames: after a hard kill the
+        // resume handshake replays only the unacked tail, and the
+        // receiver's half-built reassembly completes — the message is
+        // NOT re-sent from fragment 0
+        let (net, cm, sm) = recovering_pair(FaultPlan::none());
+        cm.enable_fragmentation(FragPolicy::with_max_frame_size(64)).unwrap();
+        sm.enable_fragmentation(FragPolicy::with_max_frame_size(64)).unwrap();
+        let mut s = cm.open_stream().unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
+        let mut t = sm.accept_stream(1).unwrap();
+        // deliver half the fragments, then kill the link
+        {
+            let mut g = cm.inner.lock().unwrap();
+            g.send_on(1, Frame::on_stream(1, 0, big(5)).encode()).unwrap();
+            for _ in 0..4 {
+                assert!(matches!(g.flush_step().unwrap(), Flush::Progress));
+            }
+        }
+        for _ in 0..4 {
+            assert!(matches!(
+                sm.next_event().unwrap(),
+                MuxEvent::Fragment(1) | MuxEvent::Recovery(1)
+            ));
+        }
+        net.kill();
+        // flush the rest: the first write detects the death, reconnects,
+        // resumes (replaying lost fragments), and carries on
+        let server = std::thread::spawn(move || {
+            let f = t.recv().unwrap();
+            t.send(&Frame::new(0, data(9))).unwrap();
+            f.message
+        });
+        {
+            let mut g = cm.inner.lock().unwrap();
+            loop {
+                match g.flush_step().unwrap() {
+                    Flush::Idle => break,
+                    _ => {}
+                }
+            }
+        }
+        let reply = s.recv().unwrap();
+        assert!(matches!(reply.message, Message::Activations { step: 9, .. }));
+        assert_eq!(server.join().unwrap(), big(5), "message completed across the disconnect");
+        assert!(cm.recovery_counts().reconnects >= 1);
     }
 }

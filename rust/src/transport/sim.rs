@@ -28,7 +28,7 @@
 //! an empty queue parks on a condvar until the peer sends, the link
 //! breaks, or the timeout declares a real deadlock.
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
@@ -104,6 +104,33 @@ enum Fate {
     Truncate,
 }
 
+/// A directed fault for [`SimNet::script_fault`]: the same fates a
+/// `FaultPlan` draws at random, but aimed at one specific frame — the
+/// fragmentation chaos tests use this to hit exactly the Nth fragment
+/// of a message (a *middle* fragment, not whichever one the dice pick).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScriptedFault {
+    Disconnect,
+    Drop,
+    Duplicate,
+    Reorder,
+    Corrupt,
+    Truncate,
+}
+
+impl ScriptedFault {
+    fn fate(self) -> Fate {
+        match self {
+            ScriptedFault::Disconnect => Fate::Disconnect,
+            ScriptedFault::Drop => Fate::Drop,
+            ScriptedFault::Duplicate => Fate::Duplicate,
+            ScriptedFault::Reorder => Fate::Reorder,
+            ScriptedFault::Corrupt => Fate::Corrupt,
+            ScriptedFault::Truncate => Fate::Truncate,
+        }
+    }
+}
+
 struct Shared {
     model: LinkModel,
     plan: FaultPlan,
@@ -126,6 +153,11 @@ struct Shared {
     /// are deterministic in count and order per direction — and replays
     /// exactly from the seed regardless of recovery timing
     seen: [HashSet<u64>; 2],
+    /// per-side count of faultable first transmissions so far — the index
+    /// space `scripted` faults are addressed in
+    data_sent: [u64; 2],
+    /// directed faults: first-transmission index -> fate, consumed once
+    scripted: [HashMap<u64, Fate>; 2],
 }
 
 /// Walk the cumulative fate thresholds with one uniform draw.
@@ -202,6 +234,8 @@ impl SimNet {
                 broken: false,
                 faults_enabled: true,
                 seen: [HashSet::new(), HashSet::new()],
+                data_sent: [0, 0],
+                scripted: [HashMap::new(), HashMap::new()],
             })),
             ready: Arc::new(Condvar::new()),
         }
@@ -245,6 +279,25 @@ impl SimNet {
     /// Is the link currently hard-disconnected?
     pub fn is_broken(&self) -> bool {
         self.lock().broken
+    }
+
+    /// Script a directed fault: the `ndx`-th (0-based) faultable
+    /// first-transmission frame `side` sends suffers `fault` instead of
+    /// whatever the plan would have drawn for it. The index space counts
+    /// only faultable frames (recovery-plane frames and retransmissions
+    /// are invisible to it), so with a clean plan index N is exactly the
+    /// Nth data/fragment frame a side sends — which lets a test aim at a
+    /// *middle* fragment of a known message. Scripted faults fire even on
+    /// an otherwise clean plan; each fires once.
+    pub fn script_fault(&self, side: usize, ndx: u64, fault: ScriptedFault) {
+        self.lock().scripted[side].insert(ndx, fault.fate());
+    }
+
+    /// How many faultable first-transmission frames `side` has sent —
+    /// the next scripted-fault index. Tests use it to locate the frames
+    /// of a message they are about to send.
+    pub fn data_frames_sent(&self, side: usize) -> u64 {
+        self.lock().data_sent[side]
     }
 
     /// Toggle fault injection (the plan stays armed). The chaos harness
@@ -341,10 +394,7 @@ impl Transport for SimLink {
         // deterministic program order, whether or not the link happens to
         // be broken at that instant (which IS timing-dependent under
         // threading) — this is what makes a schedule replay exactly.
-        let (fate, aux1, aux2) = if !s.faults_enabled
-            || s.plan.is_clean()
-            || fault_exempt(&bytes)
-        {
+        let (fate, aux1, aux2) = if !s.faults_enabled || fault_exempt(&bytes) {
             (Fate::Deliver, 0, 0)
         } else {
             // a (stream, seq) this side already sent is a retransmit:
@@ -354,7 +404,21 @@ impl Transport for SimLink {
             if retransmit {
                 (Fate::Deliver, 0, 0)
             } else {
-                s.draw_fate(self.side)
+                // one schedule slot per faultable first transmission: a
+                // clean plan consumes the index without touching the RNG
+                // (stream alignment for seeded plans is unchanged), and a
+                // scripted fault for this index overrides the drawn fate
+                let ndx = s.data_sent[self.side];
+                s.data_sent[self.side] += 1;
+                let drawn = if s.plan.is_clean() {
+                    (Fate::Deliver, 0, 0)
+                } else {
+                    s.draw_fate(self.side)
+                };
+                match s.scripted[self.side].remove(&ndx) {
+                    Some(f) => (f, drawn.1, drawn.2),
+                    None => drawn,
+                }
             }
         };
         if s.broken {
@@ -704,6 +768,64 @@ mod tests {
         let first = run();
         assert_eq!(first, run());
         assert!(first.total() > 0, "{first:?}");
+    }
+
+    #[test]
+    fn scripted_fault_hits_exactly_the_chosen_frame() {
+        // clean plan: only the scripted index is harmed
+        let net = SimNet::with_defaults();
+        let (mut a, mut b) = net.pair();
+        net.script_fault(0, 2, ScriptedFault::Drop);
+        for i in 1..=5 {
+            a.send(&frame(i)).unwrap();
+        }
+        assert_eq!(net.data_frames_sent(0), 5);
+        let got: Vec<u32> = (0..4).map(|_| b.recv().unwrap().seq).collect();
+        assert_eq!(got, vec![1, 2, 4, 5], "frame index 2 (seq 3) was dropped");
+        assert_eq!(a.stats().faults.dropped, 1);
+        assert_eq!(net.fault_totals().dropped, 1);
+    }
+
+    #[test]
+    fn scripted_fault_ignores_retransmissions_and_exempt_frames() {
+        let net = SimNet::with_defaults();
+        let (mut a, mut b) = net.pair();
+        net.script_fault(0, 1, ScriptedFault::Duplicate);
+        // exempt frame: does not consume index 0
+        a.send(&Frame::new(0, Message::Ack { cum_seq: 1, nack: false })).unwrap();
+        a.send(&frame(1)).unwrap(); // index 0
+        a.send(&frame(1)).unwrap(); // retransmission: no index
+        a.send(&frame(2)).unwrap(); // index 1 -> duplicated
+        assert!(matches!(b.recv().unwrap().message, Message::Ack { .. }));
+        assert_eq!(b.recv().unwrap().seq, 1);
+        assert_eq!(b.recv().unwrap().seq, 1);
+        assert_eq!(b.recv().unwrap().seq, 2);
+        assert_eq!(b.recv().unwrap().seq, 2);
+        assert_eq!(a.stats().faults.duplicated, 1);
+    }
+
+    #[test]
+    fn scripted_fault_overrides_the_drawn_fate_without_shifting_the_schedule() {
+        let plan = FaultPlan { seed: 42, drop: 0.3, ..FaultPlan::default() };
+        let send_many = |net: &SimNet| {
+            let (mut a, _b) = net.pair();
+            for i in 0..50 {
+                a.send(&frame(i + 1)).unwrap();
+            }
+            a.stats().faults
+        };
+        let clean = send_many(&SimNet::with_faults(LinkModel::default(), plan));
+        let scripted_net = SimNet::with_faults(LinkModel::default(), plan);
+        scripted_net.script_fault(0, 7, ScriptedFault::Corrupt);
+        let scripted = send_many(&scripted_net);
+        // exactly one slot changed fate; every other draw is untouched
+        assert_eq!(clean.corrupted, 0);
+        assert_eq!(scripted.corrupted, 1, "clean {clean:?} scripted {scripted:?}");
+        assert!(
+            scripted.dropped == clean.dropped || scripted.dropped + 1 == clean.dropped,
+            "slot 7 was either a would-be drop or a would-be delivery: \
+             clean {clean:?} scripted {scripted:?}"
+        );
     }
 
     #[test]

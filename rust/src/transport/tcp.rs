@@ -10,17 +10,33 @@ use crate::wire::{Frame, HEADER_BYTES, OFF_LEN};
 
 use super::{LinkStats, Transport};
 
+/// Largest frame `recv` will allocate for before declaring the stream
+/// hostile or desynced. A fragmenting sender never exceeds its
+/// `max_frame_size`, so the default only has to clear unfragmented
+/// deployments; `set_max_recv_frame` tightens it to the negotiated limit.
+pub const DEFAULT_MAX_RECV_FRAME: usize = 1 << 30;
+
 pub struct TcpTransport {
     stream: TcpStream,
     stats: LinkStats,
     read_buf: Vec<u8>,
+    max_recv_frame: usize,
 }
 
 impl TcpTransport {
+    fn wrap(stream: TcpStream) -> Self {
+        TcpTransport {
+            stream,
+            stats: LinkStats::default(),
+            read_buf: Vec::new(),
+            max_recv_frame: DEFAULT_MAX_RECV_FRAME,
+        }
+    }
+
     pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<Self> {
         let stream = TcpStream::connect(&addr).with_context(|| format!("connect {addr:?}"))?;
         stream.set_nodelay(true)?;
-        Ok(TcpTransport { stream, stats: LinkStats::default(), read_buf: Vec::new() })
+        Ok(Self::wrap(stream))
     }
 
     /// Accept exactly one peer.
@@ -28,7 +44,7 @@ impl TcpTransport {
         let listener = TcpListener::bind(&addr).with_context(|| format!("bind {addr:?}"))?;
         let (stream, _) = listener.accept()?;
         stream.set_nodelay(true)?;
-        Ok(TcpTransport { stream, stats: LinkStats::default(), read_buf: Vec::new() })
+        Ok(Self::wrap(stream))
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
@@ -38,7 +54,15 @@ impl TcpTransport {
     /// Wrap an already-connected stream (e.g. from a listener's accept).
     pub fn from_stream(stream: TcpStream) -> Self {
         stream.set_nodelay(true).ok();
-        TcpTransport { stream, stats: LinkStats::default(), read_buf: Vec::new() }
+        Self::wrap(stream)
+    }
+
+    /// Cap the frame size `recv` accepts: a header naming a larger body is
+    /// rejected BEFORE the allocation, so a corrupt or hostile length
+    /// field cannot balloon memory. Pair with the connection's
+    /// `max_frame_size` when fragmentation is on.
+    pub fn set_max_recv_frame(&mut self, n: usize) {
+        self.max_recv_frame = n;
     }
 }
 
@@ -56,6 +80,13 @@ impl Transport for TcpTransport {
         self.stream.read_exact(&mut self.read_buf)?;
         let len =
             u32::from_le_bytes(self.read_buf[OFF_LEN..OFF_LEN + 4].try_into().unwrap()) as usize;
+        if HEADER_BYTES + len > self.max_recv_frame {
+            anyhow::bail!(
+                "frame of {} bytes exceeds the receive cap {} (desynced or hostile peer)",
+                HEADER_BYTES + len,
+                self.max_recv_frame
+            );
+        }
         self.read_buf.resize(HEADER_BYTES + len, 0);
         self.stream.read_exact(&mut self.read_buf[HEADER_BYTES..])?;
         let (frame, consumed) = Frame::decode(&self.read_buf)?;
@@ -82,8 +113,7 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let server = std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
-            stream.set_nodelay(true).unwrap();
-            let mut t = TcpTransport { stream, stats: LinkStats::default(), read_buf: Vec::new() };
+            let mut t = TcpTransport::from_stream(stream);
             let f = t.recv().unwrap();
             t.send(&f).unwrap(); // echo
             t.stats()
@@ -102,5 +132,31 @@ mod tests {
         let server_stats = server.join().unwrap();
         assert_eq!(server_stats.bytes_recv, f.encode().len() as u64);
         assert_eq!(client.stats().bytes_sent, client.stats().bytes_recv);
+    }
+
+    #[test]
+    fn recv_rejects_frames_over_the_cap_before_allocating() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::from_stream(stream);
+            let f = Frame::new(
+                1,
+                Message::Activations {
+                    step: 0,
+                    payload: Payload::sparse(1, 64, 3, true, vec![7; 200]),
+                },
+            );
+            t.send(&f).unwrap();
+        });
+        let mut client = TcpTransport::connect(addr).unwrap();
+        client.set_max_recv_frame(64); // frame is well over 64 bytes
+        let err = client.recv().unwrap_err();
+        assert!(
+            err.to_string().contains("exceeds the receive cap"),
+            "unexpected error: {err:#}"
+        );
+        server.join().unwrap();
     }
 }

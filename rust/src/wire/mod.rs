@@ -75,6 +75,11 @@ pub enum MsgType {
     /// reconnect; the body carries the last-acked seq (+ the original
     /// codec spec so a shell can be rebuilt if the OpenStream was lost)
     ResumeStream = 9,
+    /// one slice of a frame larger than the connection's `max_frame_size`;
+    /// the body is the `{msg_id, num_frag, frag_ndx}` envelope followed by
+    /// a chunk of the original encoded frame (header included, so the
+    /// inner CRC re-checks the whole reassembly)
+    Fragment = 10,
 }
 
 impl MsgType {
@@ -89,6 +94,7 @@ impl MsgType {
             7 => MsgType::Goaway,
             8 => MsgType::Ack,
             9 => MsgType::ResumeStream,
+            10 => MsgType::Fragment,
             other => bail!("unknown message type {other}"),
         })
     }
@@ -136,6 +142,89 @@ impl OpenSpec {
     }
 }
 
+/// Fragment envelope size: msg_id u64 + num_frag u32 + frag_ndx u32
+/// (modeled on radhoc's `LinkFrag`). The chunk bytes follow.
+pub const FRAG_ENVELOPE_BYTES: usize = 8 + 4 + 4;
+
+/// Smallest legal `max_frame_size`: a fragment frame must fit the header,
+/// the envelope, and at least one byte of the inner frame.
+pub const MIN_FRAME_SIZE: usize = HEADER_BYTES + FRAG_ENVELOPE_BYTES + 1;
+
+/// What a `Fragment` body carried.
+///
+/// Envelope parse failures decode to `Invalid` instead of failing the
+/// frame, the same contract as `OpenSpec`: a malformed envelope must fail
+/// ONE stream, not kill the connection the other sessions share
+/// (`transport::mux` closes and accounts the offending stream).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FragPart {
+    /// `data` is `inner[frag_ndx-th chunk]` of the original encoded frame.
+    Piece { msg_id: u64, num_frag: u32, frag_ndx: u32, data: Vec<u8> },
+    /// Body shorter than the envelope; `raw` preserves the bytes so the
+    /// frame re-encodes losslessly.
+    Invalid { raw: Vec<u8>, reason: String },
+}
+
+impl FragPart {
+    fn decode(raw: &[u8]) -> FragPart {
+        if raw.len() < FRAG_ENVELOPE_BYTES {
+            return FragPart::Invalid {
+                raw: raw.to_vec(),
+                reason: format!(
+                    "truncated fragment envelope ({} bytes, need {FRAG_ENVELOPE_BYTES})",
+                    raw.len()
+                ),
+            };
+        }
+        let mut c = Cursor::new(raw);
+        let msg_id = c.u64().expect("length checked");
+        let num_frag = c.u32().expect("length checked");
+        let frag_ndx = c.u32().expect("length checked");
+        FragPart::Piece { msg_id, num_frag, frag_ndx, data: c.rest().to_vec() }
+    }
+}
+
+/// Number of fragments an `inner_len`-byte frame splits into under
+/// `max_frame_size` (for exact wire-byte accounting; the total overhead
+/// is `fragment_count * (HEADER_BYTES + FRAG_ENVELOPE_BYTES)`).
+pub fn fragment_count(inner_len: usize, max_frame_size: usize) -> usize {
+    let chunk = max_frame_size.saturating_sub(HEADER_BYTES + FRAG_ENVELOPE_BYTES).max(1);
+    inner_len.div_ceil(chunk).max(1)
+}
+
+/// Split an encoded frame into finished `Fragment` wire frames, each at
+/// most `max_frame_size` bytes on the wire. The chunks tile `inner`
+/// exactly; fragments are seq-0 (the mux seq-stamps them at flush time
+/// like any sequenced frame, so ack/replay/resume operate per fragment).
+pub fn fragment_frames(
+    stream_id: u32,
+    msg_id: u64,
+    inner: &[u8],
+    max_frame_size: usize,
+) -> Result<Vec<Vec<u8>>> {
+    if max_frame_size < MIN_FRAME_SIZE {
+        bail!(
+            "max_frame_size {max_frame_size} is below the minimum {MIN_FRAME_SIZE} \
+             (header {HEADER_BYTES} + fragment envelope {FRAG_ENVELOPE_BYTES} + 1)"
+        );
+    }
+    let chunk = max_frame_size - HEADER_BYTES - FRAG_ENVELOPE_BYTES;
+    let num = inner.len().div_ceil(chunk).max(1);
+    if num > u32::MAX as usize {
+        bail!("frame of {} bytes needs {num} fragments (> u32::MAX)", inner.len());
+    }
+    let mut out = Vec::with_capacity(num);
+    for (i, piece) in inner.chunks(chunk).enumerate() {
+        let mut fe = FrameEncoder::new(stream_id, 0, MsgType::Fragment);
+        fe.put_u64(msg_id);
+        fe.put_u32(num as u32);
+        fe.put_u32(i as u32);
+        fe.body().extend_from_slice(piece);
+        out.push(fe.finish());
+    }
+    Ok(out)
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Message {
     Activations { step: u64, payload: Payload },
@@ -162,6 +251,9 @@ pub enum Message {
     /// spec so a session shell can be rebuilt if the `OpenStream` itself
     /// was lost with the old connection.
     ResumeStream { last_acked: u32, want_reply: bool, spec: OpenSpec },
+    /// One slice of a frame that exceeded `max_frame_size`; reassembled
+    /// in order by the mux (`transport::mux`) into the original frame.
+    Fragment(FragPart),
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -185,6 +277,7 @@ impl Message {
             Message::Goaway { .. } => MsgType::Goaway,
             Message::Ack { .. } => MsgType::Ack,
             Message::ResumeStream { .. } => MsgType::ResumeStream,
+            Message::Fragment(_) => MsgType::Fragment,
         }
     }
 }
@@ -421,6 +514,15 @@ impl Message {
                     OpenSpec::Invalid { raw, .. } => out.extend_from_slice(raw),
                 }
             }
+            Message::Fragment(part) => match part {
+                FragPart::Piece { msg_id, num_frag, frag_ndx, data } => {
+                    put_u64(out, *msg_id);
+                    put_u32(out, *num_frag);
+                    put_u32(out, *frag_ndx);
+                    out.extend_from_slice(data);
+                }
+                FragPart::Invalid { raw, .. } => out.extend_from_slice(raw),
+            },
         }
     }
 
@@ -466,6 +568,7 @@ impl Message {
                 want_reply: c.u8()? != 0,
                 spec: OpenSpec::decode(c.rest()),
             },
+            MsgType::Fragment => Message::Fragment(FragPart::decode(c.rest())),
         };
         c.done()?;
         Ok(msg)
@@ -501,6 +604,10 @@ impl FrameEncoder {
 
     pub fn put_u64(&mut self, v: u64) {
         put_u64(&mut self.buf, v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        put_u32(&mut self.buf, v);
     }
 
     /// Backpatch length + CRC and return the finished wire bytes.
@@ -618,6 +725,18 @@ mod tests {
                 want_reply: false,
                 spec: OpenSpec::Spec(test_spec()),
             },
+            Message::Fragment(FragPart::Piece {
+                msg_id: 0xFEED_BEEF_u64,
+                num_frag: 3,
+                frag_ndx: 1,
+                data: vec![0xCD; 40],
+            }),
+            Message::Fragment(FragPart::Piece {
+                msg_id: 1,
+                num_frag: 1,
+                frag_ndx: 0,
+                data: Vec::new(),
+            }),
         ];
         for (i, m) in msgs.into_iter().enumerate() {
             let f = Frame::on_stream(i as u32 * 2 + 1, i as u32, m);
@@ -726,6 +845,7 @@ mod tests {
             MsgType::Control,
             MsgType::OpenStream,
             MsgType::CloseStream,
+            MsgType::Fragment,
         ] {
             assert!(ty.sequenced(), "{ty:?}");
         }
@@ -822,6 +942,66 @@ mod tests {
         // hand-craft: valid header, body = control shutdown + extra byte
         let out = hand_frame(MsgType::Control, 1, &[4u8, 0u8]);
         assert!(Frame::decode(&out).is_err());
+    }
+
+    #[test]
+    fn truncated_fragment_envelope_decodes_invalid_not_error() {
+        // 15 bytes: one short of the envelope
+        let body = vec![0u8; FRAG_ENVELOPE_BYTES - 1];
+        let frame = hand_frame(MsgType::Fragment, 3, &body);
+        let (back, _) = Frame::decode(&frame).unwrap();
+        let Message::Fragment(FragPart::Invalid { raw, reason }) = &back.message else {
+            panic!("expected invalid fragment, got {:?}", back.message);
+        };
+        assert_eq!(raw, &body);
+        assert!(reason.contains("truncated fragment envelope"), "{reason}");
+        // and it re-encodes losslessly
+        assert_eq!(back.encode(), frame);
+    }
+
+    #[test]
+    fn fragment_frames_tile_the_inner_frame_exactly() {
+        let inner =
+            Frame::on_stream(7, 0, Message::Activations { step: 3, payload: sparse_payload() })
+                .encode();
+        for max in [MIN_FRAME_SIZE, MIN_FRAME_SIZE + 6, HEADER_BYTES + FRAG_ENVELOPE_BYTES + 17] {
+            let frags = fragment_frames(7, 42, &inner, max).unwrap();
+            assert_eq!(frags.len(), fragment_count(inner.len(), max));
+            let mut rebuilt = Vec::new();
+            for (i, bytes) in frags.iter().enumerate() {
+                assert!(bytes.len() <= max, "fragment {i} is {} > {max}", bytes.len());
+                let (f, used) = Frame::decode(bytes).unwrap();
+                assert_eq!(used, bytes.len());
+                let Message::Fragment(FragPart::Piece { msg_id, num_frag, frag_ndx, data }) =
+                    f.message
+                else {
+                    panic!("expected fragment piece");
+                };
+                assert_eq!((msg_id, num_frag as usize, frag_ndx as usize), (42, frags.len(), i));
+                rebuilt.extend_from_slice(&data);
+            }
+            assert_eq!(rebuilt, inner, "max={max}");
+            // envelope overhead is exact: every fragment adds header + envelope
+            let total: usize = frags.iter().map(|f| f.len()).sum();
+            assert_eq!(total, inner.len() + frags.len() * (HEADER_BYTES + FRAG_ENVELOPE_BYTES));
+        }
+    }
+
+    #[test]
+    fn fragment_frames_rejects_sub_minimum_max_frame_size() {
+        let e = fragment_frames(1, 1, &[0u8; 64], MIN_FRAME_SIZE - 1).unwrap_err();
+        assert!(e.to_string().contains("below the minimum"), "{e}");
+    }
+
+    #[test]
+    fn one_byte_chunks_are_legal() {
+        // the degenerate floor: every fragment carries exactly one byte
+        let inner = Frame::on_stream(1, 0, Message::CloseStream).encode();
+        let frags = fragment_frames(1, 9, &inner, MIN_FRAME_SIZE).unwrap();
+        assert_eq!(frags.len(), inner.len());
+        for f in &frags {
+            assert_eq!(f.len(), MIN_FRAME_SIZE);
+        }
     }
 
     /// Valid header + CRC around an arbitrary body.

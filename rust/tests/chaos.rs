@@ -17,15 +17,24 @@
 use std::sync::Arc;
 
 use splitfed::chaos::{
-    fault_plan_for_seed, metrics_fingerprint, repro_command, run_schedule, run_session,
-    write_repro, ChaosConfig, CHAOS_METHODS,
+    fault_plan_for_seed, metrics_fingerprint, repro_command, repro_for, run_schedule,
+    run_schedule_fragmented, run_session, write_repro, ChaosConfig, CHAOS_METHODS,
 };
 use splitfed::config::Method;
 use splitfed::coordinator::{FeatureOwner, LabelOwner};
 use splitfed::data::{for_model, Dataset, EpochIter, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
 use splitfed::transport::sim::LinkModel;
-use splitfed::transport::{FaultPlan, Mux, MuxEvent, RecoveryPolicy, SimNet};
+use splitfed::transport::{
+    FaultCounts, FaultPlan, FragPolicy, Mux, MuxEvent, RecoveryPolicy, ScriptedFault, SimNet,
+    Transport,
+};
+use splitfed::compress::Payload;
+use splitfed::wire::{fragment_count, Frame, Message};
+
+/// `max_frame_size` for the fragmented matrix: the quick workload's
+/// ~500 B data frames split into several fragments at this threshold.
+const FRAG_SIZE: usize = 96;
 
 fn seeds_for_this_shard() -> Vec<u64> {
     let n: u64 = std::env::var("CHAOS_SEEDS").ok().and_then(|v| v.parse().ok()).unwrap_or(100);
@@ -105,6 +114,143 @@ fn every_fault_kind_in_isolation_is_survivable_and_accounted() {
     }
 }
 
+/// The fragmented acceptance gate: the SAME seed matrix, every codec,
+/// with every frame over `FRAG_SIZE` bytes travelling as fragments in
+/// both the clean baseline and the faulty run — so drop/dup/reorder/
+/// corrupt/truncate/disconnect land on arbitrary *fragments* and the
+/// metrics still must not move a bit.
+#[test]
+fn fragmented_chaos_matrix_every_codec_bit_identical_metrics() {
+    let seeds = seeds_for_this_shard();
+    assert!(!seeds.is_empty(), "empty shard");
+    let mut failures = Vec::new();
+    for method in CHAOS_METHODS {
+        for &seed in &seeds {
+            let v = run_schedule_fragmented(seed, method, Some(FRAG_SIZE));
+            if !v.ok {
+                let path = write_repro(&artifact_dir(), &v).expect("write repro artifact");
+                eprintln!(
+                    "fragmented chaos FAIL seed={seed} method={method}: {}\n  repro: {}\n  \
+                     artifact: {}",
+                    v.detail,
+                    repro_for(&v),
+                    path.display()
+                );
+                failures.push((seed, method.to_string()));
+            }
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "{} fragmented schedules failed ({} seeds x {} codecs): {failures:?}",
+        failures.len(),
+        seeds.len(),
+        CHAOS_METHODS.len()
+    );
+}
+
+// --- directed middle-fragment faults ---------------------------------------
+
+/// Drive one scripted fault into a *middle* fragment of the second of
+/// three fragmented messages — not whichever frame the seeded dice would
+/// pick — and require exactly-once in-order delivery of all three.
+///
+/// The sender flushes everything before the receiver thread starts, so
+/// the link queue state (which `Reorder` swaps within) is deterministic.
+fn directed_middle_fragment_fault(fault: ScriptedFault, fired: fn(&FaultCounts) -> u64) {
+    let net = SimNet::with_faults(LinkModel::default(), FaultPlan::none());
+    let (a, b) = net.pair();
+    let cm = Mux::initiator(a);
+    let sm = Mux::acceptor(b);
+    for m in [&cm, &sm] {
+        m.enable_recovery(RecoveryPolicy {
+            probe_after_polls: 50,
+            probe_interval_polls: 500,
+            poll_timeout_ms: 30_000,
+            ..RecoveryPolicy::default()
+        });
+        m.enable_fragmentation(FragPolicy::with_max_frame_size(FRAG_SIZE)).unwrap();
+    }
+    let nc = net.clone();
+    cm.set_reconnector(move |_| {
+        nc.reconnect();
+        Ok(None)
+    });
+    let ns = net.clone();
+    sm.set_reconnector(move |_| {
+        ns.reconnect();
+        Ok(None)
+    });
+
+    let msg = |step: u64| Message::Activations {
+        step,
+        payload: Payload::dense(4, 32, vec![step as u8 + 1; 4 * 32 * 4]),
+    };
+    let inner_len = Frame::on_stream(1, 0, msg(1)).encode().len();
+    let nfrag = fragment_count(inner_len, FRAG_SIZE) as u64;
+    assert!(nfrag >= 3, "workload must fragment into 3+ pieces, got {nfrag}");
+    // client-side (side 0) first-transmission index: 0 = OpenStream, then
+    // nfrag fragments per message — aim at the middle of message 2
+    net.script_fault(0, 1 + nfrag + nfrag / 2, fault);
+
+    let mut s = cm.open_stream().unwrap();
+    let id = loop {
+        match sm.next_event().unwrap() {
+            MuxEvent::Opened(id) => break id,
+            MuxEvent::Recovery(_) => continue,
+            other => panic!("unexpected pre-open event {other:?}"),
+        }
+    };
+    let mut t = sm.accept_stream(id).unwrap();
+    // flush all three messages before the receiver runs
+    for step in 1..=3u64 {
+        s.send(&Frame::new(0, msg(step))).unwrap();
+    }
+    assert!(net.data_frames_sent(0) >= 1 + 3 * nfrag, "every fragment was put on the wire");
+
+    let server = std::thread::spawn(move || {
+        for step in 1..=3u64 {
+            let f = t.recv().unwrap();
+            assert_eq!(f.message, msg(step), "message {step} must arrive intact and in order");
+        }
+        t.send(&Frame::new(0, Message::Control(splitfed::wire::Control::Shutdown))).unwrap();
+    });
+    // the client's recv pump is what answers nacks/resumes with
+    // retransmits; it returns once the server has seen all three
+    let done = s.recv().unwrap();
+    assert!(matches!(done.message, Message::Control(splitfed::wire::Control::Shutdown)));
+    server.join().unwrap();
+
+    let totals = net.fault_totals();
+    assert!(fired(&totals) > 0, "{fault:?} never fired: {totals:?}");
+    assert_eq!(totals.total(), fired(&totals), "only the scripted fault may fire: {totals:?}");
+}
+
+#[test]
+fn dropped_middle_fragment_is_retransmitted() {
+    directed_middle_fragment_fault(ScriptedFault::Drop, |f| f.dropped);
+}
+
+#[test]
+fn duplicated_middle_fragment_is_deduplicated() {
+    directed_middle_fragment_fault(ScriptedFault::Duplicate, |f| f.duplicated);
+}
+
+#[test]
+fn reordered_middle_fragment_is_resequenced() {
+    directed_middle_fragment_fault(ScriptedFault::Reorder, |f| f.reordered);
+}
+
+#[test]
+fn corrupted_middle_fragment_is_dropped_and_recovered() {
+    directed_middle_fragment_fault(ScriptedFault::Corrupt, |f| f.corrupted);
+}
+
+#[test]
+fn truncated_middle_fragment_is_dropped_and_recovered() {
+    directed_middle_fragment_fault(ScriptedFault::Truncate, |f| f.truncated);
+}
+
 #[test]
 fn repro_command_matches_cli_grammar() {
     assert_eq!(
@@ -149,6 +295,17 @@ fn engine_dir() -> Option<std::path::PathBuf> {
 /// on separate threads over a faulty `SimNet` + recovering mux; returns
 /// the per-step label-owner losses.
 fn real_training_losses(plan: FaultPlan, seed: u64, steps: usize) -> Vec<f64> {
+    real_training_losses_frag(plan, seed, steps, None)
+}
+
+/// [`real_training_losses`] with frame fragmentation enabled on both
+/// muxes when `max_frame_size` is `Some`.
+fn real_training_losses_frag(
+    plan: FaultPlan,
+    seed: u64,
+    steps: usize,
+    max_frame_size: Option<usize>,
+) -> Vec<f64> {
     let dir = engine_dir().unwrap();
     let net = SimNet::with_faults(LinkModel::default(), plan);
     let (a, b) = net.pair();
@@ -161,6 +318,9 @@ fn real_training_losses(plan: FaultPlan, seed: u64, steps: usize) -> Vec<f64> {
             poll_timeout_ms: 60_000,
             ..RecoveryPolicy::default()
         });
+        if let Some(n) = max_frame_size {
+            m.enable_fragmentation(FragPolicy::with_max_frame_size(n)).unwrap();
+        }
     }
     let nc = net.clone();
     cm.set_reconnector(move |_| {
@@ -240,6 +400,33 @@ fn real_training_metrics_survive_lossy_link() {
     let lossy = real_training_losses(plan, 11, steps);
     assert_eq!(clean.len(), steps);
     assert_eq!(clean, lossy, "losses diverged under a lossy link");
+}
+
+/// The REAL trainer's cut-layer tensor (32x128 f32 ≈ 16 KiB per frame)
+/// travels in ~4 KiB fragments over SimNet: the model learns exactly
+/// what it learns with whole frames — fragmented, clean, and fragmented
+/// over a lossy link all produce bit-equal per-step losses.
+#[test]
+fn real_training_bit_identical_when_fragmented() {
+    if engine_dir().is_none() {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return;
+    }
+    let steps = 4;
+    let whole = real_training_losses(FaultPlan::none(), 19, steps);
+    let frag = real_training_losses_frag(FaultPlan::none(), 19, steps, Some(4096));
+    assert_eq!(whole, frag, "losses diverged when frames travelled fragmented");
+    let plan = FaultPlan {
+        seed: 31,
+        drop: 0.06,
+        duplicate: 0.04,
+        reorder: 0.04,
+        corrupt: 0.03,
+        truncate: 0.02,
+        ..FaultPlan::default()
+    };
+    let frag_lossy = real_training_losses_frag(plan, 19, steps, Some(4096));
+    assert_eq!(whole, frag_lossy, "losses diverged when fragments met a lossy link");
 }
 
 /// Mid-epoch hard disconnect: the session resumes and the final losses

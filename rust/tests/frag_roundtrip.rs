@@ -1,0 +1,416 @@
+//! Fragmentation round-trip suite: every codec x pass x geometry, at
+//! fragment sizes from 1 content byte per fragment up to
+//! whole-message-no-split, must reassemble bit-identical payloads — and
+//! the wire must cost EXACTLY the inner frame plus
+//! `num_frag * (HEADER_BYTES + FRAG_ENVELOPE_BYTES)` envelope overhead.
+//!
+//! On top of the exact-cost matrix: out-of-order fragment arrival
+//! (reorder-heavy link + recovery), concurrent cross-stream
+//! interleaving, the same protocol over a real TCP socket (with the
+//! receive-size cap armed), and an engine-gated end-to-end training run
+//! whose cut-layer tensor exceeds `max_frame_size`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use splitfed::chaos::CHAOS_METHODS;
+use splitfed::compress::{
+    codec_for, Batch, Codec, DenseBatch, Pass, Payload, QuantBatch, SparseBatch,
+};
+use splitfed::config::Method;
+use splitfed::coordinator::{FeatureOwner, LabelOwner};
+use splitfed::data::{for_model, Dataset, EpochIter, Split};
+use splitfed::runtime::{default_artifacts_dir, Engine};
+use splitfed::transport::sim::LinkModel;
+use splitfed::transport::{
+    FaultPlan, FragPolicy, Mux, MuxEvent, RecoveryPolicy, SimNet, TcpTransport, Transport,
+};
+use splitfed::util::Rng;
+use splitfed::wire::{
+    fragment_count, Frame, Message, FRAG_ENVELOPE_BYTES, HEADER_BYTES, MIN_FRAME_SIZE,
+};
+
+/// A deterministic forward batch shaped for `method`'s codec (the same
+/// shapes the real artifacts produce).
+fn forward_batch(method: Method, rows: usize, dim: usize, seed: u64) -> Batch {
+    let mut r = Rng::new(seed ^ 0xF2A6);
+    match method {
+        Method::None | Method::L1 { .. } => {
+            let data = (0..rows * dim).map(|_| r.normal()).collect();
+            Batch::Dense(DenseBatch::new(rows, dim, data))
+        }
+        Method::RandTopk { k, .. } | Method::Topk { k } => {
+            let mut values = Vec::with_capacity(rows * k);
+            let mut indices = Vec::with_capacity(rows * k);
+            for _ in 0..rows {
+                let mut all: Vec<i32> = (0..dim as i32).collect();
+                r.shuffle(&mut all);
+                let mut sel = all[..k].to_vec();
+                sel.sort_unstable();
+                for &i in &sel {
+                    indices.push(i);
+                    values.push(r.normal());
+                }
+            }
+            Batch::Sparse(SparseBatch { rows, dim, k, values, indices })
+        }
+        Method::SizeReduction { k } => {
+            let values = (0..rows * k).map(|_| r.normal()).collect();
+            let indices = (0..rows).flat_map(|_| 0..k as i32).collect();
+            Batch::Sparse(SparseBatch { rows, dim, k, values, indices })
+        }
+        Method::Quant { bits } => {
+            let levels = 1usize << bits.min(16);
+            let codes = (0..rows * dim).map(|_| r.below(levels) as f32).collect();
+            let o_min: Vec<f32> = (0..rows).map(|_| -1.0 - r.next_f32()).collect();
+            let o_max: Vec<f32> = o_min.iter().map(|m| m + 2.0).collect();
+            Batch::Quant(QuantBatch { rows, dim, codes, o_min, o_max })
+        }
+    }
+}
+
+/// The backward-pass batch for a decoded forward batch (sparse stays
+/// sparse on the same indices; quant/dense travel back dense).
+fn backward_batch(decoded: &Batch) -> Batch {
+    match decoded {
+        Batch::Sparse(s) => Batch::Sparse(SparseBatch {
+            rows: s.rows,
+            dim: s.dim,
+            k: s.k,
+            values: s.values.iter().map(|v| v * 0.5 - 0.1).collect(),
+            indices: s.indices.clone(),
+        }),
+        Batch::Dense(d) => Batch::Dense(DenseBatch::new(
+            d.rows,
+            d.dim,
+            d.data.iter().map(|v| v * 0.5 - 0.1).collect(),
+        )),
+        Batch::Quant(q) => {
+            let mut data = Vec::with_capacity(q.rows * q.dim);
+            for r in 0..q.rows {
+                for j in 0..q.dim {
+                    data.push(q.codes[r * q.dim + j] * 0.1 + q.o_min[r] * 0.01);
+                }
+            }
+            Batch::Dense(DenseBatch::new(q.rows, q.dim, data))
+        }
+    }
+}
+
+/// One fragmented mux round trip of `msg`; returns the received message
+/// and the exact number of physical bytes the data frame(s) cost.
+fn roundtrip(msg: Message, max_frame_size: usize) -> (Message, u64) {
+    let net = SimNet::with_defaults();
+    let (a, b) = net.pair();
+    let cm = Mux::initiator(a);
+    let sm = Mux::acceptor(b);
+    cm.enable_fragmentation(FragPolicy::with_max_frame_size(max_frame_size)).unwrap();
+    sm.enable_fragmentation(FragPolicy::with_max_frame_size(max_frame_size)).unwrap();
+    let mut s = cm.open_stream().unwrap();
+    assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
+    let mut t = sm.accept_stream(1).unwrap();
+    let base = cm.physical_stats().bytes_sent;
+    s.send(&Frame::new(0, msg)).unwrap();
+    let sent = cm.physical_stats().bytes_sent - base;
+    loop {
+        match sm.next_event().unwrap() {
+            MuxEvent::Fragment(1) => continue,
+            MuxEvent::Data(1) => break,
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    (t.recv().unwrap().message, sent)
+}
+
+/// The exact-cost matrix: every registry codec, both passes, several
+/// geometries, fragment content sizes from 1 byte to no-split.
+#[test]
+fn every_codec_pass_geometry_reassembles_bit_identical_with_exact_cost() {
+    for spec in CHAOS_METHODS {
+        let method = Method::parse(spec).unwrap();
+        for (rows, dim) in [(1usize, 32usize), (4, 32), (3, 128)] {
+            let codec = codec_for(method, dim).unwrap();
+            let fwd = forward_batch(method, rows, dim, 11);
+            let fwd_payload = codec.encode(&fwd, Pass::Forward).unwrap();
+            let bwd = backward_batch(&codec.decode(&fwd_payload, Pass::Forward).unwrap());
+            let bwd_payload = codec.encode(&bwd, Pass::Backward).unwrap();
+            let cases = [
+                (Pass::Forward, Message::Activations { step: 3, payload: fwd_payload }),
+                (Pass::Backward, Message::Gradients { step: 3, payload: bwd_payload }),
+            ];
+            for (pass, msg) in cases {
+                // the payload itself matches the codec's analytic size
+                let (Message::Activations { payload, .. } | Message::Gradients { payload, .. }) =
+                    &msg
+                else {
+                    unreachable!()
+                };
+                if let Some(n) = codec.expected_wire_bytes(rows, pass) {
+                    assert_eq!(payload.wire_bytes(), n, "{spec} {pass:?} {rows}x{dim}");
+                }
+                let inner = Frame::on_stream(1, 0, msg.clone()).encode().len();
+                // 1-byte chunks, tiny chunks, a mid split, and no split
+                for max in [MIN_FRAME_SIZE, MIN_FRAME_SIZE + 9, 96, 1 << 20] {
+                    let (got, sent) = roundtrip(msg.clone(), max);
+                    assert_eq!(got, msg, "{spec} {pass:?} {rows}x{dim} max {max}");
+                    let expect = if inner > max {
+                        inner + fragment_count(inner, max) * (HEADER_BYTES + FRAG_ENVELOPE_BYTES)
+                    } else {
+                        inner
+                    };
+                    assert_eq!(
+                        sent, expect as u64,
+                        "{spec} {pass:?} {rows}x{dim} max {max}: wire bytes off"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Out-of-order fragment arrival: a reorder-heavy link swaps fragments
+/// in flight while the sender flushes whole messages ahead of the
+/// receiver; the recovery gate must re-sequence every fragment before
+/// reassembly sees it.
+#[test]
+fn out_of_order_fragments_are_resequenced_before_reassembly() {
+    let plan = FaultPlan { seed: 271, reorder: 0.9, ..FaultPlan::default() };
+    let net = SimNet::with_faults(LinkModel::default(), plan);
+    let (a, b) = net.pair();
+    let cm = Mux::initiator(a);
+    let sm = Mux::acceptor(b);
+    for m in [&cm, &sm] {
+        m.enable_recovery(RecoveryPolicy {
+            probe_after_polls: 50,
+            probe_interval_polls: 500,
+            poll_timeout_ms: 30_000,
+            ..RecoveryPolicy::default()
+        });
+        m.enable_fragmentation(FragPolicy::with_max_frame_size(96)).unwrap();
+    }
+    let nc = net.clone();
+    cm.set_reconnector(move |_| {
+        nc.reconnect();
+        Ok(None)
+    });
+    let ns = net.clone();
+    sm.set_reconnector(move |_| {
+        ns.reconnect();
+        Ok(None)
+    });
+    let msg = |step: u64| Message::Activations {
+        step,
+        payload: Payload::dense(4, 32, vec![step as u8 * 3 + 1; 4 * 32 * 4]),
+    };
+    let mut s = cm.open_stream().unwrap();
+    let id = loop {
+        match sm.next_event().unwrap() {
+            MuxEvent::Opened(id) => break id,
+            MuxEvent::Recovery(_) => continue,
+            other => panic!("unexpected pre-open event {other:?}"),
+        }
+    };
+    let mut t = sm.accept_stream(id).unwrap();
+    // flush everything before the receiver runs: the link queue really
+    // holds neighbouring fragments for the reorder fate to swap
+    for step in 0..4u64 {
+        s.send(&Frame::new(0, msg(step))).unwrap();
+    }
+    let server = std::thread::spawn(move || {
+        for step in 0..4u64 {
+            let f = t.recv().unwrap();
+            assert_eq!(f.message, msg(step), "message {step} intact and in order");
+        }
+        t.send(&Frame::new(0, Message::Control(splitfed::wire::Control::Shutdown))).unwrap();
+    });
+    let done = s.recv().unwrap();
+    assert!(matches!(done.message, Message::Control(splitfed::wire::Control::Shutdown)));
+    server.join().unwrap();
+    assert!(net.fault_totals().reordered > 0, "the link never reordered: {:?}", net.fault_totals());
+}
+
+/// Two threads each streaming large messages on their own stream of ONE
+/// connection: fragments interleave on the wire (burst scheduling), and
+/// each stream reassembles its own messages bit-identical and in order.
+#[test]
+fn concurrent_streams_reassemble_independently() {
+    let net = SimNet::with_defaults();
+    let (a, mut b) = net.pair();
+    b.set_blocking(Duration::from_secs(60));
+    let cm = Mux::initiator(a);
+    let sm = Mux::acceptor(b);
+    cm.enable_fragmentation(FragPolicy { burst: 1, ..FragPolicy::with_max_frame_size(96) })
+        .unwrap();
+    sm.enable_fragmentation(FragPolicy::with_max_frame_size(96)).unwrap();
+    let msg = |stream_no: u8, step: u64| Message::Activations {
+        step,
+        payload: Payload::dense(4, 32, vec![stream_no * 50 + step as u8; 4 * 32 * 4]),
+    };
+    let mut senders = Vec::new();
+    for stream_no in 0u8..2 {
+        let mut s = cm.open_stream().unwrap();
+        senders.push(std::thread::spawn(move || {
+            for step in 0..4u64 {
+                s.send(&Frame::new(0, msg(stream_no, step))).unwrap();
+            }
+        }));
+    }
+    // pump until both streams' 4 messages are in their inboxes
+    let mut opened = Vec::new();
+    let mut data = 0;
+    while data < 8 {
+        match sm.next_event().unwrap() {
+            MuxEvent::Opened(id) => opened.push(id),
+            MuxEvent::Data(_) => data += 1,
+            MuxEvent::Fragment(_) => {}
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    for th in senders {
+        th.join().unwrap();
+    }
+    opened.sort_unstable();
+    assert_eq!(opened, vec![1, 3]);
+    for (stream_no, id) in [(0u8, 1u32), (1, 3)] {
+        let mut t = sm.accept_stream(id).unwrap();
+        for step in 0..4u64 {
+            let f = t.recv().unwrap();
+            assert_eq!(
+                f.message,
+                msg(stream_no, step),
+                "stream {id}: message {step} intact and in order"
+            );
+        }
+    }
+}
+
+/// The same fragmentation protocol over a real TCP socket, with the
+/// transport-level receive cap armed at the fragmented maximum: exact
+/// envelope accounting holds on real socket byte counts too.
+#[test]
+fn tcp_mux_fragments_roundtrip_with_exact_cost() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut client = TcpTransport::connect(addr).unwrap();
+    let (stream, _) = listener.accept().unwrap();
+    let mut server_t = TcpTransport::from_stream(stream);
+    // fragmentation caps every frame at 256 B, so a tight receive cap is
+    // safe — this is the pairing the cap exists for
+    client.set_max_recv_frame(1024);
+    server_t.set_max_recv_frame(1024);
+    let cm = Mux::initiator(client);
+    let sm = Mux::acceptor(server_t);
+    cm.enable_fragmentation(FragPolicy::with_max_frame_size(256)).unwrap();
+    sm.enable_fragmentation(FragPolicy::with_max_frame_size(256)).unwrap();
+
+    let msg = Message::Activations {
+        step: 7,
+        payload: Payload::dense(8, 128, vec![3; 8 * 128 * 4]),
+    };
+    let inner = Frame::on_stream(1, 0, msg.clone()).encode().len();
+    assert!(inner > 256, "workload must exceed max_frame_size");
+
+    let mut s = cm.open_stream().unwrap();
+    let expect_msg = msg.clone();
+    let server = std::thread::spawn(move || {
+        let id = loop {
+            match sm.next_event().unwrap() {
+                MuxEvent::Opened(id) => break id,
+                MuxEvent::Fragment(_) => continue,
+                other => panic!("unexpected event {other:?}"),
+            }
+        };
+        let mut t = sm.accept_stream(id).unwrap();
+        let f = t.recv().unwrap();
+        assert_eq!(f.message, expect_msg, "reassembled bit-identical over TCP");
+        t.send(&Frame::new(0, Message::Control(splitfed::wire::Control::Shutdown))).unwrap();
+        sm.physical_stats().bytes_recv
+    });
+
+    let base = cm.physical_stats().bytes_sent;
+    s.send(&Frame::new(0, msg)).unwrap();
+    let sent = cm.physical_stats().bytes_sent - base;
+    let expect = inner + fragment_count(inner, 256) * (HEADER_BYTES + FRAG_ENVELOPE_BYTES);
+    assert_eq!(sent, expect as u64, "TCP wire bytes off");
+    let done = s.recv().unwrap();
+    assert!(matches!(done.message, Message::Control(splitfed::wire::Control::Shutdown)));
+    let server_recv = server.join().unwrap();
+    assert_eq!(server_recv, cm.physical_stats().bytes_sent, "both ends count the same bytes");
+}
+
+// --- end-to-end training, fragmented (engine-gated) ------------------------
+
+fn engine_dir() -> Option<std::path::PathBuf> {
+    let dir = default_artifacts_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// Real mlp training over a loopback TCP connection; the 32x128 f32
+/// cut-layer tensor (~16 KiB framed) fragments when `max_frame_size` is
+/// set. Returns per-step label-owner losses.
+fn tcp_training_losses(seed: u64, steps: usize, max_frame_size: Option<usize>) -> Vec<f64> {
+    let dir = engine_dir().unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let phys = TcpTransport::connect(addr).unwrap();
+    let (srv, _) = listener.accept().unwrap();
+    let cm = Mux::initiator(phys);
+    let sm = Mux::acceptor(TcpTransport::from_stream(srv));
+    if let Some(n) = max_frame_size {
+        cm.enable_fragmentation(FragPolicy::with_max_frame_size(n)).unwrap();
+        sm.enable_fragmentation(FragPolicy::with_max_frame_size(n)).unwrap();
+    }
+    let method = Method::parse("randtopk:k=6,alpha=0.1").unwrap();
+
+    let dir_lo = dir.clone();
+    let server = std::thread::spawn(move || {
+        let engine = Arc::new(Engine::load(&dir_lo).unwrap());
+        let id = loop {
+            match sm.next_event().unwrap() {
+                MuxEvent::Opened(id) => break id,
+                MuxEvent::Fragment(_) => continue,
+                other => panic!("unexpected pre-open event {other:?}"),
+            }
+        };
+        let stream = sm.accept_stream(id).unwrap();
+        let mut lo = LabelOwner::new(engine, "mlp", method, stream, 99).unwrap();
+        let ds = for_model("mlp", 100, seed, 256, 64).unwrap();
+        let mut losses = Vec::new();
+        let mut step = 0u64;
+        for indices in EpochIter::new(ds.len(Split::Train), 32, seed, 0).take(steps) {
+            let batch = ds.batch(Split::Train, &indices, false);
+            losses.push(lo.train_step(step, &batch.y, 0.05).unwrap().loss);
+            step += 1;
+        }
+        losses
+    });
+
+    let engine = Arc::new(Engine::load(&dir).unwrap());
+    let stream = cm.open_stream().unwrap();
+    let mut fo = FeatureOwner::new(engine, "mlp", method, stream, seed, 99).unwrap();
+    let ds = for_model("mlp", 100, seed, 256, 64).unwrap();
+    let mut step = 0u64;
+    for indices in EpochIter::new(ds.len(Split::Train), 32, seed, 0).take(steps) {
+        let batch = ds.batch(Split::Train, &indices, false);
+        fo.train_forward(step, &batch.x).unwrap();
+        fo.train_backward(step, 0.05).unwrap();
+        step += 1;
+    }
+    server.join().unwrap()
+}
+
+/// The acceptance criterion over a real socket: a cut-layer tensor
+/// bigger than `max_frame_size` trains end to end, and the losses are
+/// bit-equal to the unfragmented run.
+#[test]
+fn real_training_over_tcp_bit_identical_when_fragmented() {
+    if engine_dir().is_none() {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return;
+    }
+    let steps = 3;
+    let whole = tcp_training_losses(23, steps, None);
+    let frag = tcp_training_losses(23, steps, Some(2048));
+    assert_eq!(whole.len(), steps);
+    assert_eq!(whole, frag, "losses diverged when the cut tensor travelled fragmented");
+}

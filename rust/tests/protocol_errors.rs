@@ -15,8 +15,8 @@ use splitfed::coordinator::serve::{
 use splitfed::coordinator::{FeatureOwner, LabelOwner};
 use splitfed::data::{for_model, Dataset, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
-use splitfed::transport::{Mux, MuxEvent, SimNet, TcpTransport, Transport};
-use splitfed::wire::{Frame, Message, OpenSpec, HEADER_BYTES, OFF_MAGIC, OFF_TYPE};
+use splitfed::transport::{FragFault, Mux, MuxEvent, SimNet, TcpTransport, Transport};
+use splitfed::wire::{FragPart, Frame, Message, OpenSpec, HEADER_BYTES, OFF_MAGIC, OFF_TYPE};
 
 fn engine() -> Option<Arc<Engine>> {
     let dir = default_artifacts_dir();
@@ -556,6 +556,192 @@ fn refused_stream_interleaves_with_live_session() {
     assert!(report.refused[0].stats.bytes_recv > 0);
     assert_eq!(report.session_bytes_recv(), report.physical.bytes_recv);
     assert_eq!(report.session_bytes_sent(), report.physical.bytes_sent);
+}
+
+// --- fragment envelope violations -----------------------------------------
+
+/// Acceptor mux with stream 1 already open, plus the raw peer link.
+fn frag_mux() -> (splitfed::transport::SimLink, Mux<splitfed::transport::SimLink>) {
+    let net = SimNet::with_defaults();
+    let (mut raw, b) = net.pair();
+    let mux = Mux::acceptor(b);
+    raw.send(&Frame::on_stream(1, 0, Message::OpenStream { spec: OpenSpec::None })).unwrap();
+    assert_eq!(mux.next_event().unwrap(), MuxEvent::Opened(1));
+    (raw, mux)
+}
+
+fn piece(msg_id: u64, num_frag: u32, frag_ndx: u32, data: &[u8]) -> Message {
+    Message::Fragment(FragPart::Piece { msg_id, num_frag, frag_ndx, data: data.to_vec() })
+}
+
+/// Drive `parts` at an open stream: every part but the last must absorb
+/// cleanly, the last must fail THE stream (never the connection). Returns
+/// the latched fault after asserting the full closed-and-accounted
+/// contract: peer told via `CloseStream`, late fragments dropped but
+/// still accounted, a sibling stream still served.
+fn fault_after(parts: Vec<Message>) -> FragFault {
+    let (mut raw, mux) = frag_mux();
+    let n = parts.len();
+    for (i, m) in parts.into_iter().enumerate() {
+        raw.send(&Frame::on_stream(1, 0, m)).unwrap();
+        let ev = mux.next_event().unwrap();
+        if i + 1 == n {
+            assert_eq!(ev, MuxEvent::StreamError(1));
+        } else {
+            assert_eq!(ev, MuxEvent::Fragment(1));
+        }
+    }
+    // the offending stream was closed: the peer is told on THAT stream
+    let close = raw.recv().unwrap();
+    assert_eq!(close.stream_id, 1);
+    assert!(matches!(close.message, Message::CloseStream));
+    // late fragments are dropped but still accounted to the dead stream
+    let before = mux.stream_stats(1).unwrap();
+    raw.send(&Frame::on_stream(1, 0, piece(99, 2, 0, &[1]))).unwrap();
+    assert_eq!(mux.next_event().unwrap(), MuxEvent::Fragment(1));
+    let after = mux.stream_stats(1).unwrap();
+    assert_eq!(after.frames_recv, before.frames_recv + 1);
+    assert!(after.bytes_recv > before.bytes_recv);
+    // the connection survives: a sibling stream opens and serves data
+    raw.send(&Frame::on_stream(3, 0, Message::OpenStream { spec: OpenSpec::None })).unwrap();
+    assert_eq!(mux.next_event().unwrap(), MuxEvent::Opened(3));
+    let payload = Payload::dense(1, 8, vec![5; 32]);
+    raw.send(&Frame::on_stream(3, 0, Message::Activations { step: 0, payload })).unwrap();
+    assert_eq!(mux.next_event().unwrap(), MuxEvent::Data(3));
+    let mut t = mux.accept_stream(3).unwrap();
+    assert!(matches!(t.recv().unwrap().message, Message::Activations { step: 0, .. }));
+    mux.stream_frag_fault(1).expect("fault latched on the failed stream")
+}
+
+fn protocol_reason(fault: FragFault) -> String {
+    match fault {
+        FragFault::Protocol(reason) => reason,
+        other => panic!("expected a protocol fault, got {other:?}"),
+    }
+}
+
+#[test]
+fn truncated_fragment_envelope_fails_stream_not_connection() {
+    // `FragPart::Invalid` re-encodes its raw bytes verbatim, so this puts
+    // a sub-envelope-sized Fragment body on the wire via the public API
+    let raw_body = Message::Fragment(FragPart::Invalid { raw: vec![0; 10], reason: String::new() });
+    let reason = protocol_reason(fault_after(vec![raw_body]));
+    assert!(reason.contains("truncated fragment envelope"), "{reason}");
+}
+
+#[test]
+fn frag_ndx_out_of_range_fails_stream() {
+    let reason = protocol_reason(fault_after(vec![piece(1, 3, 7, &[0; 4])]));
+    assert!(reason.contains("frag_ndx 7 >= num_frag 3"), "{reason}");
+}
+
+#[test]
+fn num_frag_zero_fails_stream() {
+    let reason = protocol_reason(fault_after(vec![piece(1, 0, 0, &[0; 4])]));
+    assert!(reason.contains("num_frag = 0"), "{reason}");
+}
+
+#[test]
+fn fragment_without_a_start_fails_stream() {
+    let reason = protocol_reason(fault_after(vec![piece(1, 3, 1, &[0; 4])]));
+    assert!(reason.contains("without a start"), "{reason}");
+}
+
+#[test]
+fn duplicate_fragment_fails_stream() {
+    let reason =
+        protocol_reason(fault_after(vec![piece(1, 3, 0, &[0; 4]), piece(1, 3, 0, &[0; 4])]));
+    assert!(reason.contains("duplicate fragment 0"), "{reason}");
+}
+
+#[test]
+fn conflicting_num_frag_fails_stream() {
+    let reason =
+        protocol_reason(fault_after(vec![piece(1, 3, 0, &[0; 4]), piece(1, 4, 1, &[0; 4])]));
+    assert!(reason.contains("conflicting num_frag"), "{reason}");
+}
+
+#[test]
+fn foreign_msg_id_mid_message_fails_stream() {
+    let reason =
+        protocol_reason(fault_after(vec![piece(1, 3, 0, &[0; 4]), piece(2, 3, 1, &[0; 4])]));
+    assert!(reason.contains("msg 1 is incomplete"), "{reason}");
+}
+
+#[test]
+fn fragment_gap_fails_stream() {
+    let reason =
+        protocol_reason(fault_after(vec![piece(1, 4, 0, &[0; 4]), piece(1, 4, 2, &[0; 4])]));
+    assert!(reason.contains("fragment gap"), "{reason}");
+}
+
+#[test]
+fn reassembled_garbage_fails_stream_via_inner_crc() {
+    // a single-fragment "message" whose reassembled bytes are not a frame
+    let reason = protocol_reason(fault_after(vec![piece(1, 1, 0, &[0xEE; 40])]));
+    assert!(reason.contains("reassembled frame invalid"), "{reason}");
+}
+
+#[test]
+fn non_fragmentable_frame_type_rejected_after_reassembly() {
+    // a well-formed inner frame of a type the protocol forbids splitting
+    let inner = Frame::on_stream(1, 0, Message::CloseStream).encode();
+    let reason = protocol_reason(fault_after(vec![piece(1, 1, 0, &inner)]));
+    assert!(reason.contains("may not be fragmented"), "{reason}");
+}
+
+#[test]
+fn reassembled_stream_id_mismatch_fails_stream() {
+    // inner frame names stream 5 but arrives in fragments on stream 1
+    let inner = Frame::on_stream(
+        5,
+        0,
+        Message::Activations { step: 0, payload: Payload::dense(1, 8, vec![5; 32]) },
+    )
+    .encode();
+    let reason = protocol_reason(fault_after(vec![piece(1, 1, 0, &inner)]));
+    assert!(reason.contains("names stream 5"), "{reason}");
+}
+
+/// Seeded fragment-envelope fuzz: arbitrary `Piece`/`Invalid` sequences
+/// must never panic and never take down the connection — the worst
+/// allowed outcome is one latched stream fault.
+#[test]
+fn fragment_fuzz_never_panics_and_connection_survives() {
+    let mut rng = Rng::new(0xF7A6);
+    for round in 0..300u32 {
+        let (mut raw, mux) = frag_mux();
+        let n_frames = 1 + rng.below(5);
+        for _ in 0..n_frames {
+            let msg = if rng.below(5) == 0 {
+                let len = rng.below(24);
+                let raw_body: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+                Message::Fragment(FragPart::Invalid { raw: raw_body, reason: String::new() })
+            } else {
+                let data_len = 1 + rng.below(48);
+                let data: Vec<u8> = (0..data_len).map(|_| rng.next_u32() as u8).collect();
+                piece(
+                    rng.below(3) as u64,
+                    rng.below(5) as u32,
+                    rng.below(5) as u32,
+                    &data,
+                )
+            };
+            raw.send(&Frame::on_stream(1, 0, msg)).unwrap();
+            // every event is Ok: faults are stream-local, never connection
+            let ev = mux.next_event().unwrap();
+            assert!(
+                matches!(
+                    ev,
+                    MuxEvent::Fragment(1) | MuxEvent::StreamError(1) | MuxEvent::Data(1)
+                ),
+                "round {round}: unexpected event {ev:?}"
+            );
+        }
+        // whatever the fuzz did, the connection still opens a new stream
+        raw.send(&Frame::on_stream(5, 0, Message::OpenStream { spec: OpenSpec::None })).unwrap();
+        assert_eq!(mux.next_event().unwrap(), MuxEvent::Opened(5));
+    }
 }
 
 #[test]
