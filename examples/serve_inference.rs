@@ -25,12 +25,12 @@ use splitfed::cli::Args;
 use splitfed::compress::{codec_for, CodecSpec, Pass};
 use splitfed::config::Method;
 use splitfed::coordinator::serve::{
-    eval_indices, serve_tcp, EVAL_INIT_SEED, EVAL_N_TEST, EVAL_N_TRAIN,
+    eval_indices, EVAL_INIT_SEED, EVAL_N_TEST, EVAL_N_TRAIN,
 };
-use splitfed::coordinator::FeatureOwner;
+use splitfed::coordinator::{FeatureOwner, MuxServer, ServeOptions};
 use splitfed::data::{for_model, Dataset, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
-use splitfed::transport::{LinkStats, Mux, TcpTransport, Transport};
+use splitfed::transport::{LinkStats, Mux, MuxConfig, TcpTransport, Transport};
 use splitfed::util::timer::Stats;
 use splitfed::wire::{payload_meta_wire_len, Frame, Message, OpenSpec, HEADER_BYTES};
 
@@ -51,9 +51,8 @@ fn main() -> Result<()> {
     let model = args.get_or("model", "mlp").to_string();
     let seed = 42u64;
 
-    // ONE engine shared by every client thread (the server side loads its
-    // own inside serve_tcp and shares it across connections): the engine
-    // is Send + Sync, so N sessions cost one compile per artifact, not N
+    // ONE engine shared by every client thread AND the server (the engine
+    // is Send + Sync, so N sessions cost one compile per artifact, not N)
     let dir = default_artifacts_dir();
     let engine = Arc::new(Engine::load(&dir)?);
     let meta = engine.manifest.model(&model)?.clone();
@@ -86,8 +85,9 @@ fn main() -> Result<()> {
     // one physical connection; the server demuxes all sessions off it and
     // negotiates each session's codec from its OpenStream spec
     let phys = TcpTransport::connect(addr)?;
-    let server = serve_tcp(&listener, 1, 0, dir.clone(), model.clone(), methods[0], seed)?;
-    let mux = Mux::initiator(phys);
+    let server = Arc::new(MuxServer::new(engine.clone(), &model, methods[0], seed))
+        .serve(listener, ServeOptions::default())?;
+    let mux = Mux::with_config(phys, MuxConfig::initiator())?;
 
     let t_all = Instant::now();
     let mut handles = Vec::new();

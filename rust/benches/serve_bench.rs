@@ -1,0 +1,286 @@
+//! Serving-plane bench: one reactor thread (`pump_conn`) driving large
+//! stream rosters through per-stream credit windows over the sim link.
+//! Three phases per roster size (32 / 1k / 10k streams):
+//!
+//! 1. every stream bursts past its window — the overflow parks
+//!    client-side and the receiver's buffering is measured under full
+//!    backpressure (the bounded-memory claim, in bytes);
+//! 2. the roster is served to completion, echoing an `EvalResult` per
+//!    request, for sustained requests/s on one core;
+//! 3. individual request round trips are timed through the live roster
+//!    for p50/p99 request latency.
+//!
+//! Emits `BENCH_serve.json` at the repo root and exits nonzero if p99
+//! latency at 1k streams exceeds 1.5x the 32-stream baseline from the
+//! same run, or if any roster's backpressure buffering exceeds the
+//! credit-window bound `streams x (window + one frame)`.
+
+use std::collections::{BTreeMap, HashMap};
+use std::time::Instant;
+
+use splitfed::bench_util::{fmt_ns, quantile_ns};
+use splitfed::compress::Payload;
+use splitfed::coordinator::{pump_conn, PumpOutcome};
+use splitfed::json::Json;
+use splitfed::transport::sim::{LinkModel, SimLink, SimNet};
+use splitfed::transport::{
+    FlowPolicy, Mux, MuxConfig, MuxEvent, MuxStream, Transport, TransportError,
+};
+use splitfed::wire::{Frame, Message};
+
+/// Per-stream credit window, sized so a 4-request burst overruns it and
+/// must park (one request frame is ~300 wire bytes).
+const WINDOW: u32 = 512;
+const BURST: u64 = 4;
+const SAMPLES: usize = 200;
+const ROSTERS: [usize; 3] = [32, 1_000, 10_000];
+const P99_RATIO_LIMIT: f64 = 1.5;
+/// Below this absolute p99 the ratio gate is timer noise, not regression.
+const P99_FLOOR_NS: f64 = 50_000.0;
+
+fn request(step: u64) -> Frame {
+    Frame::new(
+        0,
+        Message::Activations { step, payload: Payload::dense(4, 16, vec![0x5A; 4 * 16 * 4]) },
+    )
+}
+
+fn echo_result(step: u64) -> Frame {
+    Frame::new(0, Message::EvalResult { step, loss_sum: 0.0, metric_count: 0.0 })
+}
+
+fn is_would_block(e: &anyhow::Error) -> bool {
+    TransportError::of(e) == Some(TransportError::WouldBlock)
+}
+
+/// Pop queued housekeeping events (`Flow`, `Data` already consumed by a
+/// direct stream recv, ...) so the event queue stays flat between rounds.
+fn drain_events<T: Transport>(mux: &Mux<T>) -> anyhow::Result<()> {
+    loop {
+        match mux.next_event() {
+            Ok(_) => {}
+            Err(e) if is_would_block(&e) => return Ok(()),
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+struct RosterStats {
+    streams: usize,
+    p50_ns: f64,
+    p99_ns: f64,
+    req_per_s: f64,
+    buffered: u64,
+    bound: u64,
+}
+
+fn run_roster(n: usize) -> anyhow::Result<RosterStats> {
+    let net = SimNet::new(LinkModel { bandwidth_bytes_per_sec: 1e12, latency_secs: 0.0 });
+    let (a, b) = net.pair();
+    let policy = FlowPolicy::with_window(WINDOW);
+    let cm = Mux::with_config(a, MuxConfig::initiator().flow_control(policy))?;
+    let sm = Mux::with_config(b, MuxConfig::acceptor().flow_control(policy))?;
+
+    let frame_len = request(0).encode().len() as u64;
+    anyhow::ensure!(BURST * frame_len > WINDOW as u64, "burst must overrun the window");
+    let bound = n as u64 * (WINDOW as u64 + frame_len);
+
+    let mut clients: Vec<MuxStream<SimLink>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        clients.push(cm.open_stream()?);
+    }
+    // phase 1: every stream bursts past its window; sends return
+    // immediately (overflow parks in the credit queue), the wire and the
+    // server inboxes stay window-bounded per stream
+    for c in clients.iter_mut() {
+        for step in 0..BURST {
+            c.send(&request(step))?;
+        }
+    }
+    // reactor pass with a route-only handler: frames land in per-stream
+    // inboxes and STAY there — peak buffering under full backpressure
+    let mut streams: HashMap<u32, MuxStream<SimLink>> = HashMap::with_capacity(n);
+    {
+        let mut route_only = |m: &Mux<SimLink>, ev: MuxEvent| -> anyhow::Result<bool> {
+            if let MuxEvent::Opened(id) = ev {
+                streams.insert(id, m.accept_stream(id)?);
+            }
+            Ok(false)
+        };
+        while !matches!(pump_conn(&sm, 4096, &mut route_only)?, PumpOutcome::Idle) {}
+    }
+    anyhow::ensure!(streams.len() == n, "accepted {} of {n} streams", streams.len());
+    let buffered = sm.buffered_bytes();
+    anyhow::ensure!(buffered > 0, "backpressure phase buffered nothing");
+
+    // phase 2: serve the whole roster — consume, echo, let the grants pull
+    // the parked overflow through
+    let t0 = Instant::now();
+    let target = n as u64 * BURST;
+    let mut served = 0u64;
+    while served < target {
+        let mut progress = false;
+        for s in streams.values_mut() {
+            loop {
+                match s.recv() {
+                    Ok(f) => {
+                        let Message::Activations { step, .. } = f.message else {
+                            anyhow::bail!("unexpected request {:?}", f.message)
+                        };
+                        s.send(&echo_result(step))?;
+                        served += 1;
+                        progress = true;
+                    }
+                    Err(e) if is_would_block(&e) => break,
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        drain_events(&sm)?;
+        for c in clients.iter_mut() {
+            loop {
+                match c.recv() {
+                    Ok(_) => progress = true,
+                    Err(e) if is_would_block(&e) => break,
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        drain_events(&cm)?;
+        anyhow::ensure!(progress, "serving stalled at {served}/{target} requests");
+    }
+    let req_per_s = target as f64 / t0.elapsed().as_secs_f64();
+
+    // phase 3: single-request round trips through the reactor pump while
+    // the full roster stays live — per-request latency must not grow with
+    // roster size
+    let mut samples = Vec::with_capacity(SAMPLES);
+    let mut echo = |_m: &Mux<SimLink>, ev: MuxEvent| -> anyhow::Result<bool> {
+        if let MuxEvent::Data(id) = ev {
+            if let Some(s) = streams.get_mut(&id) {
+                let f = s.recv()?;
+                let Message::Activations { step, .. } = f.message else {
+                    anyhow::bail!("unexpected request {:?}", f.message)
+                };
+                s.send(&echo_result(step))?;
+            }
+        }
+        Ok(false)
+    };
+    for i in 0..SAMPLES {
+        let c = &mut clients[(i * 7919) % n];
+        let t = Instant::now();
+        c.send(&request(BURST + i as u64))?;
+        let mut spins = 0u64;
+        loop {
+            pump_conn(&sm, 64, &mut echo)?;
+            match c.recv() {
+                Ok(_) => break,
+                Err(e) if is_would_block(&e) => {
+                    spins += 1;
+                    anyhow::ensure!(spins < 1_000_000, "echo never arrived");
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+
+    Ok(RosterStats {
+        streams: n,
+        p50_ns: quantile_ns(&samples, 0.5),
+        p99_ns: quantile_ns(&samples, 0.99),
+        req_per_s,
+        buffered,
+        bound,
+    })
+}
+
+fn main() {
+    println!("== bench group: serve ==");
+    let frame_len = request(0).encode().len() as u64;
+    let mut rosters = Vec::new();
+    for &n in &ROSTERS {
+        let r = run_roster(n).unwrap_or_else(|e| panic!("roster {n}: {e:#}"));
+        println!(
+            "reactor @{:>6} streams: p50 {:>10}  p99 {:>10}  {:>9.0} req/s  backpressure {:>9} B (bound {} B)",
+            r.streams,
+            fmt_ns(r.p50_ns),
+            fmt_ns(r.p99_ns),
+            r.req_per_s,
+            r.buffered,
+            r.bound
+        );
+        rosters.push(r);
+    }
+
+    // gates: latency must not grow with roster size, buffering must stay
+    // inside the credit-window bound
+    let p99_32 = rosters[0].p99_ns;
+    let p99_1k = rosters[1].p99_ns;
+    let ratio = p99_1k / p99_32;
+    let p99_ok = p99_1k <= P99_FLOOR_NS || ratio <= P99_RATIO_LIMIT;
+    let buffer_ok = rosters.iter().all(|r| r.buffered <= r.bound);
+
+    let mut top = BTreeMap::new();
+    top.insert("group".to_string(), Json::Str("serve".to_string()));
+    let mut reactor = BTreeMap::new();
+    reactor.insert("cores".to_string(), Json::Num(1.0));
+    reactor.insert(
+        "sessions_per_core".to_string(),
+        Json::Num(*ROSTERS.last().unwrap() as f64),
+    );
+    reactor.insert("flow_window_bytes".to_string(), Json::Num(WINDOW as f64));
+    reactor.insert("request_frame_bytes".to_string(), Json::Num(frame_len as f64));
+    reactor.insert("burst_per_stream".to_string(), Json::Num(BURST as f64));
+    top.insert("reactor".to_string(), Json::Obj(reactor));
+    top.insert(
+        "rosters".to_string(),
+        Json::Arr(
+            rosters
+                .iter()
+                .map(|r| {
+                    let mut m = BTreeMap::new();
+                    m.insert("streams".to_string(), Json::Num(r.streams as f64));
+                    m.insert("p50_request_ns".to_string(), Json::Num(r.p50_ns));
+                    m.insert("p99_request_ns".to_string(), Json::Num(r.p99_ns));
+                    m.insert("requests_per_sec".to_string(), Json::Num(r.req_per_s));
+                    m.insert(
+                        "buffered_bytes_under_backpressure".to_string(),
+                        Json::Num(r.buffered as f64),
+                    );
+                    m.insert("buffered_bound_bytes".to_string(), Json::Num(r.bound as f64));
+                    Json::Obj(m)
+                })
+                .collect(),
+        ),
+    );
+    let mut gates = BTreeMap::new();
+    gates.insert("p99_ratio_limit".to_string(), Json::Num(P99_RATIO_LIMIT));
+    gates.insert("p99_32_ns".to_string(), Json::Num(p99_32));
+    gates.insert("p99_1k_ns".to_string(), Json::Num(p99_1k));
+    gates.insert("p99_1k_vs_32_ratio".to_string(), Json::Num(ratio));
+    gates.insert("p99_ok".to_string(), Json::Bool(p99_ok));
+    gates.insert("buffer_bound_ok".to_string(), Json::Bool(buffer_ok));
+    gates.insert("pass".to_string(), Json::Bool(p99_ok && buffer_ok));
+    top.insert("gates".to_string(), Json::Obj(gates));
+
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    match std::fs::write(out, Json::Obj(top).to_string_pretty()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+
+    if !buffer_ok {
+        eprintln!("GATE FAIL: backpressure buffering exceeded streams x (window + frame)");
+    }
+    if !p99_ok {
+        eprintln!(
+            "GATE FAIL: p99 @1k streams is {:.2}x the 32-stream baseline (limit {P99_RATIO_LIMIT})",
+            ratio
+        );
+    }
+    if !(p99_ok && buffer_ok) {
+        std::process::exit(1);
+    }
+}

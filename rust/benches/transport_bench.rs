@@ -6,7 +6,7 @@
 use splitfed::bench_util::Bench;
 use splitfed::compress::Payload;
 use splitfed::transport::sim::{LinkModel, SimNet};
-use splitfed::transport::{FragPolicy, Mux, MuxEvent, TcpTransport, Transport};
+use splitfed::transport::{FragPolicy, Mux, MuxConfig, MuxEvent, TcpTransport, Transport};
 use splitfed::wire::{Frame, Message};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -56,8 +56,8 @@ fn main() {
     {
         let net = fast_net();
         let (a, bb) = net.pair();
-        let cm = Mux::initiator(a);
-        let sm = Mux::acceptor(bb);
+        let cm = Mux::with_config(a, MuxConfig::initiator()).unwrap();
+        let sm = Mux::with_config(bb, MuxConfig::acceptor()).unwrap();
         let mut cs = cm.open_stream().unwrap();
         assert!(matches!(sm.next_event().unwrap(), MuxEvent::Opened(_)));
         let mut ss = sm.accept_stream(cs.id()).unwrap();
@@ -72,8 +72,8 @@ fn main() {
     {
         let net = fast_net();
         let (a, bb) = net.pair();
-        let cm = Mux::initiator(a);
-        let sm = Mux::acceptor(bb);
+        let cm = Mux::with_config(a, MuxConfig::initiator()).unwrap();
+        let sm = Mux::with_config(bb, MuxConfig::acceptor()).unwrap();
         let mut senders = Vec::new();
         let mut receivers = Vec::new();
         for _ in 0..8 {
@@ -130,7 +130,8 @@ fn main() {
         let addr = listener.local_addr().unwrap();
         let echo = std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
-            let sm = Mux::acceptor(TcpTransport::from_stream(stream));
+            let sm = Mux::with_config(TcpTransport::from_stream(stream), MuxConfig::acceptor())
+                .unwrap();
             let MuxEvent::Opened(id) = sm.next_event().unwrap() else {
                 panic!("expected stream open");
             };
@@ -142,7 +143,8 @@ fn main() {
                 }
             }
         });
-        let cm = Mux::initiator(TcpTransport::connect(addr).unwrap());
+        let cm = Mux::with_config(TcpTransport::connect(addr).unwrap(), MuxConfig::initiator())
+            .unwrap();
         let mut cs = cm.open_stream().unwrap();
         let f = frame_of(16 * 1024);
         b.run_bytes("mux tcp loopback roundtrip 16KiB", 2 * 16 * 1024, || {
@@ -172,12 +174,14 @@ fn main() {
     for frag in [None, Some(1024usize)] {
         let net = fast_net();
         let (a, bb) = net.pair();
-        let cm = Mux::initiator(a);
-        let sm = Mux::acceptor(bb);
+        let mut ccfg = MuxConfig::initiator();
+        let mut scfg = MuxConfig::acceptor();
         if let Some(max) = frag {
-            cm.enable_fragmentation(FragPolicy::with_max_frame_size(max)).unwrap();
-            sm.enable_fragmentation(FragPolicy::with_max_frame_size(max)).unwrap();
+            ccfg = ccfg.fragmentation(FragPolicy::with_max_frame_size(max));
+            scfg = scfg.fragmentation(FragPolicy::with_max_frame_size(max));
         }
+        let cm = Mux::with_config(a, ccfg).unwrap();
+        let sm = Mux::with_config(bb, scfg).unwrap();
         let mut cs = cm.open_stream().unwrap();
         assert!(matches!(sm.next_event().unwrap(), MuxEvent::Opened(_)));
         let mut ss = sm.accept_stream(cs.id()).unwrap();
@@ -227,10 +231,11 @@ fn elephant_mouse_stall(frag: Option<usize>) -> Vec<f64> {
     let addr = listener.local_addr().unwrap();
     let server = std::thread::spawn(move || {
         let (stream, _) = listener.accept().unwrap();
-        let sm = Mux::acceptor(TcpTransport::from_stream(stream));
+        let mut scfg = MuxConfig::acceptor();
         if let Some(max) = frag {
-            sm.enable_fragmentation(FragPolicy::with_max_frame_size(max)).unwrap();
+            scfg = scfg.fragmentation(FragPolicy::with_max_frame_size(max));
         }
+        let sm = Mux::with_config(TcpTransport::from_stream(stream), scfg).unwrap();
         let mut opened = Vec::new();
         while opened.len() < 2 {
             if let MuxEvent::Opened(id) = sm.next_event().unwrap() {
@@ -254,10 +259,11 @@ fn elephant_mouse_stall(frag: Option<usize>) -> Vec<f64> {
         drain.join().unwrap();
     });
 
-    let cm = Mux::initiator(TcpTransport::connect(addr).unwrap());
+    let mut ccfg = MuxConfig::initiator();
     if let Some(max) = frag {
-        cm.enable_fragmentation(FragPolicy::with_max_frame_size(max)).unwrap();
+        ccfg = ccfg.fragmentation(FragPolicy::with_max_frame_size(max));
     }
+    let cm = Mux::with_config(TcpTransport::connect(addr).unwrap(), ccfg).unwrap();
     let es = cm.open_stream().unwrap();
     let mut ms = cm.open_stream().unwrap();
 

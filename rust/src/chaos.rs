@@ -38,8 +38,8 @@ use crate::json::Json;
 use crate::metrics::{EpochRecord, RunLedger};
 use crate::transport::sim::LinkModel;
 use crate::transport::{
-    FaultCounts, FaultPlan, FragPolicy, Mux, MuxEvent, RecoveryCounts, RecoveryPolicy, SimLink,
-    SimNet, Transport,
+    FaultCounts, FaultPlan, FlowPolicy, FragPolicy, Mux, MuxConfig, MuxEvent, RecoveryCounts,
+    RecoveryPolicy, SimLink, SimNet, Transport,
 };
 use crate::util::Rng;
 use crate::wire::{Control, Frame, Message};
@@ -72,6 +72,11 @@ pub struct ChaosConfig {
     /// far side, so the fault schedule can hit individual fragments.
     /// `None` = whole frames (the historical wire behavior).
     pub max_frame_size: Option<usize>,
+    /// `Some(w)` = enable per-stream credit-window flow control on both
+    /// muxes (window `w` wire bytes), so the schedule exercises `WndInc`
+    /// grants, credit parking, and window rebasing across reconnects.
+    /// `None` = unmetered (the historical wire behavior).
+    pub flow_window: Option<u32>,
 }
 
 impl ChaosConfig {
@@ -88,6 +93,7 @@ impl ChaosConfig {
             steps_per_epoch: 6,
             pipeline_depth: 1,
             max_frame_size: None,
+            flow_window: None,
         }
     }
 
@@ -102,6 +108,14 @@ impl ChaosConfig {
     /// duplicate, reorder, or corrupt a *middle* fragment.
     pub fn with_max_frame_size(mut self, n: usize) -> Self {
         self.max_frame_size = Some(n);
+        self
+    }
+
+    /// Meter every stream with a `w`-byte credit window. `w` must exceed
+    /// the largest single message's total wire cost (the mux rejects a
+    /// fragmented message that could never fit its window).
+    pub fn with_flow_window(mut self, w: u32) -> Self {
+        self.flow_window = Some(w);
         self
     }
 }
@@ -260,7 +274,7 @@ fn label_owner_loop(mux: Mux<SimLink>, cfg: ChaosConfig) -> Result<()> {
     let stream_id = loop {
         match mux.next_event()? {
             MuxEvent::Opened(id) => break id,
-            MuxEvent::Recovery(_) => continue,
+            MuxEvent::Recovery(_) | MuxEvent::Flow(_) => continue,
             other => bail!("label owner: unexpected pre-open event {other:?}"),
         }
     };
@@ -499,11 +513,15 @@ fn run_session_with(
         a.set_blocking(timeout);
         b.set_blocking(timeout);
     }
-    let cm = Mux::initiator(a);
-    let sm = Mux::acceptor(b);
+    let mut ccfg = MuxConfig::initiator();
+    let mut scfg = MuxConfig::acceptor();
     if let Some(n) = cfg.max_frame_size {
-        cm.enable_fragmentation(FragPolicy::with_max_frame_size(n))?;
-        sm.enable_fragmentation(FragPolicy::with_max_frame_size(n))?;
+        ccfg = ccfg.fragmentation(FragPolicy::with_max_frame_size(n));
+        scfg = scfg.fragmentation(FragPolicy::with_max_frame_size(n));
+    }
+    if let Some(w) = cfg.flow_window {
+        ccfg = ccfg.flow_control(FlowPolicy::with_window(w));
+        scfg = scfg.flow_control(FlowPolicy::with_window(w));
     }
     if recovery {
         let policy = RecoveryPolicy {
@@ -512,19 +530,19 @@ fn run_session_with(
             poll_timeout_ms: 30_000,
             ..RecoveryPolicy::default()
         };
-        cm.enable_recovery(policy);
-        sm.enable_recovery(policy);
         let nc = net.clone();
-        cm.set_reconnector(move |_| {
+        let ns = net.clone();
+        ccfg = ccfg.recovery(policy).reconnector(move |_| {
             nc.reconnect();
             Ok(None)
         });
-        let ns = net.clone();
-        sm.set_reconnector(move |_| {
+        scfg = scfg.recovery(policy).reconnector(move |_| {
             ns.reconnect();
             Ok(None)
         });
     }
+    let cm = Mux::with_config(a, ccfg)?;
+    let sm = Mux::with_config(b, scfg)?;
     let sm_counts = sm.clone();
     let cfg_lo = cfg.clone();
     let lo = std::thread::spawn(move || label_owner_loop(sm, cfg_lo));
@@ -570,6 +588,8 @@ pub struct ChaosVerdict {
     pub recovery: RecoveryCounts,
     /// `Some(n)` when both runs fragmented at this `max_frame_size`.
     pub max_frame_size: Option<usize>,
+    /// `Some(w)` when both runs metered streams with this credit window.
+    pub flow_window: Option<u32>,
 }
 
 /// Run one schedule: clean baseline, faulty run, bit-identity check.
@@ -586,6 +606,20 @@ pub fn run_schedule_fragmented(
     method_spec: &str,
     max_frame_size: Option<usize>,
 ) -> ChaosVerdict {
+    run_schedule_configured(seed, method_spec, max_frame_size, None)
+}
+
+/// The fully-configured schedule runner: fragmentation and credit-window
+/// flow control each apply (when `Some`) to both muxes of BOTH runs, so
+/// the bit-identity verdict covers `WndInc` grants, credit parking, and
+/// window rebasing under every injected fault — alone and stacked on
+/// fragmentation (per-fragment credits).
+pub fn run_schedule_configured(
+    seed: u64,
+    method_spec: &str,
+    max_frame_size: Option<usize>,
+    flow_window: Option<u32>,
+) -> ChaosVerdict {
     let plan = fault_plan_for_seed(seed);
     let mut v = ChaosVerdict {
         seed,
@@ -596,6 +630,7 @@ pub fn run_schedule_fragmented(
         faults: FaultCounts::default(),
         recovery: RecoveryCounts::default(),
         max_frame_size,
+        flow_window,
     };
     let method = match Method::parse(method_spec) {
         Ok(m) => m,
@@ -606,6 +641,7 @@ pub fn run_schedule_fragmented(
     };
     let mut cfg = ChaosConfig::quick(seed, method);
     cfg.max_frame_size = max_frame_size;
+    cfg.flow_window = flow_window;
     let clean = match run_session(&cfg, FaultPlan::none()) {
         Ok(o) => o,
         Err(e) => {
@@ -647,12 +683,17 @@ pub fn repro_command_fragmented(seed: u64, method_spec: &str, max_frame_size: us
     format!("{} --max-frame-size {max_frame_size}", repro_command(seed, method_spec))
 }
 
-/// The reproduction line for a verdict, fragmented or not.
+/// The reproduction line for a verdict: base command plus a flag per
+/// enabled transport layer (fragmentation, flow control).
 pub fn repro_for(v: &ChaosVerdict) -> String {
-    match v.max_frame_size {
+    let mut cmd = match v.max_frame_size {
         Some(n) => repro_command_fragmented(v.seed, &v.method_spec, n),
         None => repro_command(v.seed, &v.method_spec),
+    };
+    if let Some(w) = v.flow_window {
+        cmd.push_str(&format!(" --flow-window {w}"));
     }
+    cmd
 }
 
 /// Persist a failing verdict as a CI artifact (JSON next to BENCH_*.json).
@@ -665,6 +706,9 @@ pub fn write_repro(dir: &Path, v: &ChaosVerdict) -> Result<PathBuf> {
     root.insert("repro".into(), Json::Str(repro_for(v)));
     if let Some(n) = v.max_frame_size {
         root.insert("max_frame_size".into(), Json::Num(n as f64));
+    }
+    if let Some(w) = v.flow_window {
+        root.insert("flow_window".into(), Json::Num(w as f64));
     }
     let mut plan = BTreeMap::new();
     plan.insert("drop".into(), Json::Num(v.plan.drop));
@@ -753,6 +797,36 @@ mod tests {
         for spec in CHAOS_METHODS {
             let v = run_schedule_fragmented(91, spec, Some(96));
             assert!(v.ok, "{spec} seed 91 frag 96: {}", v.detail);
+        }
+    }
+
+    #[test]
+    fn flow_metered_clean_session_matches_unmetered_metrics() {
+        // credit-window flow control is a pure transport concern: the
+        // synthetic trainer's metrics cannot move when frames queue on
+        // credits, and WndInc grants keep the session from deadlocking
+        let open = ChaosConfig::quick(33, Method::None);
+        let metered = open.clone().with_flow_window(4096);
+        let a = run_session(&open, FaultPlan::none()).unwrap();
+        let b = run_session(&metered, FaultPlan::none()).unwrap();
+        assert_eq!(metrics_fingerprint(&a.ledger), metrics_fingerprint(&b.ledger));
+        // WndInc control frames are real traffic: the metered run costs
+        // strictly more wire bytes
+        assert!(
+            b.ledger.total_comm_bytes() > a.ledger.total_comm_bytes(),
+            "metered {} <= unmetered {}",
+            b.ledger.total_comm_bytes(),
+            a.ledger.total_comm_bytes()
+        );
+    }
+
+    #[test]
+    fn one_flow_metered_lossy_schedule_survives_per_codec_smoke() {
+        // the full flow-enabled matrix lives in rust/tests/chaos.rs; the
+        // tight window forces credit parking mid-session under faults
+        for spec in CHAOS_METHODS {
+            let v = run_schedule_configured(91, spec, None, Some(2048));
+            assert!(v.ok, "{spec} seed 91 flow 2048: {}", v.detail);
         }
     }
 

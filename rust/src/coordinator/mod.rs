@@ -30,9 +30,11 @@ pub use feature_owner::FeatureOwner;
 pub use label_owner::LabelOwner;
 pub use pipeline::{train_pipelined, PipelinedTrainer};
 pub use serve::{
-    serve_tcp, serve_tcp_resumable, MuxServer, RefusedStream, ServePool, ServeReport,
-    SessionReport,
+    pump_conn, MuxServer, PumpOutcome, RefusedStream, ServeHandle, ServeMode, ServeOptions,
+    ServeReport, SessionReport,
 };
+#[allow(deprecated)]
+pub use serve::{serve_tcp, serve_tcp_resumable, ServePool};
 pub use trainer::{train, Trainer};
 
 use anyhow::Result;

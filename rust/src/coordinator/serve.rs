@@ -4,12 +4,20 @@
 //! that all share ONE process-wide `Arc<Engine>` (and its
 //! compiled-executable cache) — across sessions AND across connections,
 //! so every artifact compiles exactly once no matter how many clients
-//! connect. Connections are served by a bounded worker pool
-//! (`serve_tcp`): accepted sockets queue until a worker frees up, which
-//! bounds thread count and memory instead of spawning per connection.
-//! Sessions within a connection are interleaved by the mux event pump.
-//! `MuxServer::warm_up` precompiles every artifact a negotiation could
-//! select, so the first request never pays a compile.
+//! connect. `MuxServer::warm_up` precompiles every artifact a
+//! negotiation could select, so the first request never pays a compile.
+//!
+//! `MuxServer::serve(listener, ServeOptions)` is the one entry point.
+//! `ServeMode::Blocking` serves each connection from a bounded worker
+//! pool (accepted sockets queue until a worker frees up, which bounds
+//! thread count and memory instead of spawning per connection).
+//! `ServeMode::Reactor` serves EVERY connection from one thread: sockets
+//! run nonblocking, and the reactor round-robins `Mux::next_event` over
+//! the roster until each link reports a typed `WouldBlock`, so a slow or
+//! idle peer costs a poll — not a parked thread. Per-stream memory under
+//! either mode is bounded by the mux credit window when
+//! `ServeOptions::flow_control` is set. Sessions within a connection are
+//! interleaved by the mux event pump in both modes.
 //!
 //! Sessions are heterogeneous: each stream's `OpenStream` body carries a
 //! `CodecSpec` (method + cut geometry) and the server constructs that
@@ -21,17 +29,19 @@
 //! running.
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::net::TcpListener;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::compress::codec_for;
 use crate::config::Method;
 use crate::data::{for_model, Dataset, Split};
 use crate::runtime::Engine;
 use crate::transport::{
-    is_connection_failure, LinkStats, Mux, MuxEvent, MuxStream, RecoveryPolicy, TcpTransport,
-    Transport,
+    is_connection_failure, FlowPolicy, LinkStats, Mux, MuxConfig, MuxEvent, MuxStream,
+    RecoveryPolicy, TcpTransport, Transport, TransportError,
 };
 use crate::wire::OpenSpec;
 
@@ -144,6 +154,31 @@ struct Session<T: Transport> {
     metric_sum: f64,
 }
 
+/// Live state of one serving connection: the session registry plus the
+/// dataset and cut geometry every stream on it shares. The event pump
+/// (`MuxServer::handle_event`) advances it one `MuxEvent` at a time, so
+/// the same state machine backs both the blocking per-connection loop
+/// (`serve_connection`) and the readiness reactor, which interleaves many
+/// connections' sets on one thread.
+struct SessionSet<T: Transport> {
+    cut_dim: usize,
+    ds: Box<dyn Dataset>,
+    n_test: usize,
+    sessions: HashMap<u32, Session<T>>,
+    done: Vec<SessionReport>,
+    refused: Vec<RefusedStream>,
+    refused_ids: HashSet<u32>,
+    served_any: bool,
+}
+
+impl<T: Transport> SessionSet<T> {
+    /// A hangup is this connection's normal end only when nothing is
+    /// mid-session and the connection actually served something.
+    fn idle(&self) -> bool {
+        self.sessions.is_empty() && self.served_any
+    }
+}
+
 /// Label-owner side of the multiplexed inference service.
 pub struct MuxServer {
     engine: Arc<Engine>,
@@ -205,183 +240,223 @@ impl MuxServer {
         Ok(keys)
     }
 
+    /// Build the per-connection serving state (dataset, geometry, empty
+    /// session registry) shared by every stream of one connection.
+    fn session_set<T: Transport>(&self) -> Result<SessionSet<T>> {
+        let meta = self.engine.manifest.model(&self.model)?.clone();
+        let ds =
+            for_model(&self.model, meta.n_classes, self.data_seed, self.n_train, self.n_test)?;
+        let n_test = ds.len(Split::Test);
+        Ok(SessionSet {
+            cut_dim: meta.cut_dim,
+            ds,
+            n_test,
+            sessions: HashMap::new(),
+            done: Vec::new(),
+            refused: Vec::new(),
+            refused_ids: HashSet::new(),
+            served_any: false,
+        })
+    }
+
+    /// Advance one connection's serving state by one mux event. Returns
+    /// `true` when the connection is finished (peer said `Goaway`). Both
+    /// the blocking loop and the reactor funnel every event through here,
+    /// so the two modes cannot drift in protocol behavior.
+    fn handle_event<T: Transport>(
+        &self,
+        set: &mut SessionSet<T>,
+        mux: &Mux<T>,
+        event: MuxEvent,
+    ) -> Result<bool> {
+        match event {
+            MuxEvent::Opened(id) => {
+                set.served_any = true;
+                let spec = mux.stream_spec(id).unwrap_or_default();
+                let mut stream = mux.accept_stream(id)?;
+                let negotiated = negotiate_spec(&spec, self.default_method, set.cut_dim)
+                    .and_then(|method| {
+                        let key = format!("{}/{}/top_eval", self.model, method.variant());
+                        if self.engine.manifest.artifacts.contains_key(key.as_str()) {
+                            Ok(method)
+                        } else {
+                            Err(format!(
+                                "model {} has no compiled variant '{}'",
+                                self.model,
+                                method.variant()
+                            ))
+                        }
+                    });
+                match negotiated {
+                    Ok(method) => {
+                        // constructor failures (manifest model missing,
+                        // param init) are model-global — they would hit
+                        // every session of this connection identically —
+                        // so they ARE connection-fatal, unlike the
+                        // spec-specific refusals screened above
+                        let lo = LabelOwner::new(
+                            self.engine.clone(),
+                            &self.model,
+                            method,
+                            stream,
+                            self.init_seed,
+                        )?;
+                        set.sessions.insert(
+                            id,
+                            Session { lo, method, step: 0, loss_sum: 0.0, metric_sum: 0.0 },
+                        );
+                        if self.verbose {
+                            println!(
+                                "session {id}: opened with {method} ({} live)",
+                                set.sessions.len()
+                            );
+                        }
+                    }
+                    Err(reason) => {
+                        // refuse this stream; the connection (and its
+                        // other sessions) stays up
+                        if self.verbose {
+                            println!("session {id}: refused ({reason})");
+                        }
+                        stream.close()?;
+                        // drop (don't buffer) whatever the refused peer
+                        // streams before it sees our CloseStream
+                        mux.discard_stream(id)?;
+                        set.refused.push(RefusedStream {
+                            stream_id: id,
+                            reason,
+                            stats: LinkStats::default(),
+                        });
+                        set.refused_ids.insert(id);
+                    }
+                }
+            }
+            MuxEvent::Data(id) => {
+                if set.refused_ids.contains(&id) {
+                    // a refused client may have streamed eagerly before
+                    // seeing our CloseStream; drop its frames
+                    return Ok(false);
+                }
+                let s = set
+                    .sessions
+                    .get_mut(&id)
+                    .ok_or_else(|| anyhow!("data frame for unknown session {id}"))?;
+                // one routed frame == one eval request for this session
+                let idx = eval_indices(s.step, s.lo.meta.batch, set.n_test);
+                let batch = set.ds.batch(Split::Test, &idx, false);
+                let (loss, metric) = s.lo.eval_step(s.step, &batch.y)?;
+                s.step += 1;
+                s.loss_sum += loss as f64;
+                s.metric_sum += metric as f64;
+            }
+            MuxEvent::Closed(id) => {
+                if set.refused_ids.contains(&id) {
+                    return Ok(false);
+                }
+                let s = set
+                    .sessions
+                    .remove(&id)
+                    .ok_or_else(|| anyhow!("close for unknown session {id}"))?;
+                if self.verbose {
+                    println!("session {id}: closed after {} requests", s.step);
+                }
+                set.done.push(finalize(id, s));
+            }
+            MuxEvent::Recovery(_) => {
+                // ack/resume housekeeping or a discarded duplicate —
+                // the mux already handled it
+            }
+            MuxEvent::Fragment(_) => {
+                // a slice of a large request was absorbed into the
+                // reassembly buffer; the complete message arrives as
+                // a Data event
+            }
+            MuxEvent::Flow(_) => {
+                // credits moved (a WndInc was applied); any frames parked
+                // on the exhausted window were flushed by the mux itself
+            }
+            MuxEvent::StreamError(id) => {
+                // stream-fatal fault (fragmentation fault or peer Rst):
+                // the mux already closed and accounted the stream — fail
+                // the one session, keep the connection and its other
+                // sessions up
+                let reason = mux
+                    .stream_frag_fault(id)
+                    .map(|f| f.to_string())
+                    .unwrap_or_else(|| "stream reset".into());
+                if self.verbose {
+                    println!("session {id}: failed ({reason})");
+                }
+                if let Some(s) = set.sessions.remove(&id) {
+                    // a live session: report what it served before the
+                    // fault (its stream stats ride the session report,
+                    // so no refused entry — bytes must count once)
+                    set.done.push(finalize(id, s));
+                } else {
+                    set.refused.push(RefusedStream {
+                        stream_id: id,
+                        reason,
+                        stats: LinkStats::default(),
+                    });
+                }
+                set.refused_ids.insert(id);
+            }
+            MuxEvent::Goaway { .. } => return Ok(true),
+        }
+        Ok(false)
+    }
+
+    /// Close out a finished connection's state into its report.
+    fn finish<T: Transport>(&self, mut set: SessionSet<T>, mux: &Mux<T>) -> ServeReport {
+        // sessions still open on goaway: account for them too
+        for (id, s) in set.sessions.drain() {
+            set.done.push(finalize(id, s));
+        }
+        set.done.sort_by_key(|r| r.stream_id);
+        // refused-stream stats are read at the end so our CloseStream reply
+        // is included in their byte accounting
+        for r in &mut set.refused {
+            if let Some(stats) = mux.stream_stats(r.stream_id) {
+                r.stats = stats;
+            }
+        }
+        set.refused.sort_by_key(|r| r.stream_id);
+        let engine_stats = self.engine.stats();
+        ServeReport {
+            sessions: set.done,
+            refused: set.refused,
+            physical: mux.physical_stats(),
+            compilations: engine_stats.compilations,
+            compile_secs: engine_stats.compile_secs,
+        }
+    }
+
     /// Serve sessions on one mux connection for the connection's lifetime:
     /// until the peer sends `Goaway` or hangs up with every stream closed.
     /// (Deliberately NOT "until the registry is empty" — an early session
     /// can finish before a slow-starting peer thread even opens its
     /// stream.)
     pub fn serve_connection<T: Transport>(&self, mux: &Mux<T>) -> Result<ServeReport> {
-        let meta = self.engine.manifest.model(&self.model)?.clone();
-        let ds =
-            for_model(&self.model, meta.n_classes, self.data_seed, self.n_train, self.n_test)?;
-        let n_test = ds.len(Split::Test);
-        let mut sessions: HashMap<u32, Session<T>> = HashMap::new();
-        let mut done: Vec<SessionReport> = Vec::new();
-        let mut refused: Vec<RefusedStream> = Vec::new();
-        let mut refused_ids: HashSet<u32> = HashSet::new();
-        let mut served_any = false;
-
+        let mut set = self.session_set()?;
         loop {
             match mux.next_event() {
-                Ok(MuxEvent::Opened(id)) => {
-                    served_any = true;
-                    let spec = mux.stream_spec(id).unwrap_or_default();
-                    let mut stream = mux.accept_stream(id)?;
-                    let negotiated = negotiate_spec(&spec, self.default_method, meta.cut_dim)
-                        .and_then(|method| {
-                            let key = format!("{}/{}/top_eval", self.model, method.variant());
-                            if self.engine.manifest.artifacts.contains_key(key.as_str()) {
-                                Ok(method)
-                            } else {
-                                Err(format!(
-                                    "model {} has no compiled variant '{}'",
-                                    self.model,
-                                    method.variant()
-                                ))
-                            }
-                        });
-                    match negotiated {
-                        Ok(method) => {
-                            // constructor failures (manifest model missing,
-                            // param init) are model-global — they would hit
-                            // every session of this connection identically —
-                            // so they ARE connection-fatal, unlike the
-                            // spec-specific refusals screened above
-                            let lo = LabelOwner::new(
-                                self.engine.clone(),
-                                &self.model,
-                                method,
-                                stream,
-                                self.init_seed,
-                            )?;
-                            sessions.insert(
-                                id,
-                                Session { lo, method, step: 0, loss_sum: 0.0, metric_sum: 0.0 },
-                            );
-                            if self.verbose {
-                                println!(
-                                    "session {id}: opened with {method} ({} live)",
-                                    sessions.len()
-                                );
-                            }
-                        }
-                        Err(reason) => {
-                            // refuse this stream; the connection (and its
-                            // other sessions) stays up
-                            if self.verbose {
-                                println!("session {id}: refused ({reason})");
-                            }
-                            stream.close()?;
-                            // drop (don't buffer) whatever the refused peer
-                            // streams before it sees our CloseStream
-                            mux.discard_stream(id)?;
-                            refused.push(RefusedStream {
-                                stream_id: id,
-                                reason,
-                                stats: LinkStats::default(),
-                            });
-                            refused_ids.insert(id);
-                        }
+                Ok(ev) => {
+                    if self.handle_event(&mut set, mux, ev)? {
+                        break;
                     }
                 }
-                Ok(MuxEvent::Data(id)) => {
-                    if refused_ids.contains(&id) {
-                        // a refused client may have streamed eagerly before
-                        // seeing our CloseStream; drop its frames
-                        continue;
-                    }
-                    let s = sessions
-                        .get_mut(&id)
-                        .ok_or_else(|| anyhow!("data frame for unknown session {id}"))?;
-                    // one routed frame == one eval request for this session
-                    let idx = eval_indices(s.step, s.lo.meta.batch, n_test);
-                    let batch = ds.batch(Split::Test, &idx, false);
-                    let (loss, metric) = s.lo.eval_step(s.step, &batch.y)?;
-                    s.step += 1;
-                    s.loss_sum += loss as f64;
-                    s.metric_sum += metric as f64;
-                }
-                Ok(MuxEvent::Closed(id)) => {
-                    if refused_ids.contains(&id) {
-                        continue;
-                    }
-                    let s = sessions
-                        .remove(&id)
-                        .ok_or_else(|| anyhow!("close for unknown session {id}"))?;
-                    if self.verbose {
-                        println!("session {id}: closed after {} requests", s.step);
-                    }
-                    done.push(finalize(id, s));
-                }
-                Ok(MuxEvent::Recovery(_)) => {
-                    // ack/resume housekeeping or a discarded duplicate —
-                    // the mux already handled it
-                    continue;
-                }
-                Ok(MuxEvent::Fragment(_)) => {
-                    // a slice of a large request was absorbed into the
-                    // reassembly buffer; the complete message arrives as
-                    // a Data event
-                    continue;
-                }
-                Ok(MuxEvent::StreamError(id)) => {
-                    // fragmentation fault: the mux already closed and
-                    // accounted the stream — fail the one session, keep
-                    // the connection and its other sessions up
-                    let reason = mux
-                        .stream_frag_fault(id)
-                        .map(|f| f.to_string())
-                        .unwrap_or_else(|| "fragmentation fault".into());
-                    if self.verbose {
-                        println!("session {id}: failed ({reason})");
-                    }
-                    if let Some(s) = sessions.remove(&id) {
-                        // a live session: report what it served before the
-                        // fault (its stream stats ride the session report,
-                        // so no refused entry — bytes must count once)
-                        done.push(finalize(id, s));
-                    } else {
-                        refused.push(RefusedStream {
-                            stream_id: id,
-                            reason,
-                            stats: LinkStats::default(),
-                        });
-                    }
-                    refused_ids.insert(id);
-                }
-                Ok(MuxEvent::Goaway { .. }) => break,
                 Err(e) => {
                     // a peer hangup after every session closed is the normal
                     // end; anything else (CRC mismatch, unknown stream, ...)
                     // is a protocol violation even with no sessions live
-                    if is_connection_failure(&e) && sessions.is_empty() && served_any {
+                    if is_connection_failure(&e) && set.idle() {
                         break;
                     }
                     return Err(e);
                 }
             }
         }
-        // sessions still open on goaway: account for them too
-        for (id, s) in sessions.drain() {
-            done.push(finalize(id, s));
-        }
-        done.sort_by_key(|r| r.stream_id);
-        // refused-stream stats are read at the end so our CloseStream reply
-        // is included in their byte accounting
-        for r in &mut refused {
-            if let Some(stats) = mux.stream_stats(r.stream_id) {
-                r.stats = stats;
-            }
-        }
-        refused.sort_by_key(|r| r.stream_id);
-        let engine_stats = self.engine.stats();
-        Ok(ServeReport {
-            sessions: done,
-            refused,
-            physical: mux.physical_stats(),
-            compilations: engine_stats.compilations,
-            compile_secs: engine_stats.compile_secs,
-        })
+        Ok(self.finish(set, mux))
     }
 }
 
@@ -398,17 +473,275 @@ fn finalize<T: Transport>(id: u32, s: Session<T>) -> SessionReport {
     }
 }
 
-/// Serve one *resumable* connection lineage: accept a connection, serve
-/// its sessions with the mux recovery layer enabled, and — if the
-/// connection dies mid-session — accept the client's replacement
-/// connection from the same listener and resume every live session
-/// (`ResumeStream` handshake + replay) instead of erroring. Session state
-/// (`LabelOwner` parameters, step counters) survives the reconnect
-/// because the `Mux` and its stream handles persist across it; only the
-/// physical transport is swapped underneath them.
+/// What one `pump_conn` pass over a connection observed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PumpOutcome {
+    /// The link had nothing ready (typed `WouldBlock` before any event).
+    Idle,
+    /// This many events were handled before the link drained or the
+    /// fairness budget ran out.
+    Progress(usize),
+    /// The handler declared the connection finished (peer `Goaway`).
+    Finished,
+}
+
+/// One reactor turn over one nonblocking connection: pump `mux.next_event`
+/// until the link reports a typed [`TransportError::WouldBlock`], the
+/// handler returns `true` (finished), or `budget` events were handled
+/// (fairness: a saturating peer cannot monopolize the reactor thread).
+/// Any other error — protocol violation, hangup — propagates to the
+/// caller, which owns the is-this-a-normal-end decision.
 ///
-/// The lineage ends like any other connection: client `Goaway`, or a
-/// hangup with no live sessions.
+/// Engine-free and transport-generic: `benches/serve_bench.rs` drives the
+/// same pump over an echo handler to measure the serving plane without
+/// compiled artifacts.
+pub fn pump_conn<T: Transport>(
+    mux: &Mux<T>,
+    budget: usize,
+    on_event: &mut dyn FnMut(&Mux<T>, MuxEvent) -> Result<bool>,
+) -> Result<PumpOutcome> {
+    let mut handled = 0;
+    while handled < budget {
+        match mux.next_event() {
+            Ok(ev) => {
+                handled += 1;
+                if on_event(mux, ev)? {
+                    return Ok(PumpOutcome::Finished);
+                }
+            }
+            Err(e) if TransportError::of(&e) == Some(TransportError::WouldBlock) => {
+                return Ok(if handled == 0 {
+                    PumpOutcome::Idle
+                } else {
+                    PumpOutcome::Progress(handled)
+                });
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(PumpOutcome::Progress(handled))
+}
+
+/// Events one reactor turn may hand a single connection before rotating
+/// to the next — the fairness quantum.
+const REACTOR_BUDGET: usize = 32;
+
+/// How a `MuxServer` maps connections onto threads.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ServeMode {
+    /// A bounded worker pool, one blocking thread per live connection;
+    /// accepted sockets queue until a worker frees up.
+    #[default]
+    Blocking,
+    /// One readiness reactor thread driving every connection over
+    /// nonblocking sockets: `Mux::next_event` until typed `WouldBlock`,
+    /// round-robin across the roster. Holds thousands of idle or slow
+    /// connections without a thread each; compute runs inline through
+    /// the shared `Arc<Engine>` executable cache.
+    Reactor,
+}
+
+/// Everything `MuxServer::serve` needs to know, with builder-style
+/// setters. `Default` is one blocking connection, auto-sized workers,
+/// warm-up on, no recovery, no flow control.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Physical connections to accept before the listener is done.
+    pub connections: usize,
+    /// Blocking-mode pool size; `0` = min(connections, cores). Ignored by
+    /// the reactor, which is single-threaded by design.
+    pub workers: usize,
+    pub mode: ServeMode,
+    /// Enable the mux recovery layer and serve ONE resumable connection
+    /// lineage: if the connection dies mid-session, the client's
+    /// replacement connection is accepted from the same listener and every
+    /// live session resumes (`ResumeStream` + replay). Requires
+    /// `connections == 1` and the blocking mode (the reconnector parks in
+    /// `listener.accept()`).
+    pub recovery: Option<RecoveryPolicy>,
+    /// Per-stream credit-window flow control on every served connection:
+    /// a peer can keep at most `window` unconsumed wire bytes in flight
+    /// per stream, so server-side buffering is bounded no matter how fast
+    /// or hostile the peer streams.
+    pub flow_control: Option<FlowPolicy>,
+    /// Precompile every artifact a negotiation could select before the
+    /// first socket is accepted.
+    pub warm_up: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            connections: 1,
+            workers: 0,
+            mode: ServeMode::Blocking,
+            recovery: None,
+            flow_control: None,
+            warm_up: true,
+        }
+    }
+}
+
+impl ServeOptions {
+    pub fn connections(mut self, n: usize) -> Self {
+        self.connections = n;
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    pub fn mode(mut self, mode: ServeMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Shorthand for `.mode(ServeMode::Reactor)`.
+    pub fn reactor(self) -> Self {
+        self.mode(ServeMode::Reactor)
+    }
+
+    pub fn recovery(mut self, policy: RecoveryPolicy) -> Self {
+        self.recovery = Some(policy);
+        self
+    }
+
+    pub fn flow_control(mut self, policy: FlowPolicy) -> Self {
+        self.flow_control = Some(policy);
+        self
+    }
+
+    pub fn warm_up(mut self, on: bool) -> Self {
+        self.warm_up = on;
+        self
+    }
+}
+
+/// Per-connection outcomes one serving thread collected, keyed by accept
+/// order.
+type ConnReports = Vec<(usize, Result<ServeReport>)>;
+
+/// Handle to a running `MuxServer::serve` call.
+pub struct ServeHandle {
+    acceptor: Option<std::thread::JoinHandle<Result<()>>>,
+    workers: Vec<std::thread::JoinHandle<ConnReports>>,
+}
+
+impl ServeHandle {
+    /// Wait for every connection to finish; reports come back in accept
+    /// order. An accept failure or the first connection error fails the
+    /// join.
+    pub fn join(self) -> Result<Vec<ServeReport>> {
+        let mut indexed: ConnReports = Vec::new();
+        for w in self.workers {
+            indexed.extend(w.join().map_err(|_| anyhow!("serve worker panicked"))?);
+        }
+        if let Some(a) = self.acceptor {
+            a.join().map_err(|_| anyhow!("serve acceptor panicked"))??;
+        }
+        indexed.sort_by_key(|(idx, _)| *idx);
+        indexed
+            .into_iter()
+            .map(|(idx, r)| r.with_context(|| format!("connection {idx}")))
+            .collect()
+    }
+}
+
+impl MuxServer {
+    /// THE serving entry point: accept `opts.connections` connections from
+    /// `listener` and serve them per `opts` — blocking pool, readiness
+    /// reactor, or a resumable recovery lineage — returning a handle whose
+    /// `join` yields per-connection reports in accept order. Replaces the
+    /// old `serve_tcp` / `serve_tcp_resumable` / `ServePool` trio.
+    pub fn serve(self: Arc<Self>, listener: TcpListener, opts: ServeOptions) -> Result<ServeHandle> {
+        if opts.connections == 0 {
+            bail!("ServeOptions::connections must be at least 1");
+        }
+        if let Some(fp) = &opts.flow_control {
+            fp.validate()?;
+        }
+        if opts.recovery.is_some() {
+            if opts.connections != 1 {
+                bail!(
+                    "recovery serves one resumable connection lineage, not {} connections \
+                     (each lineage must own the listener to accept replacements)",
+                    opts.connections
+                );
+            }
+            if opts.mode == ServeMode::Reactor {
+                bail!("recovery needs ServeMode::Blocking: its reconnector parks in accept()");
+            }
+        }
+        if opts.warm_up {
+            self.warm_up()?;
+        }
+        match (opts.mode, opts.recovery) {
+            (ServeMode::Reactor, _) => Ok(ServeHandle {
+                acceptor: None,
+                workers: vec![spawn_reactor(self, listener, &opts)],
+            }),
+            (_, Some(policy)) => Ok(ServeHandle {
+                acceptor: None,
+                workers: vec![spawn_lineage(self, listener, policy, opts.flow_control)],
+            }),
+            _ => self.serve_pool(listener, &opts),
+        }
+    }
+
+    /// Blocking mode: a bounded worker pool drains an accept-order queue,
+    /// every worker sharing this server (and its engine). Sockets past the
+    /// worker count sit accepted-but-unserved; the OS accept backlog
+    /// provides the upstream backpressure.
+    fn serve_pool(self: Arc<Self>, listener: TcpListener, opts: &ServeOptions) -> Result<ServeHandle> {
+        let queue = Arc::new(ConnQueue::new());
+        let n_workers =
+            if opts.workers == 0 { default_workers(opts.connections) } else { opts.workers.max(1) };
+        let flow = opts.flow_control;
+        let mut workers = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let queue = queue.clone();
+            let server = self.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut reports = Vec::new();
+                while let Some((idx, stream)) = queue.pop() {
+                    let mut cfg = MuxConfig::acceptor();
+                    if let Some(fp) = flow {
+                        cfg = cfg.flow_control(fp);
+                    }
+                    let r = Mux::with_config(TcpTransport::from_stream(stream), cfg)
+                        .and_then(|mux| server.serve_connection(&mux));
+                    reports.push((idx, r));
+                }
+                reports
+            }));
+        }
+        let connections = opts.connections;
+        let acceptor = std::thread::spawn(move || -> Result<()> {
+            for idx in 0..connections {
+                match listener.accept() {
+                    Ok((stream, _)) => queue.push(idx, stream),
+                    Err(e) => {
+                        queue.close();
+                        return Err(e).with_context(|| format!("accepting connection {idx}"));
+                    }
+                }
+            }
+            queue.close();
+            Ok(())
+        });
+        Ok(ServeHandle { acceptor: Some(acceptor), workers })
+    }
+}
+
+/// One resumable connection lineage (blocking): serve with the recovery
+/// layer on, and if the connection dies mid-session, accept the client's
+/// replacement from the same listener and resume every live session
+/// instead of erroring. Session state (`LabelOwner` parameters, step
+/// counters) survives the reconnect because the `Mux` and its stream
+/// handles persist across it; only the physical transport is swapped
+/// underneath them.
 ///
 /// Caveat: while a session is live and its connection dies, the
 /// reconnector blocks in `listener.accept()` waiting for the client's
@@ -416,6 +749,106 @@ fn finalize<T: Transport>(id: u32, s: Session<T>) -> SessionReport {
 /// parked in accept (bounding that wait needs a listener deadline, which
 /// `std::net` does not offer; callers needing one should close the
 /// listener from outside or move to a nonblocking accept loop).
+fn spawn_lineage(
+    server: Arc<MuxServer>,
+    listener: TcpListener,
+    policy: RecoveryPolicy,
+    flow: Option<FlowPolicy>,
+) -> std::thread::JoinHandle<ConnReports> {
+    std::thread::spawn(move || {
+        let run = (|| -> Result<ServeReport> {
+            let (stream, _) = listener.accept()?;
+            let mut cfg = MuxConfig::acceptor().recovery(policy).reconnector(move |_attempt| {
+                let (stream, _) = listener.accept()?;
+                Ok(Some(TcpTransport::from_stream(stream)))
+            });
+            if let Some(fp) = flow {
+                cfg = cfg.flow_control(fp);
+            }
+            let mux = Mux::with_config(TcpTransport::from_stream(stream), cfg)?;
+            server.serve_connection(&mux)
+        })();
+        vec![(0, run)]
+    })
+}
+
+/// The readiness reactor: accept the whole roster, flip every socket
+/// nonblocking, then round-robin `pump_conn` over the connections from
+/// this ONE thread. A connection leaves the rotation when its peer says
+/// `Goaway`, hangs up idle, or errors; an all-idle sweep sleeps briefly
+/// instead of spinning the CPU.
+fn spawn_reactor(
+    server: Arc<MuxServer>,
+    listener: TcpListener,
+    opts: &ServeOptions,
+) -> std::thread::JoinHandle<ConnReports> {
+    let connections = opts.connections;
+    let flow = opts.flow_control;
+    std::thread::spawn(move || {
+        let mut reports: ConnReports = Vec::new();
+        let mut conns: Vec<(usize, Mux<TcpTransport>, SessionSet<TcpTransport>)> = Vec::new();
+        for idx in 0..connections {
+            let built = (|| -> Result<(Mux<TcpTransport>, SessionSet<TcpTransport>)> {
+                let (stream, _) = listener.accept()?;
+                let mut io = TcpTransport::from_stream(stream);
+                io.set_nonblocking(true)?;
+                let mut cfg = MuxConfig::acceptor();
+                if let Some(fp) = flow {
+                    cfg = cfg.flow_control(fp);
+                }
+                let mux = Mux::with_config(io, cfg)?;
+                let set = server.session_set()?;
+                Ok((mux, set))
+            })();
+            match built {
+                Ok((mux, set)) => conns.push((idx, mux, set)),
+                Err(e) => reports.push((idx, Err(e))),
+            }
+        }
+        while !conns.is_empty() {
+            let mut progressed = false;
+            let mut i = 0;
+            while i < conns.len() {
+                let (_, mux, set) = &mut conns[i];
+                let outcome =
+                    pump_conn(mux, REACTOR_BUDGET, &mut |m, ev| server.handle_event(set, m, ev));
+                match outcome {
+                    Ok(PumpOutcome::Idle) => i += 1,
+                    Ok(PumpOutcome::Progress(_)) => {
+                        progressed = true;
+                        i += 1;
+                    }
+                    Ok(PumpOutcome::Finished) => {
+                        progressed = true;
+                        let (idx, mux, set) = conns.remove(i);
+                        reports.push((idx, Ok(server.finish(set, &mux))));
+                    }
+                    Err(e) => {
+                        progressed = true;
+                        let (idx, mux, set) = conns.remove(i);
+                        if is_connection_failure(&e) && set.idle() {
+                            reports.push((idx, Ok(server.finish(set, &mux))));
+                        } else {
+                            reports.push((idx, Err(e)));
+                        }
+                    }
+                }
+            }
+            if !progressed {
+                // every link drained: yield instead of a hot poll loop
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        reports
+    })
+}
+
+/// Serve one *resumable* connection lineage (the pre-`ServeOptions`
+/// surface, kept as a thin shim for one PR).
+#[deprecated(
+    since = "0.7.0",
+    note = "use MuxServer::serve(listener, ServeOptions::default().recovery(policy))"
+)]
 pub fn serve_tcp_resumable(
     listener: std::net::TcpListener,
     artifacts_dir: std::path::PathBuf,
@@ -424,18 +857,12 @@ pub fn serve_tcp_resumable(
     data_seed: u64,
     policy: RecoveryPolicy,
 ) -> Result<std::thread::JoinHandle<Result<ServeReport>>> {
-    let (stream, _) = listener.accept()?;
-    Ok(std::thread::spawn(move || -> Result<ServeReport> {
-        let engine = Arc::new(Engine::load(&artifacts_dir)?);
-        let server = MuxServer::new(engine, &model, default_method, data_seed);
-        server.warm_up()?;
-        let mux = Mux::acceptor(TcpTransport::from_stream(stream));
-        mux.enable_recovery(policy);
-        mux.set_reconnector(move |_attempt| {
-            let (stream, _) = listener.accept()?;
-            Ok(Some(TcpTransport::from_stream(stream)))
-        });
-        server.serve_connection(&mux)
+    let engine = Arc::new(Engine::load(&artifacts_dir)?);
+    let server = Arc::new(MuxServer::new(engine, &model, default_method, data_seed));
+    let handle = server.serve(listener, ServeOptions::default().recovery(policy))?;
+    Ok(std::thread::spawn(move || {
+        let mut reports = handle.join()?;
+        reports.pop().ok_or_else(|| anyhow!("lineage produced no report"))
     }))
 }
 
@@ -481,31 +908,6 @@ impl ConnQueue {
     }
 }
 
-/// Per-connection outcomes a single pool worker collected, keyed by
-/// accept order.
-type ConnReports = Vec<(usize, Result<ServeReport>)>;
-
-/// Handle to a running `serve_tcp` worker pool.
-pub struct ServePool {
-    workers: Vec<std::thread::JoinHandle<ConnReports>>,
-}
-
-impl ServePool {
-    /// Wait for every connection to finish; reports come back in accept
-    /// order. The first connection error fails the join.
-    pub fn join(self) -> Result<Vec<ServeReport>> {
-        let mut indexed: ConnReports = Vec::new();
-        for w in self.workers {
-            indexed.extend(w.join().map_err(|_| anyhow!("serve worker panicked"))?);
-        }
-        indexed.sort_by_key(|(idx, _)| *idx);
-        indexed
-            .into_iter()
-            .map(|(idx, r)| r.with_context(|| format!("connection {idx}")))
-            .collect()
-    }
-}
-
 /// Pool worker count for a given connection count: never more workers
 /// than connections, never more than the machine has cores for.
 fn default_workers(connections: usize) -> usize {
@@ -513,13 +915,17 @@ fn default_workers(connections: usize) -> usize {
     connections.clamp(1, cores.max(1))
 }
 
-/// Accept `connections` physical connections and serve them from a
-/// bounded pool of `workers` threads (`0` = min(connections, cores)),
-/// every connection sharing ONE `Arc<Engine>` — one compilation per
-/// artifact process-wide, warmed before the first socket is accepted.
-/// Accepted sockets queue until a worker frees up (bounded threads +
-/// memory, unlike the old thread-per-connection spawn); the OS accept
-/// backlog provides the upstream backpressure while they wait.
+/// The old name for [`ServeHandle`], from when only `serve_tcp`'s
+/// blocking pool produced one.
+#[deprecated(since = "0.7.0", note = "renamed to ServeHandle")]
+pub type ServePool = ServeHandle;
+
+/// Accept and serve `connections` connections from a bounded blocking
+/// pool (the pre-`ServeOptions` surface, kept as a thin shim for one PR).
+#[deprecated(
+    since = "0.7.0",
+    note = "use MuxServer::serve(listener, ServeOptions::default().connections(n).workers(w))"
+)]
 pub fn serve_tcp(
     listener: &std::net::TcpListener,
     connections: usize,
@@ -531,35 +937,10 @@ pub fn serve_tcp(
 ) -> Result<ServePool> {
     let engine = Arc::new(Engine::load(&artifacts_dir)?);
     let server = Arc::new(MuxServer::new(engine, &model, default_method, data_seed));
-    server.warm_up()?;
-    let queue = Arc::new(ConnQueue::new());
-    let n_workers = if workers == 0 { default_workers(connections) } else { workers.max(1) };
-    let mut pool = ServePool { workers: Vec::with_capacity(n_workers) };
-    for _ in 0..n_workers {
-        let queue = queue.clone();
-        let server = server.clone();
-        pool.workers.push(std::thread::spawn(move || {
-            let mut reports = Vec::new();
-            while let Some((idx, stream)) = queue.pop() {
-                let mux = Mux::acceptor(TcpTransport::from_stream(stream));
-                reports.push((idx, server.serve_connection(&mux)));
-            }
-            reports
-        }));
-    }
-    // accept on the caller's thread (as before the pool): workers start
-    // serving connection 0 while connection 1 is still in accept()
-    for idx in 0..connections {
-        match listener.accept() {
-            Ok((stream, _)) => queue.push(idx, stream),
-            Err(e) => {
-                queue.close();
-                return Err(e).with_context(|| format!("accepting connection {idx}"));
-            }
-        }
-    }
-    queue.close();
-    Ok(pool)
+    server.serve(
+        listener.try_clone()?,
+        ServeOptions::default().connections(connections).workers(workers),
+    )
 }
 
 #[cfg(test)]
@@ -588,6 +969,26 @@ mod tests {
         let spec = OpenSpec::Spec(CodecSpec::new(Method::Topk { k: 500 }, 128));
         let err = negotiate_spec(&spec, Method::None, 128).unwrap_err();
         assert!(err.contains("k=500"), "{err}");
+    }
+
+    #[test]
+    fn serve_options_builder_composes() {
+        let o = ServeOptions::default();
+        assert_eq!(o.connections, 1);
+        assert_eq!(o.workers, 0);
+        assert_eq!(o.mode, ServeMode::Blocking);
+        assert!(o.recovery.is_none() && o.flow_control.is_none() && o.warm_up);
+        let o = ServeOptions::default()
+            .connections(3)
+            .workers(2)
+            .reactor()
+            .flow_control(FlowPolicy::with_window(1024))
+            .warm_up(false);
+        assert_eq!(o.connections, 3);
+        assert_eq!(o.workers, 2);
+        assert_eq!(o.mode, ServeMode::Reactor);
+        assert_eq!(o.flow_control.unwrap().window, 1024);
+        assert!(!o.warm_up);
     }
 
     #[test]

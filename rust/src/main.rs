@@ -6,6 +6,8 @@
 //! splitfed describe                                         (models + dataset table)
 //! splitfed check   [--filter mlp]                           (compile every artifact)
 //! splitfed serve   --role label-owner --addr 127.0.0.1:7070 (two-process TCP party)
+//! splitfed serve   --role mux-server --reactor --flow-window 65536
+//!                                                           (multi-session serving plane)
 //! splitfed chaos   --seed 42 [--method topk:k=6]            (replay a fault schedule)
 //! splitfed chaos   --seeds 100 [--shard 0/8]                (run a seed matrix)
 //! ```
@@ -16,7 +18,7 @@ use anyhow::{bail, Result};
 
 use splitfed::cli::Args;
 use splitfed::config::ExperimentConfig;
-use splitfed::coordinator::{FeatureOwner, LabelOwner, PipelinedTrainer, Trainer};
+use splitfed::coordinator::{FeatureOwner, LabelOwner, MuxServer, PipelinedTrainer, ServeOptions, Trainer};
 use splitfed::data::{for_model, Dataset, EpochIter, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
 use splitfed::transport::TcpTransport;
@@ -142,7 +144,7 @@ fn cmd_check(args: &Args) -> Result<()> {
 /// default is every codec in the registry. `--max-frame-size N` runs the
 /// schedules with frame fragmentation on. Engine-free: runs anywhere.
 fn cmd_chaos(args: &Args) -> Result<()> {
-    use splitfed::chaos::{repro_for, run_schedule_fragmented, write_repro, CHAOS_METHODS};
+    use splitfed::chaos::{repro_for, run_schedule_configured, write_repro, CHAOS_METHODS};
 
     let methods: Vec<String> = match args.get("method") {
         Some(m) => vec![m.to_string()],
@@ -159,6 +161,12 @@ fn cmd_chaos(args: &Args) -> Result<()> {
                 splitfed::wire::MIN_FRAME_SIZE
             );
         }
+    }
+    // meter every stream with this credit window (both the clean baseline
+    // and the faulty run); absent = unmetered, the historical wire shape
+    let flow_window: Option<u32> = args.get_parse("flow-window")?;
+    if let Some(w) = flow_window {
+        splitfed::transport::FlowPolicy::with_window(w).validate()?;
     }
     let seeds: Vec<u64> = if let Some(seed) = args.get_parse::<u64>("seed")? {
         vec![seed]
@@ -186,7 +194,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     let mut failures = 0usize;
     for method in &methods {
         for &seed in &seeds {
-            let v = run_schedule_fragmented(seed, method, max_frame_size);
+            let v = run_schedule_configured(seed, method, max_frame_size, flow_window);
             let status = if v.ok { "ok  " } else { "FAIL" };
             println!(
                 "{status} seed={seed:<6} method={method:<24} faults={:<4} \
@@ -300,7 +308,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 fo.mean_fwd_pct()
             );
         }
-        other => bail!("unknown role '{other}' (label-owner | feature-owner)"),
+        "mux-server" => {
+            // the fleet-scale serving plane: N physical connections, each
+            // carrying many concurrent inference sessions, behind ONE
+            // entry point — `--reactor` selects the readiness event loop
+            // (nonblocking sockets, one thread for the whole roster),
+            // `--flow-window` bounds per-stream buffering with mux
+            // credit-window flow control
+            let listener = std::net::TcpListener::bind(addr.as_str())?;
+            println!("mux server listening on {addr}");
+            let connections: usize = args.get_parse("connections")?.unwrap_or(1);
+            let workers: usize = args.get_parse("workers")?.unwrap_or(0);
+            // the role warm-up above compiled this party's artifacts
+            // already; serve's own warm-up pass is then a cache no-op
+            let mut opts = ServeOptions::default().connections(connections).workers(workers);
+            if args.has_flag("reactor") {
+                opts = opts.reactor();
+            }
+            if let Some(w) = args.get_parse::<u32>("flow-window")? {
+                opts = opts.flow_control(splitfed::transport::FlowPolicy::with_window(w));
+            }
+            let mut server = MuxServer::new(engine, &cfg.model, cfg.method, cfg.seed);
+            server.verbose = !args.has_flag("quiet");
+            let reports = Arc::new(server).serve(listener, opts)?.join()?;
+            for (i, r) in reports.iter().enumerate() {
+                println!(
+                    "connection {i}: {} sessions ({} refused), {} requests, \
+                     {:.2} MiB on the wire",
+                    r.sessions.len(),
+                    r.refused.len(),
+                    r.total_requests(),
+                    (r.physical.bytes_sent + r.physical.bytes_recv) as f64 / 1048576.0,
+                );
+            }
+        }
+        other => bail!("unknown role '{other}' (label-owner | feature-owner | mux-server)"),
     }
     Ok(())
 }

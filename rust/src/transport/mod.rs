@@ -25,7 +25,10 @@ pub mod mux;
 pub mod sim;
 pub mod tcp;
 
-pub use mux::{FragFault, FragPolicy, Mux, MuxEvent, MuxStream, RecoveryPolicy};
+pub use mux::{
+    FlowPolicy, FragFault, FragPolicy, Mux, MuxConfig, MuxEvent, MuxRole, MuxStream, Reconnector,
+    RecoveryPolicy,
+};
 pub use sim::{FaultPlan, ScriptedFault, SimLink, SimNet};
 pub use tcp::TcpTransport;
 

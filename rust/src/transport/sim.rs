@@ -336,12 +336,19 @@ impl SimNet {
     }
 }
 
-/// Recovery-plane and connection-teardown frames are exempt from fault
-/// injection so the fault schedule is indexed purely by data-frame sends
-/// (replayable from the seed) and recovery itself cannot be starved.
+/// Recovery-plane, flow-control, and connection-teardown frames are
+/// exempt from fault injection so the fault schedule is indexed purely by
+/// data-frame sends (replayable from the seed) and recovery itself cannot
+/// be starved. A faulted `WndInc` would also wedge a credit-limited
+/// sender with no retransmission path — flow-control frames are
+/// unsequenced by design (see `MsgType::sequenced`).
 fn fault_exempt(bytes: &[u8]) -> bool {
     bytes.get(OFF_TYPE).is_some_and(|&t| {
-        t == MsgType::Ack as u8 || t == MsgType::ResumeStream as u8 || t == MsgType::Goaway as u8
+        t == MsgType::Ack as u8
+            || t == MsgType::ResumeStream as u8
+            || t == MsgType::Goaway as u8
+            || t == MsgType::WndInc as u8
+            || t == MsgType::Rst as u8
     })
 }
 
@@ -843,8 +850,12 @@ mod tests {
             },
         ))
         .unwrap();
+        a.send(&Frame::new(0, Message::WndInc { delta: 4096 })).unwrap();
+        a.send(&Frame::new(0, Message::Rst { code: 1 })).unwrap();
         assert!(matches!(b.recv().unwrap().message, Message::Ack { .. }));
         assert!(matches!(b.recv().unwrap().message, Message::ResumeStream { .. }));
+        assert!(matches!(b.recv().unwrap().message, Message::WndInc { .. }));
+        assert!(matches!(b.recv().unwrap().message, Message::Rst { .. }));
         assert_eq!(a.stats().faults.total(), 0);
     }
 }

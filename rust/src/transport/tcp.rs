@@ -1,14 +1,14 @@
 //! TCP transport: the same frame protocol over a real socket, for the
 //! two-process deployment (`examples/serve_inference.rs`).
 
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 
 use anyhow::{Context, Result};
 
 use crate::wire::{Frame, HEADER_BYTES, OFF_LEN};
 
-use super::{LinkStats, Transport};
+use super::{LinkStats, Transport, TransportError};
 
 /// Largest frame `recv` will allocate for before declaring the stream
 /// hostile or desynced. A fragmenting sender never exceeds its
@@ -20,6 +20,11 @@ pub struct TcpTransport {
     stream: TcpStream,
     stats: LinkStats,
     read_buf: Vec<u8>,
+    /// Bytes of the in-progress frame already read into `read_buf`. A
+    /// nonblocking `recv` that hits `WouldBlock` mid-frame keeps the
+    /// partial frame here and resumes exactly where it left off on the
+    /// next call.
+    filled: usize,
     max_recv_frame: usize,
 }
 
@@ -29,6 +34,7 @@ impl TcpTransport {
             stream,
             stats: LinkStats::default(),
             read_buf: Vec::new(),
+            filled: 0,
             max_recv_frame: DEFAULT_MAX_RECV_FRAME,
         }
     }
@@ -64,20 +70,70 @@ impl TcpTransport {
     pub fn set_max_recv_frame(&mut self, n: usize) {
         self.max_recv_frame = n;
     }
+
+    /// Switch the socket between blocking and nonblocking mode. In
+    /// nonblocking mode `recv` returns a typed
+    /// [`TransportError::WouldBlock`] whenever the socket has no bytes
+    /// ready — including MID-frame, where the partial frame stays
+    /// buffered and the next `recv` resumes it. This is what the
+    /// readiness-based serve reactor drives.
+    pub fn set_nonblocking(&mut self, on: bool) -> Result<()> {
+        self.stream.set_nonblocking(on)?;
+        Ok(())
+    }
+
+    /// Pull bytes until `read_buf[..target]` is filled or the socket runs
+    /// dry (`WouldBlock`) / disconnects.
+    fn fill_to(&mut self, target: usize) -> Result<()> {
+        if self.read_buf.len() < target {
+            self.read_buf.resize(target, 0);
+        }
+        while self.filled < target {
+            match self.stream.read(&mut self.read_buf[self.filled..target]) {
+                Ok(0) => {
+                    return Err(anyhow::Error::new(TransportError::Disconnected)
+                        .context("peer closed the connection"));
+                }
+                Ok(n) => self.filled += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    return Err(anyhow::Error::new(TransportError::WouldBlock)
+                        .context("socket has no bytes ready"));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
 }
 
 impl Transport for TcpTransport {
     fn send_encoded(&mut self, bytes: Vec<u8>) -> Result<()> {
-        self.stream.write_all(&bytes)?;
+        // loop rather than write_all: on a nonblocking socket a full
+        // send buffer surfaces as WouldBlock mid-frame, and a partial
+        // frame must never be abandoned (it would desync the stream)
+        let mut off = 0;
+        while off < bytes.len() {
+            match self.stream.write(&bytes[off..]) {
+                Ok(0) => {
+                    return Err(anyhow::Error::new(TransportError::Disconnected)
+                        .context("peer closed the connection mid-send"));
+                }
+                Ok(n) => off += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::yield_now(),
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
         self.stats.frames_sent += 1;
         self.stats.bytes_sent += bytes.len() as u64;
         Ok(())
     }
 
     fn recv(&mut self) -> Result<Frame> {
-        // read header, learn body length, read body
-        self.read_buf.resize(HEADER_BYTES, 0);
-        self.stream.read_exact(&mut self.read_buf)?;
+        // read header, learn body length, read body — incrementally, so
+        // a nonblocking WouldBlock anywhere resumes cleanly next call
+        self.fill_to(HEADER_BYTES)?;
         let len =
             u32::from_le_bytes(self.read_buf[OFF_LEN..OFF_LEN + 4].try_into().unwrap()) as usize;
         if HEADER_BYTES + len > self.max_recv_frame {
@@ -87,12 +143,13 @@ impl Transport for TcpTransport {
                 self.max_recv_frame
             );
         }
-        self.read_buf.resize(HEADER_BYTES + len, 0);
-        self.stream.read_exact(&mut self.read_buf[HEADER_BYTES..])?;
-        let (frame, consumed) = Frame::decode(&self.read_buf)?;
-        debug_assert_eq!(consumed, self.read_buf.len());
+        self.fill_to(HEADER_BYTES + len)?;
+        let total = HEADER_BYTES + len;
+        let (frame, consumed) = Frame::decode(&self.read_buf[..total])?;
+        debug_assert_eq!(consumed, total);
+        self.filled = 0;
         self.stats.frames_recv += 1;
-        self.stats.bytes_recv += self.read_buf.len() as u64;
+        self.stats.bytes_recv += total as u64;
         Ok(frame)
     }
 
@@ -132,6 +189,49 @@ mod tests {
         let server_stats = server.join().unwrap();
         assert_eq!(server_stats.bytes_recv, f.encode().len() as u64);
         assert_eq!(client.stats().bytes_sent, client.stats().bytes_recv);
+    }
+
+    #[test]
+    fn nonblocking_recv_is_typed_and_resumes_partial_frames() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let f = Frame::new(
+            3,
+            Message::Activations {
+                step: 7,
+                payload: Payload::sparse(2, 128, 3, true, vec![5; 40]),
+            },
+        );
+        let bytes = f.encode();
+        // split mid-header-adjacent: the client will see a partial frame
+        let head = bytes[..HEADER_BYTES + 3].to_vec();
+        let tail = bytes[HEADER_BYTES + 3..].to_vec();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            stream.write_all(&head).unwrap();
+            stream.flush().unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            stream.write_all(&tail).unwrap();
+            stream.flush().unwrap();
+        });
+        let mut client = TcpTransport::connect(addr).unwrap();
+        client.set_nonblocking(true).unwrap();
+        // whether nothing or only the head has arrived, the miss is a
+        // typed WouldBlock, never a garbled frame or a hard error
+        let e = client.recv().unwrap_err();
+        assert_eq!(TransportError::of(&e), Some(TransportError::WouldBlock), "{e}");
+        let got = loop {
+            match client.recv() {
+                Ok(f) => break f,
+                Err(e) => {
+                    assert_eq!(TransportError::of(&e), Some(TransportError::WouldBlock), "{e}");
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+            }
+        };
+        assert_eq!(got, f, "partial reads reassemble bit-identically");
+        assert_eq!(client.stats().bytes_recv, bytes.len() as u64);
+        server.join().unwrap();
     }
 
     #[test]

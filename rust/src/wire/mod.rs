@@ -80,6 +80,14 @@ pub enum MsgType {
     /// a chunk of the original encoded frame (header included, so the
     /// inner CRC re-checks the whole reassembly)
     Fragment = 10,
+    /// flow control: grant the peer `delta` more send-window bytes on the
+    /// stream carried in the header (muxado WNDINC; the receiver issues
+    /// one as the application consumes delivered data frames)
+    WndInc = 11,
+    /// flow control: unilaterally tear down the stream carried in the
+    /// header with an error code (muxado RST); exactly that stream dies,
+    /// the connection keeps serving its other streams
+    Rst = 12,
 }
 
 impl MsgType {
@@ -95,16 +103,23 @@ impl MsgType {
             8 => MsgType::Ack,
             9 => MsgType::ResumeStream,
             10 => MsgType::Fragment,
+            11 => MsgType::WndInc,
+            12 => MsgType::Rst,
             other => bail!("unknown message type {other}"),
         })
     }
 
     /// Does this frame type ride the per-stream sequence space (stamped,
     /// acked, replayed by the recovery layer)? The recovery plane itself
-    /// (`Ack`, `ResumeStream`) and connection teardown (`Goaway`) are
-    /// outside it: they must flow while the sequence space is broken.
+    /// (`Ack`, `ResumeStream`), connection teardown (`Goaway`), and the
+    /// flow-control plane (`WndInc`, `Rst`) are outside it: they must
+    /// flow while the sequence space is broken — a `WndInc` held behind a
+    /// gap would deadlock the very replay meant to fill the gap.
     pub fn sequenced(self) -> bool {
-        !matches!(self, MsgType::Ack | MsgType::ResumeStream | MsgType::Goaway)
+        !matches!(
+            self,
+            MsgType::Ack | MsgType::ResumeStream | MsgType::Goaway | MsgType::WndInc | MsgType::Rst
+        )
     }
 }
 
@@ -254,6 +269,15 @@ pub enum Message {
     /// One slice of a frame that exceeded `max_frame_size`; reassembled
     /// in order by the mux (`transport::mux`) into the original frame.
     Fragment(FragPart),
+    /// Flow control: grant `delta` more send-window bytes on the stream
+    /// named in the header. Issued by the receiving side as its
+    /// application consumes delivered data frames, so a sender's
+    /// in-flight bytes stay bounded by the configured window.
+    WndInc { delta: u32 },
+    /// Flow control: hard-reset the stream named in the header with an
+    /// error code (0 = caller asked). Pending and future frames on that
+    /// stream are dropped on both sides; the connection survives.
+    Rst { code: u32 },
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -278,6 +302,8 @@ impl Message {
             Message::Ack { .. } => MsgType::Ack,
             Message::ResumeStream { .. } => MsgType::ResumeStream,
             Message::Fragment(_) => MsgType::Fragment,
+            Message::WndInc { .. } => MsgType::WndInc,
+            Message::Rst { .. } => MsgType::Rst,
         }
     }
 }
@@ -523,6 +549,8 @@ impl Message {
                 }
                 FragPart::Invalid { raw, .. } => out.extend_from_slice(raw),
             },
+            Message::WndInc { delta } => put_u32(out, *delta),
+            Message::Rst { code } => put_u32(out, *code),
         }
     }
 
@@ -569,6 +597,8 @@ impl Message {
                 spec: OpenSpec::decode(c.rest()),
             },
             MsgType::Fragment => Message::Fragment(FragPart::decode(c.rest())),
+            MsgType::WndInc => Message::WndInc { delta: c.u32()? },
+            MsgType::Rst => Message::Rst { code: c.u32()? },
         };
         c.done()?;
         Ok(msg)
@@ -737,6 +767,10 @@ mod tests {
                 frag_ndx: 0,
                 data: Vec::new(),
             }),
+            Message::WndInc { delta: 0 },
+            Message::WndInc { delta: 0xFFFF_FFFF },
+            Message::Rst { code: 0 },
+            Message::Rst { code: 7 },
         ];
         for (i, m) in msgs.into_iter().enumerate() {
             let f = Frame::on_stream(i as u32 * 2 + 1, i as u32, m);
@@ -849,7 +883,13 @@ mod tests {
         ] {
             assert!(ty.sequenced(), "{ty:?}");
         }
-        for ty in [MsgType::Ack, MsgType::ResumeStream, MsgType::Goaway] {
+        for ty in [
+            MsgType::Ack,
+            MsgType::ResumeStream,
+            MsgType::Goaway,
+            MsgType::WndInc,
+            MsgType::Rst,
+        ] {
             assert!(!ty.sequenced(), "{ty:?}");
         }
     }

@@ -18,7 +18,8 @@ use std::sync::Arc;
 
 use splitfed::chaos::{
     fault_plan_for_seed, metrics_fingerprint, repro_command, repro_for, run_schedule,
-    run_schedule_fragmented, run_session, write_repro, ChaosConfig, CHAOS_METHODS,
+    run_schedule_configured, run_schedule_fragmented, run_session, write_repro, ChaosConfig,
+    CHAOS_METHODS,
 };
 use splitfed::config::Method;
 use splitfed::coordinator::{FeatureOwner, LabelOwner};
@@ -26,8 +27,8 @@ use splitfed::data::{for_model, Dataset, EpochIter, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
 use splitfed::transport::sim::LinkModel;
 use splitfed::transport::{
-    FaultCounts, FaultPlan, FragPolicy, Mux, MuxEvent, RecoveryPolicy, ScriptedFault, SimNet,
-    Transport,
+    FaultCounts, FaultPlan, FragPolicy, Mux, MuxConfig, MuxEvent, RecoveryPolicy, ScriptedFault,
+    SimNet, Transport,
 };
 use splitfed::compress::Payload;
 use splitfed::wire::{fragment_count, Frame, Message};
@@ -149,6 +150,44 @@ fn fragmented_chaos_matrix_every_codec_bit_identical_metrics() {
     );
 }
 
+/// Flow control armed ON TOP of fragmentation over the same fault
+/// schedules: every data byte now travels inside a per-stream credit
+/// window (fragments charge the window individually, `WndInc` grants ride
+/// the reverse path, disconnects rebase the window on resume) — and the
+/// metrics still must not move a bit. A smaller seed slice keeps the
+/// extra matrix dimension affordable; any failure replays with
+/// `--flow-window` on the chaos CLI.
+#[test]
+fn flow_metered_fragmented_chaos_matrix_bit_identical_metrics() {
+    const FLOW_WINDOW: u32 = 2048;
+    let seeds: Vec<u64> = seeds_for_this_shard().into_iter().take(25).collect();
+    assert!(!seeds.is_empty(), "empty shard");
+    let mut failures = Vec::new();
+    for method in CHAOS_METHODS {
+        for &seed in &seeds {
+            let v = run_schedule_configured(seed, method, Some(FRAG_SIZE), Some(FLOW_WINDOW));
+            if !v.ok {
+                let path = write_repro(&artifact_dir(), &v).expect("write repro artifact");
+                eprintln!(
+                    "flow-metered chaos FAIL seed={seed} method={method}: {}\n  repro: {}\n  \
+                     artifact: {}",
+                    v.detail,
+                    repro_for(&v),
+                    path.display()
+                );
+                failures.push((seed, method.to_string()));
+            }
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "{} flow-metered schedules failed ({} seeds x {} codecs): {failures:?}",
+        failures.len(),
+        seeds.len(),
+        CHAOS_METHODS.len()
+    );
+}
+
 // --- directed middle-fragment faults ---------------------------------------
 
 /// Drive one scripted fault into a *middle* fragment of the second of
@@ -160,27 +199,31 @@ fn fragmented_chaos_matrix_every_codec_bit_identical_metrics() {
 fn directed_middle_fragment_fault(fault: ScriptedFault, fired: fn(&FaultCounts) -> u64) {
     let net = SimNet::with_faults(LinkModel::default(), FaultPlan::none());
     let (a, b) = net.pair();
-    let cm = Mux::initiator(a);
-    let sm = Mux::acceptor(b);
-    for m in [&cm, &sm] {
-        m.enable_recovery(RecoveryPolicy {
-            probe_after_polls: 50,
-            probe_interval_polls: 500,
-            poll_timeout_ms: 30_000,
-            ..RecoveryPolicy::default()
-        });
-        m.enable_fragmentation(FragPolicy::with_max_frame_size(FRAG_SIZE)).unwrap();
-    }
+    let policy = RecoveryPolicy {
+        probe_after_polls: 50,
+        probe_interval_polls: 500,
+        poll_timeout_ms: 30_000,
+        ..RecoveryPolicy::default()
+    };
+    let frag = FragPolicy::with_max_frame_size(FRAG_SIZE);
     let nc = net.clone();
-    cm.set_reconnector(move |_| {
-        nc.reconnect();
-        Ok(None)
-    });
+    let cm = Mux::with_config(
+        a,
+        MuxConfig::initiator().recovery(policy).fragmentation(frag).reconnector(move |_| {
+            nc.reconnect();
+            Ok(None)
+        }),
+    )
+    .unwrap();
     let ns = net.clone();
-    sm.set_reconnector(move |_| {
-        ns.reconnect();
-        Ok(None)
-    });
+    let sm = Mux::with_config(
+        b,
+        MuxConfig::acceptor().recovery(policy).fragmentation(frag).reconnector(move |_| {
+            ns.reconnect();
+            Ok(None)
+        }),
+    )
+    .unwrap();
 
     let msg = |step: u64| Message::Activations {
         step,
@@ -309,29 +352,29 @@ fn real_training_losses_frag(
     let dir = engine_dir().unwrap();
     let net = SimNet::with_faults(LinkModel::default(), plan);
     let (a, b) = net.pair();
-    let cm = Mux::initiator(a);
-    let sm = Mux::acceptor(b);
-    for m in [&cm, &sm] {
-        m.enable_recovery(RecoveryPolicy {
-            probe_after_polls: 500,
-            probe_interval_polls: 5_000,
-            poll_timeout_ms: 60_000,
-            ..RecoveryPolicy::default()
-        });
-        if let Some(n) = max_frame_size {
-            m.enable_fragmentation(FragPolicy::with_max_frame_size(n)).unwrap();
-        }
-    }
+    let policy = RecoveryPolicy {
+        probe_after_polls: 500,
+        probe_interval_polls: 5_000,
+        poll_timeout_ms: 60_000,
+        ..RecoveryPolicy::default()
+    };
     let nc = net.clone();
-    cm.set_reconnector(move |_| {
+    let mut ccfg = MuxConfig::initiator().recovery(policy).reconnector(move |_| {
         nc.reconnect();
         Ok(None)
     });
     let ns = net.clone();
-    sm.set_reconnector(move |_| {
+    let mut scfg = MuxConfig::acceptor().recovery(policy).reconnector(move |_| {
         ns.reconnect();
         Ok(None)
     });
+    if let Some(n) = max_frame_size {
+        let frag = FragPolicy::with_max_frame_size(n);
+        ccfg = ccfg.fragmentation(frag);
+        scfg = scfg.fragmentation(frag);
+    }
+    let cm = Mux::with_config(a, ccfg).unwrap();
+    let sm = Mux::with_config(b, scfg).unwrap();
     let method = Method::parse("randtopk:k=6,alpha=0.1").unwrap();
 
     let dir_lo = dir.clone();

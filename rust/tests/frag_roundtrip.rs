@@ -23,7 +23,8 @@ use splitfed::data::{for_model, Dataset, EpochIter, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
 use splitfed::transport::sim::LinkModel;
 use splitfed::transport::{
-    FaultPlan, FragPolicy, Mux, MuxEvent, RecoveryPolicy, SimNet, TcpTransport, Transport,
+    FaultPlan, FragPolicy, Mux, MuxConfig, MuxEvent, RecoveryPolicy, SimNet, TcpTransport,
+    Transport,
 };
 use splitfed::util::Rng;
 use splitfed::wire::{
@@ -102,10 +103,9 @@ fn backward_batch(decoded: &Batch) -> Batch {
 fn roundtrip(msg: Message, max_frame_size: usize) -> (Message, u64) {
     let net = SimNet::with_defaults();
     let (a, b) = net.pair();
-    let cm = Mux::initiator(a);
-    let sm = Mux::acceptor(b);
-    cm.enable_fragmentation(FragPolicy::with_max_frame_size(max_frame_size)).unwrap();
-    sm.enable_fragmentation(FragPolicy::with_max_frame_size(max_frame_size)).unwrap();
+    let frag = FragPolicy::with_max_frame_size(max_frame_size);
+    let cm = Mux::with_config(a, MuxConfig::initiator().fragmentation(frag)).unwrap();
+    let sm = Mux::with_config(b, MuxConfig::acceptor().fragmentation(frag)).unwrap();
     let mut s = cm.open_stream().unwrap();
     assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
     let mut t = sm.accept_stream(1).unwrap();
@@ -177,27 +177,31 @@ fn out_of_order_fragments_are_resequenced_before_reassembly() {
     let plan = FaultPlan { seed: 271, reorder: 0.9, ..FaultPlan::default() };
     let net = SimNet::with_faults(LinkModel::default(), plan);
     let (a, b) = net.pair();
-    let cm = Mux::initiator(a);
-    let sm = Mux::acceptor(b);
-    for m in [&cm, &sm] {
-        m.enable_recovery(RecoveryPolicy {
-            probe_after_polls: 50,
-            probe_interval_polls: 500,
-            poll_timeout_ms: 30_000,
-            ..RecoveryPolicy::default()
-        });
-        m.enable_fragmentation(FragPolicy::with_max_frame_size(96)).unwrap();
-    }
+    let policy = RecoveryPolicy {
+        probe_after_polls: 50,
+        probe_interval_polls: 500,
+        poll_timeout_ms: 30_000,
+        ..RecoveryPolicy::default()
+    };
+    let frag = FragPolicy::with_max_frame_size(96);
     let nc = net.clone();
-    cm.set_reconnector(move |_| {
-        nc.reconnect();
-        Ok(None)
-    });
+    let cm = Mux::with_config(
+        a,
+        MuxConfig::initiator().recovery(policy).fragmentation(frag).reconnector(move |_| {
+            nc.reconnect();
+            Ok(None)
+        }),
+    )
+    .unwrap();
     let ns = net.clone();
-    sm.set_reconnector(move |_| {
-        ns.reconnect();
-        Ok(None)
-    });
+    let sm = Mux::with_config(
+        b,
+        MuxConfig::acceptor().recovery(policy).fragmentation(frag).reconnector(move |_| {
+            ns.reconnect();
+            Ok(None)
+        }),
+    )
+    .unwrap();
     let msg = |step: u64| Message::Activations {
         step,
         payload: Payload::dense(4, 32, vec![step as u8 * 3 + 1; 4 * 32 * 4]),
@@ -237,11 +241,17 @@ fn concurrent_streams_reassemble_independently() {
     let net = SimNet::with_defaults();
     let (a, mut b) = net.pair();
     b.set_blocking(Duration::from_secs(60));
-    let cm = Mux::initiator(a);
-    let sm = Mux::acceptor(b);
-    cm.enable_fragmentation(FragPolicy { burst: 1, ..FragPolicy::with_max_frame_size(96) })
-        .unwrap();
-    sm.enable_fragmentation(FragPolicy::with_max_frame_size(96)).unwrap();
+    let cm = Mux::with_config(
+        a,
+        MuxConfig::initiator()
+            .fragmentation(FragPolicy { burst: 1, ..FragPolicy::with_max_frame_size(96) }),
+    )
+    .unwrap();
+    let sm = Mux::with_config(
+        b,
+        MuxConfig::acceptor().fragmentation(FragPolicy::with_max_frame_size(96)),
+    )
+    .unwrap();
     let msg = |stream_no: u8, step: u64| Message::Activations {
         step,
         payload: Payload::dense(4, 32, vec![stream_no * 50 + step as u8; 4 * 32 * 4]),
@@ -298,10 +308,9 @@ fn tcp_mux_fragments_roundtrip_with_exact_cost() {
     // safe — this is the pairing the cap exists for
     client.set_max_recv_frame(1024);
     server_t.set_max_recv_frame(1024);
-    let cm = Mux::initiator(client);
-    let sm = Mux::acceptor(server_t);
-    cm.enable_fragmentation(FragPolicy::with_max_frame_size(256)).unwrap();
-    sm.enable_fragmentation(FragPolicy::with_max_frame_size(256)).unwrap();
+    let frag = FragPolicy::with_max_frame_size(256);
+    let cm = Mux::with_config(client, MuxConfig::initiator().fragmentation(frag)).unwrap();
+    let sm = Mux::with_config(server_t, MuxConfig::acceptor().fragmentation(frag)).unwrap();
 
     let msg = Message::Activations {
         step: 7,
@@ -354,12 +363,15 @@ fn tcp_training_losses(seed: u64, steps: usize, max_frame_size: Option<usize>) -
     let addr = listener.local_addr().unwrap();
     let phys = TcpTransport::connect(addr).unwrap();
     let (srv, _) = listener.accept().unwrap();
-    let cm = Mux::initiator(phys);
-    let sm = Mux::acceptor(TcpTransport::from_stream(srv));
+    let mut ccfg = MuxConfig::initiator();
+    let mut scfg = MuxConfig::acceptor();
     if let Some(n) = max_frame_size {
-        cm.enable_fragmentation(FragPolicy::with_max_frame_size(n)).unwrap();
-        sm.enable_fragmentation(FragPolicy::with_max_frame_size(n)).unwrap();
+        let frag = FragPolicy::with_max_frame_size(n);
+        ccfg = ccfg.fragmentation(frag);
+        scfg = scfg.fragmentation(frag);
     }
+    let cm = Mux::with_config(phys, ccfg).unwrap();
+    let sm = Mux::with_config(TcpTransport::from_stream(srv), scfg).unwrap();
     let method = Method::parse("randtopk:k=6,alpha=0.1").unwrap();
 
     let dir_lo = dir.clone();

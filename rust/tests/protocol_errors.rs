@@ -10,12 +10,12 @@ use splitfed::compress::{codec_for, Codec, CodecSpec, Pass, Payload};
 use splitfed::config::Method;
 use splitfed::util::Rng;
 use splitfed::coordinator::serve::{
-    eval_indices, negotiate_spec, serve_tcp, EVAL_INIT_SEED, EVAL_N_TEST, EVAL_N_TRAIN,
+    eval_indices, negotiate_spec, EVAL_INIT_SEED, EVAL_N_TEST, EVAL_N_TRAIN,
 };
-use splitfed::coordinator::{FeatureOwner, LabelOwner};
+use splitfed::coordinator::{FeatureOwner, LabelOwner, MuxServer, ServeOptions};
 use splitfed::data::{for_model, Dataset, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
-use splitfed::transport::{FragFault, Mux, MuxEvent, SimNet, TcpTransport, Transport};
+use splitfed::transport::{FragFault, Mux, MuxConfig, MuxEvent, SimNet, TcpTransport, Transport};
 use splitfed::wire::{FragPart, Frame, Message, OpenSpec, HEADER_BYTES, OFF_MAGIC, OFF_TYPE};
 
 fn engine() -> Option<Arc<Engine>> {
@@ -171,7 +171,7 @@ fn unknown_msg_type_rejected() {
 fn mux_rejects_frame_for_unopened_stream() {
     let net = SimNet::with_defaults();
     let (mut raw, b) = net.pair();
-    let mux = Mux::acceptor(b);
+    let mux = Mux::with_config(b, MuxConfig::acceptor()).unwrap();
     let payload = Payload::dense(1, 8, vec![0; 32]);
     raw.send(&Frame::on_stream(9, 0, Message::Activations { step: 0, payload }))
         .unwrap();
@@ -187,7 +187,7 @@ fn mux_rejects_data_without_stream_id() {
     // a non-mux-aware peer sends a legacy frame on stream 0
     let net = SimNet::with_defaults();
     let (mut raw, b) = net.pair();
-    let mux = Mux::acceptor(b);
+    let mux = Mux::with_config(b, MuxConfig::acceptor()).unwrap();
     let payload = Payload::dense(1, 8, vec![0; 32]);
     raw.send(&Frame::new(0, Message::Activations { step: 0, payload })).unwrap();
     let err = mux.next_event().unwrap_err();
@@ -210,7 +210,7 @@ fn send_raw_spec(link: &mut splitfed::transport::SimLink, stream_id: u32, raw: V
 fn truncated_spec_marks_stream_invalid_but_connection_survives() {
     let net = SimNet::with_defaults();
     let (mut raw, b) = net.pair();
-    let mux = Mux::acceptor(b);
+    let mux = Mux::with_config(b, MuxConfig::acceptor()).unwrap();
     // 3 bytes cannot even hold the cut_dim field
     send_raw_spec(&mut raw, 1, vec![0, 0, 0]);
     assert_eq!(mux.next_event().unwrap(), MuxEvent::Opened(1));
@@ -240,7 +240,7 @@ fn truncated_spec_marks_stream_invalid_but_connection_survives() {
 fn unknown_method_id_marks_stream_invalid() {
     let net = SimNet::with_defaults();
     let (mut raw, b) = net.pair();
-    let mux = Mux::acceptor(b);
+    let mux = Mux::with_config(b, MuxConfig::acceptor()).unwrap();
     // cut_dim = 128, then a method tag that does not exist
     let mut body = 128u32.to_le_bytes().to_vec();
     body.push(0xEE);
@@ -259,17 +259,14 @@ fn unknown_method_id_marks_stream_invalid() {
 /// the same physical connection then completes a full eval round trip.
 #[test]
 fn spec_refusal_keeps_connection_serving() {
-    if engine().is_none() {
-        return;
-    }
-    let dir = default_artifacts_dir();
+    let Some(engine) = engine() else { return };
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let default_method = Method::parse("topk:k=6").unwrap();
-    // connect before serve_tcp: it accept()s on the calling thread
     let phys = TcpTransport::connect(addr).unwrap();
-    let pool = serve_tcp(&listener, 1, 0, dir.clone(), "mlp".into(), default_method, 42).unwrap();
-    let mux = Mux::initiator(phys);
+    let server = Arc::new(MuxServer::new(engine.clone(), "mlp", default_method, 42));
+    let pool = server.serve(listener, ServeOptions::default()).unwrap();
+    let mux = Mux::with_config(phys, MuxConfig::initiator()).unwrap();
 
     // stream 1: geometry the mlp manifest (cut_dim 128) cannot satisfy
     let mut bad = mux
@@ -282,7 +279,6 @@ fn spec_refusal_keeps_connection_serving() {
     // stream 3, same connection: valid spec, full request round trip
     let method = Method::parse("randtopk:k=6,alpha=0.1").unwrap();
     let stream = mux.open_stream_with(CodecSpec::new(method, 128)).unwrap();
-    let engine = Arc::new(Engine::load(&dir).unwrap());
     let mut fo = FeatureOwner::new(engine, "mlp", method, stream, 42, EVAL_INIT_SEED).unwrap();
     let ds = for_model("mlp", fo.meta.n_classes, 42, EVAL_N_TRAIN, EVAL_N_TEST).unwrap();
     let idx = eval_indices(0, fo.meta.batch, ds.len(Split::Test));
@@ -466,8 +462,8 @@ fn codec_decode_never_panics_on_arbitrary_content() {
 fn discard_accounting_with_interleaved_streams() {
     let net = SimNet::with_defaults();
     let (a, b) = net.pair();
-    let cm = Mux::initiator(a);
-    let sm = Mux::acceptor(b);
+    let cm = Mux::with_config(a, MuxConfig::initiator()).unwrap();
+    let sm = Mux::with_config(b, MuxConfig::acceptor()).unwrap();
     let mut live = cm.open_stream().unwrap(); // id 1
     let mut dead = cm.open_stream().unwrap(); // id 3
     assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
@@ -508,16 +504,14 @@ fn discard_accounting_with_interleaved_streams() {
 /// the previously untested hostile half of the refusal path.
 #[test]
 fn refused_stream_interleaves_with_live_session() {
-    if engine().is_none() {
-        return;
-    }
-    let dir = default_artifacts_dir();
+    let Some(engine) = engine() else { return };
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let default_method = Method::parse("topk:k=6").unwrap();
     let phys = TcpTransport::connect(addr).unwrap();
-    let pool = serve_tcp(&listener, 1, 0, dir.clone(), "mlp".into(), default_method, 42).unwrap();
-    let mux = Mux::initiator(phys);
+    let server = Arc::new(MuxServer::new(engine.clone(), "mlp", default_method, 42));
+    let pool = server.serve(listener, ServeOptions::default()).unwrap();
+    let mux = Mux::with_config(phys, MuxConfig::initiator()).unwrap();
 
     // stream 1: refused (bad geometry); stream 3: live session
     let mut bad = mux
@@ -525,7 +519,6 @@ fn refused_stream_interleaves_with_live_session() {
         .unwrap();
     let method = Method::parse("randtopk:k=6,alpha=0.1").unwrap();
     let good = mux.open_stream_with(CodecSpec::new(method, 128)).unwrap();
-    let engine = Arc::new(Engine::load(&dir).unwrap());
     let mut fo = FeatureOwner::new(engine, "mlp", method, good, 42, EVAL_INIT_SEED).unwrap();
     let ds = for_model("mlp", fo.meta.n_classes, 42, EVAL_N_TRAIN, EVAL_N_TEST).unwrap();
 
@@ -564,7 +557,7 @@ fn refused_stream_interleaves_with_live_session() {
 fn frag_mux() -> (splitfed::transport::SimLink, Mux<splitfed::transport::SimLink>) {
     let net = SimNet::with_defaults();
     let (mut raw, b) = net.pair();
-    let mux = Mux::acceptor(b);
+    let mux = Mux::with_config(b, MuxConfig::acceptor()).unwrap();
     raw.send(&Frame::on_stream(1, 0, Message::OpenStream { spec: OpenSpec::None })).unwrap();
     assert_eq!(mux.next_event().unwrap(), MuxEvent::Opened(1));
     (raw, mux)

@@ -7,10 +7,10 @@
 use splitfed::compress::CodecSpec;
 use splitfed::config::Method;
 use splitfed::coordinator::serve::{eval_indices, EVAL_INIT_SEED, EVAL_N_TEST, EVAL_N_TRAIN};
-use splitfed::coordinator::{serve_tcp_resumable, FeatureOwner, LabelOwner};
+use splitfed::coordinator::{FeatureOwner, LabelOwner, MuxServer, ServeOptions};
 use splitfed::data::{for_model, Dataset, EpochIter, Split};
 use splitfed::runtime::{default_artifacts_dir, Engine};
-use splitfed::transport::{Mux, MuxEvent, RecoveryPolicy, TcpTransport, Transport};
+use splitfed::transport::{Mux, MuxConfig, MuxEvent, RecoveryPolicy, TcpTransport, Transport};
 
 #[test]
 fn tcp_two_party_training_step() {
@@ -90,12 +90,13 @@ fn mux_tcp_training_losses(steps: usize, kill_after: Option<usize>) -> Vec<f64> 
     let engine_lo = engine.clone();
     let server = std::thread::spawn(move || {
         let (stream, _) = listener.accept().unwrap();
-        let mux = Mux::acceptor(TcpTransport::from_stream(stream));
-        mux.enable_recovery(RecoveryPolicy::for_tcp());
-        mux.set_reconnector(move |_| {
-            let (stream, _) = listener.accept()?;
-            Ok(Some(TcpTransport::from_stream(stream)))
-        });
+        let cfg = MuxConfig::acceptor().recovery(RecoveryPolicy::for_tcp()).reconnector(
+            move |_| {
+                let (stream, _) = listener.accept()?;
+                Ok(Some(TcpTransport::from_stream(stream)))
+            },
+        );
+        let mux = Mux::with_config(TcpTransport::from_stream(stream), cfg).unwrap();
         let engine = engine_lo;
         let id = loop {
             match mux.next_event().unwrap() {
@@ -120,9 +121,13 @@ fn mux_tcp_training_losses(steps: usize, kill_after: Option<usize>) -> Vec<f64> 
     // feature-owner side (client)
     let sock = std::net::TcpStream::connect(addr).unwrap();
     let killer = sock.try_clone().unwrap();
-    let mux = Mux::initiator(TcpTransport::from_stream(sock));
-    mux.enable_recovery(RecoveryPolicy::for_tcp());
-    mux.set_reconnector(move |_| Ok(Some(TcpTransport::connect(addr)?)));
+    let mux = Mux::with_config(
+        TcpTransport::from_stream(sock),
+        MuxConfig::initiator()
+            .recovery(RecoveryPolicy::for_tcp())
+            .reconnector(move |_| Ok(Some(TcpTransport::connect(addr)?))),
+    )
+    .unwrap();
     let transport = mux.open_stream().unwrap();
     let mut fo = FeatureOwner::new(engine, "mlp", method, transport, seed, 99).unwrap();
     let ds = for_model("mlp", 100, seed, 256, 64).unwrap();
@@ -142,9 +147,10 @@ fn mux_tcp_training_losses(steps: usize, kill_after: Option<usize>) -> Vec<f64> 
     server.join().unwrap()
 }
 
-/// The serving path of the same story: a `MuxServer` session lineage
-/// (`serve_tcp_resumable`) survives a client-side connection kill — the
-/// session's step counter and report keep counting across the resume.
+/// The serving path of the same story: a `MuxServer` recovery lineage
+/// (`ServeOptions::recovery`) survives a client-side connection kill —
+/// the session's step counter and report keep counting across the
+/// resume.
 #[test]
 fn serve_resumable_session_survives_connection_kill() {
     let dir = default_artifacts_dir();
@@ -154,25 +160,28 @@ fn serve_resumable_session_survives_connection_kill() {
     }
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
-    // connect before serve_tcp_resumable: it accept()s on this thread
     let sock = std::net::TcpStream::connect(addr).unwrap();
-    let handle = serve_tcp_resumable(
-        listener,
-        dir.clone(),
-        "mlp".into(),
+    let engine = std::sync::Arc::new(Engine::load(&dir).unwrap());
+    let server = std::sync::Arc::new(MuxServer::new(
+        engine.clone(),
+        "mlp",
         Method::parse("topk:k=6").unwrap(),
         42,
-        RecoveryPolicy::for_tcp(),
-    )
-    .unwrap();
+    ));
+    let handle = server
+        .serve(listener, ServeOptions::default().recovery(RecoveryPolicy::for_tcp()))
+        .unwrap();
 
     let killer = sock.try_clone().unwrap();
-    let mux = Mux::initiator(TcpTransport::from_stream(sock));
-    mux.enable_recovery(RecoveryPolicy::for_tcp());
-    mux.set_reconnector(move |_| Ok(Some(TcpTransport::connect(addr)?)));
+    let mux = Mux::with_config(
+        TcpTransport::from_stream(sock),
+        MuxConfig::initiator()
+            .recovery(RecoveryPolicy::for_tcp())
+            .reconnector(move |_| Ok(Some(TcpTransport::connect(addr)?))),
+    )
+    .unwrap();
     let method = Method::parse("randtopk:k=6,alpha=0.1").unwrap();
     let stream = mux.open_stream_with(CodecSpec::new(method, 128)).unwrap();
-    let engine = std::sync::Arc::new(Engine::load(&dir).unwrap());
     let mut fo = FeatureOwner::new(engine, "mlp", method, stream, 42, EVAL_INIT_SEED).unwrap();
     let ds = for_model("mlp", fo.meta.n_classes, 42, EVAL_N_TRAIN, EVAL_N_TEST).unwrap();
     let requests = 4u64;
@@ -193,7 +202,9 @@ fn serve_resumable_session_survives_connection_kill() {
     drop(fo);
     drop(mux);
 
-    let report = handle.join().unwrap().unwrap();
+    let reports = handle.join().unwrap();
+    assert_eq!(reports.len(), 1, "one lineage, one report");
+    let report = &reports[0];
     assert_eq!(report.sessions.len(), 1, "ONE session across both connections");
     assert_eq!(report.sessions[0].requests, requests, "no request lost or double-served");
     assert!(report.refused.is_empty());
