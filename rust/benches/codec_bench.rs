@@ -9,12 +9,60 @@
 //! frame buffer) vs the streamed path (`FrameEncoder` + `encode_into`,
 //! codec output written straight into the frame buffer). Emits
 //! `BENCH_codec.json` at the repo root for the perf trajectory.
+//!
+//! The word-wise kernel rewrite is measured against "before" paths kept
+//! in this file (per-element f32 writes + the per-bit
+//! `bitpack::reference` pack/unpack), and two gates run at the end:
+//! steady-state `encode_into`/`decode_into` with reused buffers must not
+//! allocate (merged into `BENCH_mem.json`), and throughput must clear the
+//! committed floors in `BENCH_codec_baseline.json` — either failure exits
+//! nonzero, which fails CI.
 
-use splitfed::bench_util::Bench;
+use splitfed::bench_util::{merge_mem_json, Bench, CountingAlloc};
 use splitfed::compress::{codec_for, Batch, DenseBatch, Pass, QuantBatch, SparseBatch};
 use splitfed::config::Method;
+use splitfed::json::Json;
+use splitfed::util::bitpack::{index_bits, reference};
 use splitfed::util::Rng;
 use splitfed::wire::{encode_payload_meta, Frame, FrameEncoder, Message, MsgType};
+use std::collections::BTreeMap;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+/// The pre-kernel sparse encode: byte-at-a-time f32 copies plus the
+/// per-bit reference writer. Layout-identical to the production path —
+/// only the kernels differ.
+fn sparse_encode_reference(batch: &SparseBatch, out: &mut Vec<u8>) {
+    for v in &batch.values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    let bits = index_bits(batch.dim);
+    let mut w = reference::BitWriter::new();
+    for &i in &batch.indices {
+        w.write(i as u64, bits);
+    }
+    out.extend_from_slice(&w.into_bytes());
+}
+
+/// The pre-kernel sparse decode: per-element f32 reads plus the per-bit
+/// reference reader.
+fn sparse_decode_reference(
+    bytes: &[u8],
+    rows: usize,
+    dim: usize,
+    k: usize,
+) -> (Vec<f32>, Vec<i32>) {
+    let n = rows * k;
+    let values: Vec<f32> = bytes[..n * 4]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let bits = index_bits(dim);
+    let mut r = reference::BitReader::new(&bytes[n * 4..]);
+    let indices: Vec<i32> = (0..n).map(|_| r.read(bits).unwrap() as i32).collect();
+    (values, indices)
+}
 
 fn random_sparse(rng: &mut Rng, rows: usize, dim: usize, k: usize) -> SparseBatch {
     let mut values = Vec::new();
@@ -39,7 +87,8 @@ fn main() {
 
     for (d, k) in [(128usize, 6usize), (600, 14), (1280, 9)] {
         let codec = codec_for(Method::Topk { k }, d).unwrap();
-        let batch = Batch::Sparse(random_sparse(&mut rng, rows, d, k));
+        let sparse = random_sparse(&mut rng, rows, d, k);
+        let batch = Batch::Sparse(sparse.clone());
         let payload = codec.encode(&batch, Pass::Forward).unwrap();
         let dense_bytes = (rows * d * 4) as u64;
         b.run_bytes(&format!("sparse encode fwd d={d} k={k}"), dense_bytes, || {
@@ -55,9 +104,30 @@ fn main() {
                 codec.encode_into(&batch, Pass::Forward, &mut buf).unwrap();
             },
         );
+        // the pre-kernel path, for the before/after delta in the report
+        b.run_bytes(
+            &format!("sparse encode fwd d={d} k={k} (per-bit reference)"),
+            dense_bytes,
+            || {
+                buf.clear();
+                sparse_encode_reference(&sparse, &mut buf);
+            },
+        );
         b.run_bytes(&format!("sparse decode fwd d={d} k={k}"), dense_bytes, || {
             codec.decode(&payload, Pass::Forward).unwrap()
         });
+        // scratch-reusing decode: the production receive path
+        let mut slot: Option<Batch> = None;
+        b.run_bytes(
+            &format!("sparse decode_into fwd d={d} k={k} (reused scratch)"),
+            dense_bytes,
+            || codec.decode_into(&payload, Pass::Forward, &mut slot).unwrap(),
+        );
+        b.run_bytes(
+            &format!("sparse decode fwd d={d} k={k} (per-bit reference)"),
+            dense_bytes,
+            || sparse_decode_reference(&payload.bytes, rows, d, k),
+        );
         let bwd = codec.encode(&batch, Pass::Backward).unwrap();
         b.run_bytes(&format!("sparse decode bwd d={d} k={k}"), dense_bytes, || {
             codec.decode(&bwd, Pass::Backward).unwrap()
@@ -120,8 +190,21 @@ fn main() {
             buf.clear();
             codec.encode_into(&batch, Pass::Forward, &mut buf).unwrap();
         });
+        // per-element "before" kernel for the f32 bulk-copy delta
+        b.run_bytes(&format!("dense encode d={d} (per-element reference)"), bytes, || {
+            buf.clear();
+            if let Batch::Dense(db) = &batch {
+                for v in &db.data {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        });
         b.run_bytes(&format!("dense decode d={d}"), bytes, || {
             codec.decode(&payload, Pass::Forward).unwrap()
+        });
+        let mut slot: Option<Batch> = None;
+        b.run_bytes(&format!("dense decode_into d={d} (reused scratch)"), bytes, || {
+            codec.decode_into(&payload, Pass::Forward, &mut slot).unwrap()
         });
     }
 
@@ -148,5 +231,97 @@ fn main() {
     match b.write_json(out) {
         Ok(()) => println!("\nwrote {out}"),
         Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+
+    // ---- allocation gate: steady-state encode_into / decode_into --------
+    // With a warm reused frame buffer and a persistent scratch batch, the
+    // codec hot loop must not touch the allocator at all.
+    let mut gate_failed = false;
+    {
+        const STEPS: u64 = 4096;
+        let (d, k) = (1280usize, 9usize);
+        let codec = codec_for(Method::Topk { k }, d).unwrap();
+        let batch = Batch::Sparse(random_sparse(&mut rng, rows, d, k));
+        let payload = codec.encode(&batch, Pass::Forward).unwrap();
+        let mut buf = Vec::with_capacity(payload.wire_bytes());
+        let mut slot: Option<Batch> = None;
+        // warm: first call sizes the buffer and the scratch vectors
+        buf.clear();
+        codec.encode_into(&batch, Pass::Forward, &mut buf).unwrap();
+        codec.decode_into(&payload, Pass::Forward, &mut slot).unwrap();
+
+        let before = ALLOC.allocs();
+        for _ in 0..STEPS {
+            buf.clear();
+            codec.encode_into(&batch, Pass::Forward, &mut buf).unwrap();
+        }
+        let enc_allocs = ALLOC.allocs() - before;
+        let before = ALLOC.allocs();
+        for _ in 0..STEPS {
+            codec.decode_into(&payload, Pass::Forward, &mut slot).unwrap();
+        }
+        let dec_allocs = ALLOC.allocs() - before;
+        std::hint::black_box(&slot);
+        println!(
+            "steady-state codec d={d} k={k}: encode_into {enc_allocs} allocs / {STEPS} steps, \
+             decode_into {dec_allocs} allocs / {STEPS} steps"
+        );
+
+        let mut m = BTreeMap::new();
+        m.insert("case".to_string(), Json::Str(format!("topk d={d} k={k} rows={rows}")));
+        m.insert("steps".to_string(), Json::Num(STEPS as f64));
+        m.insert("encode_into_allocs".to_string(), Json::Num(enc_allocs as f64));
+        m.insert(
+            "encode_into_allocs_per_step".to_string(),
+            Json::Num(enc_allocs as f64 / STEPS as f64),
+        );
+        m.insert("decode_into_allocs".to_string(), Json::Num(dec_allocs as f64));
+        m.insert(
+            "decode_into_allocs_per_step".to_string(),
+            Json::Num(dec_allocs as f64 / STEPS as f64),
+        );
+        let mem_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_mem.json");
+        match merge_mem_json(mem_out, "codec", Json::Obj(m)) {
+            Ok(()) => println!("merged codec memory gate into {mem_out}"),
+            Err(e) => eprintln!("failed to write {mem_out}: {e}"),
+        }
+        if enc_allocs > 0 || dec_allocs > 0 {
+            eprintln!("ALLOCATION GATE FAILED: codec steady state allocated (want 0/step)");
+            gate_failed = true;
+        }
+    }
+
+    // ---- throughput floor gate vs the committed baseline ----------------
+    // `BENCH_codec_baseline.json` carries conservative MiB/s floors (a
+    // regression past 1.5x of a floor fails). Missing file = skip, so the
+    // bench still runs on machines without the checkout layout.
+    let baseline_path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_codec_baseline.json");
+    match std::fs::read_to_string(baseline_path).ok().and_then(|s| Json::parse(&s).ok()) {
+        Some(base) => {
+            let floors = base.get("floors_mib_per_s").and_then(|f| f.as_obj().cloned());
+            for (case, floor) in floors.unwrap_or_default() {
+                let Some(floor) = floor.as_f64() else { continue };
+                let Some(r) = b.results.iter().find(|r| r.name == case) else {
+                    eprintln!("baseline names unknown case {case:?}; skipping");
+                    continue;
+                };
+                let Some(bytes) = r.bytes else { continue };
+                let mib_s = bytes as f64 / (r.mean_ns / 1e9) / 1048576.0;
+                if mib_s * 1.5 < floor {
+                    eprintln!(
+                        "THROUGHPUT GATE FAILED: {case}: {mib_s:.1} MiB/s is >1.5x below \
+                         the {floor:.1} MiB/s floor"
+                    );
+                    gate_failed = true;
+                } else {
+                    println!("throughput floor ok: {case}: {mib_s:.1} MiB/s (floor {floor:.1})");
+                }
+            }
+        }
+        None => println!("no {baseline_path}; skipping throughput floor gate"),
+    }
+
+    if gate_failed {
+        std::process::exit(1);
     }
 }

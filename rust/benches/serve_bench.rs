@@ -14,11 +14,21 @@
 //! latency at 1k streams exceeds 1.5x the 32-stream baseline from the
 //! same run, or if any roster's backpressure buffering exceeds the
 //! credit-window bound `streams x (window + one frame)`.
+//!
+//! Also audits the global `BufPool` after the full 10k-stream walk: the
+//! freelist and slot roster must still be inside their configured caps
+//! (the recycle circuits are bounded, not a leak), merged into
+//! `BENCH_mem.json` as the `serve` group and gated like the rest.
 
 use std::collections::{BTreeMap, HashMap};
 use std::time::Instant;
 
-use splitfed::bench_util::{fmt_ns, quantile_ns};
+use splitfed::bench_util::{fmt_ns, merge_mem_json, quantile_ns, CountingAlloc};
+use splitfed::util::pool::{DEFAULT_FREE_CAP, DEFAULT_MAX_POOLED_BYTES, DEFAULT_SLOT_CAP};
+use splitfed::util::BufPool;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
 use splitfed::compress::Payload;
 use splitfed::coordinator::{pump_conn, PumpOutcome};
 use splitfed::json::Json;
@@ -271,6 +281,35 @@ fn main() {
         Err(e) => eprintln!("\nfailed to write {out}: {e}"),
     }
 
+    // pool boundedness after the 10k walk: every roster above pushed
+    // frames through the global BufPool recycle circuits; whatever the
+    // churn, the pool must still be inside its configured caps
+    let ps = BufPool::global().stats();
+    let pool_ok = ps.free <= DEFAULT_FREE_CAP
+        && ps.slots <= DEFAULT_SLOT_CAP
+        && ps.free_bytes <= DEFAULT_FREE_CAP * DEFAULT_MAX_POOLED_BYTES;
+    println!(
+        "global BufPool after 10k-stream walk: {} free ({} B retained), {} slots \
+         (caps {DEFAULT_FREE_CAP}/{DEFAULT_SLOT_CAP})",
+        ps.free, ps.free_bytes, ps.slots
+    );
+    let mut pm = BTreeMap::new();
+    pm.insert("pool_free".to_string(), Json::Num(ps.free as f64));
+    pm.insert("pool_free_bytes".to_string(), Json::Num(ps.free_bytes as f64));
+    pm.insert("pool_slots".to_string(), Json::Num(ps.slots as f64));
+    pm.insert("pool_free_cap".to_string(), Json::Num(DEFAULT_FREE_CAP as f64));
+    pm.insert("pool_slot_cap".to_string(), Json::Num(DEFAULT_SLOT_CAP as f64));
+    pm.insert("pool_bounded".to_string(), Json::Bool(pool_ok));
+    pm.insert("process_allocs_total".to_string(), Json::Num(ALLOC.allocs() as f64));
+    let mem_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_mem.json");
+    match merge_mem_json(mem_out, "serve", Json::Obj(pm)) {
+        Ok(()) => println!("merged serve pool audit into {mem_out}"),
+        Err(e) => eprintln!("failed to write {mem_out}: {e}"),
+    }
+    if !pool_ok {
+        eprintln!("GATE FAIL: global BufPool exceeded its configured caps after the roster walk");
+    }
+
     if !buffer_ok {
         eprintln!("GATE FAIL: backpressure buffering exceeded streams x (window + frame)");
     }
@@ -280,7 +319,7 @@ fn main() {
             ratio
         );
     }
-    if !(p99_ok && buffer_ok) {
+    if !(p99_ok && buffer_ok && pool_ok) {
         std::process::exit(1);
     }
 }

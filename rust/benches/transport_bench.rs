@@ -2,15 +2,26 @@
 //! message sizes the paper's workloads actually generate, plus the mux
 //! layer's per-frame overhead vs. the single-stream path. Emits
 //! `BENCH_transport.json` at the repo root for the perf trajectory.
+//!
+//! Also owns the zero-copy data plane's allocation gate: after warmup the
+//! steady-state mux send/recv loop must perform ZERO heap allocations per
+//! step (every buffer rides the `BufPool` recycle circuit). The result is
+//! merged into `BENCH_mem.json` and a nonzero count fails the bench
+//! process, which fails CI.
 
-use splitfed::bench_util::Bench;
+use splitfed::bench_util::{merge_mem_json, Bench, CountingAlloc};
 use splitfed::compress::Payload;
+use splitfed::json::Json;
 use splitfed::transport::sim::{LinkModel, SimNet};
 use splitfed::transport::{FragPolicy, Mux, MuxConfig, MuxEvent, TcpTransport, Transport};
 use splitfed::wire::{Frame, Message};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
 
 fn frame_of(bytes: usize) -> Frame {
     Frame::new(
@@ -27,6 +38,53 @@ fn fast_net() -> SimNet {
 }
 
 fn main() {
+    // ---- allocation gate: steady-state mux data path --------------------
+    // Runs first, while this is the only live thread, so the global
+    // counter attributes every allocation to the loop under test. One
+    // initiator -> acceptor stream over a fast sim link, lockstep
+    // send/recv of a 16KiB Activations frame: after warmup every buffer
+    // comes from the BufPool recycle circuit (encode take -> queue ->
+    // recv share -> payload drop -> slot harvest), so the steady state
+    // must not allocate at all.
+    let gate_failed = {
+        const WARMUP: usize = 256;
+        const STEPS: u64 = 4096;
+        let net = fast_net();
+        let (a, bb) = net.pair();
+        let cm = Mux::with_config(a, MuxConfig::initiator()).unwrap();
+        let sm = Mux::with_config(bb, MuxConfig::acceptor()).unwrap();
+        let mut cs = cm.open_stream().unwrap();
+        assert!(matches!(sm.next_event().unwrap(), MuxEvent::Opened(_)));
+        let mut ss = sm.accept_stream(cs.id()).unwrap();
+        let f = frame_of(16 * 1024);
+        for _ in 0..WARMUP {
+            cs.send(&f).unwrap();
+            std::hint::black_box(ss.recv().unwrap());
+        }
+        let before = ALLOC.allocs();
+        for _ in 0..STEPS {
+            cs.send(&f).unwrap();
+            std::hint::black_box(ss.recv().unwrap());
+        }
+        let allocs = ALLOC.allocs() - before;
+        let per_step = allocs as f64 / STEPS as f64;
+        println!(
+            "steady-state mux path: {allocs} allocs over {STEPS} steps ({per_step:.4}/step)"
+        );
+        let mut m = BTreeMap::new();
+        m.insert("case".to_string(), Json::Str("mux simlink 16KiB lockstep".to_string()));
+        m.insert("warmup_steps".to_string(), Json::Num(WARMUP as f64));
+        m.insert("steps".to_string(), Json::Num(STEPS as f64));
+        m.insert("allocs".to_string(), Json::Num(allocs as f64));
+        m.insert("allocs_per_step".to_string(), Json::Num(per_step));
+        let mem_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_mem.json");
+        match merge_mem_json(mem_out, "transport", Json::Obj(m)) {
+            Ok(()) => println!("merged transport memory gate into {mem_out}"),
+            Err(e) => eprintln!("failed to write {mem_out}: {e}"),
+        }
+        allocs > 0
+    };
+
     let mut b = Bench::new("transport");
     b.min_time = 0.5;
 
@@ -216,6 +274,11 @@ fn main() {
     match fb.write_json(out) {
         Ok(()) => println!("\nwrote {out}"),
         Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+
+    if gate_failed {
+        eprintln!("\nALLOCATION GATE FAILED: the steady-state mux path allocated (want 0/step)");
+        std::process::exit(1);
     }
 }
 

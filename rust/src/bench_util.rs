@@ -10,6 +10,8 @@
 //! counts until the total measured time passes a floor; reports mean /
 //! std / min and derived throughput when `bytes` is set.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 pub struct CaseResult {
@@ -30,14 +32,99 @@ pub struct CaseResult {
 }
 
 /// The `p`-quantile (0..=1) of `samples` by nearest-rank on a sorted copy.
+///
+/// Sorts by `total_cmp`: a stray NaN sample sorts to the end instead of
+/// (as `partial_cmp(..).unwrap_or(Equal)` used to) comparing Equal to
+/// everything, which left the sort order — and thus every quantile —
+/// arbitrary.
 pub fn quantile_ns(samples: &[f64], p: f64) -> f64 {
     if samples.is_empty() {
         return 0.0;
     }
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
     sorted[rank - 1]
+}
+
+/// Allocation-counting global allocator for the `harness = false` bench
+/// targets: wraps [`System`], counting every `alloc`/`alloc_zeroed`/
+/// `realloc` (a realloc that moves IS an allocation) so a bench can prove
+/// a steady-state loop is allocation-free. Install per bench binary:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: CountingAlloc = CountingAlloc::new();
+/// let before = ALLOC.allocs();
+/// // ... steady-state loop ...
+/// let per_step = (ALLOC.allocs() - before) / steps;
+/// ```
+#[derive(Default)]
+pub struct CountingAlloc {
+    allocs: AtomicU64,
+    frees: AtomicU64,
+}
+
+impl CountingAlloc {
+    pub const fn new() -> Self {
+        CountingAlloc { allocs: AtomicU64::new(0), frees: AtomicU64::new(0) }
+    }
+
+    /// Heap allocations observed since process start (monotonic; diff two
+    /// reads around a region of interest).
+    pub fn allocs(&self) -> u64 {
+        self.allocs.load(Ordering::Relaxed)
+    }
+
+    /// Heap frees observed since process start.
+    pub fn frees(&self) -> u64 {
+        self.frees.load(Ordering::Relaxed)
+    }
+}
+
+// SAFETY: defers every operation to `System`; the counters are side
+// effects only and Relaxed is enough (reads only need eventual totals,
+// and the measuring thread's own allocations are sequenced with its
+// loads anyway).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        self.frees.fetch_add(1, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Read-merge-write one bench group's memory summary into the shared
+/// `BENCH_mem.json`. The benches run as separate processes, so the file
+/// is a top-level object keyed by group and each bench replaces only its
+/// own key (an unreadable or missing file starts fresh).
+pub fn merge_mem_json(
+    path: impl AsRef<std::path::Path>,
+    group: &str,
+    summary: crate::json::Json,
+) -> std::io::Result<()> {
+    use crate::json::Json;
+    let path = path.as_ref();
+    let mut top = match std::fs::read_to_string(path).ok().and_then(|s| Json::parse(&s).ok()) {
+        Some(Json::Obj(m)) => m,
+        _ => std::collections::BTreeMap::new(),
+    };
+    top.insert(group.to_string(), summary);
+    std::fs::write(path, Json::Obj(top).to_string_pretty())
 }
 
 pub struct Bench {
@@ -271,6 +358,56 @@ mod tests {
         let mut rev = v.clone();
         rev.reverse();
         assert_eq!(quantile_ns(&rev, 0.99), 99.0);
+    }
+
+    #[test]
+    fn quantile_survives_nan_samples() {
+        // a NaN must not scramble the order of the finite samples: under
+        // total_cmp it sorts last, so low/mid quantiles stay exact
+        let v = [5.0, f64::NAN, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(quantile_ns(&v, 0.5), 3.0);
+        assert_eq!(quantile_ns(&v, 1.0 / 6.0), 1.0);
+        assert!(quantile_ns(&v, 1.0).is_nan());
+    }
+
+    #[test]
+    fn merge_mem_json_preserves_other_groups() {
+        use crate::json::Json;
+        use std::collections::BTreeMap;
+        let path = std::env::temp_dir().join("splitfed_bench_mem_merge_test.json");
+        std::fs::remove_file(&path).ok();
+        let mut a = BTreeMap::new();
+        a.insert("allocs_per_step".to_string(), Json::Num(0.0));
+        merge_mem_json(&path, "transport", Json::Obj(a)).unwrap();
+        let mut b = BTreeMap::new();
+        b.insert("allocs_per_step".to_string(), Json::Num(2.0));
+        merge_mem_json(&path, "codec", Json::Obj(b)).unwrap();
+        // second write refines its own group without clobbering the first
+        let mut b2 = BTreeMap::new();
+        b2.insert("allocs_per_step".to_string(), Json::Num(1.0));
+        merge_mem_json(&path, "codec", Json::Obj(b2)).unwrap();
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let t = v.get("transport").unwrap().get("allocs_per_step").unwrap();
+        assert_eq!(t.as_f64(), Some(0.0));
+        let c = v.get("codec").unwrap().get("allocs_per_step").unwrap();
+        assert_eq!(c.as_f64(), Some(1.0));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn counting_alloc_counts_through_system() {
+        // not installed as the global allocator here; drive it directly
+        let a = CountingAlloc::new();
+        let layout = Layout::from_size_align(64, 8).unwrap();
+        unsafe {
+            let p = a.alloc(layout);
+            assert!(!p.is_null());
+            let p = a.realloc(p, layout, 128);
+            assert!(!p.is_null());
+            a.dealloc(p, Layout::from_size_align(128, 8).unwrap());
+        }
+        assert_eq!(a.allocs(), 2, "realloc counts as an allocation");
+        assert_eq!(a.frees(), 1);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! `expected_wire_bytes` pins the exact byte count so the Table 2
 //! analytic model is enforced, not just reported.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::Method;
 
@@ -71,8 +71,19 @@ pub trait Codec {
     /// content bytes to `out` (the frame buffer on the hot path).
     fn encode_into(&self, batch: &Batch, pass: Pass, out: &mut Vec<u8>) -> Result<()>;
 
+    /// Decode a payload into `out`, validating geometry and exact
+    /// content length. The previous batch in `out` (if any) is consumed
+    /// as scratch — its vectors are cleared and their capacity reused —
+    /// so a per-stream decode slot allocates nothing in steady state.
+    /// On error `out` is left `None`.
+    fn decode_into(&self, payload: &Payload, pass: Pass, out: &mut Option<Batch>) -> Result<()>;
+
     /// Decode a payload, validating geometry and exact content length.
-    fn decode(&self, payload: &Payload, pass: Pass) -> Result<Batch>;
+    fn decode(&self, payload: &Payload, pass: Pass) -> Result<Batch> {
+        let mut out = None;
+        self.decode_into(payload, pass, &mut out)?;
+        out.ok_or_else(|| anyhow!("codec {}: decode_into produced no batch", self.name()))
+    }
 
     /// Convenience: encode into an owned `Payload` (tests, cold paths).
     fn encode(&self, batch: &Batch, pass: Pass) -> Result<Payload> {
@@ -82,6 +93,46 @@ pub trait Codec {
         self.encode_into(batch, pass, &mut bytes)?;
         Ok(Payload::new(self.meta(batch.rows(), pass), bytes))
     }
+}
+
+/// Salvage a cleared f32 vector (capacity retained) from a decode slot's
+/// previous batch, for codecs whose output is one flat f32 buffer.
+pub fn scratch_f32(out: &mut Option<Batch>) -> Vec<f32> {
+    let mut v = match out.take() {
+        Some(Batch::Dense(b)) => b.data,
+        Some(Batch::Sparse(b)) => b.values,
+        Some(Batch::Quant(b)) => b.codes,
+        None => Vec::new(),
+    };
+    v.clear();
+    v
+}
+
+/// Salvage cleared (values, indices) scratch from a decode slot.
+pub fn scratch_sparse(out: &mut Option<Batch>) -> (Vec<f32>, Vec<i32>) {
+    let (mut vals, mut idx) = match out.take() {
+        Some(Batch::Sparse(b)) => (b.values, b.indices),
+        Some(Batch::Dense(b)) => (b.data, Vec::new()),
+        Some(Batch::Quant(b)) => (b.codes, Vec::new()),
+        None => (Vec::new(), Vec::new()),
+    };
+    vals.clear();
+    idx.clear();
+    (vals, idx)
+}
+
+/// Salvage cleared (codes, o_min, o_max) scratch from a decode slot.
+pub fn scratch_quant(out: &mut Option<Batch>) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (mut codes, mut o_min, mut o_max) = match out.take() {
+        Some(Batch::Quant(b)) => (b.codes, b.o_min, b.o_max),
+        Some(Batch::Dense(b)) => (b.data, Vec::new(), Vec::new()),
+        Some(Batch::Sparse(b)) => (b.values, Vec::new(), Vec::new()),
+        None => (Vec::new(), Vec::new(), Vec::new()),
+    };
+    codes.clear();
+    o_min.clear();
+    o_max.clear();
+    (codes, o_min, o_max)
 }
 
 /// What one session negotiates when it opens a stream: the method and the

@@ -3,6 +3,9 @@
 
 use anyhow::{bail, Result};
 
+use crate::util::{extend_f32s_le, read_f32s_le_into};
+
+use super::codec::scratch_f32;
 use super::{Batch, Codec, DenseBatch, Pass, Payload, PayloadMeta, SizeModel};
 
 #[derive(Clone, Copy, Debug)]
@@ -40,14 +43,12 @@ impl Codec for DenseCodec {
         if batch.dim != self.dim {
             bail!("dense codec d={} fed batch d={}", self.dim, batch.dim);
         }
-        out.reserve(batch.data.len() * 4);
-        for v in &batch.data {
-            out.extend_from_slice(&v.to_le_bytes());
-        }
+        extend_f32s_le(out, &batch.data);
         Ok(())
     }
 
-    fn decode(&self, payload: &Payload, _pass: Pass) -> Result<Batch> {
+    fn decode_into(&self, payload: &Payload, _pass: Pass, out: &mut Option<Batch>) -> Result<()> {
+        let mut data = scratch_f32(out);
         let PayloadMeta::Dense { rows, dim } = payload.meta else {
             bail!("payload is not dense");
         };
@@ -61,12 +62,9 @@ impl Codec for DenseCodec {
                 rows * dim * 4
             );
         }
-        let data = payload
-            .bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        Ok(Batch::Dense(DenseBatch::new(rows, dim, data)))
+        read_f32s_le_into(&payload.bytes, &mut data);
+        *out = Some(Batch::Dense(DenseBatch::new(rows, dim, data)));
+        Ok(())
     }
 }
 

@@ -9,8 +9,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::util::{index_bits, BitReader, BitWriter};
+use crate::util::{index_bits, BitPacker, BitReader};
 
+use super::codec::scratch_f32;
 use super::{Batch, Codec, DenseBatch, DenseCodec, Pass, Payload, PayloadMeta, SizeModel};
 
 #[derive(Clone, Copy, Debug)]
@@ -70,23 +71,35 @@ impl Codec for L1Codec {
             bail!("l1 codec supports d <= 65535");
         }
         let nbits = index_bits(self.dim);
-        let mut w = BitWriter::new();
+        // two scans over the batch: counts + values first, then the
+        // trailing index section packed straight into `out` — no per-row
+        // index scratch, and the layout matches the single-pass original
         for r in 0..batch.rows {
             let row = batch.row(r);
-            let nz: Vec<usize> = (0..self.dim).filter(|&j| row[j].abs() > self.eps).collect();
-            out.extend_from_slice(&(nz.len() as u16).to_le_bytes());
-            for &j in &nz {
-                out.extend_from_slice(&row[j].to_le_bytes());
-                w.write(j as u64, nbits);
+            let count = row.iter().filter(|v| v.abs() > self.eps).count();
+            out.extend_from_slice(&(count as u16).to_le_bytes());
+            for v in row {
+                if v.abs() > self.eps {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
             }
         }
-        out.extend_from_slice(&w.into_bytes());
+        let mut w = BitPacker::new(out);
+        for r in 0..batch.rows {
+            for (j, v) in batch.row(r).iter().enumerate() {
+                if v.abs() > self.eps {
+                    w.write(j as u64, nbits);
+                }
+            }
+        }
+        w.finish();
         Ok(())
     }
 
-    fn decode(&self, payload: &Payload, pass: Pass) -> Result<Batch> {
+    fn decode_into(&self, payload: &Payload, pass: Pass, out: &mut Option<Batch>) -> Result<()> {
         match pass {
             Pass::Forward => {
+                let mut data = scratch_f32(out);
                 let PayloadMeta::VarSparse { rows, dim } = payload.meta else {
                     bail!("payload is not var-sparse");
                 };
@@ -101,8 +114,8 @@ impl Codec for L1Codec {
                 if bytes.len() < rows * 2 {
                     bail!("l1 payload truncated counts");
                 }
-                // first scan: counts + values section
-                let mut values: Vec<Vec<f32>> = Vec::with_capacity(rows);
+                // first scan: validate the counts + values sections and
+                // total the nonzeros, touching no scratch
                 let mut total_nz = 0usize;
                 let mut pos = 0usize;
                 for _ in 0..rows {
@@ -117,13 +130,8 @@ impl Codec for L1Codec {
                     if pos + 4 * c > bytes.len() {
                         bail!("l1 payload truncated values");
                     }
-                    let vals = bytes[pos..pos + 4 * c]
-                        .chunks_exact(4)
-                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                        .collect();
                     pos += 4 * c;
                     total_nz += c;
-                    values.push(vals);
                 }
                 let nbits = index_bits(self.dim);
                 // exact-length contract: the index section is the remainder
@@ -135,10 +143,17 @@ impl Codec for L1Codec {
                         pos + index_bytes
                     );
                 }
+                // second scan: walk values and packed indices in lockstep,
+                // scattering straight into the zeroed dense scratch
                 let mut reader = BitReader::new(&bytes[pos..]);
-                let mut out = DenseBatch::zeros(rows, self.dim);
-                for (r, row_vals) in values.iter().enumerate() {
-                    for v in row_vals {
+                data.resize(rows * self.dim, 0.0);
+                let mut vpos = 0usize;
+                for r in 0..rows {
+                    let c = u16::from_le_bytes([bytes[vpos], bytes[vpos + 1]]) as usize;
+                    vpos += 2;
+                    for _ in 0..c {
+                        let v = f32::from_le_bytes(bytes[vpos..vpos + 4].try_into().unwrap());
+                        vpos += 4;
                         let Some(j) = reader.read(nbits) else {
                             bail!("l1 payload truncated indices");
                         };
@@ -146,12 +161,13 @@ impl Codec for L1Codec {
                         if j >= self.dim {
                             bail!("l1 decoded index {j} out of range");
                         }
-                        out.data[r * self.dim + j] = *v;
+                        data[r * self.dim + j] = v;
                     }
                 }
-                Ok(Batch::Dense(out))
+                *out = Some(Batch::Dense(DenseBatch::new(rows, self.dim, data)));
+                Ok(())
             }
-            Pass::Backward => DenseCodec::new(self.dim).decode(payload, pass),
+            Pass::Backward => DenseCodec::new(self.dim).decode_into(payload, pass, out),
         }
     }
 }
@@ -239,8 +255,7 @@ mod tests {
         let p = codec
             .encode(&Batch::Dense(sparse_dense(&mut rng, 4, 64, 0.3)), Pass::Forward)
             .unwrap();
-        let mut cut = p;
-        cut.bytes.truncate(6);
+        let cut = Payload::new(p.meta, p.bytes[..6].to_vec());
         assert!(codec.decode(&cut, Pass::Forward).is_err());
     }
 }

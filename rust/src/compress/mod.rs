@@ -18,12 +18,14 @@ pub mod quant;
 pub mod size_model;
 pub mod sparse;
 
-pub use codec::{codec_for, Batch, Codec, CodecSpec};
+pub use codec::{codec_for, scratch_f32, scratch_quant, scratch_sparse, Batch, Codec, CodecSpec};
 pub use dense::DenseCodec;
 pub use l1::L1Codec;
 pub use quant::{QuantBatch, QuantCodec};
 pub use size_model::SizeModel;
 pub use sparse::SparseCodec;
+
+use crate::util::Bytes;
 
 
 /// A batch of dense per-instance vectors: `rows` x `dim`, row-major.
@@ -110,30 +112,40 @@ impl PayloadMeta {
 
 /// What travels on the wire after compression: a descriptor plus the
 /// codec's content bytes.
+///
+/// The content is a refcounted [`Bytes`] view: on the receive path it
+/// borrows straight from the pooled frame buffer (zero-copy decode),
+/// while senders build it from an owned `Vec<u8>` via `Into`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Payload {
     pub meta: PayloadMeta,
-    pub bytes: Vec<u8>,
+    pub bytes: Bytes,
 }
 
 impl Payload {
-    pub fn new(meta: PayloadMeta, bytes: Vec<u8>) -> Self {
-        Payload { meta, bytes }
+    pub fn new(meta: PayloadMeta, bytes: impl Into<Bytes>) -> Self {
+        Payload { meta, bytes: bytes.into() }
     }
 
-    pub fn sparse(rows: usize, dim: usize, k: usize, with_indices: bool, bytes: Vec<u8>) -> Self {
+    pub fn sparse(
+        rows: usize,
+        dim: usize,
+        k: usize,
+        with_indices: bool,
+        bytes: impl Into<Bytes>,
+    ) -> Self {
         Payload::new(PayloadMeta::Sparse { rows, dim, k, with_indices }, bytes)
     }
 
-    pub fn quantized(rows: usize, dim: usize, bits: u8, bytes: Vec<u8>) -> Self {
+    pub fn quantized(rows: usize, dim: usize, bits: u8, bytes: impl Into<Bytes>) -> Self {
         Payload::new(PayloadMeta::Quantized { rows, dim, bits }, bytes)
     }
 
-    pub fn dense(rows: usize, dim: usize, bytes: Vec<u8>) -> Self {
+    pub fn dense(rows: usize, dim: usize, bytes: impl Into<Bytes>) -> Self {
         Payload::new(PayloadMeta::Dense { rows, dim }, bytes)
     }
 
-    pub fn var_sparse(rows: usize, dim: usize, bytes: Vec<u8>) -> Self {
+    pub fn var_sparse(rows: usize, dim: usize, bytes: impl Into<Bytes>) -> Self {
         Payload::new(PayloadMeta::VarSparse { rows, dim }, bytes)
     }
 

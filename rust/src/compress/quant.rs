@@ -8,8 +8,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::util::{BitReader, BitWriter};
+use crate::util::{BitPacker, BitReader};
 
+use super::codec::scratch_quant;
 use super::{Batch, Codec, DenseBatch, DenseCodec, Pass, Payload, PayloadMeta, SizeModel};
 
 /// Codes batch as produced by the `quant_b*` bottom_fwd artifact: f32
@@ -101,15 +102,19 @@ impl Codec for QuantCodec {
                     out.extend_from_slice(&batch.o_max[r].to_le_bytes());
                 }
                 let max_code = (1u64 << self.bits) - 1;
-                let mut w = BitWriter::with_capacity_bits(batch.codes.len() * self.bits as usize);
-                for &c in &batch.codes {
+                // validate before packing so an error never leaves
+                // partial code words appended to the frame buffer
+                if let Some(&c) = batch.codes.iter().find(|&&c| {
                     let ci = c as i64;
-                    if ci < 0 || ci as u64 > max_code {
-                        bail!("code {c} out of range for {} bits", self.bits);
-                    }
-                    w.write(ci as u64, self.bits as u32);
+                    ci < 0 || ci as u64 > max_code
+                }) {
+                    bail!("code {c} out of range for {} bits", self.bits);
                 }
-                out.extend_from_slice(&w.into_bytes());
+                let mut w = BitPacker::new(out);
+                for &c in &batch.codes {
+                    w.write(c as i64 as u64, self.bits as u32);
+                }
+                w.finish();
                 Ok(())
             }
             // Table 2: the gradient travels dense — delegate to the one
@@ -118,9 +123,10 @@ impl Codec for QuantCodec {
         }
     }
 
-    fn decode(&self, payload: &Payload, pass: Pass) -> Result<Batch> {
+    fn decode_into(&self, payload: &Payload, pass: Pass, out: &mut Option<Batch>) -> Result<()> {
         match pass {
             Pass::Forward => {
+                let (mut codes, mut o_min, mut o_max) = scratch_quant(out);
                 let PayloadMeta::Quantized { rows, dim, bits } = payload.meta else {
                     bail!("payload is not quantized");
                 };
@@ -136,24 +142,25 @@ impl Codec for QuantCodec {
                 }
                 let bytes = &payload.bytes;
                 let header = rows * 8;
-                let mut o_min = Vec::with_capacity(rows);
-                let mut o_max = Vec::with_capacity(rows);
+                o_min.reserve(rows);
+                o_max.reserve(rows);
                 for r in 0..rows {
                     let b = &bytes[r * 8..r * 8 + 8];
                     o_min.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
                     o_max.push(f32::from_le_bytes([b[4], b[5], b[6], b[7]]));
                 }
                 let mut reader = BitReader::new(&bytes[header..]);
-                let mut codes = Vec::with_capacity(rows * dim);
+                codes.reserve(rows * dim);
                 for _ in 0..rows * dim {
                     let Some(v) = reader.read(self.bits as u32) else {
                         bail!("quant payload truncated codes");
                     };
                     codes.push(v as f32);
                 }
-                Ok(Batch::Quant(QuantBatch { rows, dim, codes, o_min, o_max }))
+                *out = Some(Batch::Quant(QuantBatch { rows, dim, codes, o_min, o_max }));
+                Ok(())
             }
-            Pass::Backward => DenseCodec::new(self.dim).decode(payload, pass),
+            Pass::Backward => DenseCodec::new(self.dim).decode_into(payload, pass, out),
         }
     }
 }
@@ -258,8 +265,7 @@ mod tests {
         let codec = QuantCodec::new(64, 4);
         let batch = Batch::Quant(random_quant(&mut rng, 4, 64, 4));
         let p = codec.encode(&batch, Pass::Forward).unwrap();
-        let mut cut = p;
-        cut.bytes.truncate(10);
+        let cut = Payload::new(p.meta, p.bytes[..10].to_vec());
         assert!(codec.decode(&cut, Pass::Forward).is_err());
     }
 }

@@ -6,8 +6,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::util::{index_bits, BitReader, BitWriter};
+use crate::util::{extend_f32s_le, index_bits, read_f32s_le_into, BitPacker, BitReader};
 
+use super::codec::scratch_sparse;
 use super::{Batch, Codec, Pass, Payload, PayloadMeta, SizeModel, SparseBatch};
 
 /// Wire layout: per row, k f32 LE values; then (forward only) all rows'
@@ -99,24 +100,25 @@ impl Codec for SparseCodec {
         };
         self.check_batch(batch)?;
         out.reserve(self.content_bytes(batch.rows, pass));
-        for v in &batch.values {
-            out.extend_from_slice(&v.to_le_bytes());
-        }
+        extend_f32s_le(out, &batch.values);
         if self.with_indices(pass) {
+            // validate before packing so an error never leaves partial
+            // index words appended to the frame buffer
+            if let Some(&i) = batch.indices.iter().find(|&&i| i < 0 || i as usize >= self.dim) {
+                bail!("index {i} out of range for d={}", self.dim);
+            }
             let nbits = index_bits(self.dim);
-            let mut w = BitWriter::with_capacity_bits(batch.indices.len() * nbits as usize);
+            let mut w = BitPacker::new(out);
             for &i in &batch.indices {
-                if i < 0 || i as usize >= self.dim {
-                    bail!("index {i} out of range for d={}", self.dim);
-                }
                 w.write(i as u64, nbits);
             }
-            out.extend_from_slice(&w.into_bytes());
+            w.finish();
         }
         Ok(())
     }
 
-    fn decode(&self, payload: &Payload, pass: Pass) -> Result<Batch> {
+    fn decode_into(&self, payload: &Payload, pass: Pass, out: &mut Option<Batch>) -> Result<()> {
+        let (mut values, mut indices) = scratch_sparse(out);
         let PayloadMeta::Sparse { rows, dim, k, with_indices } = payload.meta else {
             bail!("payload is not sparse");
         };
@@ -133,14 +135,11 @@ impl Codec for SparseCodec {
         let n = rows * k;
         let val_bytes = n * 4;
         let bytes = &payload.bytes;
-        let mut values = Vec::with_capacity(n);
-        for c in bytes[..val_bytes].chunks_exact(4) {
-            values.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
-        }
-        let indices = if with_indices {
+        read_f32s_le_into(&bytes[..val_bytes], &mut values);
+        indices.reserve(n);
+        if with_indices {
             let nbits = index_bits(self.dim);
             let mut r = BitReader::new(&bytes[val_bytes..]);
-            let mut out = Vec::with_capacity(n);
             for _ in 0..n {
                 let Some(v) = r.read(nbits) else {
                     bail!("sparse payload index section truncated");
@@ -148,20 +147,22 @@ impl Codec for SparseCodec {
                 if v as usize >= self.dim {
                     bail!("decoded index {v} out of range");
                 }
-                out.push(v as i32);
+                indices.push(v as i32);
             }
-            out
         } else {
             // size reduction (or backward pass): indices are implicit 0..k
-            (0..rows).flat_map(|_| (0..self.k as i32)).collect()
-        };
-        Ok(Batch::Sparse(SparseBatch {
+            for _ in 0..rows {
+                indices.extend(0..self.k as i32);
+            }
+        }
+        *out = Some(Batch::Sparse(SparseBatch {
             rows,
             dim: self.dim,
             k: self.k,
             values,
             indices,
-        }))
+        }));
+        Ok(())
     }
 }
 
@@ -286,13 +287,32 @@ mod tests {
         let mut rng = Rng::new(4);
         let batch = random_sparse(&mut rng, 4, 128, 6);
         let p = codec.encode(&Batch::Sparse(batch), Pass::Forward).unwrap();
-        let mut cut = p.clone();
-        cut.bytes.truncate(cut.bytes.len() - 4);
+        let cut = Payload::new(p.meta, p.bytes[..p.bytes.len() - 4].to_vec());
         assert!(codec.decode(&cut, Pass::Forward).is_err());
         // trailing garbage is equally rejected (exact-length contract)
-        let mut extended = p;
-        extended.bytes.push(0xFF);
+        let mut longer = p.bytes.to_vec();
+        longer.push(0xFF);
+        let extended = Payload::new(p.meta, longer);
         assert!(codec.decode(&extended, Pass::Forward).is_err());
+    }
+
+    #[test]
+    fn decode_into_reuses_scratch() {
+        let codec = SparseCodec::topk(128, 6);
+        let mut rng = Rng::new(9);
+        let batch = random_sparse(&mut rng, 4, 128, 6);
+        let p = codec.encode(&Batch::Sparse(batch.clone()), Pass::Forward).unwrap();
+        let mut slot = None;
+        codec.decode_into(&p, Pass::Forward, &mut slot).unwrap();
+        let Some(Batch::Sparse(s)) = slot.as_ref() else { panic!("expected sparse") };
+        assert_eq!(s.values, batch.values);
+        assert_eq!(s.indices, batch.indices);
+        let (vp, ip) = (s.values.as_ptr(), s.indices.as_ptr());
+        // second decode into the same slot: same buffers, no realloc
+        codec.decode_into(&p, Pass::Forward, &mut slot).unwrap();
+        let Some(Batch::Sparse(s)) = slot.as_ref() else { panic!("expected sparse") };
+        assert_eq!((s.values.as_ptr(), s.indices.as_ptr()), (vp, ip));
+        assert_eq!(s.values, batch.values);
     }
 
     #[test]

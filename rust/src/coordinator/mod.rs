@@ -33,8 +33,6 @@ pub use serve::{
     pump_conn, MuxServer, PumpOutcome, RefusedStream, ServeHandle, ServeMode, ServeOptions,
     ServeReport, SessionReport,
 };
-#[allow(deprecated)]
-pub use serve::{serve_tcp, serve_tcp_resumable, ServePool};
 pub use trainer::{train, Trainer};
 
 use anyhow::Result;

@@ -653,8 +653,9 @@ impl MuxServer {
     /// THE serving entry point: accept `opts.connections` connections from
     /// `listener` and serve them per `opts` — blocking pool, readiness
     /// reactor, or a resumable recovery lineage — returning a handle whose
-    /// `join` yields per-connection reports in accept order. Replaces the
-    /// old `serve_tcp` / `serve_tcp_resumable` / `ServePool` trio.
+    /// `join` yields per-connection reports in accept order. Replaced the
+    /// old `serve_tcp` / `serve_tcp_resumable` / `ServePool` trio, since
+    /// removed.
     pub fn serve(self: Arc<Self>, listener: TcpListener, opts: ServeOptions) -> Result<ServeHandle> {
         if opts.connections == 0 {
             bail!("ServeOptions::connections must be at least 1");
@@ -843,29 +844,6 @@ fn spawn_reactor(
     })
 }
 
-/// Serve one *resumable* connection lineage (the pre-`ServeOptions`
-/// surface, kept as a thin shim for one PR).
-#[deprecated(
-    since = "0.7.0",
-    note = "use MuxServer::serve(listener, ServeOptions::default().recovery(policy))"
-)]
-pub fn serve_tcp_resumable(
-    listener: std::net::TcpListener,
-    artifacts_dir: std::path::PathBuf,
-    model: String,
-    default_method: Method,
-    data_seed: u64,
-    policy: RecoveryPolicy,
-) -> Result<std::thread::JoinHandle<Result<ServeReport>>> {
-    let engine = Arc::new(Engine::load(&artifacts_dir)?);
-    let server = Arc::new(MuxServer::new(engine, &model, default_method, data_seed));
-    let handle = server.serve(listener, ServeOptions::default().recovery(policy))?;
-    Ok(std::thread::spawn(move || {
-        let mut reports = handle.join()?;
-        reports.pop().ok_or_else(|| anyhow!("lineage produced no report"))
-    }))
-}
-
 /// Accepted-but-unserved connections waiting for a pool worker. Bounded
 /// backpressure: the queue only ever holds sockets the OS already
 /// accepted; workers drain it in accept order and the acceptor closes it
@@ -913,34 +891,6 @@ impl ConnQueue {
 fn default_workers(connections: usize) -> usize {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     connections.clamp(1, cores.max(1))
-}
-
-/// The old name for [`ServeHandle`], from when only `serve_tcp`'s
-/// blocking pool produced one.
-#[deprecated(since = "0.7.0", note = "renamed to ServeHandle")]
-pub type ServePool = ServeHandle;
-
-/// Accept and serve `connections` connections from a bounded blocking
-/// pool (the pre-`ServeOptions` surface, kept as a thin shim for one PR).
-#[deprecated(
-    since = "0.7.0",
-    note = "use MuxServer::serve(listener, ServeOptions::default().connections(n).workers(w))"
-)]
-pub fn serve_tcp(
-    listener: &std::net::TcpListener,
-    connections: usize,
-    workers: usize,
-    artifacts_dir: std::path::PathBuf,
-    model: String,
-    default_method: Method,
-    data_seed: u64,
-) -> Result<ServePool> {
-    let engine = Arc::new(Engine::load(&artifacts_dir)?);
-    let server = Arc::new(MuxServer::new(engine, &model, default_method, data_seed));
-    server.serve(
-        listener.try_clone()?,
-        ServeOptions::default().connections(connections).workers(workers),
-    )
 }
 
 #[cfg(test)]

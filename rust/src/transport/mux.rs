@@ -60,9 +60,9 @@
 //!
 //! Configuration comes in one piece: [`Mux::with_config`] takes a
 //! [`MuxConfig`] carrying the role plus the optional recovery,
-//! fragmentation, flow-control, and reconnector layers. The old
-//! `initiator`/`acceptor` + `enable_*` + `set_reconnector` methods
-//! remain as deprecated shims for one release.
+//! fragmentation, flow-control, and reconnector layers. (The old
+//! `initiator`/`acceptor` + `enable_*` + `set_reconnector` methods have
+//! been removed.)
 //!
 //! Concurrency: `Mux` is `Clone` (share it across threads); a `MuxStream`
 //! is a single-owner session handle. Both are `Send` when the physical
@@ -79,6 +79,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::compress::CodecSpec;
+use crate::util::BufPool;
 use crate::wire::{
     fragment_count, fragment_frames, FragPart, Frame, Message, MsgType, OpenSpec,
     CONTROL_STREAM_ID, FRAG_ENVELOPE_BYTES, HEADER_BYTES, MIN_FRAME_SIZE, OFF_SEQ, OFF_STREAM_ID,
@@ -541,7 +542,10 @@ impl<T: Transport> Inner<T> {
             st.send_seq += 1;
             // seq also sits outside the CRC: restamp in place
             bytes[OFF_SEQ..OFF_SEQ + 4].copy_from_slice(&st.send_seq.to_le_bytes());
-            st.replay.push_back((st.send_seq, bytes.clone()));
+            // the replay copy rides a pooled buffer, recycled on ack
+            let mut copy = BufPool::global().take();
+            copy.extend_from_slice(&bytes);
+            st.replay.push_back((st.send_seq, copy));
         }
         // flow control: data-plane wire bytes are charged against the
         // stream's window at FIRST transmission only (`retransmit` rides
@@ -744,7 +748,17 @@ impl<T: Transport> Inner<T> {
     /// to the stream like any send.
     fn retransmit(&mut self, id: u32) -> Result<()> {
         let frames: Vec<Vec<u8>> = match self.streams.get(&id) {
-            Some(st) => st.replay.iter().map(|(_, b)| b.clone()).collect(),
+            Some(st) => st
+                .replay
+                .iter()
+                .map(|(_, b)| {
+                    // pooled copies: physical_send consumes its buffer, and
+                    // the replay entries must stay put for the next loss
+                    let mut c = BufPool::global().take();
+                    c.extend_from_slice(b);
+                    c
+                })
+                .collect(),
             None => return Ok(()),
         };
         let n = frames.len() as u64;
@@ -869,7 +883,9 @@ impl<T: Transport> Inner<T> {
             st.peer_acked = cum;
         }
         while st.replay.front().is_some_and(|(s, _)| *s <= st.peer_acked) {
-            st.replay.pop_front();
+            if let Some((_, b)) = st.replay.pop_front() {
+                BufPool::global().put(b);
+            }
         }
         if nack {
             self.retransmit(id)?;
@@ -909,7 +925,9 @@ impl<T: Transport> Inner<T> {
             st.peer_acked = last_acked;
         }
         while st.replay.front().is_some_and(|(s, _)| *s <= st.peer_acked) {
-            st.replay.pop_front();
+            if let Some((_, b)) = st.replay.pop_front() {
+                BufPool::global().put(b);
+            }
         }
         // flow control: the handshake just proved everything up to
         // `last_acked` reached the peer, but any grants it sent for them
@@ -985,9 +1003,13 @@ impl<T: Transport> Inner<T> {
         st.peer_closed = true;
         st.discard = true;
         st.inbox.clear();
-        st.reasm = None;
+        if let Some(r) = st.reasm.take() {
+            BufPool::global().put(r.buf);
+        }
         st.pending_out.clear();
-        st.replay.clear();
+        for (_, b) in st.replay.drain(..) {
+            BufPool::global().put(b);
+        }
         if let Some(pos) = self.outbox.iter().position(|&x| x == id) {
             self.outbox.remove(pos);
         }
@@ -1244,7 +1266,13 @@ impl<T: Transport> Inner<T> {
                         bytes,
                     ));
                 }
-                Reassembly { msg_id, num_frag, next_ndx: 0, buf: Vec::new(), charged: 0 }
+                Reassembly {
+                    msg_id,
+                    num_frag,
+                    next_ndx: 0,
+                    buf: BufPool::global().take(),
+                    charged: 0,
+                }
             }
             Some(r) => {
                 let lost = r.charged + bytes;
@@ -1302,14 +1330,18 @@ impl<T: Transport> Inner<T> {
             st.reasm = Some(r);
             return Ok(None);
         }
-        let (frame, used) = Frame::decode(&r.buf).map_err(|e| {
+        // completed: hand the buffer to the pool and decode zero-copy —
+        // the frame's payload borrows the shared view like a direct recv
+        let total = r.buf.len();
+        let shared = BufPool::global().share(std::mem::take(&mut r.buf));
+        let (frame, used) = Frame::decode_shared(&shared).map_err(|e| {
             (FragFault::Protocol(format!("reassembled frame invalid: {e}")), r.charged)
         })?;
-        if used != r.buf.len() {
+        if used != total {
             return Err((
                 FragFault::Protocol(format!(
                     "reassembled frame leaves {} trailing bytes",
-                    r.buf.len() - used
+                    total - used
                 )),
                 r.charged,
             ));
@@ -1350,6 +1382,7 @@ impl<T: Transport> Inner<T> {
             let mut refund = orphaned;
             if let Some(r) = st.reasm.take() {
                 refund += r.charged;
+                BufPool::global().put(r.buf);
             }
             st.frag_fault = Some(fault);
             st.discard = true;
@@ -1412,10 +1445,9 @@ pub enum MuxRole {
     Acceptor,
 }
 
-/// Everything a mux can be configured with, in one place — replaces the
+/// Everything a mux can be configured with, in one place — replaced the
 /// accreted `initiator`/`acceptor` + `enable_recovery` +
-/// `enable_fragmentation` + `set_reconnector` toggle pile (kept as
-/// deprecated shims for one release).
+/// `enable_fragmentation` + `set_reconnector` toggle pile (now removed).
 ///
 /// ```ignore
 /// let mux = Mux::with_config(
@@ -1532,45 +1564,13 @@ impl<T: Transport> Mux<T> {
         })
     }
 
-    /// The side that opens streams (odd ids, like HTTP/2 clients).
-    #[deprecated(note = "use Mux::with_config(io, MuxConfig::initiator())")]
-    pub fn initiator(io: T) -> Self {
-        Self::with_config(io, MuxConfig::initiator()).expect("bare config cannot fail")
-    }
-
-    /// The side that accepts streams (even ids reserved, unused today).
-    #[deprecated(note = "use Mux::with_config(io, MuxConfig::acceptor())")]
-    pub fn acceptor(io: T) -> Self {
-        Self::with_config(io, MuxConfig::acceptor()).expect("bare config cannot fail")
-    }
-
     fn lock(&self) -> MutexGuard<'_, Inner<T>> {
         self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
-    }
-
-    /// Turn on the reliability layer (ack/replay/resume).
-    #[deprecated(note = "use MuxConfig::recovery with Mux::with_config")]
-    pub fn enable_recovery(&self, policy: RecoveryPolicy) {
-        self.lock().recovery = Some(policy);
-    }
-
-    /// Turn on send-side fragmentation.
-    #[deprecated(note = "use MuxConfig::fragmentation with Mux::with_config")]
-    pub fn enable_fragmentation(&self, policy: FragPolicy) -> Result<()> {
-        policy.validate()?;
-        self.lock().frag = Some(policy);
-        Ok(())
     }
 
     /// Why the fragmentation layer failed a stream, if it did.
     pub fn stream_frag_fault(&self, id: u32) -> Option<FragFault> {
         self.lock().streams.get(&id).and_then(|s| s.frag_fault.clone())
-    }
-
-    /// How to re-establish a dead physical connection.
-    #[deprecated(note = "use MuxConfig::reconnector with Mux::with_config")]
-    pub fn set_reconnector(&self, f: impl FnMut(u32) -> Result<Option<T>> + Send + 'static) {
-        self.lock().reconnect = Some(Box::new(f));
     }
 
     /// Open a new locally-initiated stream with no codec negotiation
@@ -1762,9 +1762,13 @@ impl<T: Transport> Mux<T> {
         st.peer_closed = true;
         st.discard = true;
         st.inbox.clear();
-        st.reasm = None;
+        if let Some(r) = st.reasm.take() {
+            BufPool::global().put(r.buf);
+        }
         st.pending_out.clear();
-        st.replay.clear();
+        for (_, b) in st.replay.drain(..) {
+            BufPool::global().put(b);
+        }
         if let Some(pos) = g.outbox.iter().position(|&q| q == id) {
             g.outbox.remove(pos);
         }
@@ -2958,28 +2962,5 @@ mod tests {
         // window is fully drained: replay delivered byte-identically and
         // no credit leaked across the reconnect
         assert_eq!(cm.stream_window_used(1), Some(0), "window leaked across reconnect");
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_constructor_shims_still_work() {
-        let net = SimNet::with_defaults();
-        let (a, b) = net.pair();
-        let cm = Mux::initiator(a);
-        let sm = Mux::acceptor(b);
-        cm.enable_fragmentation(FragPolicy::with_max_frame_size(64)).unwrap();
-        assert!(cm.enable_fragmentation(FragPolicy { burst: 0, ..FragPolicy::default() }).is_err());
-        cm.enable_recovery(test_recovery());
-        sm.enable_recovery(test_recovery());
-        let n1 = net.clone();
-        cm.set_reconnector(move |_| {
-            n1.reconnect();
-            Ok(None)
-        });
-        let mut s = cm.open_stream().unwrap();
-        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
-        let mut t = sm.accept_stream(1).unwrap();
-        s.send(&Frame::new(0, big(1))).unwrap();
-        assert_eq!(t.recv().unwrap().message, big(1));
     }
 }

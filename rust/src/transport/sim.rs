@@ -34,7 +34,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::util::Rng;
+use crate::util::{BufPool, Rng};
 use crate::wire::{Frame, MsgType, HEADER_BYTES, OFF_TYPE};
 
 use super::{FaultCounts, LinkStats, Transport, TransportError};
@@ -541,8 +541,12 @@ impl Transport for SimLink {
         // the bytes arrived even if they no longer parse: account first
         self.stats.frames_recv += 1;
         self.stats.bytes_recv += bytes.len() as u64;
-        let (frame, consumed) = Frame::decode(&bytes)?;
-        if consumed != bytes.len() {
+        // the queue handed over the sender's buffer; share it so decode
+        // borrows zero-copy and the pool recycles it once payloads drop
+        let total = bytes.len();
+        let shared = BufPool::global().share(bytes);
+        let (frame, consumed) = Frame::decode_shared(&shared)?;
+        if consumed != total {
             bail!("sim link: partial frame consumption");
         }
         Ok(frame)

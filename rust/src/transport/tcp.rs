@@ -6,6 +6,7 @@ use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 
 use anyhow::{Context, Result};
 
+use crate::util::BufPool;
 use crate::wire::{Frame, HEADER_BYTES, OFF_LEN};
 
 use super::{LinkStats, Transport, TransportError};
@@ -127,6 +128,8 @@ impl Transport for TcpTransport {
         }
         self.stats.frames_sent += 1;
         self.stats.bytes_sent += bytes.len() as u64;
+        // frame fully on the wire: recycle its buffer for the next encode
+        BufPool::global().put(bytes);
         Ok(())
     }
 
@@ -145,9 +148,15 @@ impl Transport for TcpTransport {
         }
         self.fill_to(HEADER_BYTES + len)?;
         let total = HEADER_BYTES + len;
-        let (frame, consumed) = Frame::decode(&self.read_buf[..total])?;
-        debug_assert_eq!(consumed, total);
+        // swap the filled buffer out for a recycled one and decode
+        // zero-copy from the shared view: payloads borrow the buffer, and
+        // once they drop, its pool slot is harvested for a later frame
+        let mut buf = std::mem::replace(&mut self.read_buf, BufPool::global().take());
+        buf.truncate(total);
         self.filled = 0;
+        let shared = BufPool::global().share(buf);
+        let (frame, consumed) = Frame::decode_shared(&shared)?;
+        debug_assert_eq!(consumed, total);
         self.stats.frames_recv += 1;
         self.stats.bytes_recv += total as u64;
         Ok(frame)

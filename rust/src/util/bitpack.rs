@@ -3,6 +3,11 @@
 //! Top-k sparsification sends each index in ⌈log2 d⌉ bits (paper §3.2,
 //! "offset encoding"); quantization sends each activation in b bits.
 //! Both reduce to a generic little-endian bit writer/reader.
+//!
+//! The writer/reader pack a u64 word at a time through a u128
+//! accumulator instead of bit-by-bit; the byte layout is identical to
+//! the per-bit implementation preserved in [`reference`], which the
+//! property tests compare against across every width.
 
 /// Number of bits needed to encode an index in [0, d).
 pub fn index_bits(d: usize) -> u32 {
@@ -10,10 +15,13 @@ pub fn index_bits(d: usize) -> u32 {
     usize::BITS - (d - 1).max(1).leading_zeros()
 }
 
+/// Word-wise LSB-first bit writer into an owned buffer.
 #[derive(Default)]
 pub struct BitWriter {
     buf: Vec<u8>,
-    bit_pos: usize,
+    acc: u128,
+    nbits: u32,
+    total: usize,
 }
 
 impl BitWriter {
@@ -22,74 +30,203 @@ impl BitWriter {
     }
 
     pub fn with_capacity_bits(bits: usize) -> Self {
-        BitWriter {
-            buf: Vec::with_capacity(bits.div_ceil(8)),
-            bit_pos: 0,
-        }
+        BitWriter { buf: Vec::with_capacity(bits.div_ceil(8)), acc: 0, nbits: 0, total: 0 }
     }
 
     /// Append the low `nbits` of `value` (LSB-first).
     pub fn write(&mut self, value: u64, nbits: u32) {
         debug_assert!(nbits <= 64);
         debug_assert!(nbits == 64 || value < (1u64 << nbits));
-        let mut v = value;
-        let mut remaining = nbits;
-        while remaining > 0 {
-            let byte = self.bit_pos / 8;
-            let off = (self.bit_pos % 8) as u32;
-            if byte == self.buf.len() {
-                self.buf.push(0);
-            }
-            let take = remaining.min(8 - off);
-            let mask = if take == 64 { u64::MAX } else { (1u64 << take) - 1 };
-            self.buf[byte] |= (((v & mask) as u8) << off) as u8;
-            v >>= take;
-            self.bit_pos += take as usize;
-            remaining -= take;
+        // accumulate into the u128 staging word; flush whole u64s
+        self.acc |= (value as u128) << self.nbits;
+        self.nbits += nbits;
+        self.total += nbits as usize;
+        if self.nbits >= 64 {
+            self.buf.extend_from_slice(&(self.acc as u64).to_le_bytes());
+            self.acc >>= 64;
+            self.nbits -= 64;
         }
     }
 
     pub fn bit_len(&self) -> usize {
-        self.bit_pos
+        self.total
     }
 
-    pub fn into_bytes(self) -> Vec<u8> {
+    pub fn into_bytes(mut self) -> Vec<u8> {
+        flush_tail(&mut self.buf, self.acc as u64, self.nbits);
         self.buf
     }
 }
 
+/// Flush a partial accumulator (`nbits` < 64 valid bits) as the final
+/// `ceil(nbits/8)` bytes — same tail shape as the per-bit layout.
+fn flush_tail(out: &mut Vec<u8>, acc: u64, nbits: u32) {
+    let bytes = (nbits as usize).div_ceil(8);
+    out.extend_from_slice(&acc.to_le_bytes()[..bytes]);
+}
+
+/// Word-wise bit writer that appends directly to a borrowed buffer —
+/// codecs pack index sections straight into the frame body without an
+/// intermediate `Vec`. Call [`BitPacker::finish`] to flush the tail.
+pub struct BitPacker<'a> {
+    out: &'a mut Vec<u8>,
+    acc: u128,
+    nbits: u32,
+}
+
+impl<'a> BitPacker<'a> {
+    pub fn new(out: &'a mut Vec<u8>) -> Self {
+        BitPacker { out, acc: 0, nbits: 0 }
+    }
+
+    /// Append the low `nbits` of `value` (LSB-first).
+    pub fn write(&mut self, value: u64, nbits: u32) {
+        debug_assert!(nbits <= 64);
+        debug_assert!(nbits == 64 || value < (1u64 << nbits));
+        self.acc |= (value as u128) << self.nbits;
+        self.nbits += nbits;
+        if self.nbits >= 64 {
+            self.out.extend_from_slice(&(self.acc as u64).to_le_bytes());
+            self.acc >>= 64;
+            self.nbits -= 64;
+        }
+    }
+
+    /// Flush any buffered tail bits. Dropping without finishing loses
+    /// up to 63 bits, so this is consuming and mandatory.
+    pub fn finish(self) {
+        flush_tail(self.out, self.acc as u64, self.nbits);
+    }
+}
+
+/// Word-wise LSB-first bit reader: refills the accumulator eight bytes
+/// at a time instead of masking per byte.
 pub struct BitReader<'a> {
     buf: &'a [u8],
-    bit_pos: usize,
+    /// Next unread byte of `buf`.
+    byte_pos: usize,
+    acc: u128,
+    acc_bits: u32,
+    /// Bits handed out so far — bounds reads against `buf.len() * 8`.
+    consumed: usize,
 }
 
 impl<'a> BitReader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
-        BitReader { buf, bit_pos: 0 }
+        BitReader { buf, byte_pos: 0, acc: 0, acc_bits: 0, consumed: 0 }
     }
 
-    /// Read `nbits` (LSB-first). Returns None past end of buffer.
+    /// Read `nbits` (LSB-first). Returns None past end of buffer
+    /// without consuming anything.
     pub fn read(&mut self, nbits: u32) -> Option<u64> {
-        if self.bit_pos + nbits as usize > self.buf.len() * 8 {
+        debug_assert!(nbits <= 64);
+        if self.consumed + nbits as usize > self.buf.len() * 8 {
             return None;
         }
-        let mut out = 0u64;
-        let mut got = 0u32;
-        while got < nbits {
-            let byte = self.bit_pos / 8;
-            let off = (self.bit_pos % 8) as u32;
-            let take = (nbits - got).min(8 - off);
-            let mask = ((1u16 << take) - 1) as u8;
-            let bits = (self.buf[byte] >> off) & mask;
-            out |= (bits as u64) << got;
-            got += take;
-            self.bit_pos += take as usize;
+        while self.acc_bits < nbits {
+            self.refill();
         }
+        let mask = if nbits == 64 { u64::MAX } else { (1u64 << nbits) - 1 };
+        let out = (self.acc as u64) & mask;
+        self.acc >>= nbits;
+        self.acc_bits -= nbits;
+        self.consumed += nbits as usize;
         Some(out)
     }
 
+    fn refill(&mut self) {
+        let rest = &self.buf[self.byte_pos..];
+        let word = if rest.len() >= 8 {
+            self.byte_pos += 8;
+            u64::from_le_bytes(rest[..8].try_into().unwrap())
+        } else {
+            // zero-padded tail word; bounds in read() keep padding
+            // bits from ever being handed out
+            let mut tail = [0u8; 8];
+            tail[..rest.len()].copy_from_slice(rest);
+            self.byte_pos = self.buf.len();
+            u64::from_le_bytes(tail)
+        };
+        self.acc |= (word as u128) << self.acc_bits;
+        self.acc_bits += 64;
+    }
+
     pub fn remaining_bits(&self) -> usize {
-        self.buf.len() * 8 - self.bit_pos
+        self.buf.len() * 8 - self.consumed
+    }
+}
+
+/// The original per-bit implementation, kept verbatim as the layout
+/// oracle for the word-wise rewrite's property tests. Not for use on
+/// the data path.
+#[doc(hidden)]
+pub mod reference {
+    #[derive(Default)]
+    pub struct BitWriter {
+        buf: Vec<u8>,
+        bit_pos: usize,
+    }
+
+    impl BitWriter {
+        pub fn new() -> Self {
+            Self::default()
+        }
+
+        /// Append the low `nbits` of `value` (LSB-first).
+        pub fn write(&mut self, value: u64, nbits: u32) {
+            debug_assert!(nbits <= 64);
+            debug_assert!(nbits == 64 || value < (1u64 << nbits));
+            let mut v = value;
+            let mut remaining = nbits;
+            while remaining > 0 {
+                let byte = self.bit_pos / 8;
+                let off = (self.bit_pos % 8) as u32;
+                if byte == self.buf.len() {
+                    self.buf.push(0);
+                }
+                let take = remaining.min(8 - off);
+                let mask = if take == 64 { u64::MAX } else { (1u64 << take) - 1 };
+                self.buf[byte] |= ((v & mask) as u8) << off;
+                v >>= take;
+                self.bit_pos += take as usize;
+                remaining -= take;
+            }
+        }
+
+        pub fn into_bytes(self) -> Vec<u8> {
+            self.buf
+        }
+    }
+
+    pub struct BitReader<'a> {
+        buf: &'a [u8],
+        bit_pos: usize,
+    }
+
+    impl<'a> BitReader<'a> {
+        pub fn new(buf: &'a [u8]) -> Self {
+            BitReader { buf, bit_pos: 0 }
+        }
+
+        /// Read `nbits` (LSB-first). Returns None past end of buffer.
+        pub fn read(&mut self, nbits: u32) -> Option<u64> {
+            if self.bit_pos + nbits as usize > self.buf.len() * 8 {
+                return None;
+            }
+            let mut out = 0u64;
+            let mut got = 0u32;
+            while got < nbits {
+                let byte = self.bit_pos / 8;
+                let off = (self.bit_pos % 8) as u32;
+                let take = (nbits - got).min(8 - off);
+                let mask = ((1u16 << take) - 1) as u8;
+                let bits = (self.buf[byte] >> off) & mask;
+                out |= (bits as u64) << got;
+                got += take;
+                self.bit_pos += take as usize;
+            }
+            Some(out)
+        }
     }
 }
 
@@ -166,5 +303,118 @@ mod tests {
         w.write(1, 9);
         assert_eq!(w.bit_len(), 14);
         assert_eq!(w.into_bytes().len(), 2);
+    }
+
+    /// Satellite: word-wise writer must be byte-identical to the old
+    /// per-bit layout across every index width the codecs can emit,
+    /// including non-byte-aligned tails.
+    #[test]
+    fn wordwise_writer_matches_reference_all_index_widths() {
+        let mut rng = Rng::new(42);
+        // widths 1..=32 cover index_bits(d) for every representable
+        // cut dim; tack on 63/64 for the accumulator edge
+        for nbits in (1u32..=32).chain([63, 64]) {
+            // counts chosen to land both aligned and ragged tails
+            for count in [0usize, 1, 7, 8, 9, 100, 257] {
+                let mask = if nbits == 64 { u64::MAX } else { (1u64 << nbits) - 1 };
+                let vals: Vec<u64> = (0..count).map(|_| rng.next_u64() & mask).collect();
+                let mut new_w = BitWriter::new();
+                let mut old_w = reference::BitWriter::new();
+                let mut direct = Vec::new();
+                let mut packer = BitPacker::new(&mut direct);
+                for &v in &vals {
+                    new_w.write(v, nbits);
+                    old_w.write(v, nbits);
+                    packer.write(v, nbits);
+                }
+                packer.finish();
+                let new_b = new_w.into_bytes();
+                let old_b = old_w.into_bytes();
+                assert_eq!(new_b, old_b, "writer layout diverged: width {nbits} count {count}");
+                assert_eq!(direct, old_b, "packer layout diverged: width {nbits} count {count}");
+            }
+        }
+    }
+
+    /// Satellite: word-wise reader agrees with the per-bit reader on
+    /// reference-encoded streams, width by width.
+    #[test]
+    fn wordwise_reader_matches_reference_all_index_widths() {
+        let mut rng = Rng::new(43);
+        for nbits in (1u32..=32).chain([63, 64]) {
+            let mask = if nbits == 64 { u64::MAX } else { (1u64 << nbits) - 1 };
+            let vals: Vec<u64> = (0..129).map(|_| rng.next_u64() & mask).collect();
+            let mut w = reference::BitWriter::new();
+            for &v in &vals {
+                w.write(v, nbits);
+            }
+            let bytes = w.into_bytes();
+            let mut new_r = BitReader::new(&bytes);
+            let mut old_r = reference::BitReader::new(&bytes);
+            for i in 0..=vals.len() {
+                let (a, b) = (new_r.read(nbits), old_r.read(nbits));
+                assert_eq!(a, b, "reader diverged: width {nbits} item {i}");
+                if i < vals.len() {
+                    assert_eq!(a, Some(vals[i]));
+                }
+            }
+        }
+    }
+
+    /// Mixed random widths through both implementations — catches
+    /// accumulator carry bugs a fixed width can't.
+    #[test]
+    fn wordwise_matches_reference_mixed_widths() {
+        let mut rng = Rng::new(44);
+        let items: Vec<(u64, u32)> = (0..2000)
+            .map(|_| {
+                let nbits = 1 + rng.below(64) as u32;
+                let mask = if nbits == 64 { u64::MAX } else { (1u64 << nbits) - 1 };
+                (rng.next_u64() & mask, nbits)
+            })
+            .collect();
+        let mut new_w = BitWriter::new();
+        let mut old_w = reference::BitWriter::new();
+        for &(v, n) in &items {
+            new_w.write(v, n);
+            old_w.write(v, n);
+        }
+        let bytes = new_w.into_bytes();
+        assert_eq!(bytes, old_w.into_bytes());
+        let mut new_r = BitReader::new(&bytes);
+        let mut old_r = reference::BitReader::new(&bytes);
+        for &(v, n) in &items {
+            assert_eq!(new_r.read(n), Some(v));
+            assert_eq!(old_r.read(n), Some(v));
+        }
+    }
+
+    #[test]
+    fn failed_read_consumes_nothing() {
+        let mut w = BitWriter::new();
+        w.write(0x2A, 6);
+        w.write(0x3, 2);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(6), Some(0x2A));
+        assert_eq!(r.remaining_bits(), 2);
+        assert!(r.read(3).is_none());
+        // the failed read must not disturb position
+        assert_eq!(r.remaining_bits(), 2);
+        assert_eq!(r.read(2), Some(0x3));
+        assert_eq!(r.remaining_bits(), 0);
+    }
+
+    #[test]
+    fn packer_appends_to_existing_bytes() {
+        let mut out = vec![0xEE, 0xFF];
+        let mut p = BitPacker::new(&mut out);
+        p.write(0b1_0110, 5);
+        p.write(0x1FF, 9);
+        p.finish();
+        assert_eq!(&out[..2], &[0xEE, 0xFF]);
+        let mut r = BitReader::new(&out[2..]);
+        assert_eq!(r.read(5), Some(0b1_0110));
+        assert_eq!(r.read(9), Some(0x1FF));
     }
 }

@@ -3,9 +3,13 @@
 //! implemented in-tree and tested here.
 
 pub mod bitpack;
+pub mod kernels;
+pub mod pool;
 pub mod rng;
 pub mod timer;
 
-pub use bitpack::{index_bits, BitReader, BitWriter};
+pub use bitpack::{index_bits, BitPacker, BitReader, BitWriter};
+pub use kernels::{extend_f32s_le, read_f32s_le_into};
+pub use pool::{BufPool, Bytes, PoolStats};
 pub use rng::Rng;
 pub use timer::Timer;

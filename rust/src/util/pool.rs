@@ -1,0 +1,410 @@
+//! The memory plane: a thread-safe buffer pool plus refcounted byte
+//! slices, so the steady-state data path recycles frame buffers instead
+//! of allocating per step (see DESIGN.md, "Memory plane").
+//!
+//! Two recycling circuits share one pool:
+//!
+//! - **Owned buffers** (`take` / `put`): a freelist of `Vec<u8>` for the
+//!   encode side. `FrameEncoder` takes, the transport's `send_encoded`
+//!   puts the written frame back. Buffers are cleared on both ends, so a
+//!   recycled buffer can never leak stale bytes into a new frame.
+//! - **Shared buffers** (`share`): the receive side wraps each inbound
+//!   frame in a refcounted [`Bytes`] so `Payload` can borrow its content
+//!   zero-copy. The pool keeps a bounded set of `Arc` slots; `share`
+//!   installs the incoming buffer into a slot whose previous `Bytes`
+//!   have all been dropped (`Arc::get_mut` proves exclusivity) and
+//!   harvests the slot's old buffer back onto the freelist. In steady
+//!   state the encode-side `take` is fed by the decode side's drops and
+//!   no circuit allocates.
+//!
+//! Both circuits are bounded (`free`/`slot` caps, max pooled capacity),
+//! so a burst of 10k concurrent frames degrades to plain allocation
+//! instead of hoarding; `serve_bench` gates on the bound.
+
+use std::ops::Deref;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+/// Freelist bound: owned buffers retained for `take`.
+pub const DEFAULT_FREE_CAP: usize = 256;
+/// Shared-slot bound: refcounted buffers tracked for recycling.
+pub const DEFAULT_SLOT_CAP: usize = 256;
+/// Buffers with more capacity than this are dropped, not pooled — one
+/// elephant frame must not pin megabytes in the freelist forever.
+pub const DEFAULT_MAX_POOLED_BYTES: usize = 4 << 20;
+
+/// A cheaply clonable, immutable view into a refcounted byte buffer.
+///
+/// `Payload` borrows its content bytes from the owning frame buffer
+/// through this type — decode never copies the content section. Equality
+/// is by content, so value types holding `Bytes` compare like they held
+/// a `Vec<u8>`.
+#[derive(Clone)]
+pub struct Bytes {
+    buf: Arc<Vec<u8>>,
+    off: usize,
+    len: usize,
+}
+
+fn empty_backing() -> Arc<Vec<u8>> {
+    static EMPTY: OnceLock<Arc<Vec<u8>>> = OnceLock::new();
+    EMPTY.get_or_init(|| Arc::new(Vec::new())).clone()
+}
+
+impl Bytes {
+    /// Wrap an owned buffer (unpooled; use [`BufPool::share`] on the hot
+    /// path so the backing buffer recycles).
+    pub fn from_vec(v: Vec<u8>) -> Bytes {
+        let len = v.len();
+        Bytes { buf: Arc::new(v), off: 0, len }
+    }
+
+    /// A sub-slice sharing the same backing buffer (no copy).
+    /// Panics if the range is out of bounds, like slice indexing.
+    pub fn slice(&self, range: std::ops::Range<usize>) -> Bytes {
+        assert!(range.start <= range.end && range.end <= self.len, "Bytes::slice out of range");
+        Bytes { buf: self.buf.clone(), off: self.off + range.start, len: range.end - range.start }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[self.off..self.off + self.len]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Default for Bytes {
+    fn default() -> Self {
+        Bytes { buf: empty_backing(), off: 0, len: 0 }
+    }
+}
+
+impl Deref for Bytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Bytes {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    fn from(v: Vec<u8>) -> Bytes {
+        Bytes::from_vec(v)
+    }
+}
+
+impl std::fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Bytes({:?})", self.as_slice())
+    }
+}
+
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Bytes) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Bytes {}
+
+impl PartialEq<[u8]> for Bytes {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<Vec<u8>> for Bytes {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<&[u8]> for Bytes {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl<const N: usize> PartialEq<[u8; N]> for Bytes {
+    fn eq(&self, other: &[u8; N]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+/// Point-in-time pool occupancy (`BufPool::stats`); every field is
+/// bounded by construction, which the hygiene tests assert.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Owned buffers waiting on the freelist.
+    pub free: usize,
+    /// Shared `Arc` slots tracked for recycling (live + reclaimable).
+    pub slots: usize,
+    /// Total heap capacity retained by the freelist, in bytes.
+    pub free_bytes: usize,
+}
+
+struct PoolInner {
+    free: Vec<Vec<u8>>,
+    slots: Vec<Arc<Vec<u8>>>,
+}
+
+/// Thread-safe frame-buffer pool; see the module docs for the two
+/// recycling circuits. One process-wide instance ([`BufPool::global`])
+/// serves the whole data path so encode-side takes recycle decode-side
+/// drops across threads; tests may build private pools.
+pub struct BufPool {
+    inner: Mutex<PoolInner>,
+    free_cap: usize,
+    slot_cap: usize,
+    max_pooled: usize,
+}
+
+impl Default for BufPool {
+    fn default() -> Self {
+        Self::with_limits(DEFAULT_FREE_CAP, DEFAULT_SLOT_CAP, DEFAULT_MAX_POOLED_BYTES)
+    }
+}
+
+impl BufPool {
+    pub fn with_limits(free_cap: usize, slot_cap: usize, max_pooled: usize) -> BufPool {
+        BufPool {
+            inner: Mutex::new(PoolInner { free: Vec::new(), slots: Vec::new() }),
+            free_cap,
+            slot_cap,
+            max_pooled,
+        }
+    }
+
+    /// The process-wide pool the data path runs on.
+    pub fn global() -> &'static BufPool {
+        static GLOBAL: OnceLock<BufPool> = OnceLock::new();
+        GLOBAL.get_or_init(BufPool::default)
+    }
+
+    fn lock(&self) -> MutexGuard<'_, PoolInner> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Worth keeping? Zero-capacity vecs carry nothing; oversized ones
+    /// would pin memory past the pool bound.
+    fn retainable(&self, v: &Vec<u8>) -> bool {
+        v.capacity() > 0 && v.capacity() <= self.max_pooled
+    }
+
+    /// Move `v` onto the freelist if it is retainable and there is room.
+    /// Always clears first: a pooled buffer never holds readable bytes.
+    fn put_locked(g: &mut PoolInner, mut v: Vec<u8>, free_cap: usize, retain: bool) {
+        if retain && g.free.len() < free_cap {
+            v.clear();
+            g.free.push(v);
+        }
+    }
+
+    /// Harvest one reclaimable shared slot (refcount back to 1) onto the
+    /// freelist. Returns true if a buffer was recovered.
+    fn harvest_locked(&self, g: &mut PoolInner) -> bool {
+        for i in 0..g.slots.len() {
+            // take first, then re-borrow g to push — one borrow at a time
+            let taken = match Arc::get_mut(&mut g.slots[i]) {
+                Some(v) if v.capacity() > 0 => Some(std::mem::take(v)),
+                _ => None,
+            };
+            if let Some(old) = taken {
+                let retain = self.retainable(&old);
+                Self::put_locked(g, old, self.free_cap, retain);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// An empty buffer for the encode side, recycled when one is free.
+    pub fn take(&self) -> Vec<u8> {
+        let mut g = self.lock();
+        if g.free.is_empty() {
+            self.harvest_locked(&mut g);
+        }
+        match g.free.pop() {
+            Some(mut v) => {
+                v.clear();
+                v
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Return an owned buffer (a written-out frame) to the freelist.
+    pub fn put(&self, v: Vec<u8>) {
+        let retain = self.retainable(&v);
+        if !retain {
+            return;
+        }
+        let mut g = self.lock();
+        Self::put_locked(&mut g, v, self.free_cap, true);
+    }
+
+    /// Wrap an inbound frame buffer in refcounted [`Bytes`], installing
+    /// it into a recycled slot when one is exclusively held (its old
+    /// buffer moves to the freelist). Falls back to a fresh allocation
+    /// when every slot is still referenced and the slot set is full.
+    pub fn share(&self, v: Vec<u8>) -> Bytes {
+        let len = v.len();
+        let mut g = self.lock();
+        for i in 0..g.slots.len() {
+            if let Some(s) = Arc::get_mut(&mut g.slots[i]) {
+                let old = std::mem::replace(s, v);
+                let retain = self.retainable(&old);
+                Self::put_locked(&mut g, old, self.free_cap, retain);
+                let buf = g.slots[i].clone();
+                return Bytes { buf, off: 0, len };
+            }
+        }
+        if g.slots.len() < self.slot_cap {
+            let a = Arc::new(v);
+            g.slots.push(a.clone());
+            return Bytes { buf: a, off: 0, len };
+        }
+        Bytes::from_vec(v)
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let g = self.lock();
+        PoolStats {
+            free: g.free.len(),
+            slots: g.slots.len(),
+            free_bytes: g.free.iter().map(|v| v.capacity()).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_recycles_capacity_and_clears() {
+        let pool = BufPool::with_limits(4, 4, 1 << 20);
+        let mut v = pool.take();
+        assert!(v.is_empty());
+        v.extend_from_slice(&[0xAA; 100]);
+        let cap = v.capacity();
+        pool.put(v);
+        let v2 = pool.take();
+        // recycled: same capacity back, but no stale bytes readable
+        assert_eq!(v2.capacity(), cap);
+        assert!(v2.is_empty());
+        assert_eq!(pool.stats().free, 0);
+    }
+
+    #[test]
+    fn share_recycles_slots_once_bytes_drop() {
+        let pool = BufPool::with_limits(4, 4, 1 << 20);
+        let b1 = pool.share(vec![1, 2, 3]);
+        assert_eq!(b1, [1u8, 2, 3]);
+        assert_eq!(pool.stats().slots, 1);
+        drop(b1);
+        // next share reuses the slot (no new slot) and harvests the old
+        // buffer onto the freelist
+        let b2 = pool.share(vec![9, 9]);
+        assert_eq!(b2, [9u8, 9]);
+        assert_eq!(pool.stats().slots, 1);
+        assert_eq!(pool.stats().free, 1);
+        // harvested buffer feeds take()
+        drop(b2);
+        assert_eq!(pool.take().capacity(), 3);
+    }
+
+    #[test]
+    fn live_bytes_pin_their_slot() {
+        let pool = BufPool::with_limits(4, 2, 1 << 20);
+        let b1 = pool.share(vec![1; 8]);
+        let b2 = pool.share(vec![2; 8]);
+        let b3 = pool.share(vec![3; 8]); // slot cap hit: unpooled fallback
+        assert_eq!(pool.stats().slots, 2);
+        assert_eq!((b1[0], b2[0], b3[0]), (1, 2, 3));
+        // clones keep the slot pinned
+        let c = b1.clone();
+        drop(b1);
+        let b4 = pool.share(vec![4; 8]);
+        // b2's slot was free? no — only drop(b1) happened but clone c
+        // still pins it, and b2 pins its own: b4 must be unpooled
+        assert_eq!(pool.stats().slots, 2);
+        assert_eq!((c[0], b4[0]), (1, 4));
+    }
+
+    #[test]
+    fn oversized_buffers_are_not_retained() {
+        let pool = BufPool::with_limits(4, 4, 16);
+        pool.put(vec![0; 64]);
+        assert_eq!(pool.stats(), PoolStats::default());
+        let b = pool.share(vec![0; 64]);
+        drop(b);
+        let _ = pool.share(vec![1, 2]);
+        // the harvested 64-byte buffer was over the cap: dropped
+        assert_eq!(pool.stats().free, 0);
+    }
+
+    #[test]
+    fn freelist_is_bounded() {
+        let pool = BufPool::with_limits(2, 2, 1 << 20);
+        for _ in 0..10 {
+            pool.put(vec![0; 8]);
+        }
+        assert!(pool.stats().free <= 2);
+    }
+
+    #[test]
+    fn bytes_slice_shares_backing() {
+        let b = Bytes::from_vec((0u8..32).collect());
+        let s = b.slice(4..12);
+        assert_eq!(s.len(), 8);
+        assert_eq!(s[0], 4);
+        assert_eq!(s.as_slice().as_ptr(), unsafe { b.as_slice().as_ptr().add(4) });
+        let ss = s.slice(2..4);
+        assert_eq!(ss, [6u8, 7]);
+    }
+
+    #[test]
+    fn bytes_equality_is_by_content() {
+        let a = Bytes::from_vec(vec![1, 2, 3]);
+        let b = Bytes::from_vec(vec![1, 2, 3]);
+        assert_eq!(a, b);
+        assert_eq!(a, vec![1u8, 2, 3]);
+        assert_eq!(a, [1u8, 2, 3]);
+        assert_ne!(a, Bytes::from_vec(vec![1, 2]));
+        assert!(Bytes::default().is_empty());
+    }
+
+    #[test]
+    fn share_is_thread_safe() {
+        let pool = std::sync::Arc::new(BufPool::with_limits(8, 8, 1 << 20));
+        let mut handles = Vec::new();
+        for t in 0..4u8 {
+            let p = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u32 {
+                    let b = p.share(vec![t; (i % 64) as usize + 1]);
+                    assert!(b.iter().all(|&x| x == t));
+                    let v = p.take();
+                    assert!(v.is_empty());
+                    p.put(v);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = pool.stats();
+        assert!(s.free <= 8 && s.slots <= 8);
+    }
+}

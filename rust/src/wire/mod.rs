@@ -32,6 +32,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::compress::{CodecSpec, Payload, PayloadMeta};
 use crate::config::Method;
+use crate::util::{BufPool, Bytes};
 
 pub const MAGIC: u32 = 0x53464C31;
 
@@ -422,7 +423,12 @@ fn encode_payload(out: &mut Vec<u8>, p: &Payload) {
     out.extend_from_slice(&p.bytes);
 }
 
-fn decode_payload(c: &mut Cursor) -> Result<Payload> {
+/// `backing`, when present, is the refcounted buffer the cursor's bytes
+/// live in plus the cursor buffer's base offset within it — the decoded
+/// payload then *borrows* its content from that buffer (zero-copy
+/// receive path, `Frame::decode_shared`). Without it the content is
+/// copied into a fresh owned buffer.
+fn decode_payload(c: &mut Cursor, backing: Option<(&Bytes, usize)>) -> Result<Payload> {
     let tag = c.u8()?;
     let meta = match tag {
         0 => PayloadMeta::Sparse {
@@ -441,7 +447,13 @@ fn decode_payload(c: &mut Cursor) -> Result<Payload> {
         other => bail!("unknown payload tag {other}"),
     };
     // content runs to the end of the body; codecs enforce exact lengths
-    Ok(Payload::new(meta, c.rest().to_vec()))
+    let start = c.pos;
+    let rest = c.rest();
+    let bytes = match backing {
+        Some((b, base)) => b.slice(base + start..base + start + rest.len()),
+        None => Bytes::from_vec(rest.to_vec()),
+    };
+    Ok(Payload::new(meta, bytes))
 }
 
 fn encode_codec_spec(out: &mut Vec<u8>, s: &CodecSpec) {
@@ -561,15 +573,26 @@ impl Message {
     }
 
     pub fn decode_body(ty: MsgType, body: &[u8]) -> Result<Message> {
+        Self::decode_body_at(ty, body, None)
+    }
+
+    /// Like `decode_body`, but payload content borrows from `backing`
+    /// (the refcounted frame buffer `body` is a view into, plus `body`'s
+    /// base offset within it) instead of being copied out.
+    fn decode_body_at(
+        ty: MsgType,
+        body: &[u8],
+        backing: Option<(&Bytes, usize)>,
+    ) -> Result<Message> {
         let mut c = Cursor::new(body);
         let msg = match ty {
             MsgType::Activations => Message::Activations {
                 step: c.u64()?,
-                payload: decode_payload(&mut c)?,
+                payload: decode_payload(&mut c, backing)?,
             },
             MsgType::Gradients => Message::Gradients {
                 step: c.u64()?,
-                payload: decode_payload(&mut c)?,
+                payload: decode_payload(&mut c, backing)?,
             },
             MsgType::EvalResult => Message::EvalResult {
                 step: c.u64()?,
@@ -616,7 +639,10 @@ pub struct FrameEncoder {
 
 impl FrameEncoder {
     pub fn new(stream_id: u32, seq: u32, ty: MsgType) -> Self {
-        let mut buf = Vec::with_capacity(HEADER_BYTES + 64);
+        // recycled from the pool: in steady state this is the buffer a
+        // previous frame was sent from, returned by the transport
+        let mut buf = BufPool::global().take();
+        buf.reserve(HEADER_BYTES + 64);
         put_u32(&mut buf, MAGIC);
         buf.push(ty as u8);
         put_u32(&mut buf, stream_id);
@@ -677,6 +703,18 @@ impl Frame {
     }
 
     pub fn decode(buf: &[u8]) -> Result<(Frame, usize)> {
+        Self::decode_at(buf, None)
+    }
+
+    /// Zero-copy decode: the frame's payload content borrows from `buf`
+    /// (a refcounted, typically pooled, receive buffer) instead of being
+    /// copied out. The buffer stays alive — and its pool slot pinned —
+    /// until every `Payload` decoded from it is dropped.
+    pub fn decode_shared(buf: &Bytes) -> Result<(Frame, usize)> {
+        Self::decode_at(buf, Some(buf))
+    }
+
+    fn decode_at(buf: &[u8], backing: Option<&Bytes>) -> Result<(Frame, usize)> {
         if buf.len() < HEADER_BYTES {
             bail!("frame shorter than header");
         }
@@ -694,7 +732,7 @@ impl Frame {
         if crc32fast::hash(body) != crc {
             bail!("frame crc mismatch (stream {stream_id} seq {seq})");
         }
-        let message = Message::decode_body(ty, body)?;
+        let message = Message::decode_body_at(ty, body, backing.map(|b| (b, HEADER_BYTES)))?;
         Ok((Frame { stream_id, seq, message }, HEADER_BYTES + len))
     }
 
@@ -1042,6 +1080,30 @@ mod tests {
         for f in &frags {
             assert_eq!(f.len(), MIN_FRAME_SIZE);
         }
+    }
+
+    #[test]
+    fn decode_shared_borrows_payload_from_frame_buffer() {
+        let f = Frame::on_stream(3, 1, Message::Activations { step: 5, payload: sparse_payload() });
+        let wire = f.encode();
+        let shared = Bytes::from_vec(wire.clone());
+        let (back, used) = Frame::decode_shared(&shared).unwrap();
+        assert_eq!(used, wire.len());
+        assert_eq!(back, f);
+        let Message::Activations { payload, .. } = &back.message else {
+            panic!("expected activations");
+        };
+        // zero-copy: the payload's content pointer lies inside the
+        // shared frame buffer, not in a fresh allocation
+        let base = shared.as_slice().as_ptr() as usize;
+        let p = payload.bytes.as_slice().as_ptr() as usize;
+        assert!(
+            p >= base && p + payload.bytes.len() <= base + shared.len(),
+            "payload content was copied out of the frame buffer"
+        );
+        // and the borrowed view still equals the value-path decode
+        let (copied, _) = Frame::decode(&wire).unwrap();
+        assert_eq!(copied, back);
     }
 
     /// Valid header + CRC around an arbitrary body.
