@@ -30,7 +30,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::compress::{
-    codec_for, Batch, Codec, CodecSpec, DenseBatch, Pass, QuantBatch, SparseBatch,
+    adapt, codec_for, Batch, Codec, CodecSpec, DenseBatch, Pass, QuantBatch, SparseBatch,
 };
 use crate::config::Method;
 use crate::coordinator::send_data_frame;
@@ -38,11 +38,11 @@ use crate::json::Json;
 use crate::metrics::{EpochRecord, RunLedger};
 use crate::transport::sim::LinkModel;
 use crate::transport::{
-    FaultCounts, FaultPlan, FlowPolicy, FragPolicy, Mux, MuxConfig, MuxEvent, RecoveryCounts,
-    RecoveryPolicy, SimLink, SimNet, Transport,
+    FaultCounts, FaultPlan, FlowPolicy, FragPolicy, Mux, MuxConfig, MuxEvent, MuxStream,
+    RecoveryCounts, RecoveryPolicy, SimLink, SimNet, Transport,
 };
 use crate::util::Rng;
-use crate::wire::{Control, Frame, Message};
+use crate::wire::{Control, Frame, Message, OpenSpec};
 
 /// Every codec in the registry, as method specs — the chaos matrix axis.
 pub const CHAOS_METHODS: &[&str] = &[
@@ -77,6 +77,24 @@ pub struct ChaosConfig {
     /// grants, credit parking, and window rebasing across reconnects.
     /// `None` = unmetered (the historical wire behavior).
     pub flow_window: Option<u32>,
+    /// `Some(point)` = the feature owner renegotiates the stream's codec
+    /// mid-session (`Respec`), cutting over exactly at `point.at_step`.
+    /// Only the respec runners honour it; `None` = static spec.
+    pub respec: Option<RespecPoint>,
+}
+
+/// A scheduled mid-session renegotiation for the chaos workload: at
+/// `at_step` the feature owner proposes `method` with that step as the
+/// cut-over boundary and blocks on the verdict (`Mux::respec_await`)
+/// before encoding the boundary step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RespecPoint {
+    pub at_step: u64,
+    pub method: Method,
+    /// Hard-kill the connection right after the proposal is sent — before
+    /// any reply can arrive — so the resume handshake must carry the
+    /// pending respec onto the replacement connection.
+    pub kill: bool,
 }
 
 impl ChaosConfig {
@@ -94,6 +112,7 @@ impl ChaosConfig {
             pipeline_depth: 1,
             max_frame_size: None,
             flow_window: None,
+            respec: None,
         }
     }
 
@@ -116,6 +135,12 @@ impl ChaosConfig {
     /// fragmented message that could never fit its window).
     pub fn with_flow_window(mut self, w: u32) -> Self {
         self.flow_window = Some(w);
+        self
+    }
+
+    /// Renegotiate to `method` mid-session, cutting over at `at_step`.
+    pub fn with_respec(mut self, at_step: u64, method: Method) -> Self {
+        self.respec = Some(RespecPoint { at_step, method, kill: false });
         self
     }
 }
@@ -181,9 +206,16 @@ pub fn fault_plan_for_seed(seed: u64) -> FaultPlan {
 /// The deterministic forward batch for `step`, shaped for the method's
 /// codec (real codec input, no engine).
 fn forward_batch(cfg: &ChaosConfig, step: u64) -> Batch {
+    forward_batch_for(cfg, cfg.method, step)
+}
+
+/// [`forward_batch`] for an explicit method — the respec sessions switch
+/// methods mid-stream, so the batch shape must follow the CURRENT spec,
+/// not the one the stream opened with.
+fn forward_batch_for(cfg: &ChaosConfig, method: Method, step: u64) -> Batch {
     let mut r = Rng::new(cfg.seed ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xF0F0);
     let (rows, dim) = (cfg.rows, cfg.cut_dim);
-    match cfg.method {
+    match method {
         Method::None | Method::L1 { .. } => {
             let data = (0..rows * dim).map(|_| r.normal()).collect();
             Batch::Dense(DenseBatch::new(rows, dim, data))
@@ -278,8 +310,22 @@ fn label_owner_loop(mux: Mux<SimLink>, cfg: ChaosConfig) -> Result<()> {
             other => bail!("label owner: unexpected pre-open event {other:?}"),
         }
     };
-    let mut stream = mux.accept_stream(stream_id)?;
-    let codec = codec_for(cfg.method, cfg.cut_dim)?;
+    let stream = mux.accept_stream(stream_id)?;
+    lo_stream_loop(&mux, stream, &cfg)
+}
+
+/// One label-owner session over one stream: decode forwards, return
+/// gradients, answer epoch summaries — and honour mid-session `Respec`
+/// proposals, cutting the codec over exactly at the agreed step boundary
+/// so every frame decodes under the spec it was encoded with.
+fn lo_stream_loop(
+    mux: &Mux<SimLink>,
+    mut stream: MuxStream<SimLink>,
+    cfg: &ChaosConfig,
+) -> Result<()> {
+    let mut codec = codec_for(cfg.method, cfg.cut_dim)?;
+    // an accepted respec waiting for its boundary: (effective_step, method)
+    let mut pending: Option<(u64, Method)> = None;
     let mut seq = 0u32;
     let mut epoch_loss = 0.0f64;
     let mut epoch_steps = 0u64;
@@ -291,11 +337,31 @@ fn label_owner_loop(mux: Mux<SimLink>, cfg: ChaosConfig) -> Result<()> {
                 epoch_steps = 0;
             }
             Message::Activations { step, payload } => {
+                if let Some((eff, m)) = pending {
+                    if step >= eff {
+                        codec = codec_for(m, cfg.cut_dim)?;
+                        pending = None;
+                    }
+                }
                 let decoded = codec.decode(&payload, Pass::Forward)?;
                 epoch_loss += batch_digest(&decoded);
                 epoch_steps += 1;
                 let grad = gradient_for(&decoded);
                 send_data_frame(&mut stream, &mut seq, &*codec, step, &grad, Pass::Backward)?;
+            }
+            Message::Respec { generation: _, effective_step, spec } => {
+                // the same gate the serving plane applies on OpenStream:
+                // geometry must match and the codec registry must accept
+                // the parameters; refusal keeps the old spec on both sides
+                match spec {
+                    OpenSpec::Spec(s)
+                        if s.cut_dim == cfg.cut_dim && codec_for(s.method, s.cut_dim).is_ok() =>
+                    {
+                        mux.respec_accept(stream.id())?;
+                        pending = Some((effective_step, s.method));
+                    }
+                    _ => mux.respec_reject(stream.id())?,
+                }
             }
             Message::Control(Control::EndEpoch { epoch }) => {
                 let loss_sum = (epoch_loss / epoch_steps.max(1) as f64) as f32;
@@ -310,6 +376,33 @@ fn label_owner_loop(mux: Mux<SimLink>, cfg: ChaosConfig) -> Result<()> {
             other => bail!("label owner: unexpected {:?}", other.msg_type()),
         }
     }
+}
+
+/// Label owner for the two-stream respec sessions: accept `n_streams`
+/// streams, then serve each from its own thread through the same
+/// [`lo_stream_loop`] the single-stream harness uses.
+fn respec_label_owner(mux: Mux<SimLink>, cfg: ChaosConfig, n_streams: usize) -> Result<()> {
+    let mut ids = Vec::new();
+    while ids.len() < n_streams {
+        match mux.next_event()? {
+            MuxEvent::Opened(id) => ids.push(id),
+            MuxEvent::Goaway { code } => bail!("label owner: goaway (code {code}) before open"),
+            // frames for already-opened streams land in their inboxes;
+            // their worker threads pick them up below
+            _ => continue,
+        }
+    }
+    let mut workers = Vec::new();
+    for id in ids {
+        let stream = mux.accept_stream(id)?;
+        let mux = mux.clone();
+        let cfg = cfg.clone();
+        workers.push(std::thread::spawn(move || lo_stream_loop(&mux, stream, &cfg)));
+    }
+    for w in workers {
+        w.join().map_err(|_| anyhow::anyhow!("label-owner stream thread panicked"))??;
+    }
+    Ok(())
 }
 
 /// Receive and digest the gradient for `expect` (the oldest in-flight
@@ -458,6 +551,195 @@ fn feature_owner_lockstep(
     net.set_faults_enabled(false);
     stream.send(&Frame::new(seq, Message::Control(Control::Shutdown)))?;
     Ok(ledger)
+}
+
+/// What one feature-owner stream driver produced: its ledger plus the
+/// still-open stream and sequence counter, so the runner can quiesce the
+/// link before the final `Shutdown` (two-generals: the session's last
+/// frame must not be faultable after its sender exits).
+struct FoRun {
+    ledger: RunLedger,
+    stream: MuxStream<SimLink>,
+    seq: u32,
+}
+
+/// Lockstep feature-owner driver for one stream of a respec session.
+/// With `respec = Some(point)`, the driver proposes `point.method` just
+/// before encoding step `point.at_step` and blocks on `respec_await` —
+/// the cut-over barrier — so every frame it sends is encoded under the
+/// spec both sides agreed decodes it. Every proposal (accepted or not)
+/// is recorded in the ledger via `compress::adapt::record_switch`.
+fn fo_respec_lockstep(
+    mux: &Mux<SimLink>,
+    mut stream: MuxStream<SimLink>,
+    cfg: &ChaosConfig,
+    net: &SimNet,
+    respec: Option<RespecPoint>,
+) -> Result<FoRun> {
+    let mut method = cfg.method;
+    let mut codec = codec_for(method, cfg.cut_dim)?;
+    let mut seq = 0u32;
+    let mut ledger = RunLedger {
+        config_text: format!(
+            "chaos seed = {}\nmethod = {}\nrespec = {}",
+            cfg.seed,
+            cfg.method,
+            respec
+                .map(|r| format!("{} at step {}", r.method, r.at_step))
+                .unwrap_or_else(|| "none".into()),
+        ),
+        ..Default::default()
+    };
+    let mut step = 0u64;
+    let mut pct_sum = 0.0f64;
+    let mut pct_n = 0u64;
+    for epoch in 0..cfg.epochs {
+        stream.send(&Frame::new(seq, Message::Control(Control::StartEpoch { epoch })))?;
+        seq += 1;
+        let mut grad_digest = 0.0f64;
+        for _ in 0..cfg.steps_per_epoch {
+            if let Some(rp) = respec {
+                if step == rp.at_step && method != rp.method {
+                    mux.respec_stream(
+                        stream.id(),
+                        CodecSpec::new(rp.method, cfg.cut_dim),
+                        rp.at_step,
+                    )?;
+                    if rp.kill {
+                        // strand the proposal in flight: the resume
+                        // handshake must re-propose it on the
+                        // replacement connection
+                        net.kill();
+                    }
+                    let accepted = mux.respec_await(stream.id())?;
+                    adapt::record_switch(
+                        &mut ledger,
+                        stream.id(),
+                        step,
+                        method,
+                        rp.method,
+                        accepted,
+                    );
+                    if accepted {
+                        method = rp.method;
+                        codec = codec_for(method, cfg.cut_dim)?;
+                    }
+                }
+            }
+            let batch = forward_batch_for(cfg, method, step);
+            let content =
+                send_data_frame(&mut stream, &mut seq, &*codec, step, &batch, Pass::Forward)?;
+            pct_sum += 100.0 * content as f64 / (cfg.rows * cfg.cut_dim * 4) as f64;
+            pct_n += 1;
+            let frame = stream.recv()?;
+            let Message::Gradients { step: got, payload } = frame.message else {
+                bail!("feature owner expected Gradients, got {:?}", frame.message.msg_type());
+            };
+            if got != step {
+                bail!("gradient step mismatch: {got} != {step} (ordering broken)");
+            }
+            grad_digest += batch_digest(&codec.decode(&payload, Pass::Backward)?);
+            step += 1;
+        }
+        stream.send(&Frame::new(seq, Message::Control(Control::EndEpoch { epoch })))?;
+        seq += 1;
+        let frame = stream.recv()?;
+        let Message::EvalResult { loss_sum, metric_count, .. } = frame.message else {
+            bail!("feature owner expected EvalResult, got {:?}", frame.message.msg_type());
+        };
+        ledger.push(EpochRecord {
+            epoch,
+            train_loss: loss_sum as f64,
+            train_metric: grad_digest / cfg.steps_per_epoch.max(1) as f64,
+            test_loss: loss_sum as f64 * 0.5,
+            test_metric: metric_count as f64,
+            comm_bytes: stream.stats().total_bytes(),
+            sim_link_secs: net.sim_secs(),
+            wall_secs: 0.0,
+        });
+    }
+    ledger.fwd_compressed_pct = pct_sum / pct_n.max(1) as f64;
+    Ok(FoRun { ledger, stream, seq })
+}
+
+/// Everything a two-stream respec session produced.
+pub struct RespecOutcome {
+    /// Stream that kept its opening spec for the whole session.
+    pub static_ledger: RunLedger,
+    /// Stream that renegotiated mid-session (per `cfg.respec`).
+    pub respec_ledger: RunLedger,
+    pub faults: FaultCounts,
+    pub recovery: RecoveryCounts,
+    /// Feature-owner byte attribution: (physical bytes sent, sum of the
+    /// two streams' attributed sent bytes). Equal on a clean link — every
+    /// frame, Respec included, is accounted to exactly one stream.
+    pub sent_accounting: (u64, u64),
+}
+
+/// Run the two-stream respec session over a `SimNet` carrying `plan`,
+/// recovery on both sides: stream A holds `cfg.method` for the whole run
+/// while stream B renegotiates per `cfg.respec`. Each stream's workload
+/// is deterministic on its own, so per-stream metrics must be
+/// bit-identical across fault plans.
+pub fn run_respec_session(cfg: &ChaosConfig, plan: FaultPlan) -> Result<RespecOutcome> {
+    let Some(rp) = cfg.respec else {
+        bail!("run_respec_session needs cfg.respec");
+    };
+    let net = SimNet::with_faults(LinkModel::default(), plan);
+    let (a, b) = net.pair();
+    let policy = RecoveryPolicy {
+        probe_after_polls: 200,
+        probe_interval_polls: 2_000,
+        poll_timeout_ms: 30_000,
+        ..RecoveryPolicy::default()
+    };
+    let nc = net.clone();
+    let ns = net.clone();
+    let cm = Mux::with_config(
+        a,
+        MuxConfig::initiator().recovery(policy).reconnector(move |_| {
+            nc.reconnect();
+            Ok(None)
+        }),
+    )?;
+    let sm = Mux::with_config(
+        b,
+        MuxConfig::acceptor().recovery(policy).reconnector(move |_| {
+            ns.reconnect();
+            Ok(None)
+        }),
+    )?;
+    let sm_counts = sm.clone();
+    let cfg_lo = cfg.clone();
+    let lo = std::thread::spawn(move || respec_label_owner(sm, cfg_lo, 2));
+    // open both streams up front so ids are fixed: 1 = static, 3 = respec
+    let sa = cm.open_stream_with(CodecSpec::new(cfg.method, cfg.cut_dim))?;
+    let sb = cm.open_stream_with(CodecSpec::new(cfg.method, cfg.cut_dim))?;
+    let cm_a = cm.clone();
+    let cfg_a = cfg.clone();
+    let net_a = net.clone();
+    let fo_a = std::thread::spawn(move || fo_respec_lockstep(&cm_a, sa, &cfg_a, &net_a, None));
+    let run_b = fo_respec_lockstep(&cm, sb, cfg, &net, Some(rp));
+    let run_a = fo_a.join().map_err(|_| anyhow::anyhow!("static-stream thread panicked"))?;
+    let mut run_a = run_a.context("static stream")?;
+    let mut run_b = run_b.context("respec stream")?;
+    // quiesce the link for the shutdowns only after BOTH streams finished
+    // training, so the chaos window covers every training-body frame
+    net.set_faults_enabled(false);
+    run_a.stream.send(&Frame::new(run_a.seq, Message::Control(Control::Shutdown)))?;
+    run_b.stream.send(&Frame::new(run_b.seq, Message::Control(Control::Shutdown)))?;
+    lo.join().map_err(|_| anyhow::anyhow!("label-owner thread panicked"))?.context("label owner")?;
+    let physical = cm.physical_stats();
+    let attributed = run_a.stream.stats().bytes_sent + run_b.stream.stats().bytes_sent;
+    let mut recovery = cm.recovery_counts();
+    recovery.add(&sm_counts.recovery_counts());
+    Ok(RespecOutcome {
+        static_ledger: run_a.ledger,
+        respec_ledger: run_b.ledger,
+        faults: net.fault_totals(),
+        recovery,
+        sent_accounting: (physical.bytes_sent, attributed),
+    })
 }
 
 /// Everything one session produced.
@@ -673,6 +955,96 @@ pub fn run_schedule_configured(
     v
 }
 
+/// Run one respec schedule: a two-stream session where stream B flips
+/// `from_spec -> to_spec` mid-final-epoch, once over a clean link and
+/// once under the seed's fault plan (which may hit the `Respec` frame
+/// itself). The verdict demands (1) both streams' metrics bit-identical
+/// across the two runs, (2) the respec accepted — and ledger-recorded —
+/// in both, and (3) the clean run's per-stream sent-byte attribution
+/// summing exactly to the physical link bytes.
+pub fn run_respec_schedule(seed: u64, from_spec: &str, to_spec: &str) -> ChaosVerdict {
+    let plan = fault_plan_for_seed(seed);
+    let mut v = ChaosVerdict {
+        seed,
+        method_spec: format!("{from_spec}->{to_spec}"),
+        plan,
+        ok: false,
+        detail: String::new(),
+        faults: FaultCounts::default(),
+        recovery: RecoveryCounts::default(),
+        max_frame_size: None,
+        flow_window: None,
+    };
+    let (from, to) = match (Method::parse(from_spec), Method::parse(to_spec)) {
+        (Ok(f), Ok(t)) => (f, t),
+        (Err(e), _) | (_, Err(e)) => {
+            v.detail = format!("bad method spec: {e}");
+            return v;
+        }
+    };
+    let cfg = ChaosConfig::quick(seed, from);
+    // mid final epoch: never a step-0 or epoch boundary, so the cut-over
+    // lands inside a running window
+    let at = (cfg.epochs - 1) as u64 * cfg.steps_per_epoch as u64
+        + cfg.steps_per_epoch as u64 / 2;
+    let cfg = cfg.with_respec(at, to);
+    let clean = match run_respec_session(&cfg, FaultPlan::none()) {
+        Ok(o) => o,
+        Err(e) => {
+            v.detail = format!("clean run failed: {e:#}");
+            return v;
+        }
+    };
+    let chaos = match run_respec_session(&cfg, plan) {
+        Ok(o) => o,
+        Err(e) => {
+            v.detail = format!("chaos run failed: {e:#}");
+            return v;
+        }
+    };
+    v.faults = chaos.faults;
+    v.recovery = chaos.recovery;
+    let combined = |o: &RespecOutcome| {
+        format!(
+            "{}||{}",
+            metrics_fingerprint(&o.static_ledger),
+            metrics_fingerprint(&o.respec_ledger)
+        )
+    };
+    let (cf, xf) = (combined(&clean), combined(&chaos));
+    if cf != xf {
+        v.detail = format!("metric divergence under faults:\n  clean {cf}\n  chaos {xf}");
+        return v;
+    }
+    for (name, o) in [("clean", &clean), ("chaos", &chaos)] {
+        if o.respec_ledger.extra.get("respec_accepted") != Some(&1.0) {
+            v.detail = format!(
+                "{name} run did not record an accepted respec (extra: {:?})",
+                o.respec_ledger.extra
+            );
+            return v;
+        }
+    }
+    // recovery traffic is scheduling-dependent, so exact attribution is
+    // only checkable on the clean run — but there it must be to the byte
+    let (physical, attributed) = clean.sent_accounting;
+    if physical != attributed {
+        v.detail = format!(
+            "byte accounting leak on the clean run: physical {physical} != attributed {attributed}"
+        );
+        return v;
+    }
+    v.ok = true;
+    v.detail = format!(
+        "respec at step {at} metric bit-identical across {} injected faults \
+         ({} retransmits, {} reconnects)",
+        v.faults.total(),
+        v.recovery.retransmits,
+        v.recovery.reconnects
+    );
+    v
+}
+
 /// The one-line reproduction for a failing seed.
 pub fn repro_command(seed: u64, method_spec: &str) -> String {
     format!("cargo run --bin splitfed -- chaos --seed {seed} --method {method_spec}")
@@ -798,6 +1170,42 @@ mod tests {
             let v = run_schedule_fragmented(91, spec, Some(96));
             assert!(v.ok, "{spec} seed 91 frag 96: {}", v.detail);
         }
+    }
+
+    #[test]
+    fn respec_mid_epoch_schedule_survives_smoke() {
+        // the full respec matrix lives in rust/tests/chaos.rs; this is
+        // the in-crate smoke test (one seed, the flagship k-switch)
+        let v = run_respec_schedule(91, "topk:k=6", "topk:k=2");
+        assert!(v.ok, "respec seed 91: {}", v.detail);
+    }
+
+    #[test]
+    fn respec_survives_kill_during_proposal() {
+        // hard-kill the link the instant the proposal is in flight: the
+        // resume handshake must re-propose it on the replacement
+        // connection, and the cut-over must still land exactly once
+        let to = Method::Topk { k: 2 };
+        let base = ChaosConfig::quick(41, Method::Topk { k: 6 }).with_respec(9, to);
+        let clean = run_respec_session(&base, FaultPlan::none()).unwrap();
+        let mut killed_cfg = base.clone();
+        killed_cfg.respec = Some(RespecPoint { at_step: 9, method: to, kill: true });
+        let killed = run_respec_session(&killed_cfg, FaultPlan::none()).unwrap();
+        // NB the killed run's config_text matches the clean one (the kill
+        // flag isn't printed), so fingerprints compare the same schedule
+        for (c, k) in [
+            (&clean.static_ledger, &killed.static_ledger),
+            (&clean.respec_ledger, &killed.respec_ledger),
+        ] {
+            assert_eq!(metrics_fingerprint(c), metrics_fingerprint(k));
+        }
+        assert!(
+            killed.recovery.reconnects >= 1,
+            "kill produced no reconnect: {:?}",
+            killed.recovery
+        );
+        assert_eq!(killed.respec_ledger.extra.get("respec_accepted"), Some(&1.0));
+        assert_eq!(clean.respec_ledger.extra.get("respec_accepted"), Some(&1.0));
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! Telemetry-driven per-stream codec adaptation (the policy half of the
+//! `Respec` renegotiation plane; the mechanism half lives in
+//! `transport::mux`).
+//!
+//! The policy is a pure function from observed signals to a proposed
+//! method: link telemetry (`LinkStats` throughput, injected-fault rate,
+//! bytes parked under flow control) plus training signals (epoch, the
+//! ledger's loss slope) pick the next k/bits for a stream. Deterministic
+//! by construction — the same signals always propose the same spec — so
+//! adaptive runs stay replayable under the chaos harness.
+//!
+//! Decisions walk a fixed ladder of candidate sizes one rung at a time
+//! (hysteresis: no rung change, no proposal), trading the two failure
+//! modes the paper's static specs cannot escape:
+//!
+//! - a struggling link (faults, congestion) wants FEWER bytes per step,
+//!   so retransmits and queue delay stop dominating time-to-accuracy;
+//! - a healthy link under a flattening loss wants MORE fidelity, since
+//!   spare capacity is better spent on accuracy than saved.
+//!
+//! Every proposed switch — accepted or refused — is recorded in the
+//! `RunLedger` (`record_switch`), so communication accounting stays
+//! byte-exact and auditable across spec generations.
+
+use crate::config::Method;
+use crate::metrics::RunLedger;
+use crate::transport::LinkStats;
+
+/// Observed inputs to one adaptation decision.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AdaptSignals {
+    /// Training epoch the decision is made in.
+    pub epoch: u32,
+    /// d(train_loss)/d(epoch) over the last two ledger records; negative
+    /// while the model is still learning, near zero on a plateau.
+    pub loss_slope: f64,
+    /// Framed goodput over the observation window, bytes/second.
+    pub throughput: f64,
+    /// Link faults per frame sent, in [0, 1].
+    pub fault_rate: f64,
+    /// Bytes parked under flow control (sent but not yet consumed).
+    pub buffered_bytes: u64,
+}
+
+impl AdaptSignals {
+    /// Derive the link-side signals from a stream's `LinkStats` delta over
+    /// `secs` of (simulated or wall) time.
+    pub fn from_link(stats: &LinkStats, secs: f64, buffered_bytes: u64) -> Self {
+        let sent = stats.frames_sent.max(1);
+        AdaptSignals {
+            epoch: 0,
+            loss_slope: 0.0,
+            throughput: if secs > 0.0 { stats.total_bytes() as f64 / secs } else { 0.0 },
+            fault_rate: (stats.faults.total() as f64 / sent as f64).min(1.0),
+            buffered_bytes,
+        }
+    }
+
+    /// Fill in the training-side signals from the run ledger.
+    pub fn with_training(mut self, ledger: &RunLedger) -> Self {
+        self.epoch = ledger.epochs.last().map(|e| e.epoch).unwrap_or(0);
+        self.loss_slope = loss_slope(ledger);
+        self
+    }
+}
+
+/// d(train_loss)/d(epoch) between the ledger's last two records; 0 until
+/// two epochs exist.
+pub fn loss_slope(ledger: &RunLedger) -> f64 {
+    match ledger.epochs.as_slice() {
+        [.., a, b] => b.train_loss - a.train_loss,
+        _ => 0.0,
+    }
+}
+
+/// The adaptation policy: a ladder of candidate sparsity levels plus the
+/// thresholds that move a stream along it.
+#[derive(Clone, Debug)]
+pub struct AdaptPolicy {
+    /// Candidate k values, ascending (more k = more bytes, more fidelity).
+    /// A stream moves at most one rung per decision.
+    pub k_ladder: Vec<usize>,
+    /// Fault rate above this marks the link lossy: step down the ladder.
+    pub lossy_fault_rate: f64,
+    /// Flow-control backlog above this marks congestion: step down.
+    pub congested_bytes: u64,
+    /// |loss slope| below this marks a plateau: step up (spend spare
+    /// capacity on fidelity). Only consulted once an epoch has completed,
+    /// so a cold start never reads as a plateau.
+    pub plateau_slope: f64,
+}
+
+impl Default for AdaptPolicy {
+    fn default() -> Self {
+        AdaptPolicy {
+            k_ladder: vec![2, 4, 6, 12],
+            lossy_fault_rate: 0.05,
+            congested_bytes: 64 * 1024,
+            plateau_slope: 0.02,
+        }
+    }
+}
+
+impl AdaptPolicy {
+    /// Propose the next method for a stream, or `None` to keep the
+    /// current one (hysteresis: unchanged rung, or a method without a k
+    /// to adapt). The proposal preserves the method family — a
+    /// `RandTopk` stream keeps its alpha, a `Topk` stream stays `Topk` —
+    /// only the k moves.
+    pub fn decide(&self, current: Method, sig: &AdaptSignals) -> Option<Method> {
+        let k = current.k()?;
+        if self.k_ladder.is_empty() {
+            return None;
+        }
+        // nearest rung to the current k (the current spec need not be on
+        // the ladder at all — e.g. a hand-picked static k)
+        let pos = self
+            .k_ladder
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, v)| v.abs_diff(k))
+            .map(|(i, _)| i)
+            .unwrap();
+        let target = if sig.fault_rate > self.lossy_fault_rate
+            || sig.buffered_bytes > self.congested_bytes
+        {
+            // struggling link: cheaper frames beat fidelity
+            pos.checked_sub(1)?
+        } else if sig.epoch > 0 && sig.loss_slope.abs() < self.plateau_slope {
+            // healthy link, flat loss: buy fidelity with the headroom
+            (pos + 1).min(self.k_ladder.len() - 1)
+        } else {
+            pos
+        };
+        let next = self.k_ladder[target];
+        (next != k).then(|| with_k(current, next))
+    }
+}
+
+/// The same method family at a different k. Methods without a k come back
+/// unchanged.
+pub fn with_k(m: Method, k: usize) -> Method {
+    match m {
+        Method::RandTopk { alpha, .. } => Method::RandTopk { k, alpha },
+        Method::Topk { .. } => Method::Topk { k },
+        Method::SizeReduction { .. } => Method::SizeReduction { k },
+        other => other,
+    }
+}
+
+/// Scalar "level" of a method for the numeric-only ledger: k for the
+/// sparse family, bits for quantization, 0 for dense.
+pub fn method_level(m: Method) -> f64 {
+    match m {
+        Method::Quant { bits } => bits as f64,
+        other => other.k().map(|k| k as f64).unwrap_or(0.0),
+    }
+}
+
+/// Record one renegotiation (accepted or refused) in the run ledger, so
+/// a run's spec history is auditable next to its byte counts. Keys:
+/// `respec_events` counts proposals, `respec_accepted`/`respec_rejected`
+/// split the verdicts, and each event `n` gets
+/// `respec_{n:02}_{stream,step,from,to,accepted}` entries.
+pub fn record_switch(
+    ledger: &mut RunLedger,
+    stream_id: u32,
+    step: u64,
+    from: Method,
+    to: Method,
+    accepted: bool,
+) {
+    let n = ledger.extra.get("respec_events").copied().unwrap_or(0.0) as u64;
+    ledger.extra.insert("respec_events".into(), (n + 1) as f64);
+    let verdict = if accepted { "respec_accepted" } else { "respec_rejected" };
+    let v = ledger.extra.get(verdict).copied().unwrap_or(0.0);
+    ledger.extra.insert(verdict.into(), v + 1.0);
+    let key = |s: &str| format!("respec_{n:02}_{s}");
+    ledger.extra.insert(key("stream"), stream_id as f64);
+    ledger.extra.insert(key("step"), step as f64);
+    ledger.extra.insert(key("from"), method_level(from));
+    ledger.extra.insert(key("to"), method_level(to));
+    ledger.extra.insert(key("accepted"), if accepted { 1.0 } else { 0.0 });
+}
+
+/// Accuracy per megabyte of framed communication — the figure of merit
+/// `BENCH_adapt.json` compares adaptive against static specs on.
+pub fn accuracy_per_mb(metric: f64, comm_bytes: u64) -> f64 {
+    if comm_bytes == 0 {
+        return 0.0;
+    }
+    metric / (comm_bytes as f64 / 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::EpochRecord;
+    use crate::transport::FaultCounts;
+
+    fn quiet() -> AdaptSignals {
+        AdaptSignals { epoch: 0, loss_slope: -1.0, ..Default::default() }
+    }
+
+    #[test]
+    fn lossy_link_steps_down_one_rung() {
+        let p = AdaptPolicy::default();
+        let sig = AdaptSignals { fault_rate: 0.2, ..quiet() };
+        assert_eq!(p.decide(Method::Topk { k: 6 }, &sig), Some(Method::Topk { k: 4 }));
+        // one rung at a time, never a cliff
+        assert_eq!(p.decide(Method::Topk { k: 12 }, &sig), Some(Method::Topk { k: 6 }));
+        // already at the bottom: nothing cheaper to propose
+        assert_eq!(p.decide(Method::Topk { k: 2 }, &sig), None);
+    }
+
+    #[test]
+    fn congestion_counts_as_struggle() {
+        let p = AdaptPolicy::default();
+        let sig = AdaptSignals { buffered_bytes: 1 << 20, ..quiet() };
+        assert_eq!(p.decide(Method::Topk { k: 6 }, &sig), Some(Method::Topk { k: 4 }));
+    }
+
+    #[test]
+    fn plateau_on_a_healthy_link_steps_up() {
+        let p = AdaptPolicy::default();
+        let sig = AdaptSignals { epoch: 3, loss_slope: -0.001, ..Default::default() };
+        assert_eq!(p.decide(Method::Topk { k: 4 }, &sig), Some(Method::Topk { k: 6 }));
+        // top of the ladder holds
+        assert_eq!(p.decide(Method::Topk { k: 12 }, &sig), None);
+        // epoch 0 never reads as a plateau (no slope evidence yet)
+        let cold = AdaptSignals { epoch: 0, loss_slope: 0.0, ..Default::default() };
+        assert_eq!(p.decide(Method::Topk { k: 4 }, &cold), None);
+    }
+
+    #[test]
+    fn steady_state_and_non_k_methods_hold() {
+        let p = AdaptPolicy::default();
+        assert_eq!(p.decide(Method::Topk { k: 6 }, &quiet()), None);
+        assert_eq!(p.decide(Method::Quant { bits: 2 }, &quiet()), None);
+        assert_eq!(p.decide(Method::None, &quiet()), None);
+        // off-ladder k snaps to the nearest rung before moving
+        let lossy = AdaptSignals { fault_rate: 1.0, ..quiet() };
+        assert_eq!(p.decide(Method::Topk { k: 7 }, &lossy), Some(Method::Topk { k: 4 }));
+    }
+
+    #[test]
+    fn family_is_preserved_across_a_switch() {
+        let p = AdaptPolicy::default();
+        let sig = AdaptSignals { fault_rate: 0.2, ..quiet() };
+        assert_eq!(
+            p.decide(Method::RandTopk { k: 6, alpha: 0.1 }, &sig),
+            Some(Method::RandTopk { k: 4, alpha: 0.1 })
+        );
+    }
+
+    #[test]
+    fn signals_derive_from_link_and_ledger() {
+        let stats = LinkStats {
+            frames_sent: 100,
+            bytes_sent: 5_000,
+            bytes_recv: 5_000,
+            faults: FaultCounts { dropped: 10, ..Default::default() },
+            ..Default::default()
+        };
+        let sig = AdaptSignals::from_link(&stats, 2.0, 7);
+        assert_eq!(sig.throughput, 5_000.0);
+        assert!((sig.fault_rate - 0.1).abs() < 1e-12);
+        assert_eq!(sig.buffered_bytes, 7);
+
+        let mut ledger = RunLedger::default();
+        assert_eq!(loss_slope(&ledger), 0.0);
+        ledger.push(EpochRecord { epoch: 0, train_loss: 2.0, ..Default::default() });
+        ledger.push(EpochRecord { epoch: 1, train_loss: 1.5, ..Default::default() });
+        let sig = sig.with_training(&ledger);
+        assert_eq!(sig.epoch, 1);
+        assert!((sig.loss_slope + 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ledger_records_every_switch() {
+        let mut ledger = RunLedger::default();
+        record_switch(&mut ledger, 1, 12, Method::Topk { k: 6 }, Method::Topk { k: 2 }, true);
+        record_switch(&mut ledger, 3, 20, Method::Topk { k: 2 }, Method::Topk { k: 6 }, false);
+        assert_eq!(ledger.extra.get("respec_events"), Some(&2.0));
+        assert_eq!(ledger.extra.get("respec_accepted"), Some(&1.0));
+        assert_eq!(ledger.extra.get("respec_rejected"), Some(&1.0));
+        assert_eq!(ledger.extra.get("respec_00_stream"), Some(&1.0));
+        assert_eq!(ledger.extra.get("respec_00_step"), Some(&12.0));
+        assert_eq!(ledger.extra.get("respec_00_from"), Some(&6.0));
+        assert_eq!(ledger.extra.get("respec_00_to"), Some(&2.0));
+        assert_eq!(ledger.extra.get("respec_01_accepted"), Some(&0.0));
+    }
+
+    #[test]
+    fn accuracy_per_mb_is_metric_over_megabytes() {
+        assert_eq!(accuracy_per_mb(0.8, 2_000_000), 0.4);
+        assert_eq!(accuracy_per_mb(0.8, 0), 0.0);
+    }
+}

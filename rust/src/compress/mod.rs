@@ -11,6 +11,7 @@
 //! codec type, so a new wire layout is one new `impl Codec` plus a registry
 //! arm, touching neither party.
 
+pub mod adapt;
 pub mod codec;
 pub mod dense;
 pub mod l1;
@@ -18,6 +19,7 @@ pub mod quant;
 pub mod size_model;
 pub mod sparse;
 
+pub use adapt::{AdaptPolicy, AdaptSignals};
 pub use codec::{codec_for, scratch_f32, scratch_quant, scratch_sparse, Batch, Codec, CodecSpec};
 pub use dense::DenseCodec;
 pub use l1::L1Codec;

@@ -52,12 +52,22 @@ impl SparseCodec {
                 self.dim, self.k, batch.dim, batch.k
             );
         }
+        // report each slice against rows*k on its own — with rows == 0
+        // a joint "X values / Y indices" message blamed both slices even
+        // when only one was non-empty
         let n = batch.rows * self.k;
-        if batch.values.len() != n || batch.indices.len() != n {
+        if batch.values.len() != n {
             bail!(
-                "sparse batch arity mismatch: {} values / {} indices for rows*k={n}",
+                "sparse batch arity mismatch: {} values for rows*k={n} (rows={})",
                 batch.values.len(),
-                batch.indices.len()
+                batch.rows
+            );
+        }
+        if batch.indices.len() != n {
+            bail!(
+                "sparse batch arity mismatch: {} indices for rows*k={n} (rows={})",
+                batch.indices.len(),
+                batch.rows
             );
         }
         Ok(())
@@ -253,6 +263,42 @@ mod tests {
         assert_eq!(p.wire_bytes(), 4 * 6 * 4);
         let back = codec.decode(&p, Pass::Forward).unwrap();
         assert_eq!(back, Batch::Sparse(batch));
+    }
+
+    /// dim == 1 edge: `index_bits(1) == 0`, so the packed index section
+    /// is empty and the forward wire is exactly the f32 values.
+    #[test]
+    fn dim_one_packs_zero_bit_indices() {
+        let codec = SparseCodec::topk(1, 1);
+        let batch = SparseBatch {
+            rows: 4,
+            dim: 1,
+            k: 1,
+            values: vec![1.0, 2.0, 3.0, 4.0],
+            indices: vec![0; 4],
+        };
+        let p = codec.encode(&Batch::Sparse(batch.clone()), Pass::Forward).unwrap();
+        assert_eq!(p.wire_bytes(), 4 * 4);
+        assert_eq!(codec.expected_wire_bytes(4, Pass::Forward), Some(16));
+        let back = codec.decode(&p, Pass::Forward).unwrap();
+        assert_eq!(back, Batch::Sparse(batch));
+    }
+
+    /// rows == 0 with a non-empty slice must blame exactly the slice
+    /// that is wrong, not a joint values/indices message.
+    #[test]
+    fn rows_zero_arity_errors_name_the_offending_slice() {
+        let codec = SparseCodec::topk(128, 6);
+        let bad_vals =
+            SparseBatch { rows: 0, dim: 128, k: 6, values: vec![1.0], indices: vec![] };
+        let err =
+            codec.encode(&Batch::Sparse(bad_vals), Pass::Forward).unwrap_err().to_string();
+        assert!(err.contains("1 values"), "{err}");
+        assert!(!err.contains("indices"), "{err}");
+        let bad_idx = SparseBatch { rows: 0, dim: 128, k: 6, values: vec![], indices: vec![3] };
+        let err =
+            codec.encode(&Batch::Sparse(bad_idx), Pass::Forward).unwrap_err().to_string();
+        assert!(err.contains("1 indices"), "{err}");
     }
 
     #[test]

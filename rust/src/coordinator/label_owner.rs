@@ -224,6 +224,23 @@ impl<T: Transport> LabelOwner<T> {
         Ok((loss_sum, metric_count))
     }
 
+    /// Mid-session renegotiation (`Respec`): swap the session codec — and
+    /// the artifact variant it dispatches to — for an accepted spec. The
+    /// caller owns the cut-over rule: this must run only at a step
+    /// boundary, with every frame of the old spec already decoded, so
+    /// in-flight frames always decode under the spec they were encoded
+    /// with.
+    pub fn respec(&mut self, method: Method) -> Result<()> {
+        self.codec = codec_for(method, self.meta.cut_dim)?;
+        self.method = method;
+        Ok(())
+    }
+
+    /// Method currently decoding this session's frames.
+    pub fn method(&self) -> Method {
+        self.method
+    }
+
     pub fn mean_bwd_pct(&self) -> f64 {
         if self.bwd_msgs == 0 {
             0.0

@@ -43,7 +43,7 @@ use crate::transport::{
     is_connection_failure, FlowPolicy, LinkStats, Mux, MuxConfig, MuxEvent, MuxStream,
     RecoveryPolicy, TcpTransport, Transport, TransportError,
 };
-use crate::wire::OpenSpec;
+use crate::wire::{Message, OpenSpec};
 
 use super::LabelOwner;
 
@@ -93,12 +93,18 @@ pub fn negotiate_spec(
 #[derive(Clone, Debug)]
 pub struct SessionReport {
     pub stream_id: u32,
-    /// Method this session negotiated (spec or server default).
+    /// Method this session last ran under (initial negotiation, or the
+    /// latest accepted `Respec`).
     pub method: Method,
     pub requests: u64,
     pub samples: u64,
     pub loss_sum: f64,
     pub metric_sum: f64,
+    /// Mid-session renegotiations this session accepted / refused. A
+    /// refused respec keeps the old spec; either way the proposal and
+    /// reply frames are in `stats` (byte accounting covers every frame).
+    pub respecs_accepted: u64,
+    pub respecs_rejected: u64,
     /// Exact framed bytes this session put on / took off the shared wire.
     pub stats: LinkStats,
 }
@@ -152,6 +158,13 @@ struct Session<T: Transport> {
     step: u64,
     loss_sum: f64,
     metric_sum: f64,
+    /// An accepted `Respec` waiting for its step boundary:
+    /// `(effective_step, method)`. Applied before decoding the first
+    /// request with `step >= effective_step`, so every frame decodes
+    /// under the spec it was encoded with.
+    pending_respec: Option<(u64, Method)>,
+    respecs_accepted: u64,
+    respecs_rejected: u64,
 }
 
 /// Live state of one serving connection: the session registry plus the
@@ -303,7 +316,16 @@ impl MuxServer {
                         )?;
                         set.sessions.insert(
                             id,
-                            Session { lo, method, step: 0, loss_sum: 0.0, metric_sum: 0.0 },
+                            Session {
+                                lo,
+                                method,
+                                step: 0,
+                                loss_sum: 0.0,
+                                metric_sum: 0.0,
+                                pending_respec: None,
+                                respecs_accepted: 0,
+                                respecs_rejected: 0,
+                            },
                         );
                         if self.verbose {
                             println!(
@@ -341,6 +363,18 @@ impl MuxServer {
                     .sessions
                     .get_mut(&id)
                     .ok_or_else(|| anyhow!("data frame for unknown session {id}"))?;
+                // accepted-respec cut-over: the first request at or past
+                // the agreed boundary decodes under the new spec
+                if let Some((eff, method)) = s.pending_respec {
+                    if s.step >= eff {
+                        s.lo.respec(method)?;
+                        s.method = method;
+                        s.pending_respec = None;
+                        if self.verbose {
+                            println!("session {id}: cut over to {method} at step {}", s.step);
+                        }
+                    }
+                }
                 // one routed frame == one eval request for this session
                 let idx = eval_indices(s.step, s.lo.meta.batch, set.n_test);
                 let batch = set.ds.batch(Split::Test, &idx, false);
@@ -361,6 +395,82 @@ impl MuxServer {
                     println!("session {id}: closed after {} requests", s.step);
                 }
                 set.done.push(finalize(id, s));
+            }
+            MuxEvent::Respec(id) => {
+                if set.refused_ids.contains(&id) {
+                    // we already turned this stream away; refuse the
+                    // renegotiation too (the mux auto-rejects on
+                    // discarded streams, this covers the rest)
+                    mux.respec_reject(id)?;
+                    return Ok(false);
+                }
+                let s = set
+                    .sessions
+                    .get_mut(&id)
+                    .ok_or_else(|| anyhow!("respec for unknown session {id}"))?;
+                // the proposal is the next frame in the stream's inbox:
+                // events and frames share FIFO order, and every Data
+                // event consumed exactly one frame before this one
+                let frame = s.lo.transport.recv()?;
+                let Message::Respec { generation, effective_step, spec } = frame.message else {
+                    bail!(
+                        "respec event but inbox head is {:?}",
+                        frame.message.msg_type()
+                    );
+                };
+                // same gate as the OpenStream negotiation: the spec must
+                // parse, match the model geometry, and name a compiled
+                // variant — plus the boundary must not be behind us
+                // (frames before it already decoded under the old spec)
+                let negotiated = negotiate_spec(&spec, self.default_method, set.cut_dim)
+                    .and_then(|method| {
+                        let key = format!("{}/{}/top_eval", self.model, method.variant());
+                        if self.engine.manifest.artifacts.contains_key(key.as_str()) {
+                            Ok(method)
+                        } else {
+                            Err(format!(
+                                "model {} has no compiled variant '{}'",
+                                self.model,
+                                method.variant()
+                            ))
+                        }
+                    })
+                    .and_then(|method| {
+                        if effective_step >= s.step {
+                            Ok(method)
+                        } else {
+                            Err(format!(
+                                "effective step {effective_step} already passed (at {})",
+                                s.step
+                            ))
+                        }
+                    });
+                match negotiated {
+                    Ok(method) => {
+                        mux.respec_accept(id)?;
+                        s.pending_respec = Some((effective_step, method));
+                        s.respecs_accepted += 1;
+                        if self.verbose {
+                            println!(
+                                "session {id}: respec gen {generation} -> {method} \
+                                 at step {effective_step}"
+                            );
+                        }
+                    }
+                    Err(reason) => {
+                        // refusal keeps the old spec on both sides; the
+                        // reply frame is accounted to this stream's stats
+                        mux.respec_reject(id)?;
+                        s.respecs_rejected += 1;
+                        if self.verbose {
+                            println!("session {id}: respec gen {generation} refused ({reason})");
+                        }
+                    }
+                }
+            }
+            MuxEvent::RespecDecided(_) => {
+                // a verdict for a proposal of ours — this server never
+                // proposes, and the mux already latched the outcome
             }
             MuxEvent::Recovery(_) => {
                 // ack/resume housekeeping or a discarded duplicate —
@@ -469,6 +579,8 @@ fn finalize<T: Transport>(id: u32, s: Session<T>) -> SessionReport {
         samples: s.step * batch,
         loss_sum: s.loss_sum,
         metric_sum: s.metric_sum,
+        respecs_accepted: s.respecs_accepted,
+        respecs_rejected: s.respecs_rejected,
         stats: s.lo.transport.stats(),
     }
 }

@@ -322,6 +322,34 @@ struct StreamState {
     /// Latched `Rst` code (local or peer): the stream is dead in both
     /// directions; the connection and its siblings live on.
     rst: Option<u32>,
+    /// Adaptation plane, proposer side: the latest outbound `Respec`
+    /// proposal. Undecided proposals are re-sent on the probe cadence
+    /// and after a resume (`Respec` is unsequenced — no replay entry).
+    respec_out: Option<PendingRespec>,
+    /// Adaptation plane, receiver side: a delivered-but-unanswered
+    /// inbound proposal (generation, proposed spec). Duplicates of it
+    /// are dropped; the application answers via `respec_accept` /
+    /// `respec_reject`.
+    respec_in_pending: Option<(u32, OpenSpec)>,
+    /// Receiver side: highest generation already answered, with the
+    /// decision we sent — duplicates of an answered proposal get the
+    /// stored reply re-sent (the original may have been lost).
+    respec_in_gen: u32,
+    respec_in_accept: bool,
+    /// Proposer side: generation counter for outbound proposals.
+    respec_gen: u32,
+}
+
+/// Proposer-side state for one in-flight codec renegotiation.
+#[derive(Clone)]
+struct PendingRespec {
+    generation: u32,
+    /// First data-frame `step` the new spec applies to once accepted.
+    effective_step: u64,
+    spec: OpenSpec,
+    /// The peer's decision, once its `RespecReply` arrives. Latched
+    /// exactly once per generation.
+    decided: Option<bool>,
 }
 
 /// In-order, single-copy reassembly of one fragmented message: each chunk
@@ -740,6 +768,7 @@ impl<T: Transport> Inner<T> {
             .collect();
         for id in ids {
             self.send_ack(id, true)?;
+            self.resend_respec(id)?;
         }
         Ok(())
     }
@@ -851,6 +880,9 @@ impl<T: Transport> Inner<T> {
             if let Some(st) = self.streams.get_mut(&id) {
                 st.recovery.resumes += 1;
             }
+            // a pending respec proposal died with the old connection
+            // (unsequenced, no replay entry): re-propose on the fresh one
+            self.resend_respec(id)?;
         }
         Ok(())
     }
@@ -949,6 +981,7 @@ impl<T: Transport> Inner<T> {
         }
         st.recovery.resumes += 1;
         self.retransmit(id)?;
+        self.resend_respec(id)?;
         if want_reply {
             let (la, spec) = {
                 let st = &self.streams[&id];
@@ -1016,6 +1049,123 @@ impl<T: Transport> Inner<T> {
         Ok(MuxEvent::StreamError(id))
     }
 
+    /// Inbound `Respec` proposal on `id`: a new generation is delivered
+    /// to the stream's inbox for the application to answer
+    /// (`respec_accept` / `respec_reject`); a duplicate of an answered
+    /// generation gets the stored reply re-sent (the original reply may
+    /// have been lost); a duplicate of a delivered-but-unanswered one is
+    /// dropped. Unsequenced, so idempotence rides the generation, not a
+    /// seq.
+    fn on_respec(&mut self, frame: Frame, bytes: u64) -> Result<MuxEvent> {
+        let id = frame.stream_id;
+        if id == CONTROL_STREAM_ID {
+            bail!("Respec on control stream 0");
+        }
+        let Message::Respec { generation, effective_step: _, spec } = &frame.message else {
+            bail!("msg_type/message mismatch");
+        };
+        let (generation, spec) = (*generation, spec.clone());
+        let st = self
+            .streams
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("Respec for unknown stream {id}"))?;
+        st.stats.frames_recv += 1;
+        st.stats.bytes_recv += bytes;
+        if st.rst.is_some() {
+            // dead in both directions; the proposer learns via its own Rst
+            return Ok(MuxEvent::Recovery(id));
+        }
+        if generation <= st.respec_in_gen {
+            let reply = Frame::on_stream(
+                id,
+                0,
+                Message::RespecReply { generation, accept: st.respec_in_accept },
+            );
+            self.physical_send(id, reply.encode())?;
+            return Ok(MuxEvent::Recovery(id));
+        }
+        if st.respec_in_pending.as_ref().is_some_and(|(g, _)| generation <= *g) {
+            // already delivered upstream; the application's answer is
+            // coming — dropping the duplicate keeps delivery exactly-once
+            return Ok(MuxEvent::Recovery(id));
+        }
+        if st.discard {
+            // refused/faulted stream: auto-reject so the proposer is not
+            // left re-sending into a stream nobody is reading
+            st.respec_in_gen = generation;
+            st.respec_in_accept = false;
+            let reply =
+                Frame::on_stream(id, 0, Message::RespecReply { generation, accept: false });
+            self.physical_send(id, reply.encode())?;
+            return Ok(MuxEvent::Recovery(id));
+        }
+        st.respec_in_pending = Some((generation, spec));
+        st.inbox.push_back((frame, 0));
+        Ok(MuxEvent::Respec(id))
+    }
+
+    /// Peer answered our `Respec` proposal for `id`. The decision is
+    /// latched exactly once per generation; stale or duplicate replies
+    /// (older generation, repeat of a latched one) are dropped.
+    fn on_respec_reply(
+        &mut self,
+        id: u32,
+        generation: u32,
+        accept: bool,
+        bytes: u64,
+    ) -> Result<MuxEvent> {
+        if id == CONTROL_STREAM_ID {
+            bail!("RespecReply on control stream 0");
+        }
+        let st = self
+            .streams
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("RespecReply for unknown stream {id}"))?;
+        st.stats.frames_recv += 1;
+        st.stats.bytes_recv += bytes;
+        match st.respec_out.as_mut() {
+            Some(p) if p.generation == generation => {
+                if p.decided.is_none() {
+                    p.decided = Some(accept);
+                    if accept {
+                        // the negotiated spec: what a post-accept
+                        // `ResumeStream` handshake re-announces
+                        st.spec = p.spec.clone();
+                    }
+                }
+                Ok(MuxEvent::RespecDecided(id))
+            }
+            _ => Ok(MuxEvent::Recovery(id)),
+        }
+    }
+
+    /// Re-send the undecided `Respec` proposal of `id`, if any. The
+    /// frame is unsequenced (no replay entry), so the probe cadence and
+    /// the resume handshake are its retransmission paths.
+    fn resend_respec(&mut self, id: u32) -> Result<()> {
+        let f = {
+            let Some(st) = self.streams.get(&id) else { return Ok(()) };
+            let Some(p) = &st.respec_out else { return Ok(()) };
+            if p.decided.is_some() {
+                return Ok(());
+            }
+            Frame::on_stream(
+                id,
+                0,
+                Message::Respec {
+                    generation: p.generation,
+                    effective_step: p.effective_step,
+                    spec: p.spec.clone(),
+                },
+            )
+        };
+        self.physical_send(id, f.encode())?;
+        if let Some(st) = self.streams.get_mut(&id) {
+            st.recovery.retransmits += 1;
+        }
+        Ok(())
+    }
+
     /// Read one frame from the physical link and route it. With recovery,
     /// garbage that fails to decode is dropped (the sequencing layer
     /// repairs the hole) unless the policy says a decode failure means
@@ -1060,7 +1210,16 @@ impl<T: Transport> Inner<T> {
             }
             Message::WndInc { delta } => return self.on_wnd_inc(id, *delta, bytes),
             Message::Rst { code } => return self.on_rst(id, *code, bytes),
+            Message::RespecReply { generation, accept } => {
+                return self.on_respec_reply(id, *generation, *accept, bytes)
+            }
             _ => {}
+        }
+        // adaptation plane: a proposal is delivered whole to the stream's
+        // inbox (the application answers it), so it is routed by value
+        // after the borrowing match above
+        if matches!(frame.message, Message::Respec { .. }) {
+            return self.on_respec(frame, bytes);
         }
         if id == CONTROL_STREAM_ID {
             bail!("data frame on control stream 0 (peer is not mux-aware?)");
@@ -1423,6 +1582,14 @@ pub enum MuxEvent {
     /// closed and accounted. The connection and its other streams
     /// survive.
     StreamError(u32),
+    /// Peer proposed a mid-session codec renegotiation on this stream.
+    /// The proposal frame (`Message::Respec`) is at the stream's inbox;
+    /// the application answers with `Mux::respec_accept` /
+    /// `Mux::respec_reject`.
+    Respec(u32),
+    /// Peer answered our `Respec` proposal; `Mux::respec_decision` has
+    /// the latched verdict.
+    RespecDecided(u32),
 }
 
 /// One multiplexed physical connection.
@@ -1775,6 +1942,110 @@ impl<T: Transport> Mux<T> {
         g.stamp_and_send(id, Frame::on_stream(id, 0, Message::Rst { code }).encode())
     }
 
+    /// Propose a mid-session codec renegotiation on `id`: the new spec
+    /// takes effect for data frames with `step >= effective_step` once
+    /// the peer accepts (`respec_decision` / `respec_await`). Returns
+    /// the proposal's generation. The unsequenced `Respec` frame is
+    /// re-sent on the recovery probe cadence and after a resume until
+    /// the peer's reply latches a decision, and the generation makes
+    /// both sides idempotent under loss, duplication, and reordering of
+    /// the frame itself. One proposal may be in flight per stream.
+    pub fn respec_stream(&self, id: u32, spec: CodecSpec, effective_step: u64) -> Result<u32> {
+        let mut g = self.lock();
+        let st = g
+            .streams
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("respec of unknown stream {id}"))?;
+        if let Some(code) = st.rst {
+            bail!("respec of reset stream {id} (code {code})");
+        }
+        if st.peer_closed {
+            bail!("respec of closed stream {id}");
+        }
+        if st.respec_out.as_ref().is_some_and(|p| p.decided.is_none()) {
+            bail!("stream {id} already has a respec proposal in flight");
+        }
+        st.respec_gen += 1;
+        let generation = st.respec_gen;
+        let spec = OpenSpec::Spec(spec);
+        st.respec_out = Some(PendingRespec {
+            generation,
+            effective_step,
+            spec: spec.clone(),
+            decided: None,
+        });
+        let f = Frame::on_stream(id, 0, Message::Respec { generation, effective_step, spec });
+        g.send_on(id, f.encode())?;
+        Ok(generation)
+    }
+
+    /// Accept the pending inbound respec proposal on `id`: the stream's
+    /// negotiated spec becomes the proposed one and the peer is told to
+    /// cut over at its `effective_step`.
+    pub fn respec_accept(&self, id: u32) -> Result<()> {
+        self.respec_answer(id, true)
+    }
+
+    /// Reject the pending inbound respec proposal on `id`: the old spec
+    /// stays in force on both sides (the proposer keeps its codec), and
+    /// the refusal is the reply the peer's re-sends will keep getting.
+    pub fn respec_reject(&self, id: u32) -> Result<()> {
+        self.respec_answer(id, false)
+    }
+
+    fn respec_answer(&self, id: u32, accept: bool) -> Result<()> {
+        let mut g = self.lock();
+        let st = g
+            .streams
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("respec answer for unknown stream {id}"))?;
+        let Some((generation, spec)) = st.respec_in_pending.take() else {
+            bail!("no respec proposal pending on stream {id}");
+        };
+        st.respec_in_gen = generation;
+        st.respec_in_accept = accept;
+        if accept {
+            st.spec = spec;
+        }
+        let f = Frame::on_stream(id, 0, Message::RespecReply { generation, accept });
+        g.send_on(id, f.encode())
+    }
+
+    /// The peer's decision on the latest respec proposal for `id`:
+    /// `None` while the proposal is in flight (or none was ever made),
+    /// `Some(accepted)` once the reply latched.
+    pub fn respec_decision(&self, id: u32) -> Option<bool> {
+        self.lock().streams.get(&id).and_then(|s| s.respec_out.as_ref()).and_then(|p| p.decided)
+    }
+
+    /// Block until the latest respec proposal for `id` is decided,
+    /// pumping the connection (events for other streams are routed to
+    /// their inboxes, not lost). This is the proposer's cut-over
+    /// barrier: call it before encoding the first frame with
+    /// `step >= effective_step`.
+    pub fn respec_await(&self, id: u32) -> Result<bool> {
+        loop {
+            {
+                let g = self.lock();
+                let st = g
+                    .streams
+                    .get(&id)
+                    .ok_or_else(|| anyhow!("respec await on unknown stream {id}"))?;
+                match st.respec_out.as_ref() {
+                    None => bail!("no respec proposal was made on stream {id}"),
+                    Some(p) => {
+                        if let Some(d) = p.decided {
+                            return Ok(d);
+                        }
+                    }
+                }
+            }
+            if let MuxEvent::Goaway { code } = self.next_event()? {
+                bail!("connection goaway (code {code}) while awaiting respec reply on stream {id}");
+            }
+        }
+    }
+
     /// Outbound flow-control credit a stream has consumed (bytes sent
     /// but not yet granted back by the peer). `None` when flow control
     /// is off or the stream is unknown.
@@ -2004,7 +2275,9 @@ impl<T: Transport> Transport for MuxStream<T> {
                         }
                         if due_probe(polls, policy) {
                             // solicit retransmission of whatever went missing
-                            if let Err(pe) = g.send_ack(self.id, true) {
+                            if let Err(pe) =
+                                g.send_ack(self.id, true).and_then(|_| g.resend_respec(self.id))
+                            {
                                 if is_connection_failure(&pe) {
                                     if let Err(re) = g.recover_if_stale(epoch) {
                                         g.dead = Some(pe.to_string());
@@ -2399,6 +2672,198 @@ mod tests {
         assert_eq!(sm.next_event().unwrap(), MuxEvent::Data(1));
         let mut t = sm.accept_stream(1).unwrap();
         assert!(matches!(t.recv().unwrap().message, Message::Activations { step: 5, .. }));
+    }
+
+    // --- adaptation plane (Respec) ------------------------------------------
+
+    #[test]
+    fn respec_renegotiates_spec_on_both_sides() {
+        let (cm, sm) = mux_pair();
+        let old = CodecSpec { method: Method::Topk { k: 6 }, cut_dim: 128 };
+        let new = CodecSpec { method: Method::Topk { k: 2 }, cut_dim: 128 };
+        let s = cm.open_stream_with(old).unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
+        let mut t = sm.accept_stream(1).unwrap();
+        assert_eq!(cm.respec_stream(s.id(), new, 7).unwrap(), 1);
+        assert_eq!(cm.respec_decision(1), None);
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Respec(1));
+        // the proposal is delivered whole through the stream's inbox
+        let f = t.recv().unwrap();
+        let Message::Respec { generation, effective_step, spec } = f.message else {
+            panic!("expected a respec proposal, got {:?}", f.message.msg_type());
+        };
+        assert_eq!((generation, effective_step), (1, 7));
+        assert_eq!(spec, OpenSpec::Spec(new));
+        sm.respec_accept(1).unwrap();
+        assert_eq!(sm.stream_spec(1), Some(OpenSpec::Spec(new)));
+        assert_eq!(cm.next_event().unwrap(), MuxEvent::RespecDecided(1));
+        assert_eq!(cm.respec_decision(1), Some(true));
+        assert_eq!(cm.stream_spec(1), Some(OpenSpec::Spec(new)));
+    }
+
+    #[test]
+    fn respec_reject_keeps_the_old_spec() {
+        let (cm, sm) = mux_pair();
+        let old = CodecSpec { method: Method::Topk { k: 6 }, cut_dim: 128 };
+        let new = CodecSpec { method: Method::Quant { bits: 4 }, cut_dim: 128 };
+        let s = cm.open_stream_with(old).unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
+        let mut t = sm.accept_stream(1).unwrap();
+        cm.respec_stream(s.id(), new, 3).unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Respec(1));
+        t.recv().unwrap();
+        sm.respec_reject(1).unwrap();
+        assert_eq!(sm.stream_spec(1), Some(OpenSpec::Spec(old)));
+        assert_eq!(cm.next_event().unwrap(), MuxEvent::RespecDecided(1));
+        assert_eq!(cm.respec_decision(1), Some(false));
+        assert_eq!(cm.stream_spec(1), Some(OpenSpec::Spec(old)));
+        // a decided proposal unblocks the next one, with the next generation
+        assert_eq!(cm.respec_stream(s.id(), new, 9).unwrap(), 2);
+    }
+
+    /// Generation idempotence at the receiver: a duplicate of an
+    /// unanswered proposal is dropped (exactly-once delivery upstream);
+    /// a duplicate of an answered one gets the stored reply re-sent.
+    #[test]
+    fn respec_duplicates_are_idempotent() {
+        let net = SimNet::with_defaults();
+        let (mut raw, b) = net.pair();
+        let sm = Mux::with_config(b, MuxConfig::acceptor()).unwrap();
+        let old = CodecSpec { method: Method::Topk { k: 6 }, cut_dim: 128 };
+        let new = CodecSpec { method: Method::Topk { k: 2 }, cut_dim: 128 };
+        raw.send(&Frame::on_stream(1, 0, Message::OpenStream { spec: OpenSpec::Spec(old) }))
+            .unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
+        let mut t = sm.accept_stream(1).unwrap();
+        let prop = Frame::on_stream(
+            1,
+            0,
+            Message::Respec { generation: 1, effective_step: 4, spec: OpenSpec::Spec(new) },
+        );
+        raw.send(&prop).unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Respec(1));
+        // duplicate before the answer: dropped, not re-delivered
+        raw.send(&prop).unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Recovery(1));
+        assert!(matches!(t.recv().unwrap().message, Message::Respec { generation: 1, .. }));
+        let err = t.recv().unwrap_err();
+        assert_eq!(TransportError::of(&err), Some(TransportError::WouldBlock), "{err}");
+        sm.respec_accept(1).unwrap();
+        assert!(matches!(
+            raw.recv().unwrap().message,
+            Message::RespecReply { generation: 1, accept: true }
+        ));
+        // duplicate after the answer: the stored reply is re-sent
+        raw.send(&prop).unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Recovery(1));
+        assert!(matches!(
+            raw.recv().unwrap().message,
+            Message::RespecReply { generation: 1, accept: true }
+        ));
+        assert_eq!(sm.stream_spec(1), Some(OpenSpec::Spec(new)));
+    }
+
+    /// Both the proposal and the reply dropped on first transmission:
+    /// the probe cadence re-sends the proposal, the receiver re-sends
+    /// its stored reply for the duplicate, and the proposer's cut-over
+    /// barrier (`respec_await`) still resolves to the right verdict.
+    #[test]
+    fn respec_survives_dropped_proposal_and_reply() {
+        use crate::transport::sim::ScriptedFault;
+        let (net, cm, sm) = recovering_pair(FaultPlan::none());
+        // initiator's faultable sends: OpenStream = 0, Respec = 1
+        net.script_fault(0, 1, ScriptedFault::Drop);
+        // acceptor's first faultable send is its RespecReply (acks and
+        // resume frames are exempt)
+        net.script_fault(1, 0, ScriptedFault::Drop);
+        let old = CodecSpec { method: Method::Topk { k: 6 }, cut_dim: 128 };
+        let new = CodecSpec { method: Method::Topk { k: 2 }, cut_dim: 128 };
+        let mut s = cm.open_stream_with(old).unwrap();
+        let server = std::thread::spawn(move || {
+            let id = loop {
+                match sm.next_event().unwrap() {
+                    MuxEvent::Opened(id) => break id,
+                    MuxEvent::Recovery(_) => continue,
+                    other => panic!("unexpected {other:?}"),
+                }
+            };
+            let mut t = sm.accept_stream(id).unwrap();
+            let f = t.recv().unwrap();
+            let Message::Respec { generation, effective_step, spec } = f.message else {
+                panic!("expected a respec proposal, got {:?}", f.message.msg_type());
+            };
+            assert_eq!((generation, effective_step), (1, 5));
+            assert_eq!(spec, OpenSpec::Spec(new));
+            sm.respec_accept(id).unwrap();
+            // keep pumping: the dropped reply comes back as a stored-reply
+            // re-send when the proposer's probe re-delivers the proposal
+            loop {
+                match t.recv() {
+                    Err(e) if e.to_string().contains("closed by peer") => break,
+                    Ok(f) => panic!("unexpected frame {:?}", f.message.msg_type()),
+                    Err(e) => panic!("{e}"),
+                }
+            }
+            sm.stream_spec(id)
+        });
+        assert_eq!(cm.respec_stream(s.id(), new, 5).unwrap(), 1);
+        assert!(cm.respec_await(s.id()).unwrap());
+        assert_eq!(cm.stream_spec(s.id()), Some(OpenSpec::Spec(new)));
+        s.close().unwrap();
+        assert_eq!(server.join().unwrap(), Some(OpenSpec::Spec(new)));
+        assert_eq!(net.fault_totals().dropped, 2, "both scripted drops must fire");
+    }
+
+    /// A pending (undelivered) proposal survives a hard connection kill:
+    /// the resume handshake re-proposes it on the fresh connection.
+    #[test]
+    fn respec_pending_survives_kill_and_resume() {
+        let (net, cm, sm) = recovering_pair(FaultPlan::none());
+        let old = CodecSpec { method: Method::Topk { k: 6 }, cut_dim: 128 };
+        let new = CodecSpec { method: Method::Topk { k: 2 }, cut_dim: 128 };
+        let mut s = cm.open_stream_with(old).unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
+        let mut t = sm.accept_stream(1).unwrap();
+        cm.respec_stream(1, new, 3).unwrap();
+        // the unsequenced proposal is stranded in flight by the kill
+        net.kill();
+        let server = std::thread::spawn(move || {
+            let f = t.recv().unwrap();
+            let Message::Respec { generation, .. } = f.message else {
+                panic!("expected a respec proposal, got {:?}", f.message.msg_type());
+            };
+            assert_eq!(generation, 1);
+            sm.respec_accept(1).unwrap();
+            loop {
+                match t.recv() {
+                    Err(e) if e.to_string().contains("closed by peer") => break,
+                    Ok(f) => panic!("unexpected frame {:?}", f.message.msg_type()),
+                    Err(e) => panic!("{e}"),
+                }
+            }
+        });
+        assert!(cm.respec_await(1).unwrap());
+        assert_eq!(cm.stream_spec(1), Some(OpenSpec::Spec(new)));
+        s.close().unwrap();
+        server.join().unwrap();
+        assert!(cm.recovery_counts().reconnects >= 1);
+    }
+
+    #[test]
+    fn respec_misuse_is_a_typed_error() {
+        let (cm, sm) = mux_pair();
+        let spec = CodecSpec { method: Method::Topk { k: 3 }, cut_dim: 8 };
+        assert!(cm.respec_stream(99, spec, 0).is_err());
+        assert_eq!(cm.respec_decision(99), None);
+        let _s = cm.open_stream().unwrap();
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
+        // answering with nothing pending is an error, not a panic
+        assert!(sm.respec_accept(1).is_err());
+        assert!(sm.respec_reject(1).is_err());
+        // a second proposal while one is undecided is refused
+        cm.respec_stream(1, spec, 4).unwrap();
+        let err = cm.respec_stream(1, spec, 9).unwrap_err();
+        assert!(err.to_string().contains("in flight"), "{err}");
     }
 
     // --- fragmentation layer ------------------------------------------------

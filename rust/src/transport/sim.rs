@@ -354,6 +354,14 @@ fn fault_exempt(bytes: &[u8]) -> bool {
 
 /// Dedup key for retransmission detection: (stream_id, seq). `None` for
 /// unsequenced frames (seq 0 — legacy peers), which always draw a fate.
+///
+/// `Respec` is the one unsequenced frame that is still faultable (the
+/// chaos matrix must drop/dup/reorder the renegotiation itself), but the
+/// proposer re-sends it until a reply arrives — so it gets a content key
+/// of (stream, kind, generation) instead: the first transmission of each
+/// proposal/reply draws a fate, retransmissions are schedule-exempt, and
+/// the fault schedule stays indexed by first transmissions only. The
+/// high bit keeps the synthetic key space disjoint from (stream, seq).
 fn frame_key(bytes: &[u8]) -> Option<u64> {
     use crate::wire::{OFF_SEQ, OFF_STREAM_ID};
     if bytes.len() < HEADER_BYTES {
@@ -361,6 +369,13 @@ fn frame_key(bytes: &[u8]) -> Option<u64> {
     }
     let stream = u32::from_le_bytes(bytes[OFF_STREAM_ID..OFF_STREAM_ID + 4].try_into().unwrap());
     let seq = u32::from_le_bytes(bytes[OFF_SEQ..OFF_SEQ + 4].try_into().unwrap());
+    if bytes[OFF_TYPE] == MsgType::Respec as u8 && bytes.len() >= HEADER_BYTES + 5 {
+        let kind = bytes[HEADER_BYTES] as u64;
+        let generation = u32::from_le_bytes(
+            bytes[HEADER_BYTES + 1..HEADER_BYTES + 5].try_into().unwrap(),
+        ) as u64;
+        return Some((1u64 << 63) | ((stream as u64) << 32) | (kind << 29) | (generation & 0x1FFF_FFFF));
+    }
     (seq != 0).then_some(((stream as u64) << 32) | seq as u64)
 }
 
@@ -837,6 +852,53 @@ mod tests {
             "slot 7 was either a would-be drop or a would-be delivery: \
              clean {clean:?} scripted {scripted:?}"
         );
+    }
+
+    /// `Respec` is deliberately NOT fault-exempt — the chaos matrix must
+    /// be able to drop/dup/reorder the renegotiation itself — but its
+    /// retransmissions dedup on (stream, kind, generation) so a
+    /// timing-dependent resend count cannot shift the fault schedule.
+    #[test]
+    fn respec_is_faultable_but_retransmissions_are_exempt() {
+        let plan = FaultPlan { seed: 3, drop: 1.0, ..FaultPlan::default() };
+        let net = SimNet::with_faults(LinkModel::default(), plan);
+        let (mut a, mut b) = net.pair();
+        let respec = Frame::on_stream(
+            1,
+            0,
+            Message::Respec {
+                generation: 1,
+                effective_step: 4,
+                spec: crate::wire::OpenSpec::None,
+            },
+        );
+        // first transmission draws a fate (p_drop = 1: lost)
+        a.send(&respec).unwrap();
+        assert_eq!(a.stats().faults.dropped, 1);
+        // identical retransmission is dedup-exempt: delivered, no draw
+        a.send(&respec).unwrap();
+        assert_eq!(a.stats().faults.dropped, 1);
+        assert!(matches!(b.recv().unwrap().message, Message::Respec { .. }));
+        // a new generation is a new first transmission: faulted again
+        let next = Frame::on_stream(
+            1,
+            0,
+            Message::Respec {
+                generation: 2,
+                effective_step: 9,
+                spec: crate::wire::OpenSpec::None,
+            },
+        );
+        a.send(&next).unwrap();
+        assert_eq!(a.stats().faults.dropped, 2);
+        // the reply kind keys separately from the proposal
+        let reply =
+            Frame::on_stream(1, 0, Message::RespecReply { generation: 2, accept: true });
+        a.send(&reply).unwrap();
+        assert_eq!(a.stats().faults.dropped, 3);
+        a.send(&reply).unwrap();
+        assert_eq!(a.stats().faults.dropped, 3);
+        assert!(matches!(b.recv().unwrap().message, Message::RespecReply { .. }));
     }
 
     #[test]

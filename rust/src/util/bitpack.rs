@@ -10,9 +10,15 @@
 //! property tests compare against across every width.
 
 /// Number of bits needed to encode an index in [0, d).
+///
+/// `index_bits(1) == 0`: a dim-1 stream has only index 0, which takes
+/// zero bits to transmit. Width-0 writes are no-ops and width-0 reads
+/// yield `Some(0)` in both the word-wise and [`reference`] codecs, so
+/// a `k == dim == 1` sparse stream round-trips with an empty index
+/// section.
 pub fn index_bits(d: usize) -> u32 {
     debug_assert!(d >= 1);
-    usize::BITS - (d - 1).max(1).leading_zeros()
+    usize::BITS - (d - 1).leading_zeros()
 }
 
 /// Word-wise LSB-first bit writer into an owned buffer.
@@ -237,6 +243,8 @@ mod tests {
 
     #[test]
     fn index_bits_matches_ceil_log2() {
+        // dim 1: the only index is 0, sent in zero bits
+        assert_eq!(index_bits(1), 0);
         assert_eq!(index_bits(2), 1);
         assert_eq!(index_bits(128), 7);
         assert_eq!(index_bits(129), 8);
@@ -307,13 +315,14 @@ mod tests {
 
     /// Satellite: word-wise writer must be byte-identical to the old
     /// per-bit layout across every index width the codecs can emit,
-    /// including non-byte-aligned tails.
+    /// including non-byte-aligned tails. Width 0 is the dim == 1 edge:
+    /// every write is a no-op and the stream is empty.
     #[test]
     fn wordwise_writer_matches_reference_all_index_widths() {
         let mut rng = Rng::new(42);
-        // widths 1..=32 cover index_bits(d) for every representable
-        // cut dim; tack on 63/64 for the accumulator edge
-        for nbits in (1u32..=32).chain([63, 64]) {
+        // widths 0..=32 cover index_bits(d) for every representable
+        // cut dim (0 == dim 1); tack on 63/64 for the accumulator edge
+        for nbits in (0u32..=32).chain([63, 64]) {
             // counts chosen to land both aligned and ragged tails
             for count in [0usize, 1, 7, 8, 9, 100, 257] {
                 let mask = if nbits == 64 { u64::MAX } else { (1u64 << nbits) - 1 };
@@ -337,11 +346,12 @@ mod tests {
     }
 
     /// Satellite: word-wise reader agrees with the per-bit reader on
-    /// reference-encoded streams, width by width.
+    /// reference-encoded streams, width by width. At width 0 both
+    /// readers must hand back `Some(0)` forever without consuming.
     #[test]
     fn wordwise_reader_matches_reference_all_index_widths() {
         let mut rng = Rng::new(43);
-        for nbits in (1u32..=32).chain([63, 64]) {
+        for nbits in (0u32..=32).chain([63, 64]) {
             let mask = if nbits == 64 { u64::MAX } else { (1u64 << nbits) - 1 };
             let vals: Vec<u64> = (0..129).map(|_| rng.next_u64() & mask).collect();
             let mut w = reference::BitWriter::new();
@@ -368,7 +378,8 @@ mod tests {
         let mut rng = Rng::new(44);
         let items: Vec<(u64, u32)> = (0..2000)
             .map(|_| {
-                let nbits = 1 + rng.below(64) as u32;
+                // 0..=64: zero-width writes interleave as no-ops
+                let nbits = rng.below(65) as u32;
                 let mask = if nbits == 64 { u64::MAX } else { (1u64 << nbits) - 1 };
                 (rng.next_u64() & mask, nbits)
             })
@@ -387,6 +398,32 @@ mod tests {
             assert_eq!(new_r.read(n), Some(v));
             assert_eq!(old_r.read(n), Some(v));
         }
+    }
+
+    /// dim == 1 edge: k = dim = 1 sparse streams pack 0-bit indices.
+    /// The index section must be empty on the wire, and decoding must
+    /// recover index 0 for every row without consuming anything.
+    #[test]
+    fn zero_width_stream_is_empty_and_reads_zero() {
+        let mut w = BitWriter::new();
+        let mut direct = Vec::new();
+        let mut p = BitPacker::new(&mut direct);
+        for _ in 0..100 {
+            w.write(0, 0);
+            p.write(0, 0);
+        }
+        p.finish();
+        assert_eq!(w.bit_len(), 0);
+        let bytes = w.into_bytes();
+        assert!(bytes.is_empty());
+        assert!(direct.is_empty());
+        let mut r = BitReader::new(&bytes);
+        let mut old_r = reference::BitReader::new(&bytes);
+        for _ in 0..100 {
+            assert_eq!(r.read(0), Some(0));
+            assert_eq!(old_r.read(0), Some(0));
+        }
+        assert_eq!(r.remaining_bits(), 0);
     }
 
     #[test]

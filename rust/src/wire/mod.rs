@@ -89,6 +89,14 @@ pub enum MsgType {
     /// header with an error code (muxado RST); exactly that stream dies,
     /// the connection keeps serving its other streams
     Rst = 12,
+    /// adaptation plane: mid-session codec renegotiation for the stream
+    /// carried in the header. A proposal body carries a generation
+    /// counter, the first step the new spec applies to, and the new
+    /// `CodecSpec`; a reply echoes the generation with accept/reject.
+    /// Unsequenced (seq 0): the proposer re-sends until it sees a reply,
+    /// and the generation makes both sides idempotent under loss,
+    /// duplication, and reordering of the `Respec` frame itself.
+    Respec = 13,
 }
 
 impl MsgType {
@@ -106,20 +114,28 @@ impl MsgType {
             10 => MsgType::Fragment,
             11 => MsgType::WndInc,
             12 => MsgType::Rst,
+            13 => MsgType::Respec,
             other => bail!("unknown message type {other}"),
         })
     }
 
     /// Does this frame type ride the per-stream sequence space (stamped,
     /// acked, replayed by the recovery layer)? The recovery plane itself
-    /// (`Ack`, `ResumeStream`), connection teardown (`Goaway`), and the
-    /// flow-control plane (`WndInc`, `Rst`) are outside it: they must
-    /// flow while the sequence space is broken — a `WndInc` held behind a
-    /// gap would deadlock the very replay meant to fill the gap.
+    /// (`Ack`, `ResumeStream`), connection teardown (`Goaway`), the
+    /// flow-control plane (`WndInc`, `Rst`), and the adaptation plane
+    /// (`Respec`) are outside it: they must flow while the sequence space
+    /// is broken — a `WndInc` held behind a gap would deadlock the very
+    /// replay meant to fill the gap, and a `Respec` carries its own
+    /// generation counter for exactly-once cut-over instead of a seq.
     pub fn sequenced(self) -> bool {
         !matches!(
             self,
-            MsgType::Ack | MsgType::ResumeStream | MsgType::Goaway | MsgType::WndInc | MsgType::Rst
+            MsgType::Ack
+                | MsgType::ResumeStream
+                | MsgType::Goaway
+                | MsgType::WndInc
+                | MsgType::Rst
+                | MsgType::Respec
         )
     }
 }
@@ -279,6 +295,17 @@ pub enum Message {
     /// error code (0 = caller asked). Pending and future frames on that
     /// stream are dropped on both sides; the connection survives.
     Rst { code: u32 },
+    /// Adaptation plane: propose a new codec spec for the open stream
+    /// named in the header, taking effect at the first data frame whose
+    /// `step >= effective_step`. `generation` increments once per
+    /// proposal on a stream so re-sends are idempotent; the peer answers
+    /// with [`Message::RespecReply`]. Spec parse failures decode to
+    /// `OpenSpec::Invalid` (same contract as `OpenStream`): a malformed
+    /// respec must be refused on ONE stream, not kill the connection.
+    Respec { generation: u32, effective_step: u64, spec: OpenSpec },
+    /// Adaptation plane: accept or reject the `Respec` proposal with the
+    /// echoed `generation`. Reject means the stream keeps its old spec.
+    RespecReply { generation: u32, accept: bool },
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -305,9 +332,14 @@ impl Message {
             Message::Fragment(_) => MsgType::Fragment,
             Message::WndInc { .. } => MsgType::WndInc,
             Message::Rst { .. } => MsgType::Rst,
+            Message::Respec { .. } | Message::RespecReply { .. } => MsgType::Respec,
         }
     }
 }
+
+/// `Respec` body discriminator: first body byte.
+const RESPEC_KIND_PROPOSAL: u8 = 0;
+const RESPEC_KIND_REPLY: u8 = 1;
 
 // --- payload (de)serialization -------------------------------------------
 
@@ -563,6 +595,21 @@ impl Message {
             },
             Message::WndInc { delta } => put_u32(out, *delta),
             Message::Rst { code } => put_u32(out, *code),
+            Message::Respec { generation, effective_step, spec } => {
+                out.push(RESPEC_KIND_PROPOSAL);
+                put_u32(out, *generation);
+                put_u64(out, *effective_step);
+                match spec {
+                    OpenSpec::None => {}
+                    OpenSpec::Spec(s) => encode_codec_spec(out, s),
+                    OpenSpec::Invalid { raw, .. } => out.extend_from_slice(raw),
+                }
+            }
+            Message::RespecReply { generation, accept } => {
+                out.push(RESPEC_KIND_REPLY);
+                put_u32(out, *generation);
+                out.push(*accept as u8);
+            }
         }
     }
 
@@ -622,6 +669,17 @@ impl Message {
             MsgType::Fragment => Message::Fragment(FragPart::decode(c.rest())),
             MsgType::WndInc => Message::WndInc { delta: c.u32()? },
             MsgType::Rst => Message::Rst { code: c.u32()? },
+            MsgType::Respec => match c.u8()? {
+                RESPEC_KIND_PROPOSAL => Message::Respec {
+                    generation: c.u32()?,
+                    effective_step: c.u64()?,
+                    spec: OpenSpec::decode(c.rest()),
+                },
+                RESPEC_KIND_REPLY => {
+                    Message::RespecReply { generation: c.u32()?, accept: c.u8()? != 0 }
+                }
+                other => bail!("unknown respec kind {other}"),
+            },
         };
         c.done()?;
         Ok(msg)
@@ -809,6 +867,10 @@ mod tests {
             Message::WndInc { delta: 0xFFFF_FFFF },
             Message::Rst { code: 0 },
             Message::Rst { code: 7 },
+            Message::Respec { generation: 1, effective_step: 12, spec: OpenSpec::Spec(test_spec()) },
+            Message::Respec { generation: 0xFFFF_FFFF, effective_step: 0, spec: OpenSpec::None },
+            Message::RespecReply { generation: 1, accept: true },
+            Message::RespecReply { generation: 9, accept: false },
         ];
         for (i, m) in msgs.into_iter().enumerate() {
             let f = Frame::on_stream(i as u32 * 2 + 1, i as u32, m);
@@ -927,9 +989,37 @@ mod tests {
             MsgType::Goaway,
             MsgType::WndInc,
             MsgType::Rst,
+            MsgType::Respec,
         ] {
             assert!(!ty.sequenced(), "{ty:?}");
         }
+    }
+
+    #[test]
+    fn respec_with_malformed_spec_decodes_invalid_not_error() {
+        // proposal body: kind 0, generation, effective_step, then garbage
+        // where the spec should be — the frame still decodes and the spec
+        // is marked invalid, so one stream gets refused, not the
+        // connection (same contract as OpenStream)
+        let mut body = vec![0u8]; // kind = proposal
+        put_u32(&mut body, 3); // generation
+        body.extend_from_slice(&7u64.to_le_bytes()); // effective_step
+        body.extend_from_slice(&[0, 0, 0]); // 3 bytes: not even a cut_dim
+        let frame = hand_frame(MsgType::Respec, 5, &body);
+        let (back, _) = Frame::decode(&frame).unwrap();
+        let Message::Respec { generation: 3, effective_step: 7, spec: OpenSpec::Invalid { .. } } =
+            &back.message
+        else {
+            panic!("expected invalid-spec respec, got {:?}", back.message);
+        };
+        assert_eq!(back.encode(), frame);
+    }
+
+    #[test]
+    fn respec_with_unknown_kind_is_a_decode_error() {
+        let frame = hand_frame(MsgType::Respec, 5, &[0xEE, 0, 0, 0, 0]);
+        let e = Frame::decode(&frame).unwrap_err();
+        assert!(e.to_string().contains("unknown respec kind"), "{e}");
     }
 
     #[test]

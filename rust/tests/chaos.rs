@@ -17,9 +17,9 @@
 use std::sync::Arc;
 
 use splitfed::chaos::{
-    fault_plan_for_seed, metrics_fingerprint, repro_command, repro_for, run_schedule,
-    run_schedule_configured, run_schedule_fragmented, run_session, write_repro, ChaosConfig,
-    CHAOS_METHODS,
+    fault_plan_for_seed, metrics_fingerprint, repro_command, repro_for, run_respec_schedule,
+    run_respec_session, run_schedule, run_schedule_configured, run_schedule_fragmented,
+    run_session, write_repro, ChaosConfig, RespecPoint, CHAOS_METHODS,
 };
 use splitfed::config::Method;
 use splitfed::coordinator::{FeatureOwner, LabelOwner};
@@ -186,6 +186,91 @@ fn flow_metered_fragmented_chaos_matrix_bit_identical_metrics() {
         seeds.len(),
         CHAOS_METHODS.len()
     );
+}
+
+// --- adaptation plane (Respec) ---------------------------------------------
+
+/// Codec switches the respec matrix drives mid-final-epoch: within-family
+/// k changes (the adaptation policy's ladder moves) plus cross-family
+/// switches in both directions (sparse -> dense -> sparse), so the
+/// cut-over covers payload layouts that change shape entirely.
+const RESPEC_PAIRS: &[(&str, &str)] = &[
+    ("topk:k=6", "topk:k=2"),
+    ("randtopk:k=6,alpha=0.1", "randtopk:k=12,alpha=0.1"),
+    ("quant:bits=4", "quant:bits=2"),
+    ("topk:k=6", "none"),
+    ("none", "topk:k=6"),
+];
+
+/// The adaptation-plane acceptance gate: a two-stream session where one
+/// stream renegotiates its codec mid-epoch survives the seed matrix with
+/// per-stream metrics bit-identical to the clean-link run — with the
+/// fault dice free to hit the `Respec`/`RespecReply` frames themselves
+/// (they are NOT fault-exempt), and the clean run's per-stream byte
+/// attribution summing exactly to the physical link bytes.
+#[test]
+fn respec_chaos_matrix_bit_identical_metrics() {
+    // two streams per run makes this the most expensive matrix; a seed
+    // slice per shard keeps it affordable (the slice still covers every
+    // fault regime)
+    let seeds: Vec<u64> = seeds_for_this_shard().into_iter().take(25).collect();
+    assert!(!seeds.is_empty(), "empty shard");
+    let mut failures = Vec::new();
+    for (from, to) in RESPEC_PAIRS {
+        for &seed in &seeds {
+            let v = run_respec_schedule(seed, from, to);
+            if !v.ok {
+                let path = write_repro(&artifact_dir(), &v).expect("write repro artifact");
+                eprintln!(
+                    "respec chaos FAIL seed={seed} {from}->{to}: {}\n  artifact: {}",
+                    v.detail,
+                    path.display()
+                );
+                failures.push((seed, format!("{from}->{to}")));
+            }
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "{} respec schedules failed ({} seeds x {} pairs): {failures:?}",
+        failures.len(),
+        seeds.len(),
+        RESPEC_PAIRS.len()
+    );
+}
+
+/// Kill the connection the instant a respec proposal is in flight — the
+/// reply can never arrive on the original connection — for several
+/// seeds: the resume handshake re-proposes, the cut-over lands exactly
+/// once, and metrics match the never-killed run bit-for-bit.
+#[test]
+fn respec_pending_proposal_survives_hard_kill_matrix() {
+    for seed in [3u64, 41, 77] {
+        let to = Method::Topk { k: 2 };
+        let base = ChaosConfig::quick(seed, Method::Topk { k: 6 }).with_respec(9, to);
+        let clean = run_respec_session(&base, FaultPlan::none())
+            .unwrap_or_else(|e| panic!("seed {seed} clean: {e:#}"));
+        let mut killed_cfg = base.clone();
+        killed_cfg.respec = Some(RespecPoint { at_step: 9, method: to, kill: true });
+        let killed = run_respec_session(&killed_cfg, FaultPlan::none())
+            .unwrap_or_else(|e| panic!("seed {seed} killed: {e:#}"));
+        assert_eq!(
+            metrics_fingerprint(&clean.static_ledger),
+            metrics_fingerprint(&killed.static_ledger),
+            "seed {seed}: static stream diverged across kill/resume"
+        );
+        assert_eq!(
+            metrics_fingerprint(&clean.respec_ledger),
+            metrics_fingerprint(&killed.respec_ledger),
+            "seed {seed}: respec stream diverged across kill/resume"
+        );
+        assert!(killed.recovery.reconnects >= 1, "seed {seed}: kill produced no reconnect");
+        assert_eq!(
+            killed.respec_ledger.extra.get("respec_accepted"),
+            Some(&1.0),
+            "seed {seed}: respec not accepted after resume"
+        );
+    }
 }
 
 // --- directed middle-fragment faults ---------------------------------------

@@ -127,6 +127,40 @@ fn topk_roundtrip_every_geometry() {
     }
 }
 
+/// Satellite pin: the rows == 0 × with_indices corner. `encode_into`
+/// must emit zero bytes (a `BitPacker` that never wrote must not flush
+/// a stray padding byte), and `content_bytes`/`expected_wire_bytes`
+/// must agree with that, forward and backward.
+#[test]
+fn rows_zero_with_indices_has_no_stray_padding_byte() {
+    for (dim, k) in [(1usize, 1usize), (8, 3), (128, 6), (1280, 9)] {
+        let codec = codec_for(Method::Topk { k }, dim).unwrap();
+        let batch = SparseBatch { rows: 0, dim, k, values: vec![], indices: vec![] };
+        for pass in [Pass::Forward, Pass::Backward] {
+            let p = codec.encode(&Batch::Sparse(batch.clone()), pass).unwrap();
+            assert_eq!(p.wire_bytes(), 0, "d={dim} k={k} {pass:?}");
+            assert_eq!(codec.expected_wire_bytes(0, pass), Some(0), "d={dim} k={k} {pass:?}");
+            assert_eq!(codec.decode(&p, pass).unwrap(), Batch::Sparse(batch.clone()));
+        }
+    }
+}
+
+/// Satellite pin: dim == 1 means `index_bits(1) == 0`, so a topk
+/// forward wire through the `codec_for` registry path is exactly the
+/// f32 values — the packed index section is zero bits and zero bytes.
+#[test]
+fn dim_one_topk_wire_is_values_only() {
+    let mut rng = Rng::new(0x01D1);
+    let codec = codec_for(Method::Topk { k: 1 }, 1).unwrap();
+    for rows in ROWS {
+        let batch = random_sparse(&mut rng, rows, 1, 1, false);
+        let p = codec.encode(&Batch::Sparse(batch.clone()), Pass::Forward).unwrap();
+        assert_eq!(p.wire_bytes(), rows * 4, "rows={rows}");
+        assert_eq!(codec.expected_wire_bytes(rows, Pass::Forward), Some(rows * 4));
+        assert_eq!(codec.decode(&p, Pass::Forward).unwrap(), Batch::Sparse(batch));
+    }
+}
+
 #[test]
 fn size_reduction_roundtrip_every_geometry() {
     let mut rng = Rng::new(0x51ED);

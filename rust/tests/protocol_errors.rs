@@ -254,6 +254,101 @@ fn unknown_method_id_marks_stream_invalid() {
     assert!(err.contains("unknown codec method"), "{err}");
 }
 
+// --- Respec (adaptation plane) error paths --------------------------------
+
+/// A `Respec` whose spec bytes cannot parse arrives as `OpenSpec::Invalid`
+/// (never a frame error): the application rejects it, the old spec stays
+/// in force, and the SAME stream keeps serving data. This is the
+/// renegotiation mirror of the OpenStream invalid-spec contract.
+#[test]
+fn malformed_respec_spec_rejected_and_stream_survives() {
+    let net = SimNet::with_defaults();
+    let (mut raw, b) = net.pair();
+    let mux = Mux::with_config(b, MuxConfig::acceptor()).unwrap();
+    let spec0 = CodecSpec::new(Method::Topk { k: 6 }, 128);
+    raw.send(&Frame::on_stream(1, 0, Message::OpenStream { spec: OpenSpec::Spec(spec0) }))
+        .unwrap();
+    assert_eq!(mux.next_event().unwrap(), MuxEvent::Opened(1));
+    let mut t = mux.accept_stream(1).unwrap();
+    // 3 bytes cannot even hold the cut_dim field (the `Invalid` variant
+    // re-encodes raw bytes verbatim, so this crafts an arbitrary-body
+    // proposal through the public API)
+    raw.send(&Frame::on_stream(
+        1,
+        0,
+        Message::Respec {
+            generation: 1,
+            effective_step: 4,
+            spec: OpenSpec::Invalid { raw: vec![0, 0, 0], reason: String::new() },
+        },
+    ))
+    .unwrap();
+    assert_eq!(mux.next_event().unwrap(), MuxEvent::Respec(1));
+    let f = t.recv().unwrap();
+    let Message::Respec { spec: OpenSpec::Invalid { reason, .. }, .. } = f.message else {
+        panic!("expected invalid respec spec, got {:?}", f.message.msg_type());
+    };
+    assert!(reason.contains("truncated"), "{reason}");
+    // reject: the refusal reaches the proposer, the old spec stays
+    mux.respec_reject(1).unwrap();
+    let reply = raw.recv().unwrap();
+    assert!(
+        matches!(reply.message, Message::RespecReply { generation: 1, accept: false }),
+        "{:?}",
+        reply.message
+    );
+    match mux.stream_spec(1) {
+        Some(OpenSpec::Spec(s)) => assert_eq!((s.method, s.cut_dim), (Method::Topk { k: 6 }, 128)),
+        other => panic!("old spec must survive a rejected respec, got {other:?}"),
+    }
+    // the same stream keeps serving data under the old spec
+    let payload = Payload::dense(1, 8, vec![5; 32]);
+    raw.send(&Frame::on_stream(1, 0, Message::Activations { step: 0, payload })).unwrap();
+    assert_eq!(mux.next_event().unwrap(), MuxEvent::Data(1));
+    assert!(matches!(t.recv().unwrap().message, Message::Activations { step: 0, .. }));
+}
+
+/// A `Respec` for a stream no `OpenStream` ever created is a protocol
+/// violation surfaced as a typed error — never a panic (the unknown-id
+/// lookups inside the mux are `ok_or_else`, not `expect`).
+#[test]
+fn respec_for_unknown_stream_is_typed_error_not_panic() {
+    let net = SimNet::with_defaults();
+    let (mut raw, b) = net.pair();
+    let mux = Mux::with_config(b, MuxConfig::acceptor()).unwrap();
+    raw.send(&Frame::on_stream(
+        9,
+        0,
+        Message::Respec {
+            generation: 1,
+            effective_step: 0,
+            spec: OpenSpec::Spec(CodecSpec::new(Method::Topk { k: 2 }, 128)),
+        },
+    ))
+    .unwrap();
+    let err = mux.next_event().unwrap_err();
+    assert!(err.to_string().contains("unknown stream"), "{err}");
+}
+
+/// An unsolicited `RespecReply` (no proposal outstanding) is dropped as
+/// recovery noise: the stream and connection keep serving.
+#[test]
+fn unsolicited_respec_reply_dropped_not_fatal() {
+    let net = SimNet::with_defaults();
+    let (mut raw, b) = net.pair();
+    let mux = Mux::with_config(b, MuxConfig::acceptor()).unwrap();
+    raw.send(&Frame::on_stream(1, 0, Message::OpenStream { spec: OpenSpec::None })).unwrap();
+    assert_eq!(mux.next_event().unwrap(), MuxEvent::Opened(1));
+    let mut t = mux.accept_stream(1).unwrap();
+    raw.send(&Frame::on_stream(1, 0, Message::RespecReply { generation: 7, accept: true }))
+        .unwrap();
+    assert_eq!(mux.next_event().unwrap(), MuxEvent::Recovery(1));
+    let payload = Payload::dense(1, 8, vec![5; 32]);
+    raw.send(&Frame::on_stream(1, 0, Message::Activations { step: 0, payload })).unwrap();
+    assert_eq!(mux.next_event().unwrap(), MuxEvent::Data(1));
+    assert!(matches!(t.recv().unwrap().message, Message::Activations { step: 0, .. }));
+}
+
 /// End to end over TCP + MuxServer: a spec the server cannot honour is
 /// refused with a `CloseStream` on THAT stream only; a second stream on
 /// the same physical connection then completes a full eval round trip.
@@ -331,6 +426,13 @@ fn fuzz_corpus() -> Vec<Vec<u8>> {
             want_reply: true,
             spec: OpenSpec::Spec(CodecSpec::new(Method::parse("quant:bits=4").unwrap(), 32)),
         },
+        Message::Respec {
+            generation: 3,
+            effective_step: 12,
+            spec: OpenSpec::Spec(CodecSpec::new(Method::parse("topk:k=2").unwrap(), 128)),
+        },
+        Message::Respec { generation: 4, effective_step: 0, spec: OpenSpec::None },
+        Message::RespecReply { generation: 3, accept: true },
     ];
     for p in payloads {
         msgs.push(Message::Activations { step: 7, payload: p.clone() });
