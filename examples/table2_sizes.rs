@@ -11,7 +11,9 @@
 //! ```
 
 use anyhow::Result;
-use splitfed::compress::{codec_for, Batch, DenseBatch, Pass, QuantBatch, SparseBatch};
+use splitfed::compress::{
+    codec_for, codec_for_layout, Batch, DenseBatch, IndexLayout, Pass, QuantBatch, SparseBatch,
+};
 use splitfed::config::Method;
 use splitfed::util::Rng;
 
@@ -74,6 +76,22 @@ fn main() -> Result<()> {
                 100.0 * m.backward_fraction(),
                 100.0 * bwd
             );
+            // top-k with LEB128-delta indices (opt-in layout; analytic
+            // column is the estimate — the wire size is input-dependent)
+            let codec = codec_for_layout(Method::Topk { k }, d, IndexLayout::Leb128Delta)?;
+            let fwd = codec.encode(&batch, Pass::Forward)?.wire_bytes() as f64 / dense_bytes;
+            let bwd = codec.encode(&batch, Pass::Backward)?.wire_bytes() as f64 / dense_bytes;
+            let m = codec.size_model();
+            println!(
+                "{:<24} {:>6} {:>4} | {:>8.3}% {:>8.3}% | {:>8.3}% {:>8.3}%",
+                "top-k (leb128 idx)",
+                d,
+                k,
+                100.0 * m.forward_fraction(),
+                100.0 * fwd,
+                100.0 * m.backward_fraction(),
+                100.0 * bwd
+            );
             // size reduction
             let codec = codec_for(Method::SizeReduction { k }, d)?;
             let sr = Batch::Sparse(random_sparse(&mut rng, rows, d, k, true));
@@ -123,6 +141,8 @@ fn main() -> Result<()> {
 
     println!("note: measured fwd for top-k includes bit-padding to byte boundaries;");
     println!("quantization carries an 8-byte per-row (min,max) header — visible at small d.");
+    println!("top-k (leb128 idx) wins where gaps (~d/k) fit one varint byte but the dim");
+    println!("needs >8 fixed bits (e.g. d=600,k=14); it loses where gaps run wide (d/k>127).");
     println!("\n§1 motivating example: ResNet-20 cut 32x32x32, batch 32, fwd+bwd f32 =");
     let bytes = 2usize * 4 * 32 * 32 * 32 * 32;
     println!("  {} bytes = {} MiB per iteration (paper: 8 MiB)", bytes, bytes / 1048576);

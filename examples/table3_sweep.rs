@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 use splitfed::cli::Args;
-use splitfed::compress::{codec_for, Pass};
+use splitfed::compress::{codec_for, codec_for_layout, Batch, IndexLayout, Pass, SparseBatch};
 use splitfed::config::{ExperimentConfig, Method};
 use splitfed::coordinator::train;
 use splitfed::metrics::mean_std;
@@ -165,5 +165,48 @@ fn main() -> Result<()> {
     }
     std::fs::write(dir.join(format!("{task}.csv")), csv)?;
     println!("\nwrote runs/table3/{task}.csv");
+
+    // Index-layout comparison for the sweep's top-k levels: measured
+    // forward wire bytes of the bitpack vs LEB128-delta layouts on the
+    // SAME selection pattern the codec would ship (sizes are measured by
+    // encoding real batches, not asserted from the analytic model).
+    println!("\nindex layout (top-k forward, % of dense, batch {}):", meta.batch);
+    println!("{:<6} {:>14} {:>14} {:>10}", "k", "bitpack %", "leb128 %", "leb/bp");
+    let mut layout_csv = String::from("k,bitpack_pct,leb128_pct\n");
+    let mut rng = splitfed::util::Rng::new(7);
+    for &k in meta.k_levels.iter() {
+        let rows_n = meta.batch;
+        let mut values = Vec::new();
+        let mut indices = Vec::new();
+        for _ in 0..rows_n {
+            let mut all: Vec<i32> = (0..cut_dim as i32).collect();
+            rng.shuffle(&mut all);
+            let mut sel = all[..k].to_vec();
+            sel.sort_unstable();
+            for &i in &sel {
+                indices.push(i);
+                values.push(rng.normal());
+            }
+        }
+        let batch =
+            Batch::Sparse(SparseBatch { rows: rows_n, dim: cut_dim, k, values, indices });
+        let dense = (rows_n * cut_dim * 4) as f64;
+        let bp = codec_for(Method::Topk { k }, cut_dim)?
+            .encode(&batch, Pass::Forward)?
+            .wire_bytes() as f64;
+        let leb = codec_for_layout(Method::Topk { k }, cut_dim, IndexLayout::Leb128Delta)?
+            .encode(&batch, Pass::Forward)?
+            .wire_bytes() as f64;
+        println!(
+            "{:<6} {:>13.3}% {:>13.3}% {:>10.3}",
+            k,
+            100.0 * bp / dense,
+            100.0 * leb / dense,
+            leb / bp
+        );
+        layout_csv.push_str(&format!("{k},{},{}\n", 100.0 * bp / dense, 100.0 * leb / dense));
+    }
+    std::fs::write(dir.join(format!("{task}_index_layout.csv")), layout_csv)?;
+    println!("wrote runs/table3/{task}_index_layout.csv");
     Ok(())
 }

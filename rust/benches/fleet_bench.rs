@@ -1,0 +1,694 @@
+//! Fleet-scale load bench for the batching plane (ROADMAP "fleet-scale
+//! serving" item): ~1k simulated feature-owner clients with churn —
+//! connect, train, drop mid-bucket, resume, renegotiate — driven
+//! cooperatively on one thread over real codec payloads, the real wire
+//! format, and the real mux, into the real `Coalescer`.
+//!
+//! Engine-free: execution is a synthetic cost model — a fixed
+//! per-dispatch overhead (compile-cache lookup, marshal, launch,
+//! readback) plus per-row math, burned in real wall-clock work. The
+//! batching plane's whole bet is amortizing the fixed term across
+//! bucket-mates; everything else (encode, frame, mux route, decode,
+//! assemble+pad, scatter, reply) is the production code path.
+//!
+//! Phases:
+//!
+//! 1. per-client dispatch baseline at 1k clients (`max_coalesce = 1`) —
+//!    aggregate steps/sec;
+//! 2. coalesced at 1k clients (`max_coalesce = 32`) — aggregate
+//!    steps/sec, for the speedup gate;
+//! 3. burst latency probes (32 concurrent requests) through both
+//!    configurations — per-client p99 step latency, against an
+//!    uncoalesced 32-client reference roster;
+//! 4. churn at 256 clients: drop-after-send (a parked request's stream
+//!    dies mid-bucket), drop-then-resume on a fresh stream, and
+//!    renegotiate to a different variant (its own coalescing group).
+//!    Clients that connect and drop before any reply have EMPTY latency
+//!    samples — their per-client quantile is `Quantile::Empty`, counted,
+//!    not a panic.
+//!
+//! Emits `BENCH_fleet.json` at the repo root. Exits nonzero if coalesced
+//! steps/sec at 1k clients is under 1.5x the per-client baseline from
+//! the SAME run, or if coalesced p99 step latency at 1k clients exceeds
+//! 2x the uncoalesced p99 at 32 clients.
+
+use std::collections::{BTreeMap, HashMap};
+use std::time::Instant;
+
+use splitfed::bench_util::{fmt_ns, p99_ns, quantile_ns};
+use splitfed::compress::{
+    codec_for_layout, Batch, Codec, CodecSpec, IndexLayout, Pass, SparseBatch,
+};
+use splitfed::config::Method;
+use splitfed::coordinator::{
+    assemble, bucket_for, pump_conn, CoalescePolicy, Coalescer, PendingRequest,
+};
+use splitfed::json::Json;
+use splitfed::transport::sim::{LinkModel, SimLink, SimNet};
+use splitfed::transport::{Mux, MuxConfig, MuxEvent, MuxStream, Transport, TransportError};
+use splitfed::util::Rng;
+use splitfed::wire::{Frame, Message, OpenSpec};
+
+const FLEET: usize = 1_000;
+const CONNS: usize = 8;
+const STEPS: u64 = 4;
+const DIM: usize = 128;
+const K: usize = 6;
+const ROWS: usize = 32;
+const MAX_COALESCE: usize = 32;
+const BATCH_DELAY_US: u64 = 200;
+/// Gate: coalesced steps/sec at 1k clients vs per-client dispatch.
+const SPEEDUP_LIMIT: f64 = 1.5;
+/// Gate: coalesced p99 at 1k clients vs uncoalesced p99 at 32 clients.
+const P99_RATIO_LIMIT: f64 = 2.0;
+const PROBE_BURSTS: usize = 50;
+const PROBE_BURST_SIZE: usize = 32;
+
+/// Synthetic execution cost, in units of one dependent sqrt (~ns each):
+/// the fixed term is what coalescing amortizes; the per-row term is what
+/// both paths pay alike (padding rows included — padding is not free).
+const DISPATCH_OVERHEAD_ITERS: u64 = 20_000;
+const PER_ROW_ITERS: u64 = 40;
+
+fn burn(iters: u64) {
+    let mut acc = 0.0f64;
+    for i in 0..iters {
+        acc += std::hint::black_box((i as f64) * 1.000000119).sqrt();
+    }
+    std::hint::black_box(acc);
+}
+
+fn is_would_block(e: &anyhow::Error) -> bool {
+    TransportError::of(e) == Some(TransportError::WouldBlock)
+}
+
+/// One simulated feature owner: a stream, its codec, a fixed activation
+/// batch it re-sends each step, and its latency samples.
+struct Client {
+    conn: usize,
+    stream: MuxStream<SimLink>,
+    codec: Box<dyn Codec>,
+    batch: Batch,
+    spec: CodecSpec,
+    step: u64,
+    done: u64,
+    outstanding: Option<(u64, Instant)>,
+    samples: Vec<f64>,
+    alive: bool,
+}
+
+impl Client {
+    fn send_step(&mut self) -> anyhow::Result<()> {
+        let payload = self.codec.encode(&self.batch, Pass::Forward)?;
+        let frame = Frame::new(0, Message::Activations { step: self.step, payload });
+        self.outstanding = Some((self.step, Instant::now()));
+        self.stream.send(&frame)
+    }
+
+    /// Drain any replies; record a latency sample per completed step.
+    fn poll_replies(&mut self) -> anyhow::Result<bool> {
+        let mut progressed = false;
+        loop {
+            match self.stream.recv() {
+                Ok(f) => {
+                    let Message::EvalResult { step, .. } = f.message else {
+                        anyhow::bail!("unexpected reply {:?}", f.message.msg_type());
+                    };
+                    let Some((sent_step, t0)) = self.outstanding.take() else {
+                        anyhow::bail!("reply with nothing outstanding");
+                    };
+                    anyhow::ensure!(step == sent_step, "reply step {step} != {sent_step}");
+                    self.samples.push(t0.elapsed().as_nanos() as f64);
+                    self.step += 1;
+                    self.done += 1;
+                    progressed = true;
+                }
+                Err(e) if is_would_block(&e) => return Ok(progressed),
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// Server side of one physical connection: accepted streams, their
+/// negotiated codecs, and this connection's coalescer.
+struct ServerConn {
+    mux: Mux<SimLink>,
+    streams: HashMap<u32, MuxStream<SimLink>>,
+    codecs: HashMap<u32, (Box<dyn Codec>, String)>,
+    coalescer: Coalescer,
+    served: u64,
+    dispatches: u64,
+}
+
+/// Burn the cost model for one group and reply per request. The group is
+/// already same-variant; padding rows (bucket - n clients) burn too.
+fn dispatch(
+    group: Vec<PendingRequest>,
+    max: usize,
+    streams: &mut HashMap<u32, MuxStream<SimLink>>,
+    served: &mut u64,
+) -> anyhow::Result<()> {
+    if group.is_empty() {
+        return Ok(());
+    }
+    let bucket = bucket_for(group.len(), max);
+    if bucket > 1 {
+        let (stacked, _y) = assemble(&group, bucket)?;
+        burn(DISPATCH_OVERHEAD_ITERS + PER_ROW_ITERS * stacked.rows() as u64);
+    } else {
+        burn(DISPATCH_OVERHEAD_ITERS + PER_ROW_ITERS * group[0].batch.rows() as u64);
+    }
+    for req in group {
+        *served += 1;
+        if let Some(s) = streams.get_mut(&req.stream_id) {
+            // a dead stream drops its reply without failing the bucket
+            let _ = s.send(&Frame::new(
+                0,
+                Message::EvalResult {
+                    step: req.step,
+                    loss_sum: req.step as f32,
+                    metric_count: 1.0,
+                },
+            ));
+        }
+    }
+    Ok(())
+}
+
+impl ServerConn {
+    /// Pump mux events into the coalescer, then dispatch whatever the
+    /// policy says is ready (full buckets now, ragged groups past the
+    /// deadline).
+    fn pump_and_flush(&mut self) -> anyhow::Result<()> {
+        let ServerConn { mux, streams, codecs, coalescer, served, dispatches } = self;
+        pump_conn(mux, 4096, &mut |m, ev| {
+            match ev {
+                MuxEvent::Opened(id) => {
+                    let OpenSpec::Spec(s) = m.stream_spec(id).unwrap_or_default() else {
+                        anyhow::bail!("fleet clients always open with a spec");
+                    };
+                    let codec = codec_for_layout(s.method, s.cut_dim, s.index_layout)?;
+                    codecs.insert(id, (codec, s.method.variant()));
+                    streams.insert(id, m.accept_stream(id)?);
+                }
+                MuxEvent::Data(id) => {
+                    let s = streams
+                        .get_mut(&id)
+                        .ok_or_else(|| anyhow::anyhow!("data for unknown stream {id}"))?;
+                    let f = s.recv()?;
+                    let Message::Activations { step, payload } = f.message else {
+                        anyhow::bail!("unexpected request {:?}", f.message.msg_type());
+                    };
+                    let (codec, variant) = &codecs[&id];
+                    let batch = codec.decode(&payload, Pass::Forward)?;
+                    let rows = batch.rows();
+                    coalescer.push(
+                        variant,
+                        PendingRequest {
+                            stream_id: id,
+                            step,
+                            batch,
+                            y: vec![0; rows],
+                            enqueued_at: Instant::now(),
+                        },
+                    );
+                }
+                MuxEvent::Closed(id) => {
+                    // mid-bucket drop: the departing stream's parked
+                    // requests dispatch alone (replies go nowhere); its
+                    // bucket-mates stay parked, untouched
+                    let max = coalescer.policy().max_coalesce;
+                    for (_, group) in coalescer.take_stream(id) {
+                        *dispatches += 1;
+                        dispatch(group, max, streams, served)?;
+                    }
+                    streams.remove(&id);
+                    codecs.remove(&id);
+                }
+                _ => {}
+            }
+            Ok(false)
+        })?;
+        let max = self.coalescer.policy().max_coalesce;
+        for (_, group) in self.coalescer.take_ready(Instant::now(), false) {
+            self.dispatches += 1;
+            dispatch(group, max, &mut self.streams, &mut self.served)?;
+        }
+        Ok(())
+    }
+}
+
+struct Fleet {
+    clients: Vec<Client>,
+    client_muxes: Vec<Mux<SimLink>>,
+    servers: Vec<ServerConn>,
+}
+
+fn random_batch(rng: &mut Rng) -> Batch {
+    let mut values = Vec::with_capacity(ROWS * K);
+    let mut indices = Vec::with_capacity(ROWS * K);
+    for _ in 0..ROWS {
+        let mut all: Vec<i32> = (0..DIM as i32).collect();
+        rng.shuffle(&mut all);
+        let mut sel = all[..K].to_vec();
+        sel.sort_unstable();
+        for &i in &sel {
+            indices.push(i);
+            values.push(rng.normal());
+        }
+    }
+    Batch::Sparse(SparseBatch { rows: ROWS, dim: DIM, k: K, values, indices })
+}
+
+/// Spec for client `i`: everyone runs top-k at the same k (one coalescing
+/// group), a quarter of the fleet negotiating LEB128-delta indices — a
+/// different wire layout decodes into the SAME variant group.
+fn client_spec(i: usize) -> CodecSpec {
+    let layout = if i % 4 == 0 { IndexLayout::Leb128Delta } else { IndexLayout::Bitpack };
+    CodecSpec::new(Method::Topk { k: K }, DIM).with_index_layout(layout)
+}
+
+fn build_fleet(n: usize, conns: usize, policy: CoalescePolicy) -> anyhow::Result<Fleet> {
+    let mut client_muxes = Vec::with_capacity(conns);
+    let mut servers = Vec::with_capacity(conns);
+    for _ in 0..conns {
+        let net = SimNet::new(LinkModel { bandwidth_bytes_per_sec: 1e12, latency_secs: 0.0 });
+        let (a, b) = net.pair();
+        client_muxes.push(Mux::with_config(a, MuxConfig::initiator())?);
+        servers.push(ServerConn {
+            mux: Mux::with_config(b, MuxConfig::acceptor())?,
+            streams: HashMap::new(),
+            codecs: HashMap::new(),
+            coalescer: Coalescer::new(policy),
+            served: 0,
+            dispatches: 0,
+        });
+    }
+    let mut clients = Vec::with_capacity(n);
+    let mut rng = Rng::new(4242);
+    for i in 0..n {
+        let conn = i % conns;
+        let spec = client_spec(i);
+        let stream = client_muxes[conn].open_stream_with(spec)?;
+        clients.push(Client {
+            conn,
+            stream,
+            codec: spec.codec()?,
+            batch: random_batch(&mut rng),
+            spec,
+            step: 0,
+            done: 0,
+            outstanding: None,
+            samples: Vec::new(),
+            alive: true,
+        });
+    }
+    Ok(Fleet { clients, client_muxes, servers })
+}
+
+/// Pop client-side housekeeping events so queues stay flat.
+fn drain_client_events(mux: &Mux<SimLink>) -> anyhow::Result<()> {
+    loop {
+        match mux.next_event() {
+            Ok(_) => {}
+            Err(e) if is_would_block(&e) => return Ok(()),
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Drive every client to `steps` completed steps (one request in flight
+/// per client); returns aggregate steps/sec.
+fn run_throughput(fleet: &mut Fleet, steps: u64) -> anyhow::Result<f64> {
+    let t0 = Instant::now();
+    let target: u64 = fleet.clients.iter().filter(|c| c.alive).count() as u64 * steps;
+    let mut completed = 0u64;
+    let mut stalls = 0u64;
+    while completed < target {
+        let mut progressed = false;
+        for c in fleet.clients.iter_mut() {
+            if c.alive && c.outstanding.is_none() && c.done < steps {
+                c.send_step()?;
+                progressed = true;
+            }
+        }
+        for sc in fleet.servers.iter_mut() {
+            sc.pump_and_flush()?;
+        }
+        for mux in &fleet.client_muxes {
+            drain_client_events(mux)?;
+        }
+        for c in fleet.clients.iter_mut() {
+            if c.alive && c.poll_replies()? {
+                progressed = true;
+            }
+        }
+        completed =
+            fleet.clients.iter().filter(|c| c.alive).map(|c| c.done.min(steps)).sum();
+        if progressed {
+            stalls = 0;
+        } else {
+            stalls += 1;
+            anyhow::ensure!(
+                t0.elapsed().as_secs() < 60,
+                "fleet stalled at {completed}/{target} steps after {stalls} idle sweeps"
+            );
+            // a ragged tail is parked on the batch deadline; let it age
+            std::thread::yield_now();
+        }
+    }
+    Ok(target as f64 / t0.elapsed().as_secs_f64())
+}
+
+/// Burst latency probes: `PROBE_BURSTS` rounds of `PROBE_BURST_SIZE`
+/// concurrent single requests through the live roster; per-request
+/// send-to-reply latency lands in each prober's samples.
+fn run_probes(fleet: &mut Fleet) -> anyhow::Result<Vec<f64>> {
+    let n = fleet.clients.len();
+    let mut all = Vec::with_capacity(PROBE_BURSTS * PROBE_BURST_SIZE);
+    for round in 0..PROBE_BURSTS {
+        let mut probers = Vec::with_capacity(PROBE_BURST_SIZE);
+        for j in 0..PROBE_BURST_SIZE {
+            let idx = (round * 7919 + j * 131) % n;
+            if fleet.clients[idx].alive && fleet.clients[idx].outstanding.is_none() {
+                probers.push(idx);
+            }
+        }
+        probers.sort_unstable();
+        probers.dedup();
+        for &idx in &probers {
+            fleet.clients[idx].send_step()?;
+        }
+        let burst_t0 = Instant::now();
+        while probers.iter().any(|&i| fleet.clients[i].outstanding.is_some()) {
+            for sc in fleet.servers.iter_mut() {
+                sc.pump_and_flush()?;
+            }
+            for mux in &fleet.client_muxes {
+                drain_client_events(mux)?;
+            }
+            for &idx in &probers {
+                fleet.clients[idx].poll_replies()?;
+            }
+            anyhow::ensure!(
+                burst_t0.elapsed().as_secs() < 30,
+                "probe burst {round} never completed"
+            );
+        }
+        for &idx in &probers {
+            all.push(*fleet.clients[idx].samples.last().expect("probe recorded a sample"));
+        }
+    }
+    Ok(all)
+}
+
+struct ChurnStats {
+    connected: usize,
+    dropped: usize,
+    resumed: usize,
+    renegotiated: usize,
+    empty_latency_clients: usize,
+    steps_completed: u64,
+}
+
+/// Churn: a smaller coalesced fleet where scripted clients drop with a
+/// request still parked in a bucket (their bucket-mates must complete),
+/// some of those resume on a fresh stream, and some renegotiate to a
+/// different k (a different variant = its own coalescing group).
+fn run_churn() -> anyhow::Result<ChurnStats> {
+    const CH_FLEET: usize = 256;
+    const CH_CONNS: usize = 4;
+    let policy = CoalescePolicy::new(16, BATCH_DELAY_US);
+    let mut fleet = build_fleet(CH_FLEET, CH_CONNS, policy)?;
+    let mut rng = Rng::new(99);
+
+    // phase A: everyone completes one step
+    run_throughput(&mut fleet, 1)?;
+
+    // phase B: scripted churn
+    let mut dropped = 0;
+    let mut resumed = 0;
+    let mut renegotiated = 0;
+    for i in 0..CH_FLEET {
+        match i % 8 {
+            // drop mid-bucket: send a request, close before the reply —
+            // the server flushes the parked request at Closed and the
+            // reply lands nowhere; bucket-mates must still finish
+            3 => {
+                let c = &mut fleet.clients[i];
+                c.send_step()?;
+                c.stream.close()?;
+                c.alive = false;
+                dropped += 1;
+            }
+            // drop then resume: close cleanly, reopen a fresh stream with
+            // the same spec, keep stepping
+            5 => {
+                let (conn, spec) = {
+                    let c = &mut fleet.clients[i];
+                    c.stream.close()?;
+                    (c.conn, c.spec)
+                };
+                let stream = fleet.client_muxes[conn].open_stream_with(spec)?;
+                let c = &mut fleet.clients[i];
+                c.stream = stream;
+                c.step = 0; // a fresh stream is a fresh session
+                c.done = 0;
+                dropped += 1;
+                resumed += 1;
+            }
+            // renegotiate: a fresh stream under a different variant — its
+            // requests coalesce in their own group next to everyone else's
+            7 => {
+                let conn = fleet.clients[i].conn;
+                fleet.clients[i].stream.close()?;
+                let spec = CodecSpec::new(Method::Topk { k: 13 }, DIM);
+                let stream = fleet.client_muxes[conn].open_stream_with(spec)?;
+                let c = &mut fleet.clients[i];
+                c.stream = stream;
+                c.spec = spec;
+                c.codec = spec.codec()?;
+                c.step = 0;
+                c.done = 0;
+                // k=13 geometry needs a matching batch
+                let mut values = Vec::with_capacity(ROWS * 13);
+                let mut indices = Vec::with_capacity(ROWS * 13);
+                for _ in 0..ROWS {
+                    let mut all: Vec<i32> = (0..DIM as i32).collect();
+                    rng.shuffle(&mut all);
+                    let mut sel = all[..13].to_vec();
+                    sel.sort_unstable();
+                    for &v in &sel {
+                        indices.push(v);
+                        values.push(rng.normal());
+                    }
+                }
+                c.batch =
+                    Batch::Sparse(SparseBatch { rows: ROWS, dim: DIM, k: 13, values, indices });
+                renegotiated += 1;
+            }
+            _ => {}
+        }
+    }
+
+    // flash connections: connect, send once, drop before any reply — a
+    // client whose entire lifetime is one parked request. Zero latency
+    // samples, so its per-client quantile is `Quantile::Empty`.
+    let flash = 8;
+    for f in 0..flash {
+        let conn = f % CH_CONNS;
+        let spec = client_spec(f);
+        let stream = fleet.client_muxes[conn].open_stream_with(spec)?;
+        let mut c = Client {
+            conn,
+            stream,
+            codec: spec.codec()?,
+            batch: random_batch(&mut rng),
+            spec,
+            step: 0,
+            done: 0,
+            outstanding: None,
+            samples: Vec::new(),
+            alive: true,
+        };
+        c.send_step()?;
+        c.stream.close()?;
+        c.alive = false;
+        dropped += 1;
+        fleet.clients.push(c);
+    }
+
+    // phase C: the survivors (including resumed + renegotiated) finish
+    run_throughput(&mut fleet, 2)?;
+
+    // per-client quantiles: the connect-then-drop clients have EMPTY
+    // sample sets — the typed Quantile handles them without panicking
+    let empty_latency_clients = fleet
+        .clients
+        .iter()
+        .filter(|c| p99_ns(&c.samples).is_empty())
+        .count();
+    let steps_completed = fleet.servers.iter().map(|s| s.served).sum();
+    Ok(ChurnStats {
+        connected: CH_FLEET + resumed + renegotiated + flash,
+        dropped,
+        resumed,
+        renegotiated,
+        empty_latency_clients,
+        steps_completed,
+    })
+}
+
+struct PhaseStats {
+    steps_per_sec: f64,
+    p50_ns: f64,
+    p99_ns: f64,
+    dispatches: u64,
+    served: u64,
+}
+
+fn run_config(n: usize, policy: CoalescePolicy) -> anyhow::Result<PhaseStats> {
+    let mut fleet = build_fleet(n, CONNS.min(n), policy)?;
+    let steps_per_sec = run_throughput(&mut fleet, STEPS)?;
+    let samples = run_probes(&mut fleet)?;
+    Ok(PhaseStats {
+        steps_per_sec,
+        p50_ns: quantile_ns(&samples, 0.5).unwrap_or(f64::NAN),
+        p99_ns: quantile_ns(&samples, 0.99).unwrap_or(f64::NAN),
+        dispatches: fleet.servers.iter().map(|s| s.dispatches).sum(),
+        served: fleet.servers.iter().map(|s| s.served).sum(),
+    })
+}
+
+fn phase_json(label: &str, clients: usize, s: &PhaseStats) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("config".to_string(), Json::Str(label.to_string()));
+    m.insert("clients".to_string(), Json::Num(clients as f64));
+    m.insert("steps_per_sec".to_string(), Json::Num(s.steps_per_sec));
+    m.insert("p50_step_ns".to_string(), Json::Num(s.p50_ns));
+    m.insert("p99_step_ns".to_string(), Json::Num(s.p99_ns));
+    m.insert("dispatches".to_string(), Json::Num(s.dispatches as f64));
+    m.insert("requests_served".to_string(), Json::Num(s.served as f64));
+    Json::Obj(m)
+}
+
+fn main() {
+    println!("== bench group: fleet ==");
+    let per_client = CoalescePolicy::new(1, 0);
+    let coalesced = CoalescePolicy::new(MAX_COALESCE, BATCH_DELAY_US);
+
+    let base_1k = run_config(FLEET, per_client).unwrap_or_else(|e| panic!("baseline 1k: {e:#}"));
+    println!(
+        "per-client @{FLEET}: {:>9.0} steps/s  p50 {:>10}  p99 {:>10}  ({} dispatches)",
+        base_1k.steps_per_sec,
+        fmt_ns(base_1k.p50_ns),
+        fmt_ns(base_1k.p99_ns),
+        base_1k.dispatches
+    );
+    let coal_1k = run_config(FLEET, coalesced).unwrap_or_else(|e| panic!("coalesced 1k: {e:#}"));
+    println!(
+        "coalesced  @{FLEET}: {:>9.0} steps/s  p50 {:>10}  p99 {:>10}  ({} dispatches)",
+        coal_1k.steps_per_sec,
+        fmt_ns(coal_1k.p50_ns),
+        fmt_ns(coal_1k.p99_ns),
+        coal_1k.dispatches
+    );
+    let base_32 = run_config(32, per_client).unwrap_or_else(|e| panic!("baseline 32: {e:#}"));
+    println!(
+        "per-client @32  : {:>9.0} steps/s  p50 {:>10}  p99 {:>10}",
+        base_32.steps_per_sec,
+        fmt_ns(base_32.p50_ns),
+        fmt_ns(base_32.p99_ns)
+    );
+
+    let churn = run_churn().unwrap_or_else(|e| panic!("churn: {e:#}"));
+    println!(
+        "churn @256: {} connected, {} dropped ({} resumed, {} renegotiated), \
+         {} served; {} clients with empty latency samples",
+        churn.connected,
+        churn.dropped,
+        churn.resumed,
+        churn.renegotiated,
+        churn.steps_completed,
+        churn.empty_latency_clients
+    );
+
+    let speedup = coal_1k.steps_per_sec / base_1k.steps_per_sec;
+    let p99_ratio = coal_1k.p99_ns / base_32.p99_ns;
+    let speedup_ok = speedup >= SPEEDUP_LIMIT;
+    let p99_ok = p99_ratio <= P99_RATIO_LIMIT;
+    println!(
+        "\ncoalesced speedup {speedup:.2}x (gate >= {SPEEDUP_LIMIT}); \
+         p99 @1k vs uncoalesced @32: {p99_ratio:.2}x (gate <= {P99_RATIO_LIMIT})"
+    );
+
+    let mut top = BTreeMap::new();
+    top.insert("group".to_string(), Json::Str("fleet".to_string()));
+    let mut model = BTreeMap::new();
+    model.insert("clients".to_string(), Json::Num(FLEET as f64));
+    model.insert("connections".to_string(), Json::Num(CONNS as f64));
+    model.insert("steps_per_client".to_string(), Json::Num(STEPS as f64));
+    model.insert("rows_per_request".to_string(), Json::Num(ROWS as f64));
+    model.insert("max_coalesce".to_string(), Json::Num(MAX_COALESCE as f64));
+    model.insert("max_batch_delay_us".to_string(), Json::Num(BATCH_DELAY_US as f64));
+    model.insert(
+        "dispatch_overhead_iters".to_string(),
+        Json::Num(DISPATCH_OVERHEAD_ITERS as f64),
+    );
+    model.insert("per_row_iters".to_string(), Json::Num(PER_ROW_ITERS as f64));
+    top.insert("cost_model".to_string(), Json::Obj(model));
+    top.insert(
+        "phases".to_string(),
+        Json::Arr(vec![
+            phase_json("per_client", FLEET, &base_1k),
+            phase_json("coalesced", FLEET, &coal_1k),
+            phase_json("per_client", 32, &base_32),
+        ]),
+    );
+    let mut ch = BTreeMap::new();
+    ch.insert("clients".to_string(), Json::Num(256.0));
+    ch.insert("connected".to_string(), Json::Num(churn.connected as f64));
+    ch.insert("dropped".to_string(), Json::Num(churn.dropped as f64));
+    ch.insert("resumed".to_string(), Json::Num(churn.resumed as f64));
+    ch.insert("renegotiated".to_string(), Json::Num(churn.renegotiated as f64));
+    ch.insert(
+        "empty_latency_clients".to_string(),
+        Json::Num(churn.empty_latency_clients as f64),
+    );
+    ch.insert("requests_served".to_string(), Json::Num(churn.steps_completed as f64));
+    top.insert("churn".to_string(), Json::Obj(ch));
+    let mut gates = BTreeMap::new();
+    gates.insert("speedup_limit".to_string(), Json::Num(SPEEDUP_LIMIT));
+    gates.insert("coalesced_speedup".to_string(), Json::Num(speedup));
+    gates.insert("speedup_ok".to_string(), Json::Bool(speedup_ok));
+    gates.insert("p99_ratio_limit".to_string(), Json::Num(P99_RATIO_LIMIT));
+    gates.insert("p99_coalesced_1k_ns".to_string(), Json::Num(coal_1k.p99_ns));
+    gates.insert("p99_per_client_32_ns".to_string(), Json::Num(base_32.p99_ns));
+    gates.insert("p99_ratio".to_string(), Json::Num(p99_ratio));
+    gates.insert("p99_ok".to_string(), Json::Bool(p99_ok));
+    gates.insert("pass".to_string(), Json::Bool(speedup_ok && p99_ok));
+    top.insert("gates".to_string(), Json::Obj(gates));
+
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");
+    match std::fs::write(out, Json::Obj(top).to_string_pretty()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+
+    if !speedup_ok {
+        eprintln!(
+            "GATE FAIL: coalesced dispatch at {FLEET} clients is only {speedup:.2}x the \
+             per-client baseline (limit {SPEEDUP_LIMIT}x)"
+        );
+    }
+    if !p99_ok {
+        eprintln!(
+            "GATE FAIL: coalesced p99 at {FLEET} clients is {p99_ratio:.2}x the uncoalesced \
+             32-client p99 (limit {P99_RATIO_LIMIT}x)"
+        );
+    }
+    if !(speedup_ok && p99_ok) {
+        std::process::exit(1);
+    }
+}

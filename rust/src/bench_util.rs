@@ -31,20 +31,56 @@ pub struct CaseResult {
     pub units: Option<u64>,
 }
 
-/// The `p`-quantile (0..=1) of `samples` by nearest-rank on a sorted copy.
+/// A quantile over a possibly-empty sample set. The old `f64` return
+/// silently reported 0.0 for zero samples — indistinguishable from a
+/// genuinely instant event, which let a fleet bench count a client that
+/// churned away before its first step as "p99 = 0 ns". `Empty` makes
+/// the no-data case a type the caller must decide about.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Quantile {
+    /// No samples were recorded; there is no tail to report.
+    Empty,
+    Value(f64),
+}
+
+impl Quantile {
+    pub fn value(self) -> Option<f64> {
+        match self {
+            Quantile::Empty => None,
+            Quantile::Value(v) => Some(v),
+        }
+    }
+
+    pub fn unwrap_or(self, default: f64) -> f64 {
+        self.value().unwrap_or(default)
+    }
+
+    pub fn is_empty(self) -> bool {
+        matches!(self, Quantile::Empty)
+    }
+}
+
+/// The `p`-quantile (0..=1) of `samples` by nearest-rank on a sorted copy;
+/// [`Quantile::Empty`] when there are no samples.
 ///
 /// Sorts by `total_cmp`: a stray NaN sample sorts to the end instead of
 /// (as `partial_cmp(..).unwrap_or(Equal)` used to) comparing Equal to
 /// everything, which left the sort order — and thus every quantile —
 /// arbitrary.
-pub fn quantile_ns(samples: &[f64], p: f64) -> f64 {
+pub fn quantile_ns(samples: &[f64], p: f64) -> Quantile {
     if samples.is_empty() {
-        return 0.0;
+        return Quantile::Empty;
     }
     let mut sorted = samples.to_vec();
     sorted.sort_by(|a, b| a.total_cmp(b));
     let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
-    sorted[rank - 1]
+    Quantile::Value(sorted[rank - 1])
+}
+
+/// The 99th-percentile tail of `samples`; [`Quantile::Empty`] when a
+/// bench recorded nothing (e.g. every client of a cohort churned away).
+pub fn p99_ns(samples: &[f64]) -> Quantile {
+    quantile_ns(samples, 0.99)
 }
 
 /// Allocation-counting global allocator for the `harness = false` bench
@@ -189,9 +225,17 @@ impl Bench {
     /// — e.g. individual small-frame stalls timed while an elephant
     /// stream competes for the link. Unlike `run*`, the distribution is
     /// raw, so `p99_ns` is a true per-event tail.
-    pub fn record_samples(&mut self, name: &str, samples_ns: &[f64], bytes: Option<u64>) {
-        assert!(!samples_ns.is_empty(), "record_samples needs at least one sample");
+    ///
+    /// Zero samples record nothing and return `false` (it used to
+    /// assert): a fleet bench legitimately produces empty cohorts when
+    /// every client of a group churns away before its first step, and
+    /// that must not kill the whole bench run.
+    pub fn record_samples(&mut self, name: &str, samples_ns: &[f64], bytes: Option<u64>) -> bool {
+        if samples_ns.is_empty() {
+            return false;
+        }
         self.push_stats(name, samples_ns, samples_ns.len() as u64, bytes, None);
+        true
     }
 
     fn push_stats(
@@ -211,7 +255,8 @@ impl Bench {
             mean_ns: mean,
             std_ns: var.sqrt(),
             min_ns: min,
-            p99_ns: quantile_ns(samples, 0.99),
+            // callers guarantee non-empty samples; 0.0 is unreachable
+            p99_ns: quantile_ns(samples, 0.99).unwrap_or(0.0),
             iters: total_iters,
             bytes,
             units,
@@ -348,16 +393,29 @@ mod tests {
 
     #[test]
     fn quantile_nearest_rank() {
-        assert_eq!(quantile_ns(&[], 0.99), 0.0);
-        assert_eq!(quantile_ns(&[7.0], 0.5), 7.0);
+        assert_eq!(quantile_ns(&[], 0.99), Quantile::Empty);
+        assert_eq!(quantile_ns(&[7.0], 0.5), Quantile::Value(7.0));
         let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
-        assert_eq!(quantile_ns(&v, 0.99), 99.0);
-        assert_eq!(quantile_ns(&v, 0.5), 50.0);
-        assert_eq!(quantile_ns(&v, 1.0), 100.0);
+        assert_eq!(quantile_ns(&v, 0.99), Quantile::Value(99.0));
+        assert_eq!(quantile_ns(&v, 0.5), Quantile::Value(50.0));
+        assert_eq!(quantile_ns(&v, 1.0), Quantile::Value(100.0));
         // order-independent
         let mut rev = v.clone();
         rev.reverse();
-        assert_eq!(quantile_ns(&rev, 0.99), 99.0);
+        assert_eq!(quantile_ns(&rev, 0.99), Quantile::Value(99.0));
+    }
+
+    #[test]
+    fn quantile_empty_is_typed_not_zero() {
+        // zero and one samples are both legal: Empty is distinguishable
+        // from a genuine 0 ns sample, and a single sample is every
+        // quantile of itself
+        assert!(p99_ns(&[]).is_empty());
+        assert_eq!(p99_ns(&[]).value(), None);
+        assert!(p99_ns(&[]).unwrap_or(f64::NAN).is_nan());
+        assert_eq!(p99_ns(&[0.0]), Quantile::Value(0.0));
+        assert_eq!(p99_ns(&[42.0]), Quantile::Value(42.0));
+        assert_eq!(p99_ns(&[42.0]).unwrap_or(0.0), 42.0);
     }
 
     #[test]
@@ -365,9 +423,9 @@ mod tests {
         // a NaN must not scramble the order of the finite samples: under
         // total_cmp it sorts last, so low/mid quantiles stay exact
         let v = [5.0, f64::NAN, 1.0, 3.0, 2.0, 4.0];
-        assert_eq!(quantile_ns(&v, 0.5), 3.0);
-        assert_eq!(quantile_ns(&v, 1.0 / 6.0), 1.0);
-        assert!(quantile_ns(&v, 1.0).is_nan());
+        assert_eq!(quantile_ns(&v, 0.5), Quantile::Value(3.0));
+        assert_eq!(quantile_ns(&v, 1.0 / 6.0), Quantile::Value(1.0));
+        assert!(quantile_ns(&v, 1.0).unwrap_or(0.0).is_nan());
     }
 
     #[test]
@@ -408,6 +466,18 @@ mod tests {
         }
         assert_eq!(a.allocs(), 2, "realloc counts as an allocation");
         assert_eq!(a.frees(), 1);
+    }
+
+    #[test]
+    fn record_samples_empty_is_a_no_op_not_a_panic() {
+        let mut b = Bench::new("empty");
+        assert!(!b.record_samples("churned-away cohort", &[], None));
+        assert!(b.results.is_empty());
+        // one sample is enough to record
+        assert!(b.record_samples("lone survivor", &[7.0], None));
+        assert_eq!(b.results.len(), 1);
+        assert_eq!(b.results[0].p99_ns, 7.0);
+        assert_eq!(b.results[0].iters, 1);
     }
 
     #[test]

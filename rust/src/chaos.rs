@@ -24,8 +24,9 @@
 //! Any failing seed replays from the CLI:
 //! `splitfed chaos --seed <N> --method <SPEC>`.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::{Path, PathBuf};
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -33,13 +34,16 @@ use crate::compress::{
     adapt, codec_for, Batch, Codec, CodecSpec, DenseBatch, Pass, QuantBatch, SparseBatch,
 };
 use crate::config::Method;
-use crate::coordinator::send_data_frame;
+use crate::coordinator::{
+    assemble, bucket_for, scatter_outputs, send_data_frame, CoalescePolicy, Coalescer,
+    PendingRequest,
+};
 use crate::json::Json;
 use crate::metrics::{EpochRecord, RunLedger};
 use crate::transport::sim::LinkModel;
 use crate::transport::{
     FaultCounts, FaultPlan, FlowPolicy, FragPolicy, Mux, MuxConfig, MuxEvent, MuxStream,
-    RecoveryCounts, RecoveryPolicy, SimLink, SimNet, Transport,
+    RecoveryCounts, RecoveryPolicy, SimLink, SimNet, Transport, TransportError,
 };
 use crate::util::Rng;
 use crate::wire::{Control, Frame, Message, OpenSpec};
@@ -1045,6 +1049,417 @@ pub fn run_respec_schedule(seed: u64, from_spec: &str, to_spec: &str) -> ChaosVe
     v
 }
 
+// --- batching plane (coalesced eval) ---------------------------------------
+
+/// Slice one client's lane back out of an [`assemble`]d bucket. The
+/// synthetic bucket "executable": per-client outputs are computed from
+/// the stacked tensor's lanes, so any mis-stacking, padding leak, or
+/// off-by-one in assembly changes a digest — and the bit-identity
+/// verdict catches it.
+fn lane_batch(stacked: &Batch, lane: usize, rows: usize) -> Batch {
+    match stacked {
+        Batch::Dense(d) => Batch::Dense(DenseBatch::new(
+            rows,
+            d.dim,
+            d.data[lane * rows * d.dim..(lane + 1) * rows * d.dim].to_vec(),
+        )),
+        Batch::Sparse(s) => Batch::Sparse(SparseBatch {
+            rows,
+            dim: s.dim,
+            k: s.k,
+            values: s.values[lane * rows * s.k..(lane + 1) * rows * s.k].to_vec(),
+            indices: s.indices[lane * rows * s.k..(lane + 1) * rows * s.k].to_vec(),
+        }),
+        Batch::Quant(q) => Batch::Quant(QuantBatch {
+            rows,
+            dim: q.dim,
+            codes: q.codes[lane * rows * q.dim..(lane + 1) * rows * q.dim].to_vec(),
+            o_min: q.o_min[lane * rows..(lane + 1) * rows].to_vec(),
+            o_max: q.o_max[lane * rows..(lane + 1) * rows].to_vec(),
+        }),
+    }
+}
+
+/// Execute one coalesced group the way the serving plane does: bucket,
+/// assemble (pad), compute per-client outputs lane by lane, scatter the
+/// real clients' results back onto their own streams. A send to a stream
+/// that is gone (the departing-client case) is swallowed — its
+/// bucket-mates' replies must still go out.
+fn dispatch_group(
+    group: &[PendingRequest],
+    max_coalesce: usize,
+    streams: &mut HashMap<u32, MuxStream<SimLink>>,
+    dispatches: &mut u64,
+    coalesced: &mut u64,
+) -> Result<()> {
+    let bucket = bucket_for(group.len(), max_coalesce);
+    let (stacked, y) = assemble(group, bucket)?;
+    let rows = group[0].batch.rows();
+    let mut loss = Vec::with_capacity(bucket);
+    let mut metric = Vec::with_capacity(bucket);
+    for lane in 0..bucket {
+        let d = batch_digest(&lane_batch(&stacked, lane, rows));
+        let ysum: f64 = y[lane * rows..(lane + 1) * rows].iter().map(|&v| v as f64).sum();
+        loss.push((d + ysum * 1e-3) as f32);
+        metric.push((d * 0.25) as f32);
+    }
+    let outs = scatter_outputs(&loss, &metric, group.len())?;
+    *dispatches += 1;
+    if group.len() > 1 {
+        *coalesced += 1;
+    }
+    for (req, (l, m)) in group.iter().zip(outs) {
+        if let Some(s) = streams.get_mut(&req.stream_id) {
+            let _ = s.send(&Frame::new(
+                0,
+                Message::EvalResult { step: req.step, loss_sum: l, metric_count: m },
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Coalescing label owner for the multi-client eval sessions: every
+/// decoded request parks in a real [`Coalescer`]; the flush barrier is
+/// count-based (every live client has exactly one request parked), so
+/// the round structure — NOT the fault schedule's timing — decides when
+/// groups dispatch, and a lossy run groups the same requests a clean run
+/// does whenever their `Closed` races resolve the same way. The verdict
+/// never relies on that: lane outputs are grouping-invariant by
+/// construction, which is precisely the claim under test.
+fn coalesce_label_owner(
+    mux: Mux<SimLink>,
+    policy: CoalescePolicy,
+    n_clients: usize,
+) -> Result<(u64, u64)> {
+    let mut coalescer = Coalescer::new(policy);
+    let mut streams: HashMap<u32, MuxStream<SimLink>> = HashMap::new();
+    let mut variants: HashMap<u32, (Box<dyn Codec>, String)> = HashMap::new();
+    let mut waiting: HashSet<u32> = HashSet::new();
+    let mut opened = 0usize;
+    let mut dispatches = 0u64;
+    let mut coalesced = 0u64;
+    while opened < n_clients || !streams.is_empty() {
+        match mux.next_event()? {
+            MuxEvent::Opened(id) => {
+                let OpenSpec::Spec(spec) = mux.stream_spec(id).unwrap_or_default() else {
+                    bail!("coalesce label owner: stream {id} opened without a spec");
+                };
+                variants.insert(id, (spec.codec()?, spec.method.variant()));
+                streams.insert(id, mux.accept_stream(id)?);
+                opened += 1;
+            }
+            MuxEvent::Data(id) => {
+                let Some(s) = streams.get_mut(&id) else { continue };
+                let frame = match s.recv() {
+                    Ok(f) => f,
+                    Err(e) if TransportError::of(&e) == Some(TransportError::WouldBlock) => {
+                        continue;
+                    }
+                    Err(e) => return Err(e).context("coalesce label owner recv"),
+                };
+                let Message::Activations { step, payload } = frame.message else {
+                    bail!("coalesce label owner: unexpected {:?}", frame.message.msg_type());
+                };
+                let (codec, variant) = variants.get(&id).expect("data before open");
+                let batch = codec.decode(&payload, Pass::Forward)?;
+                let rows = batch.rows();
+                // labels the server would fetch for this request: derived
+                // from (stream, step) so they are identical however the
+                // request ends up grouped
+                let y: Vec<i32> =
+                    (0..rows).map(|r| ((id as u64 + step + r as u64) % 7) as i32).collect();
+                coalescer.push(
+                    variant,
+                    PendingRequest { stream_id: id, step, batch, y, enqueued_at: Instant::now() },
+                );
+                waiting.insert(id);
+            }
+            MuxEvent::Closed(id) | MuxEvent::StreamError(id) => {
+                // a client dropping mid-bucket: its own parked work still
+                // executes (bit-identity for whatever it already sent),
+                // its bucket-mates stay parked and dispatch normally
+                for (_, group) in coalescer.take_stream(id) {
+                    dispatch_group(
+                        &group,
+                        policy.max_coalesce,
+                        &mut streams,
+                        &mut dispatches,
+                        &mut coalesced,
+                    )?;
+                }
+                waiting.remove(&id);
+                streams.remove(&id);
+                variants.remove(&id);
+            }
+            MuxEvent::Goaway { .. } => break,
+            _ => {}
+        }
+        // round barrier: every live client has one request parked, so no
+        // further Data can arrive until replies go out — flush everything
+        if !streams.is_empty() && waiting.len() == streams.len() && coalescer.pending() > 0 {
+            for (_, group) in coalescer.take_ready(Instant::now(), true) {
+                for r in &group {
+                    waiting.remove(&r.stream_id);
+                }
+                dispatch_group(
+                    &group,
+                    policy.max_coalesce,
+                    &mut streams,
+                    &mut dispatches,
+                    &mut coalesced,
+                )?;
+            }
+        }
+    }
+    Ok((coalesced, dispatches))
+}
+
+/// One coalesce-session client: lockstep eval over its own stream (send
+/// `Activations`, await `EvalResult`), recording every reply. With
+/// `drop_at = Some(step)` the client closes its stream right after
+/// sending that step's request — vanishing with work still parked in the
+/// server's coalescer, possibly mid-bucket.
+fn coalesce_client_loop(
+    mut stream: MuxStream<SimLink>,
+    cfg: ChaosConfig,
+    steps: u64,
+    drop_at: Option<u64>,
+) -> Result<(Vec<(f32, f32)>, Option<MuxStream<SimLink>>)> {
+    let codec = codec_for(cfg.method, cfg.cut_dim)?;
+    let mut seq = 0u32;
+    let mut results = Vec::new();
+    for step in 0..steps {
+        let batch = forward_batch(&cfg, step);
+        send_data_frame(&mut stream, &mut seq, &*codec, step, &batch, Pass::Forward)?;
+        if drop_at == Some(step) {
+            stream.close()?;
+            return Ok((results, None));
+        }
+        let frame = stream.recv()?;
+        let Message::EvalResult { step: got, loss_sum, metric_count } = frame.message else {
+            bail!("coalesce client expected EvalResult, got {:?}", frame.message.msg_type());
+        };
+        if got != step {
+            bail!("eval step mismatch: {got} != {step} (ordering broken)");
+        }
+        results.push((loss_sum, metric_count));
+    }
+    Ok((results, Some(stream)))
+}
+
+/// Everything one coalesced eval session produced.
+pub struct CoalesceOutcome {
+    /// Per-client `(loss_sum, metric_count)` replies, index-aligned with
+    /// the roster (client `i` opened the `i`-th stream). A dropped
+    /// client's vector holds exactly the replies it received before it
+    /// vanished.
+    pub results: Vec<Vec<(f32, f32)>>,
+    pub faults: FaultCounts,
+    pub recovery: RecoveryCounts,
+    /// Dispatches that stacked more than one client (proof coalescing
+    /// actually happened).
+    pub coalesced_dispatches: u64,
+    pub dispatches: u64,
+}
+
+/// Run one multi-client coalesced eval session over a `SimNet` carrying
+/// `plan`, recovery on both sides: `n_clients` lockstep clients (each
+/// with a per-client deterministic workload derived from `cfg.seed`)
+/// share one connection into a [`Coalescer`]-driven label owner. With
+/// `drop_at = Some((client, step))` that client closes mid-bucket at
+/// that step. Every client's reply sequence is deterministic on its own,
+/// so per-client results must be bit-identical across fault plans AND
+/// across coalesce policies.
+pub fn run_coalesce_session(
+    cfg: &ChaosConfig,
+    plan: FaultPlan,
+    policy: CoalescePolicy,
+    n_clients: usize,
+    drop_at: Option<(usize, u64)>,
+) -> Result<CoalesceOutcome> {
+    policy.validate()?;
+    let net = SimNet::with_faults(LinkModel::default(), plan);
+    let (a, b) = net.pair();
+    let rp = RecoveryPolicy {
+        probe_after_polls: 200,
+        probe_interval_polls: 2_000,
+        poll_timeout_ms: 30_000,
+        ..RecoveryPolicy::default()
+    };
+    let nc = net.clone();
+    let ns = net.clone();
+    let cm = Mux::with_config(
+        a,
+        MuxConfig::initiator().recovery(rp).reconnector(move |_| {
+            nc.reconnect();
+            Ok(None)
+        }),
+    )?;
+    let sm = Mux::with_config(
+        b,
+        MuxConfig::acceptor().recovery(rp).reconnector(move |_| {
+            ns.reconnect();
+            Ok(None)
+        }),
+    )?;
+    let sm_counts = sm.clone();
+    let lo = std::thread::spawn(move || coalesce_label_owner(sm, policy, n_clients));
+    let steps = cfg.epochs as u64 * cfg.steps_per_epoch as u64;
+    // open every stream up front from this thread so client i always gets
+    // the same stream id (the server derives labels from it)
+    let mut handles = Vec::new();
+    for i in 0..n_clients {
+        let stream = cm.open_stream_with(CodecSpec::new(cfg.method, cfg.cut_dim))?;
+        let mut ccfg = cfg.clone();
+        ccfg.seed = cfg.seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let da = drop_at.and_then(|(c, s)| (c == i).then_some(s));
+        handles.push(std::thread::spawn(move || coalesce_client_loop(stream, ccfg, steps, da)));
+    }
+    let mut results = Vec::new();
+    let mut live = Vec::new();
+    for (i, h) in handles.into_iter().enumerate() {
+        let (res, stream) = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("coalesce client thread panicked"))?
+            .with_context(|| format!("coalesce client {i}"))?;
+        results.push(res);
+        live.extend(stream);
+    }
+    // quiesce for the final closes (two generals): the chaos window
+    // covered the whole eval body
+    net.set_faults_enabled(false);
+    for mut s in live {
+        s.close()?;
+    }
+    let (coalesced_dispatches, dispatches) = lo
+        .join()
+        .map_err(|_| anyhow::anyhow!("coalesce label-owner thread panicked"))?
+        .context("coalesce label owner")?;
+    let mut recovery = cm.recovery_counts();
+    recovery.add(&sm_counts.recovery_counts());
+    Ok(CoalesceOutcome {
+        results,
+        faults: net.fault_totals(),
+        recovery,
+        coalesced_dispatches,
+        dispatches,
+    })
+}
+
+/// Bit-exact fingerprint of one client's eval replies.
+pub fn eval_fingerprint(results: &[(f32, f32)]) -> String {
+    use std::fmt::Write;
+    if results.is_empty() {
+        return "empty".into();
+    }
+    let mut out = String::new();
+    for (i, (l, m)) in results.iter().enumerate() {
+        let sep = if i == 0 { "" } else { "|" };
+        let _ = write!(out, "{sep}s{i}:{:08x}:{:08x}", l.to_bits(), m.to_bits());
+    }
+    out
+}
+
+/// Run one coalesce schedule: a three-client eval session — one client
+/// dropping mid-bucket halfway through — three times over. The verdict
+/// demands the coalesced clean run AND the coalesced faulty run both
+/// reproduce the per-client (uncoalesced) clean baseline bit-for-bit,
+/// for every client including the dropped one's partial reply sequence,
+/// and that multi-client buckets actually dispatched in both.
+pub fn run_coalesce_schedule(seed: u64, method_spec: &str) -> ChaosVerdict {
+    let plan = fault_plan_for_seed(seed);
+    let mut v = ChaosVerdict {
+        seed,
+        method_spec: format!("coalesce-{method_spec}"),
+        plan,
+        ok: false,
+        detail: String::new(),
+        faults: FaultCounts::default(),
+        recovery: RecoveryCounts::default(),
+        max_frame_size: None,
+        flow_window: None,
+    };
+    let method = match Method::parse(method_spec) {
+        Ok(m) => m,
+        Err(e) => {
+            v.detail = format!("bad method spec: {e}");
+            return v;
+        }
+    };
+    let cfg = ChaosConfig::quick(seed, method);
+    let n_clients = 3;
+    let steps = cfg.epochs as u64 * cfg.steps_per_epoch as u64;
+    // drop mid-run: never the first or last round, so the departing
+    // client leaves work parked next to live bucket-mates
+    let drop_at = Some((n_clients - 1, steps / 2));
+    let coalesced = CoalescePolicy::new(4, 200);
+    let per_client = CoalescePolicy::new(1, 0);
+    let base = match run_coalesce_session(&cfg, FaultPlan::none(), per_client, n_clients, drop_at) {
+        Ok(o) => o,
+        Err(e) => {
+            v.detail = format!("per-client baseline failed: {e:#}");
+            return v;
+        }
+    };
+    let clean = match run_coalesce_session(&cfg, FaultPlan::none(), coalesced, n_clients, drop_at) {
+        Ok(o) => o,
+        Err(e) => {
+            v.detail = format!("coalesced clean run failed: {e:#}");
+            return v;
+        }
+    };
+    let chaos = match run_coalesce_session(&cfg, plan, coalesced, n_clients, drop_at) {
+        Ok(o) => o,
+        Err(e) => {
+            v.detail = format!("coalesced chaos run failed: {e:#}");
+            return v;
+        }
+    };
+    v.faults = chaos.faults;
+    v.recovery = chaos.recovery;
+    let combined = |o: &CoalesceOutcome| {
+        o.results.iter().map(|r| eval_fingerprint(r)).collect::<Vec<_>>().join("||")
+    };
+    let bf = combined(&base);
+    for (name, o) in [("clean", &clean), ("chaos", &chaos)] {
+        let f = combined(o);
+        if f != bf {
+            v.detail = format!(
+                "coalesced {name} run diverged from the per-client baseline:\n  base      {bf}\n  \
+                 coalesced {f}"
+            );
+            return v;
+        }
+        if o.coalesced_dispatches == 0 {
+            v.detail = format!(
+                "coalesced {name} run never stacked a bucket ({} dispatches)",
+                o.dispatches
+            );
+            return v;
+        }
+    }
+    let dropped = base.results[n_clients - 1].len() as u64;
+    if dropped != steps / 2 {
+        v.detail =
+            format!("dropped client saw {dropped} replies, expected {} (drop mis-fired)", steps / 2);
+        return v;
+    }
+    v.ok = true;
+    v.detail = format!(
+        "coalesced eval bit-identical to per-client serving across {} injected faults \
+         ({}/{} stacked dispatches clean, {}/{} chaos, {} retransmits, {} reconnects)",
+        v.faults.total(),
+        clean.coalesced_dispatches,
+        clean.dispatches,
+        chaos.coalesced_dispatches,
+        chaos.dispatches,
+        v.recovery.retransmits,
+        v.recovery.reconnects
+    );
+    v
+}
+
 /// The one-line reproduction for a failing seed.
 pub fn repro_command(seed: u64, method_spec: &str) -> String {
     format!("cargo run --bin splitfed -- chaos --seed {seed} --method {method_spec}")
@@ -1236,6 +1651,41 @@ mod tests {
             let v = run_schedule_configured(91, spec, None, Some(2048));
             assert!(v.ok, "{spec} seed 91 flow 2048: {}", v.detail);
         }
+    }
+
+    #[test]
+    fn one_coalesced_lossy_schedule_survives_smoke() {
+        // the full coalesce matrix lives in rust/tests/chaos.rs; this is
+        // the in-crate smoke test (one seed, the flagship codec)
+        let v = run_coalesce_schedule(91, "topk:k=6");
+        assert!(v.ok, "coalesce seed 91: {}", v.detail);
+    }
+
+    #[test]
+    fn mid_bucket_drop_leaves_bucket_mates_bit_identical() {
+        // a client vanishing mid-bucket must not change a single reply
+        // bit for the clients it shared buckets with — before OR after
+        // the drop (post-drop rounds stack into a smaller bucket)
+        let cfg = ChaosConfig::quick(7, Method::Topk { k: 6 });
+        let policy = CoalescePolicy::new(4, 200);
+        let full = run_coalesce_session(&cfg, FaultPlan::none(), policy, 3, None).unwrap();
+        let dropped =
+            run_coalesce_session(&cfg, FaultPlan::none(), policy, 3, Some((2, 6))).unwrap();
+        for i in 0..2 {
+            assert_eq!(
+                eval_fingerprint(&full.results[i]),
+                eval_fingerprint(&dropped.results[i]),
+                "bucket-mate {i} poisoned by the drop"
+            );
+        }
+        // the dropped client's partial replies are a bit-exact prefix of
+        // its full-run sequence
+        assert_eq!(dropped.results[2].len(), 6);
+        assert_eq!(
+            eval_fingerprint(&full.results[2][..6]),
+            eval_fingerprint(&dropped.results[2]),
+        );
+        assert!(dropped.coalesced_dispatches > 0, "no bucket ever stacked");
     }
 
     #[test]

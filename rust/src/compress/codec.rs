@@ -135,45 +135,105 @@ pub fn scratch_quant(out: &mut Option<Batch>) -> (Vec<f32>, Vec<f32>, Vec<f32>) 
     (codes, o_min, o_max)
 }
 
-/// What one session negotiates when it opens a stream: the method and the
-/// cut-layer geometry it will speak. Carried in the `OpenStream` body
-/// (`wire`), validated against the serving model's manifest by the
-/// acceptor before a `LabelOwner` is constructed.
+/// How a sparse codec lays out its index section on the wire.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum IndexLayout {
+    /// Fixed ⌈log2 d⌉ bits per index, bit-packed (paper §3.2 "offset
+    /// encoding"). The default; every peer understands it.
+    #[default]
+    Bitpack,
+    /// Opt-in varint layout (bcp-wire): per row the first index is an
+    /// absolute unsigned LEB128, each following index a LEB128 *delta*
+    /// from its predecessor (indices ascend within a row, so gaps are
+    /// small — usually one byte even when the dim needs 9-11 fixed
+    /// bits). Input-dependent size, so `expected_wire_bytes` is `None`
+    /// on passes that carry indices.
+    Leb128Delta,
+}
+
+impl IndexLayout {
+    pub fn name(self) -> &'static str {
+        match self {
+            IndexLayout::Bitpack => "bitpack",
+            IndexLayout::Leb128Delta => "leb128",
+        }
+    }
+}
+
+/// What one session negotiates when it opens a stream: the method, the
+/// cut-layer geometry, and the sparse index layout it will speak.
+/// Carried in the `OpenStream` body (`wire`), validated against the
+/// serving model's manifest by the acceptor before a `LabelOwner` is
+/// constructed.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CodecSpec {
     pub method: Method,
     pub cut_dim: usize,
+    /// Index layout for sparse payloads; `Bitpack` unless opted in. On
+    /// the wire this rides an optional trailing spec byte (absent =
+    /// bitpack), so old encoders stay byte-identical.
+    pub index_layout: IndexLayout,
 }
 
 impl CodecSpec {
     pub fn new(method: Method, cut_dim: usize) -> Self {
-        CodecSpec { method, cut_dim }
+        CodecSpec { method, cut_dim, index_layout: IndexLayout::Bitpack }
+    }
+
+    /// Opt this spec into a non-default sparse index layout.
+    pub fn with_index_layout(mut self, layout: IndexLayout) -> Self {
+        self.index_layout = layout;
+        self
     }
 
     /// Build the codec this spec names (validating its parameters).
     pub fn codec(&self) -> Result<Box<dyn Codec>> {
-        codec_for(self.method, self.cut_dim)
+        codec_for_layout(self.method, self.cut_dim, self.index_layout)
     }
 }
 
 impl std::fmt::Display for CodecSpec {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{} @ d={}", self.method, self.cut_dim)
+        write!(f, "{} @ d={}", self.method, self.cut_dim)?;
+        if self.index_layout != IndexLayout::Bitpack {
+            write!(f, " idx={}", self.index_layout.name())?;
+        }
+        Ok(())
     }
 }
 
 /// The codec registry: every configured method maps to exactly one codec.
 /// Rejects parameter/geometry nonsense (k out of range, bad bit widths)
-/// so a negotiated spec is validated in one place.
+/// so a negotiated spec is validated in one place. Default index layout.
 pub fn codec_for(method: Method, cut_dim: usize) -> Result<Box<dyn Codec>> {
+    codec_for_layout(method, cut_dim, IndexLayout::Bitpack)
+}
+
+/// Registry entry point with an explicit sparse index layout. A
+/// non-default layout is only meaningful for methods whose forward
+/// payload carries indices (top-k family); anything else is rejected so
+/// a negotiated spec can't silently promise a layout it never uses.
+pub fn codec_for_layout(
+    method: Method,
+    cut_dim: usize,
+    layout: IndexLayout,
+) -> Result<Box<dyn Codec>> {
     if cut_dim == 0 {
         bail!("codec registry: cut_dim must be >= 1");
+    }
+    if layout != IndexLayout::Bitpack
+        && !matches!(method, Method::RandTopk { .. } | Method::Topk { .. })
+    {
+        bail!(
+            "codec registry: index layout {} requires a top-k method, got {method}",
+            layout.name()
+        );
     }
     match method {
         Method::None => Ok(Box::new(DenseCodec::new(cut_dim))),
         Method::RandTopk { k, .. } | Method::Topk { k } => {
             check_k(k, cut_dim)?;
-            Ok(Box::new(SparseCodec::topk(cut_dim, k)))
+            Ok(Box::new(SparseCodec::topk(cut_dim, k).with_layout(layout)))
         }
         Method::SizeReduction { k } => {
             check_k(k, cut_dim)?;
@@ -264,5 +324,34 @@ mod tests {
         let spec = CodecSpec::new(Method::parse("quant:bits=4").unwrap(), 128);
         assert_eq!(spec.to_string(), "quant:bits=4 @ d=128");
         assert_eq!(spec.codec().unwrap().name(), "quant");
+    }
+
+    #[test]
+    fn leb128_layout_is_topk_only() {
+        // top-k family accepts the opt-in layout...
+        for spec in ["topk:k=6", "randtopk:k=6,alpha=0.1"] {
+            let m = Method::parse(spec).unwrap();
+            let c = codec_for_layout(m, 128, IndexLayout::Leb128Delta).unwrap();
+            assert_eq!(c.name(), "topk_leb128", "{spec}");
+        }
+        // ...everything without a forward index section refuses it
+        for spec in ["none", "sizered:k=6", "quant:bits=2", "l1:lambda=0.001"] {
+            let m = Method::parse(spec).unwrap();
+            let err = codec_for_layout(m, 128, IndexLayout::Leb128Delta).unwrap_err();
+            assert!(err.to_string().contains("requires a top-k"), "{spec}: {err}");
+        }
+        // explicit bitpack is the same as the two-arg registry
+        let m = Method::parse("sizered:k=6").unwrap();
+        assert_eq!(codec_for_layout(m, 128, IndexLayout::Bitpack).unwrap().name(), "size_reduction");
+    }
+
+    #[test]
+    fn spec_with_index_layout_display_and_default() {
+        let spec = CodecSpec::new(Method::parse("topk:k=6").unwrap(), 128);
+        assert_eq!(spec.index_layout, IndexLayout::Bitpack);
+        let leb = spec.with_index_layout(IndexLayout::Leb128Delta);
+        assert_eq!(leb.to_string(), "topk:k=6 @ d=128 idx=leb128");
+        assert_eq!(leb.codec().unwrap().name(), "topk_leb128");
+        assert_ne!(spec, leb);
     }
 }

@@ -20,7 +20,10 @@ pub mod size_model;
 pub mod sparse;
 
 pub use adapt::{AdaptPolicy, AdaptSignals};
-pub use codec::{codec_for, scratch_f32, scratch_quant, scratch_sparse, Batch, Codec, CodecSpec};
+pub use codec::{
+    codec_for, codec_for_layout, scratch_f32, scratch_quant, scratch_sparse, Batch, Codec,
+    CodecSpec, IndexLayout,
+};
 pub use dense::DenseCodec;
 pub use l1::L1Codec;
 pub use quant::{QuantBatch, QuantCodec};

@@ -5,6 +5,7 @@
 //! | size reduction  | k/d                              | k/d      |
 //! | quantization b  | 2^b / N                          | 1        |
 //! | top-k           | k/d * (1 + ceil(log2 d)/N)       | k/d      |
+//! | top-k (leb128)  | k/d * (1 + 8*leb(d/k)/N) (est)   | k/d      |
 //! | L1              | k/d * (1 + ceil(log2 d)/N) (var) | 1        |
 //!
 //! N = 32 (f32). The unit tests in each codec cross-check measured wire
@@ -18,6 +19,10 @@ pub enum SizeModel {
     SizeReduction { d: usize, k: usize },
     Quant { d: usize, bits: usize },
     Topk { d: usize, k: usize },
+    /// Top-k with LEB128-delta indices: the index cost is the *expected*
+    /// varint width for the mean ascending gap d/k, not ⌈log2 d⌉. An
+    /// estimate — the true wire size is input-dependent.
+    TopkLeb { d: usize, k: usize },
     /// L1: k is the *observed mean* nonzero count (varies per input).
     L1 { d: usize, k_mean: f64 },
     Dense,
@@ -36,6 +41,10 @@ impl SizeModel {
         SizeModel::Topk { d, k }
     }
 
+    pub fn topk_leb(d: usize, k: usize) -> Self {
+        SizeModel::TopkLeb { d, k }
+    }
+
     pub fn index_overhead(d: usize) -> f64 {
         let r = crate::util::index_bits(d) as f64;
         1.0 + r / N_BITS as f64
@@ -50,6 +59,12 @@ impl SizeModel {
             // the physically correct b bits per value. We use b/N.
             SizeModel::Quant { bits, .. } => bits as f64 / N_BITS as f64,
             SizeModel::Topk { d, k } => k as f64 / d as f64 * Self::index_overhead(d),
+            SizeModel::TopkLeb { d, k } => {
+                // expected LEB128 bytes for the mean gap d/k, as bits/N
+                let gap = (d / k.max(1)).max(1) as u64;
+                let leb_bits = 8.0 * crate::util::uleb128_len(gap) as f64;
+                k as f64 / d as f64 * (1.0 + leb_bits / N_BITS as f64)
+            }
             SizeModel::L1 { d, k_mean } => k_mean / d as f64 * Self::index_overhead(d),
             SizeModel::Dense => 1.0,
         }
@@ -58,7 +73,9 @@ impl SizeModel {
     /// Fraction of the dense size sent on the backward pass.
     pub fn backward_fraction(&self) -> f64 {
         match *self {
-            SizeModel::SizeReduction { d, k } | SizeModel::Topk { d, k } => k as f64 / d as f64,
+            SizeModel::SizeReduction { d, k }
+            | SizeModel::Topk { d, k }
+            | SizeModel::TopkLeb { d, k } => k as f64 / d as f64,
             SizeModel::Quant { .. } | SizeModel::L1 { .. } | SizeModel::Dense => 1.0,
         }
     }
@@ -110,6 +127,25 @@ mod tests {
         let m = SizeModel::topk(128, 6);
         assert!(m.backward_fraction() < m.forward_fraction());
         assert!((m.backward_fraction() - 6.0 / 128.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topk_leb_estimate_tracks_gap_width() {
+        // d=600, k=14: mean gap 42 is one LEB128 byte -> overhead 8/32,
+        // beating the 10-bit fixed layout's 10/32
+        let leb = SizeModel::topk_leb(600, 14);
+        let fixed = SizeModel::topk(600, 14);
+        assert!(leb.forward_fraction() < fixed.forward_fraction());
+        assert!((leb.forward_fraction() - 14.0 / 600.0 * 1.25).abs() < 1e-12);
+        // d=1280, k=2: mean gap 640 needs two bytes -> worse than 11 bits
+        let leb = SizeModel::topk_leb(1280, 2);
+        let fixed = SizeModel::topk(1280, 2);
+        assert!(leb.forward_fraction() > fixed.forward_fraction());
+        // backward carries no indices either way
+        assert_eq!(
+            SizeModel::topk_leb(600, 14).backward_fraction(),
+            SizeModel::topk(600, 14).backward_fraction()
+        );
     }
 
     #[test]

@@ -1,0 +1,544 @@
+//! Batching plane: cross-client micro-batch coalescing on the label owner.
+//!
+//! In reactor serving, payload frames from many client streams arrive
+//! interleaved on the same thread. Executing each client's batch alone
+//! leaves the accelerator underfed: per-dispatch overhead (marshal,
+//! launch, readback) dominates at small per-client batches. The
+//! [`Coalescer`] assembles decoded requests from *different* clients that
+//! share a codec geometry (same artifact variant) into one stacked tensor,
+//! padded up to a fixed bucket ladder so every stacked shape maps to one
+//! precompiled executable.
+//!
+//! State machine per `(variant)` queue:
+//!
+//! ```text
+//!   push ──► pending ──┬─ len >= max_coalesce ──────────► dispatch (full)
+//!                      ├─ oldest waited >= deadline ────► dispatch (ragged)
+//!                      ├─ force (shutdown / respec) ────► dispatch (ragged)
+//!                      └─ stream closed ── take_stream ─► dispatch (alone)
+//! ```
+//!
+//! Invariants the serve layer relies on (tests/coalesce.rs proves them):
+//!
+//! - **Bit-identity**: a coalesced dispatch produces, for every real
+//!   client, exactly the loss/metric bytes a per-client dispatch would
+//!   have produced. Padding rows are all-zero and their outputs are
+//!   dropped before any reply is written.
+//! - **Isolation**: a client dropping mid-bucket removes only its own
+//!   pending requests ([`Coalescer::take_stream`]); its bucket-mates
+//!   dispatch normally.
+//! - **Accounting**: replies travel on each request's own stream, so
+//!   per-stream `LinkStats` are byte-identical to the uncoalesced path.
+//!
+//! The module is engine-free: assembly and scatter work on decoded
+//! [`Batch`] values, so unit tests and the fleet bench run without
+//! compiled artifacts.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::compress::{Batch, DenseBatch, QuantBatch, SparseBatch};
+
+/// Knobs for the coalescer, validated by `ServeOptions`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CoalescePolicy {
+    /// Most client requests stacked into one dispatch (the top of the
+    /// bucket ladder). `1` degenerates to per-client dispatch.
+    pub max_coalesce: usize,
+    /// Longest a lone request waits for bucket-mates before it is
+    /// dispatched ragged. `0` dispatches on every sweep.
+    pub max_batch_delay_us: u64,
+}
+
+impl CoalescePolicy {
+    pub fn new(max_coalesce: usize, max_batch_delay_us: u64) -> Self {
+        CoalescePolicy { max_coalesce, max_batch_delay_us }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_coalesce == 0 {
+            bail!("coalesce: max_coalesce must be >= 1");
+        }
+        Ok(())
+    }
+
+    fn delay(&self) -> Duration {
+        Duration::from_micros(self.max_batch_delay_us)
+    }
+}
+
+impl Default for CoalescePolicy {
+    fn default() -> Self {
+        CoalescePolicy { max_coalesce: 8, max_batch_delay_us: 200 }
+    }
+}
+
+/// One decoded client request parked in the coalescer. The payload is
+/// already decoded (zero-copy, at enqueue time) so assembly is pure
+/// host-side stacking.
+#[derive(Clone, Debug)]
+pub struct PendingRequest {
+    pub stream_id: u32,
+    pub step: u64,
+    pub batch: Batch,
+    pub y: Vec<i32>,
+    pub enqueued_at: Instant,
+}
+
+/// Per-connection coalescer: queues of decoded requests keyed by artifact
+/// variant (same variant ⇒ same codec geometry ⇒ same stacked shape).
+#[derive(Debug, Default)]
+pub struct Coalescer {
+    policy: CoalescePolicy,
+    queues: BTreeMap<String, VecDeque<PendingRequest>>,
+    pending: usize,
+}
+
+impl Coalescer {
+    pub fn new(policy: CoalescePolicy) -> Self {
+        Coalescer { policy, queues: BTreeMap::new(), pending: 0 }
+    }
+
+    pub fn policy(&self) -> CoalescePolicy {
+        self.policy
+    }
+
+    /// Park a decoded request under its variant queue.
+    pub fn push(&mut self, variant: &str, req: PendingRequest) {
+        self.pending += 1;
+        self.queues.entry(variant.to_string()).or_default().push_back(req);
+    }
+
+    /// Requests currently parked (all variants).
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Earliest instant at which a parked request crosses the deadline,
+    /// `None` when empty. The reactor uses this to bound its idle sleep.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front())
+            .map(|r| r.enqueued_at + self.policy.delay())
+            .min()
+    }
+
+    /// Drain every group that is ready at `now`: full buckets always, and
+    /// ragged remainders whose oldest request has waited past the
+    /// deadline (or everything, when `force` — shutdown / respec
+    /// cut-over). Groups come back FIFO within a variant.
+    pub fn take_ready(&mut self, now: Instant, force: bool) -> Vec<(String, Vec<PendingRequest>)> {
+        let delay = self.policy.delay();
+        let max = self.policy.max_coalesce;
+        let mut out = Vec::new();
+        for (variant, q) in self.queues.iter_mut() {
+            loop {
+                let take = if q.len() >= max {
+                    max
+                } else if !q.is_empty()
+                    && (force
+                        || now.saturating_duration_since(q.front().unwrap().enqueued_at) >= delay)
+                {
+                    q.len()
+                } else {
+                    break;
+                };
+                let group: Vec<PendingRequest> = q.drain(..take).collect();
+                self.pending -= group.len();
+                out.push((variant.clone(), group));
+            }
+        }
+        self.queues.retain(|_, q| !q.is_empty());
+        out
+    }
+
+    /// Pull every pending request belonging to `stream_id` (grouped by
+    /// variant), leaving other streams' requests parked. Called when a
+    /// stream closes, errors, or cuts over to a new spec: the departing
+    /// client must not poison its bucket-mates, and its own in-flight
+    /// work must still execute for bit-identity.
+    pub fn take_stream(&mut self, stream_id: u32) -> Vec<(String, Vec<PendingRequest>)> {
+        let mut out = Vec::new();
+        let pending = &mut self.pending;
+        self.queues.retain(|variant, q| {
+            let mut mine = Vec::new();
+            let mut keep = VecDeque::with_capacity(q.len());
+            for r in q.drain(..) {
+                if r.stream_id == stream_id {
+                    mine.push(r);
+                } else {
+                    keep.push_back(r);
+                }
+            }
+            *q = keep;
+            if !mine.is_empty() {
+                *pending -= mine.len();
+                out.push((variant.clone(), mine));
+            }
+            !q.is_empty()
+        });
+        out
+    }
+}
+
+/// Bucket (in client-requests) a group of `n` dispatches into: the next
+/// power of two, capped at `max`. Each rung maps to one precompiled
+/// executable, so ragged groups pad up rather than compile fresh shapes.
+pub fn bucket_for(n: usize, max: usize) -> usize {
+    assert!(n >= 1 && max >= 1, "bucket_for: n and max must be >= 1");
+    let p = n.next_power_of_two();
+    if p >= max {
+        max
+    } else {
+        p
+    }
+}
+
+/// The full ladder `warm_up` precompiles: powers of two below `max`,
+/// plus `max` itself (which need not be a power of two).
+pub fn bucket_ladder(max: usize) -> Vec<usize> {
+    assert!(max >= 1, "bucket_ladder: max must be >= 1");
+    let mut out = Vec::new();
+    let mut b = 1usize;
+    while b < max {
+        out.push(b);
+        b *= 2;
+    }
+    out.push(max);
+    out
+}
+
+/// Stack a same-variant group into one batch of `bucket_clients`
+/// client-slots, padding the tail slots with all-zero rows. Labels pad
+/// with class 0. Padding never reaches a client: the bucket artifacts
+/// emit per-client output vectors and [`scatter_outputs`] drops the tail.
+///
+/// Every request must carry the same batch kind and geometry — the
+/// variant key guarantees this in serve; here it is re-validated so a
+/// bad caller fails loudly instead of mis-stacking.
+pub fn assemble(group: &[PendingRequest], bucket_clients: usize) -> Result<(Batch, Vec<i32>)> {
+    let Some(first) = group.first() else {
+        bail!("coalesce: cannot assemble an empty group");
+    };
+    if group.len() > bucket_clients {
+        bail!("coalesce: group of {} exceeds bucket {}", group.len(), bucket_clients);
+    }
+    let rows = first.batch.rows();
+    let dim = first.batch.dim();
+    for r in group {
+        if r.batch.rows() != rows || r.batch.dim() != dim {
+            bail!(
+                "coalesce: geometry mismatch in group: {}x{} vs {}x{}",
+                r.batch.rows(),
+                r.batch.dim(),
+                rows,
+                dim
+            );
+        }
+        if r.y.len() != rows {
+            bail!("coalesce: label length {} != rows {}", r.y.len(), rows);
+        }
+    }
+    let pad = bucket_clients - group.len();
+    let total_rows = bucket_clients * rows;
+
+    let mut y = Vec::with_capacity(total_rows);
+    for r in group {
+        y.extend_from_slice(&r.y);
+    }
+    y.resize(total_rows, 0);
+
+    let batch = match &first.batch {
+        Batch::Sparse(proto) => {
+            let k = proto.k;
+            let mut values = Vec::with_capacity(total_rows * k);
+            let mut indices = Vec::with_capacity(total_rows * k);
+            for r in group {
+                let Batch::Sparse(b) = &r.batch else {
+                    bail!("coalesce: mixed batch kinds in group");
+                };
+                if b.k != k {
+                    bail!("coalesce: sparse k mismatch: {} vs {}", b.k, k);
+                }
+                values.extend_from_slice(&b.values);
+                indices.extend_from_slice(&b.indices);
+            }
+            // pad rows: zero values at the k lowest indices (a valid
+            // ascending selection whose contribution is identically zero)
+            for _ in 0..pad * rows {
+                values.extend(std::iter::repeat(0.0f32).take(k));
+                indices.extend(0..k as i32);
+            }
+            Batch::Sparse(SparseBatch { rows: total_rows, dim, k, values, indices })
+        }
+        Batch::Quant(_) => {
+            let mut codes = Vec::with_capacity(total_rows * dim);
+            let mut o_min = Vec::with_capacity(total_rows);
+            let mut o_max = Vec::with_capacity(total_rows);
+            for r in group {
+                let Batch::Quant(b) = &r.batch else {
+                    bail!("coalesce: mixed batch kinds in group");
+                };
+                codes.extend_from_slice(&b.codes);
+                o_min.extend_from_slice(&b.o_min);
+                o_max.extend_from_slice(&b.o_max);
+            }
+            // pad rows: code 0 with a degenerate (0, 0) range dequantizes
+            // to all-zero activations
+            codes.resize(total_rows * dim, 0.0);
+            o_min.resize(total_rows, 0.0);
+            o_max.resize(total_rows, 0.0);
+            Batch::Quant(QuantBatch { rows: total_rows, dim, codes, o_min, o_max })
+        }
+        Batch::Dense(_) => {
+            let mut data = Vec::with_capacity(total_rows * dim);
+            for r in group {
+                let Batch::Dense(b) = &r.batch else {
+                    bail!("coalesce: mixed batch kinds in group");
+                };
+                data.extend_from_slice(&b.data);
+            }
+            data.resize(total_rows * dim, 0.0);
+            Batch::Dense(DenseBatch { rows: total_rows, dim, data })
+        }
+    };
+    Ok((batch, y))
+}
+
+/// Split the bucket artifact's per-client output vectors back into
+/// `(loss_sum, metric_count)` per real client, dropping the padding tail.
+/// Proves the accounting invariant: a padded slot's numbers never reach
+/// any client.
+pub fn scatter_outputs(
+    loss_sum: &[f32],
+    metric_count: &[f32],
+    n_real: usize,
+) -> Result<Vec<(f32, f32)>> {
+    if loss_sum.len() != metric_count.len() {
+        bail!(
+            "coalesce: scatter arity mismatch: {} losses vs {} counts",
+            loss_sum.len(),
+            metric_count.len()
+        );
+    }
+    if loss_sum.len() < n_real {
+        bail!("coalesce: bucket emitted {} outputs for {} clients", loss_sum.len(), n_real);
+    }
+    Ok((0..n_real).map(|i| (loss_sum[i], metric_count[i])).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sparse_req(stream_id: u32, step: u64, rows: usize, val: f32, at: Instant) -> PendingRequest {
+        let (dim, k) = (8usize, 2usize);
+        let mut values = Vec::new();
+        let mut indices = Vec::new();
+        for r in 0..rows {
+            values.extend([val, val + 1.0]);
+            indices.extend([(r % 3) as i32, (r % 3) as i32 + 3]);
+        }
+        PendingRequest {
+            stream_id,
+            step,
+            batch: Batch::Sparse(SparseBatch { rows, dim, k, values, indices }),
+            y: vec![stream_id as i32; rows],
+            enqueued_at: at,
+        }
+    }
+
+    #[test]
+    fn bucket_math() {
+        assert_eq!(bucket_for(1, 8), 1);
+        assert_eq!(bucket_for(2, 8), 2);
+        assert_eq!(bucket_for(3, 8), 4);
+        assert_eq!(bucket_for(5, 8), 8);
+        assert_eq!(bucket_for(8, 8), 8);
+        // non-power-of-two cap: everything past the last pow2 pads to max
+        assert_eq!(bucket_for(5, 6), 6);
+        assert_eq!(bucket_for(4, 6), 4);
+        assert_eq!(bucket_ladder(8), vec![1, 2, 4, 8]);
+        assert_eq!(bucket_ladder(6), vec![1, 2, 4, 6]);
+        assert_eq!(bucket_ladder(1), vec![1]);
+    }
+
+    #[test]
+    fn full_bucket_dispatches_without_deadline() {
+        let t0 = Instant::now();
+        let mut c = Coalescer::new(CoalescePolicy::new(2, 1_000_000));
+        c.push("sparse_k2", sparse_req(1, 0, 4, 1.0, t0));
+        assert!(c.take_ready(t0, false).is_empty(), "one request must wait");
+        c.push("sparse_k2", sparse_req(2, 0, 4, 2.0, t0));
+        let ready = c.take_ready(t0, false);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].0, "sparse_k2");
+        assert_eq!(ready[0].1.len(), 2);
+        assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn deadline_flushes_ragged_group() {
+        let t0 = Instant::now();
+        let mut c = Coalescer::new(CoalescePolicy::new(4, 200));
+        c.push("sparse_k2", sparse_req(1, 0, 4, 1.0, t0));
+        assert!(c.take_ready(t0 + Duration::from_micros(199), false).is_empty());
+        let ready = c.take_ready(t0 + Duration::from_micros(200), false);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].1.len(), 1);
+    }
+
+    #[test]
+    fn force_flushes_everything_grouped_by_variant() {
+        let t0 = Instant::now();
+        let mut c = Coalescer::new(CoalescePolicy::new(4, 1_000_000));
+        c.push("sparse_k2", sparse_req(1, 0, 4, 1.0, t0));
+        c.push("dense", sparse_req(2, 0, 4, 2.0, t0));
+        c.push("sparse_k2", sparse_req(3, 0, 4, 3.0, t0));
+        let mut ready = c.take_ready(t0, true);
+        ready.sort_by(|a, b| a.0.cmp(&b.0));
+        assert_eq!(ready.len(), 2);
+        assert_eq!(ready[0].0, "dense");
+        assert_eq!(ready[0].1.len(), 1);
+        assert_eq!(ready[1].0, "sparse_k2");
+        assert_eq!(ready[1].1.len(), 2);
+        assert_eq!(c.pending(), 0);
+        assert!(c.next_deadline().is_none());
+    }
+
+    #[test]
+    fn max_coalesce_one_is_always_ready() {
+        let t0 = Instant::now();
+        let mut c = Coalescer::new(CoalescePolicy::new(1, 1_000_000));
+        c.push("sparse_k2", sparse_req(1, 0, 4, 1.0, t0));
+        c.push("sparse_k2", sparse_req(2, 1, 4, 2.0, t0));
+        let ready = c.take_ready(t0, false);
+        // each request dispatches alone, FIFO
+        assert_eq!(ready.len(), 2);
+        assert_eq!(ready[0].1[0].stream_id, 1);
+        assert_eq!(ready[1].1[0].stream_id, 2);
+    }
+
+    #[test]
+    fn take_stream_leaves_bucket_mates_parked() {
+        let t0 = Instant::now();
+        let mut c = Coalescer::new(CoalescePolicy::new(4, 1_000_000));
+        c.push("sparse_k2", sparse_req(1, 0, 4, 1.0, t0));
+        c.push("sparse_k2", sparse_req(2, 0, 4, 2.0, t0));
+        c.push("sparse_k2", sparse_req(1, 1, 4, 1.5, t0));
+        let mine = c.take_stream(1);
+        assert_eq!(mine.len(), 1);
+        assert_eq!(mine[0].1.len(), 2);
+        assert!(mine[0].1.iter().all(|r| r.stream_id == 1));
+        assert_eq!(c.pending(), 1);
+        // the survivor still dispatches on force
+        let rest = c.take_ready(t0, true);
+        assert_eq!(rest[0].1[0].stream_id, 2);
+        assert!(c.take_stream(2).is_empty());
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let t0 = Instant::now();
+        let mut c = Coalescer::new(CoalescePolicy::new(4, 500));
+        assert!(c.next_deadline().is_none());
+        c.push("sparse_k2", sparse_req(1, 0, 4, 1.0, t0 + Duration::from_micros(100)));
+        c.push("dense", sparse_req(2, 0, 4, 2.0, t0));
+        assert_eq!(c.next_deadline(), Some(t0 + Duration::from_micros(500)));
+    }
+
+    #[test]
+    fn assemble_pads_sparse_with_zero_rows() {
+        let t0 = Instant::now();
+        let group = [sparse_req(1, 0, 4, 1.0, t0), sparse_req(2, 0, 4, 5.0, t0)];
+        let (batch, y) = assemble(&group, 4).unwrap();
+        let Batch::Sparse(b) = batch else { panic!("expected sparse") };
+        assert_eq!(b.rows, 16);
+        assert_eq!(b.dim, 8);
+        // real rows preserved in order
+        assert_eq!(b.values[0], 1.0);
+        assert_eq!(b.values[4 * 2], 5.0);
+        // pad rows: zero values, ascending indices 0..k
+        assert!(b.values[8 * 2..].iter().all(|&v| v == 0.0));
+        assert_eq!(&b.indices[8 * 2..8 * 2 + 2], &[0, 1]);
+        assert_eq!(y.len(), 16);
+        assert_eq!(&y[..4], &[1, 1, 1, 1]);
+        assert_eq!(&y[8..], &[0; 8]);
+        // padded rows contribute exactly nothing once densified
+        let dense = b.to_dense();
+        assert!(dense.data[8 * 8..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn assemble_pads_quant_and_dense() {
+        let t0 = Instant::now();
+        let q = PendingRequest {
+            stream_id: 1,
+            step: 0,
+            batch: Batch::Quant(QuantBatch {
+                rows: 2,
+                dim: 3,
+                codes: vec![1.0; 6],
+                o_min: vec![-1.0; 2],
+                o_max: vec![1.0; 2],
+            }),
+            y: vec![7, 7],
+            enqueued_at: t0,
+        };
+        let (batch, y) = assemble(std::slice::from_ref(&q), 2).unwrap();
+        let Batch::Quant(b) = batch else { panic!("expected quant") };
+        assert_eq!(b.rows, 4);
+        assert_eq!(&b.codes[6..], &[0.0; 6]);
+        assert_eq!(&b.o_min[2..], &[0.0, 0.0]);
+        assert_eq!(&b.o_max[2..], &[0.0, 0.0]);
+        assert_eq!(y, vec![7, 7, 0, 0]);
+
+        let d = PendingRequest {
+            stream_id: 2,
+            step: 0,
+            batch: Batch::Dense(DenseBatch::new(2, 3, vec![9.0; 6])),
+            y: vec![1, 2],
+            enqueued_at: t0,
+        };
+        let (batch, y) = assemble(std::slice::from_ref(&d), 4).unwrap();
+        let Batch::Dense(b) = batch else { panic!("expected dense") };
+        assert_eq!(b.rows, 8);
+        assert_eq!(&b.data[..6], &[9.0; 6]);
+        assert!(b.data[6..].iter().all(|&v| v == 0.0));
+        assert_eq!(&y[2..], &[0; 6]);
+    }
+
+    #[test]
+    fn assemble_rejects_bad_groups() {
+        let t0 = Instant::now();
+        assert!(assemble(&[], 1).is_err());
+        let group = [sparse_req(1, 0, 4, 1.0, t0), sparse_req(2, 0, 4, 2.0, t0)];
+        assert!(assemble(&group, 1).is_err(), "group larger than bucket");
+        let mixed = [
+            sparse_req(1, 0, 4, 1.0, t0),
+            PendingRequest {
+                stream_id: 2,
+                step: 0,
+                batch: Batch::Dense(DenseBatch::zeros(4, 8)),
+                y: vec![0; 4],
+                enqueued_at: t0,
+            },
+        ];
+        assert!(assemble(&mixed, 2).is_err(), "mixed kinds");
+        let ragged = [sparse_req(1, 0, 4, 1.0, t0), sparse_req(2, 0, 3, 2.0, t0)];
+        assert!(assemble(&ragged, 2).is_err(), "row mismatch");
+    }
+
+    #[test]
+    fn scatter_drops_padding_and_validates() {
+        let loss = [1.0f32, 2.0, 0.0, 0.0];
+        let metric = [3.0f32, 4.0, 0.0, 0.0];
+        let out = scatter_outputs(&loss, &metric, 2).unwrap();
+        assert_eq!(out, vec![(1.0, 3.0), (2.0, 4.0)]);
+        assert!(scatter_outputs(&loss, &metric[..3], 2).is_err());
+        assert!(scatter_outputs(&loss[..1], &metric[..1], 2).is_err());
+    }
+}

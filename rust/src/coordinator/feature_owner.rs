@@ -19,7 +19,10 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Result};
 use xla::Literal;
 
-use crate::compress::{codec_for, Batch, Codec, DenseBatch, Pass, QuantBatch, SparseBatch};
+use crate::compress::{
+    codec_for, codec_for_layout, Batch, Codec, DenseBatch, IndexLayout, Pass, QuantBatch,
+    SparseBatch,
+};
 use crate::config::{Method, VariantKind};
 use crate::runtime::{Engine, HostTensor, ModelMeta};
 use crate::transport::Transport;
@@ -264,6 +267,16 @@ impl<T: Transport> FeatureOwner<T> {
 
     pub fn send_control(&mut self, ctl: crate::wire::Control) -> Result<()> {
         self.send(Message::Control(ctl))
+    }
+
+    /// Switch the sparse index layout this session encodes with. Must
+    /// mirror the spec the acceptor agreed to (the `OpenStream` trailing
+    /// layout byte) — the layouts are not self-describing on the data
+    /// frames. The LEB128 layout additionally requires the selection
+    /// indices ascending per row, which the top-k artifacts emit.
+    pub fn set_index_layout(&mut self, layout: IndexLayout) -> Result<()> {
+        self.codec = codec_for_layout(self.method, self.meta.cut_dim, layout)?;
+        Ok(())
     }
 
     pub fn mean_fwd_pct(&self) -> f64 {

@@ -11,7 +11,10 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 use xla::Literal;
 
-use crate::compress::{codec_for, Batch, Codec, DenseBatch, Pass, Payload, SparseBatch};
+use crate::compress::{
+    codec_for, codec_for_layout, Batch, Codec, DenseBatch, IndexLayout, Pass, Payload,
+    SparseBatch,
+};
 use crate::config::Method;
 use crate::runtime::{Engine, HostTensor, ModelMeta};
 use crate::transport::Transport;
@@ -180,13 +183,32 @@ impl<T: Transport> LabelOwner<T> {
         Ok(StepMetrics { loss, metric_count: metric })
     }
 
-    /// One evaluation step: receive activations, run top_eval, reply with
-    /// (loss_sum, metric_count).
-    pub fn eval_step(&mut self, step: u64, y: &[i32]) -> Result<(f32, f32)> {
-        let payload = self.recv_activations(step)?;
-        let decoded = self.decode_forward(&payload)?;
+    /// Receive and decode one forward payload for `expect_step`. This is
+    /// the coalescing entry point: the serve layer parks the decoded
+    /// batch in the [`Coalescer`](super::Coalescer) instead of executing
+    /// it immediately.
+    pub(crate) fn recv_decoded(&mut self, expect_step: u64) -> Result<Batch> {
+        let payload = self.recv_activations(expect_step)?;
+        self.decode_forward(&payload)
+    }
+
+    /// Per-client eval artifact key (`{model}/{variant}/top_eval`).
+    pub(crate) fn eval_key(&self) -> String {
+        self.key("top_eval")
+    }
+
+    /// Run a `top_eval`-family executable on a decoded batch. Marshalling
+    /// takes the batch dimension from the *batch itself*, not the
+    /// manifest, so the same path serves per-client dispatch
+    /// (`eval_key()`, rows == meta.batch) and coalesced dispatch (a
+    /// `bucket_eval_key`, rows == bucket * meta.batch). Labels must match
+    /// the batch rows.
+    pub(crate) fn exec_eval(&self, key: &str, decoded: Batch, y: &[i32]) -> Result<Vec<Literal>> {
+        if y.len() != decoded.rows() {
+            bail!("eval labels {} != batch rows {}", y.len(), decoded.rows());
+        }
         let y_lit = labels_tensor(y).to_literal()?;
-        let b = self.meta.batch;
+        let b = decoded.rows();
         let d = self.meta.cut_dim;
         let outs = match decoded {
             Batch::Sparse(act) => {
@@ -197,7 +219,7 @@ impl<T: Transport> LabelOwner<T> {
                 borrowed.push(&values);
                 borrowed.push(&indices);
                 borrowed.push(&y_lit);
-                self.engine.exec(&self.key("top_eval"), &borrowed)?
+                self.engine.exec(key, &borrowed)?
             }
             Batch::Quant(act) => {
                 let codes = HostTensor::f32(act.codes, &[b, d]).to_literal()?;
@@ -208,19 +230,39 @@ impl<T: Transport> LabelOwner<T> {
                 borrowed.push(&o_min);
                 borrowed.push(&o_max);
                 borrowed.push(&y_lit);
-                self.engine.exec(&self.key("top_eval"), &borrowed)?
+                self.engine.exec(key, &borrowed)?
             }
             Batch::Dense(act) => {
                 let o = HostTensor::f32(act.data, &[b, d]).to_literal()?;
                 let mut borrowed: Vec<&Literal> = self.top.iter().collect();
                 borrowed.push(&o);
                 borrowed.push(&y_lit);
-                self.engine.exec(&self.key("top_eval"), &borrowed)?
+                self.engine.exec(key, &borrowed)?
             }
         };
+        Ok(outs)
+    }
+
+    /// Send one EvalResult reply on this session's stream.
+    pub(crate) fn send_eval_result(
+        &mut self,
+        step: u64,
+        loss_sum: f32,
+        metric_count: f32,
+    ) -> Result<()> {
+        self.send(Message::EvalResult { step, loss_sum, metric_count })
+    }
+
+    /// One evaluation step: receive activations, run top_eval, reply with
+    /// (loss_sum, metric_count). Composed from the split entry points the
+    /// batching plane uses piecewise (`recv_decoded` / `exec_eval` /
+    /// `send_eval_result`), so both paths execute identical code.
+    pub fn eval_step(&mut self, step: u64, y: &[i32]) -> Result<(f32, f32)> {
+        let decoded = self.recv_decoded(step)?;
+        let outs = self.exec_eval(&self.eval_key(), decoded, y)?;
         let loss_sum = HostTensor::from_literal(&outs[0])?.scalar()?;
         let metric_count = HostTensor::from_literal(&outs[1])?.scalar()?;
-        self.send(Message::EvalResult { step, loss_sum, metric_count })?;
+        self.send_eval_result(step, loss_sum, metric_count)?;
         Ok((loss_sum, metric_count))
     }
 
@@ -233,6 +275,16 @@ impl<T: Transport> LabelOwner<T> {
     pub fn respec(&mut self, method: Method) -> Result<()> {
         self.codec = codec_for(method, self.meta.cut_dim)?;
         self.method = method;
+        Ok(())
+    }
+
+    /// Switch the sparse index layout (negotiated via the `OpenStream`
+    /// spec's trailing layout byte). Same cut-over rule as [`respec`]:
+    /// only at a message boundary, both peers in lockstep — frames must
+    /// decode under the layout they were encoded with. Fails for methods
+    /// without an index section, leaving the session codec untouched.
+    pub fn set_index_layout(&mut self, layout: IndexLayout) -> Result<()> {
+        self.codec = codec_for_layout(self.method, self.meta.cut_dim, layout)?;
         Ok(())
     }
 

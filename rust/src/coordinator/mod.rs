@@ -20,18 +20,23 @@
 //! (`pipeline_depth`), overlapping the feature owner's forward/encode
 //! with the label owner's top step and the link itself.
 
+pub mod coalesce;
 pub mod feature_owner;
 pub mod label_owner;
 pub mod pipeline;
 pub mod serve;
 pub mod trainer;
 
+pub use coalesce::{
+    assemble, bucket_for, bucket_ladder, scatter_outputs, CoalescePolicy, Coalescer,
+    PendingRequest,
+};
 pub use feature_owner::FeatureOwner;
 pub use label_owner::LabelOwner;
 pub use pipeline::{train_pipelined, PipelinedTrainer};
 pub use serve::{
-    pump_conn, MuxServer, PumpOutcome, RefusedStream, ServeHandle, ServeMode, ServeOptions,
-    ServeReport, SessionReport,
+    pump_conn, spec_layout, MuxServer, PumpOutcome, RefusedStream, ServeHandle, ServeMode,
+    ServeOptions, ServeReport, SessionReport,
 };
 pub use trainer::{train, Trainer};
 

@@ -31,20 +31,23 @@
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::net::TcpListener;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::compress::codec_for;
+use crate::compress::{codec_for_layout, IndexLayout};
 use crate::config::Method;
 use crate::data::{for_model, Dataset, Split};
-use crate::runtime::Engine;
+use crate::runtime::{bucket_eval_key, Engine, HostTensor};
 use crate::transport::{
     is_connection_failure, FlowPolicy, LinkStats, Mux, MuxConfig, MuxEvent, MuxStream,
     RecoveryPolicy, TcpTransport, Transport, TransportError,
 };
 use crate::wire::{Message, OpenSpec};
 
+use super::coalesce::{
+    assemble, bucket_for, scatter_outputs, CoalescePolicy, Coalescer, PendingRequest,
+};
 use super::LabelOwner;
 
 /// Eval-service dataset geometry and model init, shared by the server and
@@ -83,9 +86,21 @@ pub fn negotiate_spec(
                     s.cut_dim
                 ));
             }
-            codec_for(s.method, s.cut_dim).map_err(|e| e.to_string())?;
+            // validates method parameters AND the index-layout pairing
+            // (e.g. leb128 on a method without an index section refuses)
+            codec_for_layout(s.method, s.cut_dim, s.index_layout).map_err(|e| e.to_string())?;
             Ok(s.method)
         }
+    }
+}
+
+/// Index layout a spec asked for (`Bitpack` for legacy/absent specs).
+/// Paired with [`negotiate_spec`], which already validated the
+/// method/layout combination.
+pub fn spec_layout(spec: &OpenSpec) -> IndexLayout {
+    match spec {
+        OpenSpec::Spec(s) => s.index_layout,
+        _ => IndexLayout::Bitpack,
     }
 }
 
@@ -159,10 +174,10 @@ struct Session<T: Transport> {
     loss_sum: f64,
     metric_sum: f64,
     /// An accepted `Respec` waiting for its step boundary:
-    /// `(effective_step, method)`. Applied before decoding the first
-    /// request with `step >= effective_step`, so every frame decodes
-    /// under the spec it was encoded with.
-    pending_respec: Option<(u64, Method)>,
+    /// `(effective_step, method, index_layout)`. Applied before decoding
+    /// the first request with `step >= effective_step`, so every frame
+    /// decodes under the spec it was encoded with.
+    pending_respec: Option<(u64, Method, IndexLayout)>,
     respecs_accepted: u64,
     respecs_rejected: u64,
 }
@@ -182,6 +197,11 @@ struct SessionSet<T: Transport> {
     refused: Vec<RefusedStream>,
     refused_ids: HashSet<u32>,
     served_any: bool,
+    /// Batching plane (DESIGN.md): when set, decoded requests park here
+    /// and dispatch in cross-client micro-batches instead of executing
+    /// inline in the `Data` arm. Reactor mode only — the blocking loop
+    /// parks in `next_event`, so batch deadlines could never fire.
+    coalescer: Option<Coalescer>,
 }
 
 impl<T: Transport> SessionSet<T> {
@@ -224,9 +244,11 @@ impl MuxServer {
 
     /// Precompile every artifact a session negotiation could select for
     /// this server's model — `init` (the `LabelOwner` constructor runs
-    /// it) plus every variant's `top_eval` — so artifacts compile at
-    /// startup, before the first request, never on the request path.
-    /// Returns the warmed keys.
+    /// it), every variant's `top_eval`, and every `top_eval_x{B}` bucket
+    /// rung the manifest ships — so artifacts compile at startup, before
+    /// the first request, never on the request path. Warming the whole
+    /// bucket ladder means the first *coalesced* request never stalls on
+    /// compilation either. Returns the warmed keys.
     pub fn warm_up(&self) -> Result<Vec<String>> {
         let init_key = format!("{}/init", self.model);
         let variant_prefix = format!("{}/", self.model);
@@ -236,7 +258,11 @@ impl MuxServer {
             .artifacts
             .keys()
             .filter(|k| {
-                **k == init_key || (k.starts_with(&variant_prefix) && k.ends_with("/top_eval"))
+                **k == init_key
+                    || (k.starts_with(&variant_prefix)
+                        && k.rsplit('/').next().is_some_and(|f| {
+                            f == "top_eval" || f.starts_with("top_eval_x")
+                        }))
             })
             .cloned()
             .collect();
@@ -255,7 +281,11 @@ impl MuxServer {
 
     /// Build the per-connection serving state (dataset, geometry, empty
     /// session registry) shared by every stream of one connection.
-    fn session_set<T: Transport>(&self) -> Result<SessionSet<T>> {
+    /// `coalesce` arms the batching plane for this connection.
+    fn session_set<T: Transport>(
+        &self,
+        coalesce: Option<CoalescePolicy>,
+    ) -> Result<SessionSet<T>> {
         let meta = self.engine.manifest.model(&self.model)?.clone();
         let ds =
             for_model(&self.model, meta.n_classes, self.data_seed, self.n_train, self.n_test)?;
@@ -269,6 +299,7 @@ impl MuxServer {
             refused: Vec::new(),
             refused_ids: HashSet::new(),
             served_any: false,
+            coalescer: coalesce.map(Coalescer::new),
         })
     }
 
@@ -307,13 +338,16 @@ impl MuxServer {
                         // every session of this connection identically —
                         // so they ARE connection-fatal, unlike the
                         // spec-specific refusals screened above
-                        let lo = LabelOwner::new(
+                        let mut lo = LabelOwner::new(
                             self.engine.clone(),
                             &self.model,
                             method,
                             stream,
                             self.init_seed,
                         )?;
+                        // negotiate_spec validated the pairing, so this
+                        // cannot fail for a negotiated method
+                        lo.set_index_layout(spec_layout(&spec))?;
                         set.sessions.insert(
                             id,
                             Session {
@@ -359,34 +393,64 @@ impl MuxServer {
                     // seeing our CloseStream; drop its frames
                     return Ok(false);
                 }
-                let s = set
-                    .sessions
-                    .get_mut(&id)
-                    .ok_or_else(|| anyhow!("data frame for unknown session {id}"))?;
-                // accepted-respec cut-over: the first request at or past
-                // the agreed boundary decodes under the new spec
-                if let Some((eff, method)) = s.pending_respec {
-                    if s.step >= eff {
-                        s.lo.respec(method)?;
-                        s.method = method;
-                        s.pending_respec = None;
-                        if self.verbose {
-                            println!("session {id}: cut over to {method} at step {}", s.step);
-                        }
+                let cutting_over = {
+                    let s = set
+                        .sessions
+                        .get_mut(&id)
+                        .ok_or_else(|| anyhow!("data frame for unknown session {id}"))?;
+                    matches!(s.pending_respec, Some((eff, _, _)) if s.step >= eff)
+                };
+                if cutting_over {
+                    // before the spec changes this stream's variant (and
+                    // thus its coalescing group), its parked requests must
+                    // dispatch: replies are FIFO per stream, so old-spec
+                    // requests may not overtake into a later group
+                    self.flush_stream(set, id)?;
+                    let s = set.sessions.get_mut(&id).expect("session verified above");
+                    let (_, method, layout) = s.pending_respec.take().expect("checked above");
+                    s.lo.respec(method)?;
+                    s.lo.set_index_layout(layout)?;
+                    s.method = method;
+                    if self.verbose {
+                        println!("session {id}: cut over to {method} at step {}", s.step);
                     }
                 }
+                let s = set.sessions.get_mut(&id).expect("session verified above");
                 // one routed frame == one eval request for this session
                 let idx = eval_indices(s.step, s.lo.meta.batch, set.n_test);
                 let batch = set.ds.batch(Split::Test, &idx, false);
-                let (loss, metric) = s.lo.eval_step(s.step, &batch.y)?;
-                s.step += 1;
-                s.loss_sum += loss as f64;
-                s.metric_sum += metric as f64;
+                if set.coalescer.is_some() {
+                    // batching plane: decode now (zero-copy off the frame
+                    // pool), park the decoded request under its variant,
+                    // and dispatch whatever the policy says is ready
+                    let decoded = s.lo.recv_decoded(s.step)?;
+                    let req = PendingRequest {
+                        stream_id: id,
+                        step: s.step,
+                        batch: decoded,
+                        y: batch.y,
+                        enqueued_at: Instant::now(),
+                    };
+                    let variant = s.method.variant();
+                    s.step += 1;
+                    set.coalescer.as_mut().expect("checked above").push(&variant, req);
+                    self.flush_coalesced(set, false)?;
+                } else {
+                    let (loss, metric) = s.lo.eval_step(s.step, &batch.y)?;
+                    s.step += 1;
+                    s.loss_sum += loss as f64;
+                    s.metric_sum += metric as f64;
+                }
             }
             MuxEvent::Closed(id) => {
                 if set.refused_ids.contains(&id) {
                     return Ok(false);
                 }
+                // dispatch the departing stream's parked requests BEFORE
+                // finalizing: they must execute and account (bit-identity
+                // with the per-client path) while its bucket-mates stay
+                // parked, untouched
+                self.flush_stream(set, id)?;
                 let s = set
                     .sessions
                     .remove(&id)
@@ -448,7 +512,7 @@ impl MuxServer {
                 match negotiated {
                     Ok(method) => {
                         mux.respec_accept(id)?;
-                        s.pending_respec = Some((effective_step, method));
+                        s.pending_respec = Some((effective_step, method, spec_layout(&spec)));
                         s.respecs_accepted += 1;
                         if self.verbose {
                             println!(
@@ -497,6 +561,11 @@ impl MuxServer {
                 if self.verbose {
                     println!("session {id}: failed ({reason})");
                 }
+                // a client dropping mid-bucket must not poison its
+                // bucket-mates: pull only ITS parked requests and run
+                // them (execute + account; the reply send fails harmlessly
+                // on the dead stream) before the session finalizes
+                self.flush_stream(set, id)?;
                 if let Some(s) = set.sessions.remove(&id) {
                     // a live session: report what it served before the
                     // fault (its stream stats ride the session report,
@@ -511,9 +580,128 @@ impl MuxServer {
                 }
                 set.refused_ids.insert(id);
             }
-            MuxEvent::Goaway { .. } => return Ok(true),
+            MuxEvent::Goaway { .. } => {
+                // connection is finishing: force-dispatch every parked
+                // request so nothing is lost between here and `finish`
+                self.flush_coalesced(set, true)?;
+                return Ok(true);
+            }
         }
         Ok(false)
+    }
+
+    /// Dispatch every coalescing group that is ready now — full buckets
+    /// and past-deadline remainders; `force` drains everything (shutdown).
+    /// No-op without a coalescer. The reactor calls this once per sweep so
+    /// deadlines fire even while a connection is idle.
+    fn flush_coalesced<T: Transport>(&self, set: &mut SessionSet<T>, force: bool) -> Result<()> {
+        let Some(c) = set.coalescer.as_mut() else { return Ok(()) };
+        if c.pending() == 0 {
+            return Ok(());
+        }
+        let groups = c.take_ready(Instant::now(), force);
+        for (variant, group) in groups {
+            self.dispatch_group(set, &variant, group)?;
+        }
+        Ok(())
+    }
+
+    /// Dispatch only `stream_id`'s parked requests (stream close, error,
+    /// or respec cut-over), leaving its bucket-mates parked.
+    fn flush_stream<T: Transport>(&self, set: &mut SessionSet<T>, stream_id: u32) -> Result<()> {
+        let Some(c) = set.coalescer.as_mut() else { return Ok(()) };
+        let groups = c.take_stream(stream_id);
+        for (variant, group) in groups {
+            self.dispatch_group(set, &variant, group)?;
+        }
+        Ok(())
+    }
+
+    /// Execute one same-variant group and scatter per-client replies.
+    ///
+    /// When the manifest ships a `top_eval_x{B}` rung for the group's
+    /// bucket, the requests are stacked (padded with zero rows up to the
+    /// bucket) into ONE execution whose per-client output vectors are
+    /// scattered back — `scatter_outputs` drops the padding slots, so a
+    /// padded row never reaches any client. Absent the rung (older
+    /// artifact sets), each request executes per-client through exactly
+    /// the code path `eval_step` uses, so results are bit-identical
+    /// either way.
+    ///
+    /// Replies ride each request's own session stream, which keeps
+    /// per-stream `LinkStats` byte-exact. A reply that cannot be sent (the
+    /// stream died after enqueue) is dropped without failing the
+    /// connection — the group's other clients still get theirs.
+    fn dispatch_group<T: Transport>(
+        &self,
+        set: &mut SessionSet<T>,
+        variant: &str,
+        group: Vec<PendingRequest>,
+    ) -> Result<()> {
+        if group.is_empty() {
+            return Ok(());
+        }
+        // executor: any session of the group — the service is eval-only
+        // and every session shares `init_seed`, so top params are
+        // identical across sessions (callers flush a stream BEFORE
+        // removing its session, so at least one is always live)
+        let exec_id = group
+            .iter()
+            .map(|r| r.stream_id)
+            .find(|sid| set.sessions.contains_key(sid))
+            .ok_or_else(|| anyhow!("coalesce: no live session for group of {}", group.len()))?;
+        let max = set.coalescer.as_ref().map_or(1, |c| c.policy().max_coalesce);
+        let bucket = bucket_for(group.len(), max);
+        let bucket_key = bucket_eval_key(&self.model, variant, bucket);
+        if bucket > 1 && self.engine.has_artifact(&bucket_key) {
+            let n_real = group.len();
+            let (stacked, y) = assemble(&group, bucket)?;
+            let outs = set.sessions[&exec_id].lo.exec_eval(&bucket_key, stacked, &y)?;
+            // bucket artifact contract: outs[0] = loss_sum[bucket],
+            // outs[1] = metric_count[bucket] — per-client vectors, never
+            // whole-batch scalars (which would sum padding into clients)
+            let loss = HostTensor::from_literal(&outs[0])?;
+            let metric = HostTensor::from_literal(&outs[1])?;
+            let pairs = scatter_outputs(loss.as_f32()?, metric.as_f32()?, n_real)?;
+            for (req, (loss, metric)) in group.iter().zip(pairs) {
+                self.deliver(set, req.stream_id, req.step, loss, metric);
+            }
+        } else {
+            // per-client fallback: the rung is absent (or the group is a
+            // singleton) — identical to the uncoalesced eval path
+            let key = format!("{}/{}/top_eval", self.model, variant);
+            for req in group {
+                let outs = set.sessions[&exec_id].lo.exec_eval(&key, req.batch, &req.y)?;
+                let loss = HostTensor::from_literal(&outs[0])?.scalar()?;
+                let metric = HostTensor::from_literal(&outs[1])?.scalar()?;
+                self.deliver(set, req.stream_id, req.step, loss, metric);
+            }
+        }
+        Ok(())
+    }
+
+    /// Account one result into its session and send the `EvalResult`
+    /// reply on that session's own stream. A send failure (stream died
+    /// between enqueue and dispatch) drops the reply without poisoning
+    /// the rest of the bucket; a vanished session (flushed post-removal)
+    /// is impossible by construction but tolerated the same way.
+    fn deliver<T: Transport>(
+        &self,
+        set: &mut SessionSet<T>,
+        stream_id: u32,
+        step: u64,
+        loss: f32,
+        metric: f32,
+    ) {
+        if let Some(s) = set.sessions.get_mut(&stream_id) {
+            s.loss_sum += loss as f64;
+            s.metric_sum += metric as f64;
+            if let Err(e) = s.lo.send_eval_result(step, loss, metric) {
+                if self.verbose {
+                    println!("session {stream_id}: reply dropped ({e})");
+                }
+            }
+        }
     }
 
     /// Close out a finished connection's state into its report.
@@ -547,7 +735,7 @@ impl MuxServer {
     /// can finish before a slow-starting peer thread even opens its
     /// stream.)
     pub fn serve_connection<T: Transport>(&self, mux: &Mux<T>) -> Result<ServeReport> {
-        let mut set = self.session_set()?;
+        let mut set = self.session_set(None)?;
         loop {
             match mux.next_event() {
                 Ok(ev) => {
@@ -679,6 +867,11 @@ pub struct ServeOptions {
     /// Precompile every artifact a negotiation could select before the
     /// first socket is accepted.
     pub warm_up: bool,
+    /// Batching plane: coalesce decoded requests from different clients
+    /// (same codec variant) into bucketed micro-batch executions. Requires
+    /// `ServeMode::Reactor` — the blocking loop parks in `next_event`, so
+    /// the batch deadline could never fire for a lone parked request.
+    pub coalesce: Option<CoalescePolicy>,
 }
 
 impl Default for ServeOptions {
@@ -690,6 +883,7 @@ impl Default for ServeOptions {
             recovery: None,
             flow_control: None,
             warm_up: true,
+            coalesce: None,
         }
     }
 }
@@ -727,6 +921,11 @@ impl ServeOptions {
 
     pub fn warm_up(mut self, on: bool) -> Self {
         self.warm_up = on;
+        self
+    }
+
+    pub fn coalesce(mut self, policy: CoalescePolicy) -> Self {
+        self.coalesce = Some(policy);
         self
     }
 }
@@ -774,6 +973,15 @@ impl MuxServer {
         }
         if let Some(fp) = &opts.flow_control {
             fp.validate()?;
+        }
+        if let Some(cp) = &opts.coalesce {
+            cp.validate()?;
+            if opts.mode != ServeMode::Reactor {
+                bail!(
+                    "coalescing needs ServeMode::Reactor: the blocking loop parks in \
+                     next_event, so a lone parked request's batch deadline could never fire"
+                );
+            }
         }
         if opts.recovery.is_some() {
             if opts.connections != 1 {
@@ -897,6 +1105,7 @@ fn spawn_reactor(
 ) -> std::thread::JoinHandle<ConnReports> {
     let connections = opts.connections;
     let flow = opts.flow_control;
+    let coalesce = opts.coalesce;
     std::thread::spawn(move || {
         let mut reports: ConnReports = Vec::new();
         let mut conns: Vec<(usize, Mux<TcpTransport>, SessionSet<TcpTransport>)> = Vec::new();
@@ -910,7 +1119,7 @@ fn spawn_reactor(
                     cfg = cfg.flow_control(fp);
                 }
                 let mux = Mux::with_config(io, cfg)?;
-                let set = server.session_set()?;
+                let set = server.session_set(coalesce)?;
                 Ok((mux, set))
             })();
             match built {
@@ -923,8 +1132,16 @@ fn spawn_reactor(
             let mut i = 0;
             while i < conns.len() {
                 let (_, mux, set) = &mut conns[i];
-                let outcome =
-                    pump_conn(mux, REACTOR_BUDGET, &mut |m, ev| server.handle_event(set, m, ev));
+                let outcome = pump_conn(mux, REACTOR_BUDGET, &mut |m, ev| {
+                    server.handle_event(set, m, ev)
+                })
+                // a pump can drain the link while requests sit parked:
+                // sweep the deadline even when the link was idle, so a
+                // lone request is never stranded past max_batch_delay_us
+                .and_then(|outcome| {
+                    server.flush_coalesced(set, false)?;
+                    Ok(outcome)
+                });
                 match outcome {
                     Ok(PumpOutcome::Idle) => i += 1,
                     Ok(PumpOutcome::Progress(_)) => {
@@ -1051,6 +1268,23 @@ mod tests {
         assert_eq!(o.mode, ServeMode::Reactor);
         assert_eq!(o.flow_control.unwrap().window, 1024);
         assert!(!o.warm_up);
+    }
+
+    #[test]
+    fn negotiate_validates_index_layout_pairing() {
+        use crate::compress::IndexLayout;
+        let topk = CodecSpec::new(Method::Topk { k: 6 }, 128)
+            .with_index_layout(IndexLayout::Leb128Delta);
+        let spec = OpenSpec::Spec(topk);
+        assert_eq!(negotiate_spec(&spec, Method::None, 128), Ok(Method::Topk { k: 6 }));
+        assert_eq!(spec_layout(&spec), IndexLayout::Leb128Delta);
+        // leb128 on an index-free method refuses the stream
+        let quant = CodecSpec::new(Method::Quant { bits: 2 }, 128)
+            .with_index_layout(IndexLayout::Leb128Delta);
+        let err = negotiate_spec(&OpenSpec::Spec(quant), Method::None, 128).unwrap_err();
+        assert!(err.contains("requires a top-k"), "{err}");
+        // legacy/absent specs are bitpack
+        assert_eq!(spec_layout(&OpenSpec::None), IndexLayout::Bitpack);
     }
 
     #[test]

@@ -262,6 +262,14 @@ impl Engine {
         &self.client
     }
 
+    /// Whether the manifest ships an artifact under `key`. The batching
+    /// plane probes bucket executables with this and falls back to
+    /// per-client dispatch when a rung is absent, so older artifact sets
+    /// keep working unchanged.
+    pub fn has_artifact(&self, key: &str) -> bool {
+        self.manifest.artifacts.contains_key(key)
+    }
+
     /// Warm the executable cache for a set of keys (startup, not hot path).
     pub fn precompile(&self, keys: &[String]) -> Result<()> {
         for k in keys {
@@ -269,6 +277,16 @@ impl Engine {
         }
         Ok(())
     }
+}
+
+/// Artifact key for a coalesced evaluation executable: `top_eval`
+/// stacked to `bucket` client-batches. Contract (DESIGN.md "Batching
+/// plane"): inputs are the per-client eval inputs with every batch
+/// dimension scaled by `bucket`; outputs are PER-CLIENT vectors
+/// `loss_sum[bucket]`, `metric_count[bucket]` — never whole-batch
+/// scalars, which would sum padding into real clients' numbers.
+pub fn bucket_eval_key(model: &str, variant: &str, bucket: usize) -> String {
+    format!("{model}/{variant}/top_eval_x{bucket}")
 }
 
 /// Locate the artifacts directory: $SPLITFED_ARTIFACTS or ./artifacts

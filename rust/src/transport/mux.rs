@@ -1879,6 +1879,28 @@ impl<T: Transport> Mux<T> {
         self.lock().streams.get(&id).map(|s| s.recovery)
     }
 
+    /// Complete inbound frames parked in one stream's inbox — receivable
+    /// right now without touching the wire. `0` for unknown streams.
+    pub fn stream_ready_frames(&self, id: u32) -> usize {
+        self.lock().streams.get(&id).map_or(0, |s| s.inbox.len())
+    }
+
+    /// Every stream holding at least one ready inbound frame, with its
+    /// depth, in ascending stream-id order. The batching plane reads this
+    /// to see how much already-arrived work a connection holds before a
+    /// deadline forces a ragged dispatch.
+    pub fn ready_streams(&self) -> Vec<(u32, usize)> {
+        let g = self.lock();
+        let mut out: Vec<(u32, usize)> = g
+            .streams
+            .iter()
+            .filter(|(_, s)| !s.inbox.is_empty())
+            .map(|(&id, s)| (id, s.inbox.len()))
+            .collect();
+        out.sort_unstable_by_key(|&(id, _)| id);
+        out
+    }
+
     /// Recovery actions across the whole connection: stream-level actions
     /// summed plus connection-level ones (decode drops, reconnects).
     pub fn recovery_counts(&self) -> RecoveryCounts {
@@ -2431,9 +2453,41 @@ mod tests {
     }
 
     #[test]
+    fn ready_payload_surfacing_tracks_inbox_depth() {
+        let (cm, sm) = mux_pair();
+        let mut s1 = cm.open_stream().unwrap();
+        let mut s3 = cm.open_stream().unwrap();
+        s1.send(&Frame::new(0, data(10))).unwrap();
+        s1.send(&Frame::new(1, data(11))).unwrap();
+        s3.send(&Frame::new(0, data(30))).unwrap();
+
+        assert!(sm.ready_streams().is_empty(), "nothing pumped yet");
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
+        assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(3));
+        let mut t1 = sm.accept_stream(1).unwrap();
+        let mut t3 = sm.accept_stream(3).unwrap();
+        for _ in 0..3 {
+            // three data routings fill the inboxes
+            sm.next_event().unwrap();
+        }
+        assert_eq!(sm.stream_ready_frames(1), 2);
+        assert_eq!(sm.stream_ready_frames(3), 1);
+        assert_eq!(sm.stream_ready_frames(99), 0, "unknown stream has no ready frames");
+        assert_eq!(sm.ready_streams(), vec![(1, 2), (3, 1)]);
+
+        // receiving drains the depth without touching other streams
+        t1.recv().unwrap();
+        assert_eq!(sm.ready_streams(), vec![(1, 1), (3, 1)]);
+        t1.recv().unwrap();
+        t3.recv().unwrap();
+        assert_eq!(sm.stream_ready_frames(1), 0);
+        assert!(sm.ready_streams().is_empty());
+    }
+
+    #[test]
     fn open_stream_with_spec_exposes_it_to_both_sides() {
         let (cm, sm) = mux_pair();
-        let spec = CodecSpec { method: Method::RandTopk { k: 6, alpha: 0.1 }, cut_dim: 128 };
+        let spec = CodecSpec::new(Method::RandTopk { k: 6, alpha: 0.1 }, 128);
         let s = cm.open_stream_with(spec).unwrap();
         assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
         assert_eq!(sm.stream_spec(1), Some(OpenSpec::Spec(spec)));
@@ -2450,7 +2504,7 @@ mod tests {
         let (cm, sm) = mux_pair();
         let mut s1 = cm.open_stream().unwrap();
         let mut s3 = cm
-            .open_stream_with(CodecSpec { method: Method::Topk { k: 3 }, cut_dim: 8 })
+            .open_stream_with(CodecSpec::new(Method::Topk { k: 3 }, 8))
             .unwrap();
         s1.send(&Frame::new(0, data(1))).unwrap();
         s3.send(&Frame::new(0, data(2))).unwrap();
@@ -2679,8 +2733,8 @@ mod tests {
     #[test]
     fn respec_renegotiates_spec_on_both_sides() {
         let (cm, sm) = mux_pair();
-        let old = CodecSpec { method: Method::Topk { k: 6 }, cut_dim: 128 };
-        let new = CodecSpec { method: Method::Topk { k: 2 }, cut_dim: 128 };
+        let old = CodecSpec::new(Method::Topk { k: 6 }, 128);
+        let new = CodecSpec::new(Method::Topk { k: 2 }, 128);
         let s = cm.open_stream_with(old).unwrap();
         assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
         let mut t = sm.accept_stream(1).unwrap();
@@ -2704,8 +2758,8 @@ mod tests {
     #[test]
     fn respec_reject_keeps_the_old_spec() {
         let (cm, sm) = mux_pair();
-        let old = CodecSpec { method: Method::Topk { k: 6 }, cut_dim: 128 };
-        let new = CodecSpec { method: Method::Quant { bits: 4 }, cut_dim: 128 };
+        let old = CodecSpec::new(Method::Topk { k: 6 }, 128);
+        let new = CodecSpec::new(Method::Quant { bits: 4 }, 128);
         let s = cm.open_stream_with(old).unwrap();
         assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
         let mut t = sm.accept_stream(1).unwrap();
@@ -2729,8 +2783,8 @@ mod tests {
         let net = SimNet::with_defaults();
         let (mut raw, b) = net.pair();
         let sm = Mux::with_config(b, MuxConfig::acceptor()).unwrap();
-        let old = CodecSpec { method: Method::Topk { k: 6 }, cut_dim: 128 };
-        let new = CodecSpec { method: Method::Topk { k: 2 }, cut_dim: 128 };
+        let old = CodecSpec::new(Method::Topk { k: 6 }, 128);
+        let new = CodecSpec::new(Method::Topk { k: 2 }, 128);
         raw.send(&Frame::on_stream(1, 0, Message::OpenStream { spec: OpenSpec::Spec(old) }))
             .unwrap();
         assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
@@ -2776,8 +2830,8 @@ mod tests {
         // acceptor's first faultable send is its RespecReply (acks and
         // resume frames are exempt)
         net.script_fault(1, 0, ScriptedFault::Drop);
-        let old = CodecSpec { method: Method::Topk { k: 6 }, cut_dim: 128 };
-        let new = CodecSpec { method: Method::Topk { k: 2 }, cut_dim: 128 };
+        let old = CodecSpec::new(Method::Topk { k: 6 }, 128);
+        let new = CodecSpec::new(Method::Topk { k: 2 }, 128);
         let mut s = cm.open_stream_with(old).unwrap();
         let server = std::thread::spawn(move || {
             let id = loop {
@@ -2819,8 +2873,8 @@ mod tests {
     #[test]
     fn respec_pending_survives_kill_and_resume() {
         let (net, cm, sm) = recovering_pair(FaultPlan::none());
-        let old = CodecSpec { method: Method::Topk { k: 6 }, cut_dim: 128 };
-        let new = CodecSpec { method: Method::Topk { k: 2 }, cut_dim: 128 };
+        let old = CodecSpec::new(Method::Topk { k: 6 }, 128);
+        let new = CodecSpec::new(Method::Topk { k: 2 }, 128);
         let mut s = cm.open_stream_with(old).unwrap();
         assert_eq!(sm.next_event().unwrap(), MuxEvent::Opened(1));
         let mut t = sm.accept_stream(1).unwrap();
@@ -2852,7 +2906,7 @@ mod tests {
     #[test]
     fn respec_misuse_is_a_typed_error() {
         let (cm, sm) = mux_pair();
-        let spec = CodecSpec { method: Method::Topk { k: 3 }, cut_dim: 8 };
+        let spec = CodecSpec::new(Method::Topk { k: 3 }, 8);
         assert!(cm.respec_stream(99, spec, 0).is_err());
         assert_eq!(cm.respec_decision(99), None);
         let _s = cm.open_stream().unwrap();

@@ -162,6 +162,56 @@ impl<'a> BitReader<'a> {
     }
 }
 
+// --- unsigned LEB128 varints (bcp-wire-style index streams) --------------
+//
+// Sparse codecs can opt into encoding top-k indices as LEB128 *deltas*
+// instead of fixed ⌈log2 d⌉-bit packing: within a row the indices are
+// ascending, so the gaps are small and usually fit one byte even when
+// the dim needs 9-11 bits fixed-width. 7 payload bits per byte, high
+// bit = continuation, little-endian groups.
+
+/// Append `v` as unsigned LEB128.
+pub fn write_uleb128(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Decode one unsigned LEB128 value from `buf[*pos..]`, advancing `pos`
+/// past it. `None` on truncation (continuation bit set at end of buffer)
+/// or on an encoding that overflows u64 — `pos` is then unspecified and
+/// the caller must abandon the stream.
+pub fn read_uleb128(buf: &[u8], pos: &mut usize) -> Option<u64> {
+    let mut v: u64 = 0;
+    let mut shift: u32 = 0;
+    loop {
+        let byte = *buf.get(*pos)?;
+        *pos += 1;
+        let payload = (byte & 0x7F) as u64;
+        // shift 63 holds one more bit of a u64; anything past that (or a
+        // payload that doesn't fit the final bit) overflows
+        if shift > 63 || (shift == 63 && payload > 1) {
+            return None;
+        }
+        v |= payload << shift;
+        if byte & 0x80 == 0 {
+            return Some(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Encoded length of `v` as unsigned LEB128 (1..=10 bytes).
+pub fn uleb128_len(v: u64) -> usize {
+    ((64 - v.leading_zeros() as usize).max(1)).div_ceil(7)
+}
+
 /// The original per-bit implementation, kept verbatim as the layout
 /// oracle for the word-wise rewrite's property tests. Not for use on
 /// the data path.
@@ -440,6 +490,52 @@ mod tests {
         assert_eq!(r.remaining_bits(), 2);
         assert_eq!(r.read(2), Some(0x3));
         assert_eq!(r.remaining_bits(), 0);
+    }
+
+    #[test]
+    fn uleb128_roundtrips_and_lengths_match() {
+        let cases: &[(u64, usize)] = &[
+            (0, 1),
+            (1, 1),
+            (127, 1),
+            (128, 2),
+            (300, 2),
+            (16_383, 2),
+            (16_384, 3),
+            (u32::MAX as u64, 5),
+            (u64::MAX, 10),
+        ];
+        let mut out = Vec::new();
+        for &(v, len) in cases {
+            let before = out.len();
+            write_uleb128(&mut out, v);
+            assert_eq!(out.len() - before, len, "encoded length of {v}");
+            assert_eq!(uleb128_len(v), len, "uleb128_len({v})");
+        }
+        let mut pos = 0;
+        for &(v, _) in cases {
+            assert_eq!(read_uleb128(&out, &mut pos), Some(v));
+        }
+        assert_eq!(pos, out.len());
+    }
+
+    #[test]
+    fn uleb128_truncation_and_overflow_are_none() {
+        // continuation bit set at end of buffer
+        let mut pos = 0;
+        assert_eq!(read_uleb128(&[0x80], &mut pos), None);
+        // empty buffer
+        let mut pos = 0;
+        assert_eq!(read_uleb128(&[], &mut pos), None);
+        // 11 continuation groups overflow u64
+        let mut pos = 0;
+        let over = [0x80u8, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x01];
+        assert_eq!(read_uleb128(&over, &mut pos), None);
+        // u64::MAX itself is exactly representable
+        let mut buf = Vec::new();
+        write_uleb128(&mut buf, u64::MAX);
+        let mut pos = 0;
+        assert_eq!(read_uleb128(&buf, &mut pos), Some(u64::MAX));
     }
 
     #[test]

@@ -8,7 +8,9 @@ pub mod pool;
 pub mod rng;
 pub mod timer;
 
-pub use bitpack::{index_bits, BitPacker, BitReader, BitWriter};
+pub use bitpack::{
+    index_bits, read_uleb128, uleb128_len, write_uleb128, BitPacker, BitReader, BitWriter,
+};
 pub use kernels::{extend_f32s_le, read_f32s_le_into};
 pub use pool::{BufPool, Bytes, PoolStats};
 pub use rng::Rng;

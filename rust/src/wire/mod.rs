@@ -30,7 +30,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::compress::{CodecSpec, Payload, PayloadMeta};
+use crate::compress::{CodecSpec, IndexLayout, Payload, PayloadMeta};
 use crate::config::Method;
 use crate::util::{BufPool, Bytes};
 
@@ -515,6 +515,14 @@ fn encode_codec_spec(out: &mut Vec<u8>, s: &CodecSpec) {
             put_f32(out, eps);
         }
     }
+    // Canonical: the index layout rides a trailing byte ONLY when it is
+    // non-default, so bitpack specs stay byte-identical to the pre-layout
+    // wire. An old decoder seeing the extra byte refuses that one stream
+    // (trailing-bytes Invalid) — degradation, not corruption.
+    match s.index_layout {
+        IndexLayout::Bitpack => {}
+        IndexLayout::Leb128Delta => out.push(1),
+    }
 }
 
 fn decode_codec_spec(c: &mut Cursor) -> Result<CodecSpec> {
@@ -529,7 +537,18 @@ fn decode_codec_spec(c: &mut Cursor) -> Result<CodecSpec> {
         5 => Method::L1 { lambda: c.f32()?, eps: c.f32()? },
         other => bail!("unknown codec method id {other}"),
     };
-    Ok(CodecSpec { method, cut_dim })
+    // optional trailing layout byte (absent = bitpack); an explicit 0 is
+    // accepted and re-encodes to the canonical absent form
+    let index_layout = if c.pos < c.buf.len() {
+        match c.u8()? {
+            0 => IndexLayout::Bitpack,
+            1 => IndexLayout::Leb128Delta,
+            other => bail!("unknown index layout {other}"),
+        }
+    } else {
+        IndexLayout::Bitpack
+    };
+    Ok(CodecSpec { method, cut_dim, index_layout })
 }
 
 impl Message {
@@ -808,7 +827,7 @@ mod tests {
     }
 
     fn test_spec() -> CodecSpec {
-        CodecSpec { method: Method::RandTopk { k: 6, alpha: 0.1 }, cut_dim: 128 }
+        CodecSpec::new(Method::RandTopk { k: 6, alpha: 0.1 }, 128)
     }
 
     #[test]
@@ -836,10 +855,15 @@ mod tests {
             Message::OpenStream { spec: OpenSpec::None },
             Message::OpenStream { spec: OpenSpec::Spec(test_spec()) },
             Message::OpenStream {
-                spec: OpenSpec::Spec(CodecSpec {
-                    method: Method::L1 { lambda: 0.001, eps: 1e-4 },
-                    cut_dim: 600,
-                }),
+                spec: OpenSpec::Spec(CodecSpec::new(
+                    Method::L1 { lambda: 0.001, eps: 1e-4 },
+                    600,
+                )),
+            },
+            Message::OpenStream {
+                spec: OpenSpec::Spec(
+                    test_spec().with_index_layout(IndexLayout::Leb128Delta),
+                ),
             },
             Message::CloseStream,
             Message::Goaway { last_stream_id: 11, code: 2 },
@@ -892,11 +916,28 @@ mod tests {
             "quant:bits=4",
             "l1:lambda=0.001,eps=0.0001",
         ] {
-            let s = CodecSpec { method: Method::parse(spec).unwrap(), cut_dim: 300 };
+            let s = CodecSpec::new(Method::parse(spec).unwrap(), 300);
             let f = Frame::on_stream(5, 0, Message::OpenStream { spec: OpenSpec::Spec(s) });
             let (back, _) = Frame::decode(&f.encode()).unwrap();
             assert_eq!(back.message, Message::OpenStream { spec: OpenSpec::Spec(s) }, "{spec}");
         }
+    }
+
+    #[test]
+    fn leb128_spec_rides_one_trailing_byte() {
+        // bitpack specs are byte-identical to the pre-layout wire...
+        let bitpack = test_spec();
+        let leb = bitpack.with_index_layout(IndexLayout::Leb128Delta);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        encode_codec_spec(&mut a, &bitpack);
+        encode_codec_spec(&mut b, &leb);
+        assert_eq!(b.len(), a.len() + 1);
+        assert_eq!(&b[..a.len()], &a[..]);
+        assert_eq!(b[a.len()], 1);
+        // ...and the leb spec roundtrips through a frame
+        let f = Frame::on_stream(5, 0, Message::OpenStream { spec: OpenSpec::Spec(leb) });
+        let (back, _) = Frame::decode(&f.encode()).unwrap();
+        assert_eq!(back.message, Message::OpenStream { spec: OpenSpec::Spec(leb) });
     }
 
     #[test]
@@ -932,15 +973,38 @@ mod tests {
 
     #[test]
     fn trailing_spec_bytes_decode_invalid() {
+        // an unknown index-layout byte refuses the stream, not the frame
         let mut body = Vec::new();
         encode_codec_spec(&mut body, &test_spec());
-        body.push(0x00);
+        body.push(0xEE);
+        let frame = hand_frame(MsgType::OpenStream, 3, &body);
+        let (back, _) = Frame::decode(&frame).unwrap();
+        let Message::OpenStream { spec: OpenSpec::Invalid { reason, .. } } = &back.message else {
+            panic!("expected invalid spec, got {:?}", back.message);
+        };
+        assert!(reason.contains("unknown index layout"), "{reason}");
+        // bytes after a valid layout byte are still trailing garbage
+        let mut body = Vec::new();
+        encode_codec_spec(&mut body, &test_spec());
+        body.extend_from_slice(&[0x01, 0x00]);
         let frame = hand_frame(MsgType::OpenStream, 3, &body);
         let (back, _) = Frame::decode(&frame).unwrap();
         assert!(matches!(
             back.message,
             Message::OpenStream { spec: OpenSpec::Invalid { .. } }
         ));
+    }
+
+    #[test]
+    fn explicit_bitpack_layout_byte_is_accepted() {
+        // a peer that always writes the layout byte interops: explicit 0
+        // decodes to the same spec the canonical (absent) form produces
+        let mut body = Vec::new();
+        encode_codec_spec(&mut body, &test_spec());
+        body.push(0x00);
+        let frame = hand_frame(MsgType::OpenStream, 3, &body);
+        let (back, _) = Frame::decode(&frame).unwrap();
+        assert_eq!(back.message, Message::OpenStream { spec: OpenSpec::Spec(test_spec()) });
     }
 
     #[test]

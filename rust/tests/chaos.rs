@@ -17,9 +17,9 @@
 use std::sync::Arc;
 
 use splitfed::chaos::{
-    fault_plan_for_seed, metrics_fingerprint, repro_command, repro_for, run_respec_schedule,
-    run_respec_session, run_schedule, run_schedule_configured, run_schedule_fragmented,
-    run_session, write_repro, ChaosConfig, RespecPoint, CHAOS_METHODS,
+    fault_plan_for_seed, metrics_fingerprint, repro_command, repro_for, run_coalesce_schedule,
+    run_respec_schedule, run_respec_session, run_schedule, run_schedule_configured,
+    run_schedule_fragmented, run_session, write_repro, ChaosConfig, RespecPoint, CHAOS_METHODS,
 };
 use splitfed::config::Method;
 use splitfed::coordinator::{FeatureOwner, LabelOwner};
@@ -182,6 +182,43 @@ fn flow_metered_fragmented_chaos_matrix_bit_identical_metrics() {
     assert!(
         failures.is_empty(),
         "{} flow-metered schedules failed ({} seeds x {} codecs): {failures:?}",
+        failures.len(),
+        seeds.len(),
+        CHAOS_METHODS.len()
+    );
+}
+
+// --- batching plane (coalesced eval) ---------------------------------------
+
+/// The batching-plane acceptance gate: a three-client coalesced eval
+/// session — one client dropping mid-bucket halfway through — survives
+/// the seed matrix with every client's replies bit-identical to the
+/// per-client (uncoalesced) clean run, for every codec. The fault dice
+/// are free to hit any frame, including the departing client's
+/// `CloseStream` and the replies to its bucket-mates. A seed slice per
+/// shard keeps the three-runs-per-schedule cost affordable.
+#[test]
+fn coalesce_chaos_matrix_bit_identical_to_per_client() {
+    let seeds: Vec<u64> = seeds_for_this_shard().into_iter().take(25).collect();
+    assert!(!seeds.is_empty(), "empty shard");
+    let mut failures = Vec::new();
+    for method in CHAOS_METHODS {
+        for &seed in &seeds {
+            let v = run_coalesce_schedule(seed, method);
+            if !v.ok {
+                let path = write_repro(&artifact_dir(), &v).expect("write repro artifact");
+                eprintln!(
+                    "coalesce chaos FAIL seed={seed} method={method}: {}\n  artifact: {}",
+                    v.detail,
+                    path.display()
+                );
+                failures.push((seed, method.to_string()));
+            }
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "{} coalesce schedules failed ({} seeds x {} codecs): {failures:?}",
         failures.len(),
         seeds.len(),
         CHAOS_METHODS.len()

@@ -1,0 +1,316 @@
+//! Batching-plane integration suite: cross-client micro-batch coalescing
+//! must be invisible in results. The engine-free tests prove assembly
+//! bit-identity per codec kind at every bucket boundary (one client,
+//! exactly-full, ragged) through the REAL encode/decode path — exactly
+//! the batches the server coalesces — and that padding rows can never
+//! leak signal (they decode to all-zero rows and `scatter_outputs` drops
+//! their lanes). The engine-gated tests run the same eval roster through
+//! `ServeMode::Reactor` over TCP three times — no coalescer,
+//! `max_coalesce = 1` (the degenerate policy), and `max_coalesce = 4` —
+//! and require bit-identical per-stream results and `ServeReport` sums.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use splitfed::compress::{codec_for, Batch, Pass, QuantBatch, SparseBatch};
+use splitfed::config::Method;
+use splitfed::coordinator::serve::{eval_indices, EVAL_INIT_SEED, EVAL_N_TEST, EVAL_N_TRAIN};
+use splitfed::coordinator::{
+    assemble, bucket_for, bucket_ladder, scatter_outputs, CoalescePolicy, Coalescer,
+    FeatureOwner, MuxServer, PendingRequest, ServeOptions,
+};
+use splitfed::data::{for_model, Split};
+use splitfed::runtime::{default_artifacts_dir, Engine};
+use splitfed::transport::{Mux, MuxConfig, TcpTransport};
+use splitfed::util::Rng;
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = default_artifacts_dir();
+    dir.join("manifest.json")
+        .exists()
+        .then(|| Arc::new(Engine::load(dir).unwrap()))
+}
+
+const DIM: usize = 16;
+const ROWS: usize = 4;
+
+/// A client-side batch for `method`, pushed through the REAL wire path
+/// (encode then decode) so the test assembles exactly what the server's
+/// coalescer sees — bit-packed indices, packed quant codes and all.
+fn wire_batch(method: Method, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let batch = match method {
+        Method::Topk { k } => {
+            let mut values = Vec::with_capacity(ROWS * k);
+            let mut indices = Vec::with_capacity(ROWS * k);
+            for _ in 0..ROWS {
+                let mut all: Vec<i32> = (0..DIM as i32).collect();
+                rng.shuffle(&mut all);
+                let mut sel = all[..k].to_vec();
+                sel.sort_unstable();
+                for &i in &sel {
+                    indices.push(i);
+                    values.push(rng.normal());
+                }
+            }
+            Batch::Sparse(SparseBatch { rows: ROWS, dim: DIM, k, values, indices })
+        }
+        Method::Quant { bits } => {
+            // integer codes as the bottom_fwd artifact emits them
+            let levels = 1u64 << bits;
+            let codes: Vec<f32> =
+                (0..ROWS * DIM).map(|i| ((seed as usize + i * 37) as u64 % levels) as f32).collect();
+            let o_min: Vec<f32> = (0..ROWS).map(|_| rng.normal() - 2.0).collect();
+            let o_max: Vec<f32> = o_min.iter().map(|m| m + 1.0 + rng.normal().abs()).collect();
+            Batch::Quant(QuantBatch { rows: ROWS, dim: DIM, codes, o_min, o_max })
+        }
+        _ => {
+            let data: Vec<f32> = (0..ROWS * DIM).map(|_| rng.normal()).collect();
+            Batch::Dense(splitfed::compress::DenseBatch { rows: ROWS, dim: DIM, data })
+        }
+    };
+    let codec = codec_for(method, DIM).unwrap();
+    let payload = codec.encode(&batch, Pass::Forward).unwrap();
+    codec.decode(&payload, Pass::Forward).unwrap()
+}
+
+fn request(method: Method, stream_id: u32, seed: u64) -> PendingRequest {
+    PendingRequest {
+        stream_id,
+        step: seed,
+        batch: wire_batch(method, seed),
+        y: (0..ROWS as i32).collect(),
+        enqueued_at: Instant::now(),
+    }
+}
+
+/// Canonical flat [rows*dim] view for bit comparison: dense and sparse in
+/// value space, quant in CODE space (codes are exactly what the bucket
+/// artifact consumes; ranges are compared separately).
+fn flat_view(b: &Batch) -> Vec<f32> {
+    match b {
+        Batch::Dense(d) => d.data.clone(),
+        Batch::Sparse(s) => s.to_dense().data,
+        Batch::Quant(q) => q.codes.clone(),
+    }
+}
+
+/// The core invariant, per codec kind and per bucket boundary: stacking n
+/// requests into a bucket of B >= n reproduces each request's rows
+/// bit-exactly in order, and every padding row is exactly zero.
+fn assert_assembly_identity(method: Method, n: usize, bucket: usize) {
+    let group: Vec<PendingRequest> =
+        (0..n).map(|i| request(method, i as u32, 1000 + i as u64)).collect();
+    let (stacked, y) = assemble(&group, bucket).unwrap();
+    assert_eq!(stacked.rows(), bucket * ROWS, "{method:?} n={n} bucket={bucket}");
+    assert_eq!(y.len(), bucket * ROWS);
+
+    let flat = flat_view(&stacked);
+    for (i, req) in group.iter().enumerate() {
+        let want = flat_view(&req.batch);
+        let got = &flat[i * ROWS * DIM..(i + 1) * ROWS * DIM];
+        // bit compare: coalescing may not perturb a single mantissa bit
+        let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(want_bits, got_bits, "{method:?} client {i} of {n} in bucket {bucket}");
+        assert_eq!(&y[i * ROWS..(i + 1) * ROWS], &req.y[..], "labels client {i}");
+    }
+    // quant rows carry their quantization grid with them: bucket-mates
+    // cannot shift each other's ranges either
+    if let Batch::Quant(q) = &stacked {
+        for (i, req) in group.iter().enumerate() {
+            let Batch::Quant(rq) = &req.batch else { panic!("mixed kinds") };
+            assert_eq!(&q.o_min[i * ROWS..(i + 1) * ROWS], &rq.o_min[..], "client {i} o_min");
+            assert_eq!(&q.o_max[i * ROWS..(i + 1) * ROWS], &rq.o_max[..], "client {i} o_max");
+        }
+    }
+    for (j, v) in flat[n * ROWS * DIM..].iter().enumerate() {
+        assert_eq!(*v, 0.0, "{method:?} padding row leaked signal at offset {j}");
+    }
+    for label in &y[n * ROWS..] {
+        assert_eq!(*label, 0, "padding label");
+    }
+}
+
+#[test]
+fn assembly_is_bit_identical_per_codec_at_every_bucket_boundary() {
+    let methods =
+        [Method::Topk { k: 3 }, Method::None, Method::Quant { bits: 8 }];
+    for method in methods {
+        let max = 4;
+        // one client alone, exactly-full bucket, ragged group with padding
+        for n in [1, max, 3] {
+            let bucket = bucket_for(n, max);
+            assert!(bucket >= n && bucket <= max);
+            assert_assembly_identity(method, n, bucket);
+        }
+    }
+}
+
+/// Quantized requests are assembled in CODE space (codes + per-row
+/// ranges), so bucket-mates cannot even shift each other's quantization
+/// grid; the padding rows' degenerate (0, 0) range dequantizes to zero.
+#[test]
+fn quant_assembly_pads_with_degenerate_ranges() {
+    let method = Method::Quant { bits: 8 };
+    let group = vec![request(method, 7, 5), request(method, 9, 6)];
+    let (stacked, _y) = assemble(&group, 4).unwrap();
+    let Batch::Quant(QuantBatch { rows, o_min, o_max, .. }) = &stacked else {
+        panic!("quant group must stack as quant");
+    };
+    assert_eq!(*rows, 4 * ROWS);
+    for r in 2 * ROWS..4 * ROWS {
+        assert_eq!((o_min[r], o_max[r]), (0.0, 0.0), "pad row {r} range");
+    }
+}
+
+/// `max_coalesce = 1` is bit-for-bit today's per-client path: every push
+/// is immediately ready as a singleton group, FIFO, and assembly into a
+/// bucket of 1 returns the request's own batch untouched.
+#[test]
+fn max_coalesce_one_is_the_per_client_path() {
+    let method = Method::Topk { k: 3 };
+    let mut c = Coalescer::new(CoalescePolicy::new(1, 1_000_000));
+    let reqs: Vec<PendingRequest> = (0..3).map(|i| request(method, i, 50 + i as u64)).collect();
+    for r in &reqs {
+        c.push("sparse_k3", r.clone());
+    }
+    // huge delay, yet everything is ready NOW: max_coalesce=1 never waits
+    let groups = c.take_ready(Instant::now(), false);
+    let flat: Vec<&PendingRequest> = groups.iter().flat_map(|(_, g)| g.iter()).collect();
+    assert_eq!(flat.len(), 3);
+    for (i, got) in flat.iter().enumerate() {
+        assert_eq!(got.stream_id, i as u32, "FIFO order");
+        let (stacked, y) = assemble(std::slice::from_ref(*got), 1).unwrap();
+        let want: Vec<u32> = flat_view(&reqs[i].batch).iter().map(|v| v.to_bits()).collect();
+        let have: Vec<u32> = flat_view(&stacked).iter().map(|v| v.to_bits()).collect();
+        assert_eq!(want, have, "bucket of 1 must be the identity");
+        assert_eq!(y, reqs[i].y);
+    }
+    assert_eq!(c.pending(), 0);
+}
+
+/// Padding lanes are structurally incapable of reaching a reply: the
+/// bucket artifact returns per-client lanes and `scatter_outputs` only
+/// ever reads the first n_real of them.
+#[test]
+fn scatter_drops_padding_lanes() {
+    let loss = [1.0_f32, 2.0, 3.0, 99.0];
+    let metric = [4.0_f32, 5.0, 6.0, 99.0];
+    let out = scatter_outputs(&loss, &metric, 3).unwrap();
+    assert_eq!(out, vec![(1.0, 4.0), (2.0, 5.0), (3.0, 6.0)]);
+    // the ladder the server precompiles covers every reachable bucket
+    assert_eq!(bucket_ladder(4), vec![1, 2, 4]);
+    assert_eq!(bucket_for(3, 4), 4);
+}
+
+/// Coalescing requires the reactor: the blocking loop parks in
+/// `next_event`, so a lone parked request's batch deadline could never
+/// fire. `serve` must reject the combination up front. (Engine-gated
+/// only because `MuxServer` construction needs one.)
+#[test]
+fn serve_rejects_coalescing_outside_the_reactor() {
+    let Some(engine) = engine() else { return };
+    let method = Method::parse("topk:k=6").unwrap();
+    let server = Arc::new(MuxServer::new(engine, "mlp", method, 42));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+
+    let opts =
+        ServeOptions::default().coalesce(CoalescePolicy::new(8, 200)).warm_up(false);
+    let err = server.clone().serve(listener.try_clone().unwrap(), opts).unwrap_err();
+    assert!(err.to_string().contains("ServeMode::Reactor"), "{err}");
+
+    let opts = ServeOptions::default()
+        .reactor()
+        .coalesce(CoalescePolicy::new(0, 200))
+        .warm_up(false);
+    let err = server.serve(listener, opts).unwrap_err();
+    assert!(err.to_string().contains("max_coalesce"), "{err}");
+}
+
+/// Run the same lockstep eval roster (3 same-variant streams on one
+/// physical connection, so their requests actually share buckets) under
+/// a given coalescing policy; return per-stream per-step results plus
+/// the per-session (loss_sum, metric_sum, requests) report rows.
+fn run_roster(
+    engine: &Arc<Engine>,
+    coalesce: Option<CoalescePolicy>,
+) -> (Vec<Vec<(f32, f32)>>, Vec<(u64, f64, f64)>) {
+    const CLIENTS: usize = 3;
+    const REQUESTS: u64 = 3;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let method = Method::parse("topk:k=6").unwrap();
+    let server = Arc::new(MuxServer::new(engine.clone(), "mlp", method, 42));
+    let mut opts = ServeOptions::default().connections(1).reactor();
+    if let Some(p) = coalesce {
+        opts = opts.coalesce(p);
+    }
+    let handle = server.serve(listener, opts).unwrap();
+
+    let phys = TcpTransport::connect(addr).unwrap();
+    let mux = Mux::with_config(phys, MuxConfig::initiator()).unwrap();
+    let mut fos = Vec::new();
+    for _ in 0..CLIENTS {
+        let stream =
+            mux.open_stream_with(splitfed::compress::CodecSpec::new(method, 128)).unwrap();
+        fos.push(
+            FeatureOwner::new(engine.clone(), "mlp", method, stream, 42, EVAL_INIT_SEED).unwrap(),
+        );
+    }
+    let ds = for_model("mlp", fos[0].meta.n_classes, 42, EVAL_N_TRAIN, EVAL_N_TEST).unwrap();
+
+    // lockstep: all clients send, then all collect — with coalescing on,
+    // the three requests land in one bucket (ragged, flushed by deadline)
+    let mut results = vec![Vec::new(); CLIENTS];
+    for step in 0..REQUESTS {
+        for fo in fos.iter_mut() {
+            let idx = eval_indices(step, fo.meta.batch, ds.len(Split::Test));
+            let batch = ds.batch(Split::Test, &idx, false);
+            fo.eval_forward(step, &batch.x).unwrap();
+        }
+        for (i, fo) in fos.iter_mut().enumerate() {
+            results[i].push(fo.recv_eval_result().unwrap());
+        }
+    }
+    for fo in fos.iter_mut() {
+        fo.transport.close().unwrap();
+    }
+    mux.goaway(0).unwrap();
+
+    let reports = handle.join().unwrap();
+    assert_eq!(reports.len(), 1);
+    let report = &reports[0];
+    assert!(report.refused.is_empty(), "{:?}", report.refused);
+    assert_eq!(report.sessions.len(), CLIENTS);
+    let mut sessions: Vec<(u64, f64, f64)> = report
+        .sessions
+        .iter()
+        .map(|s| (s.requests, s.loss_sum, s.metric_sum))
+        .collect();
+    sessions.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (results, sessions)
+}
+
+/// The acceptance bar: coalesced serving is bit-identical to per-client
+/// serving — every stream's per-step (loss, metric) AND the per-session
+/// report sums — under no coalescer, the degenerate `max_coalesce = 1`
+/// policy, and real bucketed coalescing.
+#[test]
+fn reactor_coalescing_is_bit_identical_to_per_client_serving() {
+    let Some(engine) = engine() else { return };
+    let (base_results, base_sessions) = run_roster(&engine, None);
+    let (one_results, one_sessions) =
+        run_roster(&engine, Some(CoalescePolicy::new(1, 200)));
+    let (coal_results, coal_sessions) =
+        run_roster(&engine, Some(CoalescePolicy::new(4, 200)));
+
+    assert_eq!(base_results, one_results, "max_coalesce=1 must be today's path");
+    assert_eq!(base_results, coal_results, "coalesced results must be bit-identical");
+    assert_eq!(base_sessions, one_sessions, "report sums, degenerate policy");
+    assert_eq!(base_sessions, coal_sessions, "report sums, coalesced");
+    for (requests, loss_sum, metric_sum) in base_sessions {
+        assert_eq!(requests, 3);
+        assert!(loss_sum.is_finite() && metric_sum >= 0.0);
+    }
+}
